@@ -1,0 +1,41 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run, and write the CSVs to `reports/`.
+//!
+//! ```sh
+//! cargo run --release --example perf_report
+//! ```
+
+use morpho::perf::{
+    figure, render_figure, render_table, table1_listing, table2_listing, table3, table4, table5,
+    to_csv,
+};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}\n", table1_listing());
+    println!("{}\n", table2_listing());
+    println!(
+        "{}",
+        render_table("Table 3 — vector-vector (translation) on the Intel baselines", &[table3()])
+    );
+    println!(
+        "{}",
+        render_table("Table 4 — vector-scalar (scaling) on the Intel baselines", &[table4()])
+    );
+    println!("{}", render_table("Table 5 — comparisons between algorithms and systems", &table5()));
+
+    for num in 9..=16 {
+        let (title, rows, per_elem) = figure(num);
+        println!("{}", render_figure(&title, &rows, per_elem));
+    }
+
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/table3.csv", to_csv(&[table3()]))?;
+    std::fs::write("reports/table4.csv", to_csv(&[table4()]))?;
+    std::fs::write("reports/table5.csv", to_csv(&table5()))?;
+    for num in 9..=16 {
+        let (_, rows, _) = figure(num);
+        std::fs::write(format!("reports/figure{num}.csv"), to_csv(&[rows]))?;
+    }
+    println!("CSV reports written to reports/");
+    Ok(())
+}

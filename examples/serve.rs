@@ -1,0 +1,101 @@
+//! Long-lived serving demo: an open-loop synthetic client drives the
+//! coordinator at a configurable arrival rate with a mixed transform
+//! workload; reports sustained throughput, latency percentiles, batching
+//! efficiency, and backpressure behaviour.
+//!
+//! ```sh
+//! cargo run --release --example serve [seconds] [requests_per_sec] [backend]
+//! # backend: xla | native | m1sim   (default xla)
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use morpho::coordinator::{BackendChoice, BatcherConfig, Coordinator, CoordinatorConfig};
+use morpho::graphics::Transform;
+use morpho::testkit::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let seconds: u64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let rate: u64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let backend = match args.next().as_deref() {
+        Some("native") => BackendChoice::Native,
+        Some("m1sim") => BackendChoice::M1Sim,
+        _ => BackendChoice::Xla,
+    };
+
+    println!("serving {seconds}s of open-loop load at {rate} req/s on {backend:?}…");
+    let c = Arc::new(Coordinator::start(CoordinatorConfig {
+        backend,
+        workers: 2,
+        queue_capacity: 4096,
+        batcher: BatcherConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+        ..Default::default()
+    })?);
+
+    let rejected = Arc::new(AtomicU64::new(0));
+    let completed = Arc::new(AtomicU64::new(0));
+
+    // Client thread: Poisson-ish arrivals, mixed request sizes and a
+    // small transform vocabulary (so batching has something to merge).
+    let client = {
+        let c = c.clone();
+        let completed = completed.clone();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(7);
+            let deadline = Instant::now() + Duration::from_secs(seconds);
+            let interval = Duration::from_nanos(1_000_000_000 / rate.max(1));
+            let mut next = Instant::now();
+            let mut waiters = Vec::new();
+            while Instant::now() < deadline {
+                next += interval;
+                let n = [8usize, 64, 256, 1024][rng.below(4) as usize];
+                let xs: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
+                let ys: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
+                let transforms = match rng.below(3) {
+                    0 => vec![Transform::Translate { tx: 5.0, ty: -2.0 }],
+                    1 => vec![Transform::Scale { sx: 1.5, sy: 1.5 }],
+                    _ => vec![
+                        Transform::Rotate { theta: 0.3 },
+                        Transform::Translate { tx: 1.0, ty: 1.0 },
+                    ],
+                };
+                match c.submit(xs, ys, transforms) {
+                    Ok(rx) => waiters.push(rx),
+                    Err(_) => break,
+                }
+                // Reap completions opportunistically.
+                waiters.retain(|rx| match rx.try_recv() {
+                    Ok(_) => {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        false
+                    }
+                    Err(_) => true,
+                });
+                if let Some(sleep) = next.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            // Drain the stragglers.
+            for rx in waiters {
+                if rx.recv().is_ok() {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        })
+    };
+
+    client.join().unwrap();
+    let m = c.metrics();
+    println!("\n{}", m.render());
+    println!(
+        "completed {} requests ({} rejected); sustained ≈{:.0} req/s, {:.2} M points/s",
+        completed.load(Ordering::Relaxed),
+        rejected.load(Ordering::Relaxed),
+        completed.load(Ordering::Relaxed) as f64 / seconds as f64,
+        m.points as f64 / seconds as f64 / 1e6,
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""AOT bridge: lower the L2 functions to HLO **text** artifacts for the
+rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def vec(n):
+    return jax.ShapeDtypeStruct((n,), F32)
+
+
+def mat(d):
+    return jax.ShapeDtypeStruct((d, d), F32)
+
+
+def params():
+    return jax.ShapeDtypeStruct((6,), F32)
+
+
+def params3d():
+    return jax.ShapeDtypeStruct((12,), F32)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((1,), F32)
+
+
+# name -> (function, example args). Tile sizes: 64 is the M1's natural
+# tile; 1024/4096 amortize PJRT call overhead for bulk scenes.
+ARTIFACTS = {
+    "translate64": (model.translate_vectors, (vec(64), vec(64))),
+    "translate1024": (model.translate_vectors, (vec(1024), vec(1024))),
+    "scale64": (model.scale_vector, (vec(64), scalar())),
+    "scale1024": (model.scale_vector, (vec(1024), scalar())),
+    "affine64": (model.affine_tile, (vec(64), vec(64), params())),
+    "affine1024": (model.affine_tile, (vec(1024), vec(1024), params())),
+    "affine4096": (model.affine_tile, (vec(4096), vec(4096), params())),
+    "pipeline3_1024": (
+        model.pipeline3,
+        (vec(1024), vec(1024), params(), params(), params()),
+    ),
+    "matmul8": (model.matmul, (mat(8), mat(8))),
+    "affine3d_1024": (
+        model.affine3d_tile,
+        (vec(1024), vec(1024), vec(1024), params3d()),
+    ),
+}
+
+
+def build(out_dir: str, names=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, args) in sorted(ARTIFACTS.items()):
+        if names and name not in names:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            "x".join(map(str, a.shape)) if a.shape else "scalar" for a in args
+        )
+        manifest.append(f"{name} inputs={len(args)} shapes={shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("names", nargs="*", help="subset of artifacts to build")
+    args = ap.parse_args()
+    build(args.out_dir, set(args.names) or None)
+
+
+if __name__ == "__main__":
+    main()

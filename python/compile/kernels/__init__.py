@@ -1,0 +1,18 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+The M1's column-broadcast SIMD execution is re-thought for TPU-class
+hardware here (see DESIGN.md §Hardware-Adaptation): the frame-buffer
+column layout becomes a BlockSpec grid, the context-word immediate becomes
+a scalar operand, and the §5.3 CMUL-accumulate matmul becomes an
+MXU-targeted `jnp.dot`. All kernels are lowered with ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from .transform import (  # noqa: F401
+    affine3d_points,
+    affine_points,
+    matmul8,
+    scale,
+    translate,
+)
+from . import ref  # noqa: F401

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in :mod:`transform` must match its oracle here to float
+tolerance across the shape/dtype sweep in ``python/tests``.
+"""
+
+import jax.numpy as jnp
+
+
+def translate(u, v):
+    """Vector-vector addition — the paper's §5.1 translation mapping."""
+    return u + v
+
+
+def scale(u, c):
+    """Vector-scalar multiplication — the paper's §5.2 scaling mapping.
+
+    ``c`` is a length-1 array (the runtime analogue of the context-word
+    immediate).
+    """
+    return u * c[0]
+
+
+def affine_points(xs, ys, params):
+    """Affine point transform ``q = M p + t``.
+
+    ``params = [a, b, c, d, tx, ty]`` row-major: ``x' = a·x + b·y + tx``,
+    ``y' = c·x + d·y + ty`` — the composite transformation the paper's
+    §5.3 accelerates via matrix algebra.
+    """
+    a, b, c, d, tx, ty = (params[i] for i in range(6))
+    return xs * a + ys * b + tx, xs * c + ys * d + ty
+
+
+def matmul8(a, b):
+    """Dense matrix product — the §5.3 rotation building block."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def affine3d_points(xs, ys, zs, params):
+    """3-D affine oracle: ``params = [m00..m22, tx, ty, tz]``."""
+    m = [params[i] for i in range(9)]
+    tx, ty, tz = params[9], params[10], params[11]
+    return (
+        xs * m[0] + ys * m[1] + zs * m[2] + tx,
+        xs * m[3] + ys * m[4] + zs * m[5] + ty,
+        xs * m[6] + ys * m[7] + zs * m[8] + tz,
+    )

@@ -1,0 +1,178 @@
+"""Pallas kernels for the paper's linear-algebraic mappings.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the M1 executes a
+64-element vector op as eight *column broadcasts*, each consuming eight
+consecutive frame-buffer elements. Here that schedule becomes a Pallas
+grid: vectors are laid out ``(8, n/8)`` column-major (element ``i`` at
+``(i mod 8, i div 8)``, exactly the paper's Figure 7/8 layout) and each
+grid step processes one ``(8, 1)`` block — the BlockSpec expresses the
+HBM→VMEM schedule the M1 expressed with frame-buffer addressing, and the
+double-buffering of the M1's two frame-buffer sets is what Pallas's
+pipelined grid does automatically.
+
+All kernels use ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT client cannot execute; interpret mode lowers to
+plain HLO so the artifacts run anywhere (numerics identical).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 8  # the RC array edge: one column broadcast = 8 elements
+
+
+def _to_grid(u):
+    """Flat (n,) → (8, n/8) in the paper's column-major layout."""
+    n = u.shape[-1]
+    assert n % LANES == 0, f"vector length {n} must be a multiple of {LANES}"
+    return u.reshape(n // LANES, LANES).T
+
+
+def _from_grid(g):
+    return g.T.reshape(-1)
+
+
+# --- §5.1: vector-vector (translation) --------------------------------------
+
+
+def _translate_kernel(u_ref, v_ref, o_ref):
+    # One M1 column broadcast: OUT = A + B (context word 0000F400).
+    o_ref[...] = u_ref[...] + v_ref[...]
+
+
+def translate(u, v):
+    """Element-wise ``u + v`` with the M1 column-broadcast schedule."""
+    ug, vg = _to_grid(u), _to_grid(v)
+    cols = ug.shape[1]
+    out = pl.pallas_call(
+        _translate_kernel,
+        grid=(cols,),
+        in_specs=[
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct(ug.shape, ug.dtype),
+        interpret=True,
+    )(ug, vg)
+    return _from_grid(out)
+
+
+# --- §5.2: vector-scalar (scaling) -------------------------------------------
+
+
+def _scale_kernel(c_ref, u_ref, o_ref):
+    # OUT = c × A (context word 00009005 when c = 5); the scalar rides
+    # along like the context-word immediate.
+    o_ref[...] = u_ref[...] * c_ref[0]
+
+
+def scale(u, c):
+    """Element-wise ``u * c[0]``; ``c`` is a length-1 array."""
+    ug = _to_grid(u)
+    cols = ug.shape[1]
+    out = pl.pallas_call(
+        _scale_kernel,
+        grid=(cols,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda c: (0,)),
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct(ug.shape, ug.dtype),
+        interpret=True,
+    )(c, ug)
+    return _from_grid(out)
+
+
+# --- composite affine point transform ----------------------------------------
+
+
+def _affine_kernel(p_ref, x_ref, y_ref, ox_ref, oy_ref):
+    a, b, c, d, tx, ty = (p_ref[i] for i in range(6))
+    x, y = x_ref[...], y_ref[...]
+    ox_ref[...] = x * a + y * b + tx
+    oy_ref[...] = x * c + y * d + ty
+
+
+def affine_points(xs, ys, params):
+    """``q = M·p + t`` over parallel coordinate arrays.
+
+    ``params = [a, b, c, d, tx, ty]``. X coordinates stream through one
+    operand bank, Y through the other — the M1's dual-bank frame buffer.
+    """
+    xg, yg = _to_grid(xs), _to_grid(ys)
+    cols = xg.shape[1]
+    ox, oy = pl.pallas_call(
+        _affine_kernel,
+        grid=(cols,),
+        in_specs=[
+            pl.BlockSpec((6,), lambda c: (0,)),
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+            pl.BlockSpec((LANES, 1), lambda c: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xg.shape, xg.dtype),
+            jax.ShapeDtypeStruct(yg.shape, yg.dtype),
+        ],
+        interpret=True,
+    )(params, xg, yg)
+    return _from_grid(ox), _from_grid(oy)
+
+
+# --- 3-D composite affine point transform -------------------------------------
+
+
+def _affine3d_kernel(p_ref, x_ref, y_ref, z_ref, ox_ref, oy_ref, oz_ref):
+    m = [p_ref[i] for i in range(9)]
+    tx, ty, tz = p_ref[9], p_ref[10], p_ref[11]
+    x, y, z = x_ref[...], y_ref[...], z_ref[...]
+    ox_ref[...] = x * m[0] + y * m[1] + z * m[2] + tx
+    oy_ref[...] = x * m[3] + y * m[4] + z * m[5] + ty
+    oz_ref[...] = x * m[6] + y * m[7] + z * m[8] + tz
+
+
+def affine3d_points(xs, ys, zs, params):
+    """``q = M·p + t`` over parallel 3-D coordinate arrays.
+
+    ``params = [m00..m22 row-major, tx, ty, tz]`` — the reference [8]
+    ("2D and 3D Computer Graphics Algorithms under MorphoSys") extension.
+    The third coordinate stream mirrors the M1 mapping's use of frame
+    buffer set 1 bank A.
+    """
+    xg, yg, zg = _to_grid(xs), _to_grid(ys), _to_grid(zs)
+    cols = xg.shape[1]
+    spec = pl.BlockSpec((LANES, 1), lambda c: (0, c))
+    ox, oy, oz = pl.pallas_call(
+        _affine3d_kernel,
+        grid=(cols,),
+        in_specs=[pl.BlockSpec((12,), lambda c: (0,)), spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(xg.shape, xg.dtype)] * 3,
+        interpret=True,
+    )(params, xg, yg, zg)
+    return _from_grid(ox), _from_grid(oy), _from_grid(oz)
+
+
+# --- §5.3: dense matmul (rotation / composite) --------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # The CMUL-accumulate of §5.3, targeted at the MXU instead of the
+    # RC-array ALU chain: one dot over the whole (small) tile.
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def matmul8(a, b):
+    """Dense square matmul (8×8 in the paper; any dim ≤ 128 here)."""
+    assert a.shape == b.shape and a.shape[0] == a.shape[1]
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,70 @@
+"""L2 — the JAX compute graph: batched transform pipelines over the L1
+Pallas kernels.
+
+These are the functions `aot.py` lowers to the HLO artifacts the rust
+coordinator executes. Affine parameters are *runtime* inputs (one artifact
+serves every transform), exactly as the M1 reused one context word across
+data tiles.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import transform as k
+
+
+def translate_vectors(u, v):
+    """Artifact ``translate<n>``: the paper's §5.1 routine."""
+    return (k.translate(u, v),)
+
+
+def scale_vector(u, c):
+    """Artifact ``scale<n>``: the paper's §5.2 routine (runtime scalar)."""
+    return (k.scale(u, c),)
+
+
+def affine_tile(xs, ys, params):
+    """Artifact ``affine<n>``: one affine transform over an n-point tile."""
+    ox, oy = k.affine_points(xs, ys, params)
+    return (ox, oy)
+
+
+def pipeline3(xs, ys, p0, p1, p2):
+    """Artifact ``pipeline3_<n>``: three chained affine stages (e.g.
+    scale → rotate → translate), demonstrating cross-kernel fusion by XLA.
+    """
+    xs, ys = k.affine_points(xs, ys, p0)
+    xs, ys = k.affine_points(xs, ys, p1)
+    xs, ys = k.affine_points(xs, ys, p2)
+    return (xs, ys)
+
+
+def affine3d_tile(xs, ys, zs, params):
+    """Artifact ``affine3d_<n>``: one 3-D affine transform over an n-point
+    tile (params = 12 floats: row-major 3×3 + translation)."""
+    ox, oy, oz = k.affine3d_points(xs, ys, zs, params)
+    return (ox, oy, oz)
+
+
+def matmul(a, b):
+    """Artifact ``matmul<d>``: the §5.3 rotation/composite matrix product."""
+    return (k.matmul8(a, b),)
+
+
+def compose_affine(p0, p1):
+    """Compose two affine parameter vectors: apply p0 first, then p1.
+
+    Pure jnp (no kernel) — used by tests to validate pipeline3 against a
+    single fused affine.
+    """
+    a0, b0, c0, d0, tx0, ty0 = (p0[i] for i in range(6))
+    a1, b1, c1, d1, tx1, ty1 = (p1[i] for i in range(6))
+    return jnp.stack(
+        [
+            a1 * a0 + b1 * c0,
+            a1 * b0 + b1 * d0,
+            c1 * a0 + d1 * c0,
+            c1 * b0 + d1 * d0,
+            a1 * tx0 + b1 * ty0 + tx1,
+            c1 * tx0 + d1 * ty0 + ty1,
+        ]
+    )

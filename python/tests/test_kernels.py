@@ -1,0 +1,148 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes and dtypes with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels import transform as k
+
+SIZES = [8, 16, 32, 64, 128, 1024]
+DTYPES = [jnp.float32, jnp.int32]
+
+
+def arrays(draw, n, dtype, lo=-1000, hi=1000):
+    elems = draw(
+        st.lists(st.integers(min_value=lo, max_value=hi), min_size=n, max_size=n)
+    )
+    return jnp.asarray(np.array(elems), dtype=dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_translate_matches_ref(data):
+    n = data.draw(st.sampled_from(SIZES))
+    dtype = data.draw(st.sampled_from(DTYPES))
+    u = arrays(data.draw, n, dtype)
+    v = arrays(data.draw, n, dtype)
+    assert_allclose(np.asarray(k.translate(u, v)), np.asarray(ref.translate(u, v)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_scale_matches_ref(data):
+    n = data.draw(st.sampled_from(SIZES))
+    dtype = data.draw(st.sampled_from(DTYPES))
+    u = arrays(data.draw, n, dtype)
+    c = arrays(data.draw, 1, dtype, lo=-50, hi=50)
+    assert_allclose(np.asarray(k.scale(u, c)), np.asarray(ref.scale(u, c)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_affine_matches_ref(data):
+    n = data.draw(st.sampled_from(SIZES))
+    xs = arrays(data.draw, n, jnp.float32)
+    ys = arrays(data.draw, n, jnp.float32)
+    p = data.draw(
+        st.lists(
+            st.floats(min_value=-10, max_value=10, allow_nan=False),
+            min_size=6,
+            max_size=6,
+        )
+    )
+    params = jnp.asarray(np.array(p, dtype=np.float32))
+    ox, oy = k.affine_points(xs, ys, params)
+    rx, ry = ref.affine_points(xs, ys, params)
+    assert_allclose(np.asarray(ox), np.asarray(rx), rtol=1e-5, atol=1e-3)
+    assert_allclose(np.asarray(oy), np.asarray(ry), rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_matmul_matches_ref(data):
+    d = data.draw(st.sampled_from([2, 4, 8, 16]))
+    a = arrays(data.draw, d * d, jnp.float32, lo=-100, hi=100).reshape(d, d)
+    b = arrays(data.draw, d * d, jnp.float32, lo=-100, hi=100).reshape(d, d)
+    assert_allclose(
+        np.asarray(k.matmul8(a, b)), np.asarray(ref.matmul8(a, b)), rtol=1e-5
+    )
+
+
+def test_column_major_layout_matches_paper_figure7():
+    # The kernel's internal layout must place element i at
+    # (i mod 8, i div 8) — the paper's Figure 7.
+    u = jnp.arange(64, dtype=jnp.float32)
+    g = k._to_grid(u)
+    assert g.shape == (8, 8)
+    assert g[1, 1] == 9  # U9 at row 1, col 1 per Figure 7
+    assert g[0, 7] == 56
+    assert np.array_equal(np.asarray(k._from_grid(g)), np.asarray(u))
+
+
+def test_ragged_sizes_rejected():
+    u = jnp.arange(12, dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        k.translate(u, u)
+
+
+def test_identity_affine_is_exact():
+    xs = jnp.arange(64, dtype=jnp.float32)
+    ys = -xs
+    params = jnp.asarray([1.0, 0.0, 0.0, 1.0, 0.0, 0.0], dtype=jnp.float32)
+    ox, oy = k.affine_points(xs, ys, params)
+    assert np.array_equal(np.asarray(ox), np.asarray(xs))
+    assert np.array_equal(np.asarray(oy), np.asarray(ys))
+
+
+def test_translate_paper_example():
+    # 64-element translation, the Table 1 workload.
+    u = jnp.arange(64, dtype=jnp.float32)
+    v = jnp.full((64,), 5.0, dtype=jnp.float32)
+    out = k.translate(u, v)
+    assert_allclose(np.asarray(out), np.arange(64) + 5.0)
+
+
+def test_scale_paper_example():
+    # ×5 scaling — the 00009005 context word.
+    u = jnp.arange(64, dtype=jnp.float32)
+    out = k.scale(u, jnp.asarray([5.0], dtype=jnp.float32))
+    assert_allclose(np.asarray(out), np.arange(64) * 5.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_affine3d_matches_ref(data):
+    n = data.draw(st.sampled_from([8, 64, 1024]))
+    xs = arrays(data.draw, n, jnp.float32, lo=-100, hi=100)
+    ys = arrays(data.draw, n, jnp.float32, lo=-100, hi=100)
+    zs = arrays(data.draw, n, jnp.float32, lo=-100, hi=100)
+    p = data.draw(
+        st.lists(
+            st.floats(min_value=-5, max_value=5, allow_nan=False),
+            min_size=12,
+            max_size=12,
+        )
+    )
+    params = jnp.asarray(np.array(p, dtype=np.float32))
+    got = k.affine3d_points(xs, ys, zs, params)
+    want = ref.affine3d_points(xs, ys, zs, params)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-3)
+
+
+def test_affine3d_identity_is_exact():
+    n = 64
+    xs = jnp.arange(n, dtype=jnp.float32)
+    ys = -xs
+    zs = 2.0 * xs
+    params = jnp.asarray(
+        [1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0], dtype=jnp.float32
+    )
+    ox, oy, oz = k.affine3d_points(xs, ys, zs, params)
+    assert np.array_equal(np.asarray(ox), np.asarray(xs))
+    assert np.array_equal(np.asarray(oy), np.asarray(ys))
+    assert np.array_equal(np.asarray(oz), np.asarray(zs))

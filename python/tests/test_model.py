@@ -1,0 +1,78 @@
+"""L2 correctness: pipeline composition, shapes, and jit-lowerability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def p6(vals):
+    return jnp.asarray(np.array(vals, dtype=np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_pipeline3_equals_composed_affine(data):
+    f = st.floats(min_value=-3, max_value=3, allow_nan=False)
+    ps = [p6(data.draw(st.lists(f, min_size=6, max_size=6))) for _ in range(3)]
+    xs = jnp.linspace(-10, 10, 64, dtype=F32)
+    ys = jnp.linspace(5, -5, 64, dtype=F32)
+    px, py = model.pipeline3(xs, ys, *ps)
+    fused = model.compose_affine(model.compose_affine(ps[0], ps[1]), ps[2])
+    fx, fy = model.affine_tile(xs, ys, fused)
+    assert_allclose(np.asarray(px), np.asarray(fx), rtol=1e-3, atol=1e-2)
+    assert_allclose(np.asarray(py), np.asarray(fy), rtol=1e-3, atol=1e-2)
+
+
+def test_compose_affine_identity():
+    ident = p6([1, 0, 0, 1, 0, 0])
+    other = p6([2, 1, -1, 0.5, 3, -4])
+    assert_allclose(
+        np.asarray(model.compose_affine(ident, other)), np.asarray(other)
+    )
+    assert_allclose(
+        np.asarray(model.compose_affine(other, ident)), np.asarray(other)
+    )
+
+
+def test_translate_then_scale_order():
+    # compose_affine(p0, p1) applies p0 FIRST.
+    translate = p6([1, 0, 0, 1, 10, 0])
+    scale = p6([2, 0, 0, 2, 0, 0])
+    fused = model.compose_affine(translate, scale)
+    xs = jnp.asarray([1.0], dtype=F32) * jnp.ones(8, F32)
+    ys = jnp.zeros(8, F32)
+    ox, _ = model.affine_tile(xs, ys, fused)
+    # (1 + 10) * 2 = 22.
+    assert_allclose(np.asarray(ox), np.full(8, 22.0))
+
+
+def test_all_model_fns_lower_to_stablehlo():
+    vec = jax.ShapeDtypeStruct((64,), F32)
+    par = jax.ShapeDtypeStruct((6,), F32)
+    sca = jax.ShapeDtypeStruct((1,), F32)
+    m8 = jax.ShapeDtypeStruct((8, 8), F32)
+    cases = [
+        (model.translate_vectors, (vec, vec)),
+        (model.scale_vector, (vec, sca)),
+        (model.affine_tile, (vec, vec, par)),
+        (model.pipeline3, (vec, vec, par, par, par)),
+        (model.matmul, (m8, m8)),
+    ]
+    for fn, args in cases:
+        lowered = jax.jit(fn).lower(*args)
+        ir = str(lowered.compiler_ir("stablehlo"))
+        assert "stablehlo" in ir or "func.func" in ir
+
+
+def test_outputs_are_tuples():
+    xs = jnp.zeros(64, F32)
+    out = model.translate_vectors(xs, xs)
+    assert isinstance(out, tuple) and len(out) == 1
+    out = model.affine_tile(xs, xs, p6([1, 0, 0, 1, 0, 0]))
+    assert isinstance(out, tuple) and len(out) == 2

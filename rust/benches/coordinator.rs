@@ -1,0 +1,100 @@
+//! Bench: the serving layer — request→response latency and sustained
+//! point throughput per backend, and the effect of dynamic batching.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use morpho::benchkit::{bench, section};
+use morpho::coordinator::{
+    BackendChoice, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use morpho::graphics::Transform;
+
+fn coordinator(backend: BackendChoice, max_wait_us: u64) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        backend,
+        workers: 2,
+        batcher: BatcherConfig {
+            max_wait: Duration::from_micros(max_wait_us),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn round_trip(c: &Coordinator, n: usize) {
+    let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let ys = vec![1.0f32; n];
+    let resp = c
+        .transform_blocking(xs, ys, vec![Transform::Translate { tx: 1.0, ty: 2.0 }])
+        .unwrap();
+    std::hint::black_box(resp);
+}
+
+fn throughput(c: &Arc<Coordinator>, clients: usize, reqs_per_client: usize, n: usize) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                for _ in 0..reqs_per_client {
+                    round_trip(&c, n);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (clients * reqs_per_client * n) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    section("single-request round-trip latency (64-point tile)");
+    for backend in [BackendChoice::Native, BackendChoice::M1Sim, BackendChoice::Xla] {
+        let c = coordinator(backend, 100);
+        bench(&format!("{backend:?} round-trip 64 pts"), || round_trip(&c, 64));
+        c.shutdown();
+    }
+
+    section("sustained throughput (4 clients × 4096-point requests)");
+    for backend in [BackendChoice::Native, BackendChoice::M1Sim, BackendChoice::Xla] {
+        let c = Arc::new(coordinator(backend, 200));
+        let tput = throughput(&c, 4, 30, 4096);
+        let m = c.metrics();
+        println!(
+            "{:<10} {:>10.2} M points/s   (jobs={} mean_batch={:.0}pts exec p50={}µs)",
+            format!("{backend:?}"),
+            tput / 1e6,
+            m.jobs,
+            m.mean_batch_points(),
+            m.execute_p50_us
+        );
+    }
+
+    section("dynamic batching ablation (100 × 8-pt same-transform requests)");
+    for (label, max_wait_us) in [("batching ON  (2ms window)", 2000u64), ("batching OFF (0 window)", 0)] {
+        let c = Arc::new(coordinator(BackendChoice::Native, max_wait_us));
+        let receivers: Vec<_> = (0..100)
+            .map(|i| {
+                c.submit(
+                    vec![i as f32; 8],
+                    vec![0.0; 8],
+                    vec![Transform::Scale { sx: 2.0, sy: 2.0 }],
+                )
+                .unwrap()
+            })
+            .collect();
+        for rx in receivers {
+            rx.recv().unwrap();
+        }
+        let m = c.metrics();
+        println!(
+            "{label}: requests={} jobs={} mean_batch={:.1}pts",
+            m.requests,
+            m.jobs,
+            m.mean_batch_points()
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: regenerate Figures 9–16 (cycles and cycles/element for the 8-
+//! and 64-element translation and scaling algorithms across M1 / 80486 /
+//! 80386), plus a size sweep that extends the figures beyond the paper's
+//! two sizes — the ablation showing where the M1's advantage comes from.
+
+use morpho::baselines::routines as x86;
+use morpho::baselines::Cpu;
+use morpho::benchkit::section;
+use morpho::mapping::{runner::run_routine, MappingPlan, VecVecMapping};
+use morpho::morphosys::AluOp;
+use morpho::perf::{figure, render_figure};
+
+fn main() {
+    for num in 9..=16 {
+        let (title, rows, per_elem) = figure(num);
+        println!("{}", render_figure(&title, &rows, per_elem));
+    }
+
+    section("extension: translation cycles/element vs vector size (not in paper)");
+    println!("{:>4} {:>10} {:>10} {:>10} {:>12}", "n", "M1", "80486", "80386", "M1 speedup");
+    for n in [8usize, 16, 24, 32, 40, 48, 56, 64] {
+        let u: Vec<i16> = (0..n as i16).collect();
+        let v = vec![3i16; n];
+        let m1 = run_routine(&VecVecMapping { n, op: AluOp::Add }.compile(), &u, Some(&v))
+            .report
+            .cycles;
+        let c486 = x86::run_translation(Cpu::I486, &u, &v).1.cycles;
+        let c386 = x86::run_translation(Cpu::I386, &u, &v).1.cycles;
+        println!(
+            "{:>4} {:>10.3} {:>10.3} {:>10.3} {:>11.2}x",
+            n,
+            m1 as f64 / n as f64,
+            c486 as f64 / n as f64,
+            c386 as f64 / n as f64,
+            c486 as f64 / m1 as f64
+        );
+    }
+
+    section("ablation: where do the M1's cycles go? (phase breakdown)");
+    println!("{:>4} {:>8} {:>8} {:>9} {:>8} {:>14}", "n", "load", "config", "compute", "store", "compute-frac");
+    for n in [8usize, 16, 32, 64] {
+        let r = VecVecMapping { n, op: AluOp::Add }.compile();
+        let plan = MappingPlan::analyze(&r.program);
+        println!(
+            "{:>4} {:>8} {:>8} {:>9} {:>8} {:>13.1}%",
+            n,
+            plan.load,
+            plan.config,
+            plan.compute,
+            plan.store,
+            100.0 * plan.compute_fraction()
+        );
+    }
+    println!(
+        "\nThe broadcasts themselves are a small fraction of the budget: the M1's win\n\
+         comes from feeding 8 ALUs per cycle during them, while DMA dominates both ends."
+    );
+}

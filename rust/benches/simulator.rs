@@ -1,0 +1,64 @@
+//! Bench: simulator hot paths — RC-array broadcast throughput, full
+//! routine execution rate, x86 interpreter throughput. These are the
+//! numbers the §Perf optimization pass tracks.
+
+use morpho::baselines::routines as x86;
+use morpho::baselines::Cpu;
+use morpho::benchkit::{bench, section};
+use morpho::mapping::{runner::run_routine_on, PointTransformMapping, VecVecMapping};
+use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, RcArray};
+use morpho::morphosys::{AluOp, M1System};
+
+fn main() {
+    section("RC array broadcast (the innermost simulator loop)");
+    let mut arr = RcArray::new();
+    let cw = ContextWord::two_port(AluOp::Add);
+    let a = [1i16; 8];
+    let b = [2i16; 8];
+    let m = bench("column broadcast (8 cells)", || {
+        for col in 0..8 {
+            arr.broadcast(BroadcastMode::Column, col, &cw, &a, &b);
+        }
+    });
+    println!(
+        "  → {:.1} M cell-ops/s",
+        m.throughput(64.0) / 1e6
+    );
+
+    section("full M1 routine simulation rate");
+    let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+    let u: Vec<i16> = (0..64).collect();
+    let v = vec![9i16; 64];
+    let mut sys = M1System::new();
+    let m = bench("translation-64 routine (reused system)", || {
+        sys.reset_chip();
+        std::hint::black_box(run_routine_on(&mut sys, &routine, &u, Some(&v)));
+    });
+    println!(
+        "  → {:.1}k routines/s, {:.1} M simulated-elements/s",
+        1.0 / m.mean.as_secs_f64() / 1e3,
+        m.throughput(64.0) / 1e6
+    );
+
+    let pt = PointTransformMapping { n: 64, m: [0, -64, 64, 0], t: [3, -2], shift: 6 }.compile();
+    let mut sys2 = M1System::new();
+    let m = bench("point-transform-64 routine (8 broadcasts/column)", || {
+        sys2.reset_chip();
+        std::hint::black_box(run_routine_on(&mut sys2, &pt, &u, Some(&v)));
+    });
+    println!("  → {:.1} M simulated-points/s", m.throughput(64.0) / 1e6);
+
+    section("x86 baseline interpreter");
+    let ub: Vec<i16> = (0..64).collect();
+    let vb = vec![1i16; 64];
+    for cpu in Cpu::ALL {
+        let m = bench(&format!("{} translation-64 listing", cpu.name()), || {
+            std::hint::black_box(x86::run_translation(cpu, &ub, &vb));
+        });
+        println!("  → {:.1} M interpreted-instr/s", m.throughput(9.0 * 64.0) / 1e6);
+    }
+    let m = bench("80486 matmul-8x8 listing", || {
+        std::hint::black_box(x86::run_matmul(Cpu::I486, 8, &ub, &vb));
+    });
+    println!("  → {:.2}k matmuls/s", 1.0 / m.mean.as_secs_f64() / 1e3);
+}

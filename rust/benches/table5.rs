@@ -1,0 +1,64 @@
+//! Bench: regenerate Table 5 end-to-end and time every cell — the M1
+//! simulator running the paper's mappings and the x86 models running the
+//! paper's listings. This is the headline-reproduction bench: it prints
+//! the full measured-vs-paper table and the simulation cost of each cell.
+
+use morpho::baselines::routines as x86;
+use morpho::baselines::Cpu;
+use morpho::benchkit::{bench, section};
+use morpho::mapping::{runner::run_routine, MatMulMapping, VecScalarMapping, VecVecMapping};
+use morpho::morphosys::AluOp;
+use morpho::perf::{render_table, table5};
+
+fn main() {
+    section("Table 5 — full regeneration (measured vs paper)");
+    println!("{}", render_table("Table 5", &table5()));
+
+    section("simulation cost per Table 5 cell (host-side wall time)");
+    let u64v: Vec<i16> = (0..64).collect();
+    let v64: Vec<i16> = vec![7; 64];
+    let u8v: Vec<i16> = (0..8).collect();
+    let v8: Vec<i16> = vec![7; 8];
+
+    let t64 = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+    bench("M1 translation-64 (96 M1 cycles)", || {
+        std::hint::black_box(run_routine(&t64, &u64v, Some(&v64)));
+    });
+    let t8 = VecVecMapping { n: 8, op: AluOp::Add }.compile();
+    bench("M1 translation-8 (21 M1 cycles)", || {
+        std::hint::black_box(run_routine(&t8, &u8v, Some(&v8)));
+    });
+    let s64 = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+    bench("M1 scaling-64 (55 M1 cycles)", || {
+        std::hint::black_box(run_routine(&s64, &u64v, None));
+    });
+    let rot = MatMulMapping { dim: 8, a: vec![1; 64], shift: 0 }.compile();
+    bench("M1 rotation-I 8x8 matmul", || {
+        std::hint::black_box(run_routine(&rot, &u64v, None));
+    });
+
+    for cpu in Cpu::ALL {
+        bench(&format!("{} translation-64 listing", cpu.name()), || {
+            std::hint::black_box(x86::run_translation(cpu, &u64v, &v64));
+        });
+    }
+    bench("80486 rotation 8x8 matmul listing", || {
+        std::hint::black_box(x86::run_matmul(Cpu::I486, 8, &u64v, &v64.repeat(1)));
+    });
+
+    section("speedup summary (M1 cycles vs baseline cycles)");
+    for block in table5() {
+        let m1 = &block[0];
+        for other in &block[1..] {
+            println!(
+                "{:<14} n={:<3} M1 {:>6} vs {:<8} {:>7} cycles → speedup {:>7.2}",
+                m1.algorithm,
+                m1.n,
+                m1.cycles,
+                other.system,
+                other.cycles,
+                other.cycles as f64 / m1.cycles as f64
+            );
+        }
+    }
+}

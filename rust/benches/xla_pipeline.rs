@@ -1,0 +1,71 @@
+//! Bench: the PJRT/XLA hot path — per-artifact execution latency, tile-
+//! size scaling, and the fused 3-stage pipeline vs three separate calls
+//! (the L2 fusion win).
+
+use morpho::benchkit::{bench, section};
+use morpho::runtime::Executor;
+
+fn main() {
+    let exec = Executor::discover().expect("run `make artifacts` first");
+    println!("platform: {}", exec.platform());
+    let names: Vec<String> = exec.registry().names().map(String::from).collect();
+    exec.warm_up(names.iter().map(String::as_str)).unwrap();
+
+    let params = [0.8f32, -0.6, 0.6, 0.8, 3.0, -1.0];
+
+    section("affine tile latency vs size");
+    for n in [64usize, 1024, 4096] {
+        let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let ys: Vec<f32> = vec![1.0; n];
+        let name = format!("affine{n}");
+        let m = bench(&format!("{name} ({n} pts)"), || {
+            std::hint::black_box(exec.run_f32(&name, &[&xs, &ys, &params]).unwrap());
+        });
+        println!("  → {:.2} M points/s", m.throughput(n as f64) / 1e6);
+    }
+
+    section("translate / scale artifacts (the paper's two §5 routines)");
+    let u: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let v = vec![2.0f32; 64];
+    bench("translate64", || {
+        std::hint::black_box(exec.run_f32("translate64", &[&u, &v]).unwrap());
+    });
+    bench("scale64", || {
+        std::hint::black_box(exec.run_f32("scale64", &[&u, &[5.0f32]]).unwrap());
+    });
+    let u1k: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+    let v1k = vec![2.0f32; 1024];
+    bench("translate1024", || {
+        std::hint::black_box(exec.run_f32("translate1024", &[&u1k, &v1k]).unwrap());
+    });
+
+    section("L2 fusion: pipeline3 artifact vs 3 affine1024 calls");
+    let xs: Vec<f32> = (0..1024).map(|i| (i % 97) as f32).collect();
+    let ys: Vec<f32> = (0..1024).map(|i| (i % 31) as f32).collect();
+    let p0 = [2.0f32, 0.0, 0.0, 2.0, 0.0, 0.0];
+    let p1 = [0.8f32, -0.6, 0.6, 0.8, 0.0, 0.0];
+    let p2 = [1.0f32, 0.0, 0.0, 1.0, -3.0, 9.0];
+    let fused = bench("pipeline3_1024 (one fused artifact)", || {
+        std::hint::black_box(
+            exec.run_f32("pipeline3_1024", &[&xs, &ys, &p0, &p1, &p2]).unwrap(),
+        );
+    });
+    let separate = bench("3 × affine1024 (unfused)", || {
+        let o1 = exec.run_f32("affine1024", &[&xs, &ys, &p0]).unwrap();
+        let o2 = exec.run_f32("affine1024", &[&o1[0], &o1[1], &p1]).unwrap();
+        std::hint::black_box(exec.run_f32("affine1024", &[&o2[0], &o2[1], &p2]).unwrap());
+    });
+    println!(
+        "  → fusion speedup: {:.2}x",
+        separate.mean.as_secs_f64() / fused.mean.as_secs_f64()
+    );
+
+    section("matmul8 (the §5.3 rotation building block)");
+    let a: Vec<f32> = (0..64).map(|i| i as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..64).map(|i| 6.4 - i as f32 * 0.1).collect();
+    bench("matmul8", || {
+        std::hint::black_box(
+            exec.run_f32_shaped("matmul8", &[(&a, &[8, 8]), (&b, &[8, 8])]).unwrap(),
+        );
+    });
+}

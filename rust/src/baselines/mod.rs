@@ -1,0 +1,24 @@
+//! # Intel single-processor baselines (80386 / 80486 / Pentium)
+//!
+//! The paper compares the M1 against hand cycle-counted x86 assembly
+//! (Tables 3–4 for translation/scaling, and matrix-multiplication
+//! routines for rotation, with clock speeds 40 / 100 / 133 MHz per
+//! Table 5). We go one step further than the paper: rather than summing a
+//! static table by hand, we **execute** the same listings in an x86-subset
+//! interpreter ([`x86`]) against per-model timing tables ([`timing`],
+//! values from the Intel programmer's reference manuals), which yields
+//! both the cycle count *and* a functional-correctness check of the
+//! baseline.
+//!
+//! Where the paper's own arithmetic disagrees with its per-instruction
+//! tables (e.g. 769T for the 64-element translation on the 80486, where
+//! its own 11-cycle iteration implies 706T), we report the model's number
+//! and flag the delta in `EXPERIMENTS.md §Deviations` — the comparisons'
+//! *shape* is unaffected.
+
+pub mod routines;
+pub mod timing;
+pub mod x86;
+
+pub use timing::Cpu;
+pub use x86::{Interp, Op, Reg16, RunReport};

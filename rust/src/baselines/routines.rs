@@ -1,0 +1,421 @@
+//! The paper's baseline assembly listings, transcribed verbatim
+//! (Tables 3–4) plus the dense matrix-multiplication routine its rotation
+//! comparison implies, with staging/running helpers.
+//!
+//! Memory map (element-addressed): V1 at `0x1000`, V2 at `0x2000`, result
+//! at `0x3000`, matrices A/B/C at `0x1000/0x2000/0x3000`, scratch loop
+//! counters below `0x100`.
+
+use super::timing::Cpu;
+use super::x86::ast::Operand::{Abs, Imm, Mem, Reg};
+use super::x86::ast::{Op, Reg16};
+use super::x86::interp::{Interp, RunReport};
+
+/// Element address of vector/matrix operand 1.
+pub const V1_LOC: u16 = 0x1000;
+/// Element address of vector/matrix operand 2.
+pub const V2_LOC: u16 = 0x2000;
+/// Element address of the result.
+pub const RESULT_LOC: u16 = 0x3000;
+const I_CNT: u16 = 0x10;
+const ROW_SAVE: u16 = 0x12;
+
+/// Table 3 — the vector-vector (translation) loop:
+/// `result[i] = V1[i] + V2[i]`, `n` iterations.
+pub fn translation_routine(n: i16) -> Vec<Op> {
+    vec![
+        Op::Mov(Reg(Reg16::SP), Imm(V1_LOC as i16)),
+        Op::Mov(Reg(Reg16::BP), Imm(V2_LOC as i16)),
+        Op::Mov(Reg(Reg16::DI), Imm(RESULT_LOC as i16)),
+        Op::Mov(Reg(Reg16::SI), Imm(n)),
+        // AA:
+        Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+        Op::Mov(Reg(Reg16::BX), Mem(Reg16::BP)),
+        Op::Add(Reg16::AX, Reg(Reg16::BX)),
+        Op::Mov(Mem(Reg16::DI), Reg(Reg16::AX)),
+        Op::Inc(Reg16::SP),
+        Op::Inc(Reg16::BP),
+        Op::Inc(Reg16::DI),
+        Op::Dec(Reg16::SI),
+        Op::Jnz(4),
+        Op::Halt,
+    ]
+}
+
+/// Table 4 — the vector-scalar (scaling) loop **as published**: the
+/// paper's listing reads "AX ← AX + Constant", i.e. it *adds* the scalar
+/// (its cycle counts are built on ADD). Kept verbatim for the cycle
+/// reproduction; see [`scaling_routine_imul`] for the functionally
+/// multiplicative variant.
+pub fn scaling_routine(n: i16, constant: i16) -> Vec<Op> {
+    vec![
+        Op::Mov(Reg(Reg16::SP), Imm(V1_LOC as i16)),
+        Op::Mov(Reg(Reg16::BP), Imm(constant)),
+        Op::Mov(Reg(Reg16::DI), Imm(RESULT_LOC as i16)),
+        Op::Mov(Reg(Reg16::SI), Imm(n)),
+        // AA:
+        Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+        Op::Add(Reg16::AX, Reg(Reg16::BP)),
+        Op::Mov(Mem(Reg16::DI), Reg(Reg16::AX)),
+        Op::Inc(Reg16::SP),
+        Op::Inc(Reg16::DI),
+        Op::Dec(Reg16::SI),
+        Op::Jnz(4),
+        Op::Halt,
+    ]
+}
+
+/// The corrected scaling loop that actually multiplies (`IMUL`), used by
+/// the deviation analysis in EXPERIMENTS.md — strictly slower than the
+/// published ADD loop on every model, so the paper's speedup claims only
+/// improve under the correction.
+pub fn scaling_routine_imul(n: i16, constant: i16) -> Vec<Op> {
+    vec![
+        Op::Mov(Reg(Reg16::SP), Imm(V1_LOC as i16)),
+        Op::Mov(Reg(Reg16::BP), Imm(constant)),
+        Op::Mov(Reg(Reg16::DI), Imm(RESULT_LOC as i16)),
+        Op::Mov(Reg(Reg16::SI), Imm(n)),
+        // AA:
+        Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+        Op::Imul(Reg(Reg16::BP)),
+        Op::Mov(Mem(Reg16::DI), Reg(Reg16::AX)),
+        Op::Inc(Reg16::SP),
+        Op::Inc(Reg16::DI),
+        Op::Dec(Reg16::SI),
+        Op::Jnz(4),
+        Op::Halt,
+    ]
+}
+
+/// Fully unrolled vector-vector loop — the obvious hand-optimization of
+/// Table 3 (no INC/DEC/JNZ overhead, absolute addressing). Used by the
+/// ablation bench to show the baselines' headroom: the 486 gains ~45%,
+/// yet the M1 still wins by ~4× on 64 elements.
+pub fn translation_unrolled(n: i16) -> Vec<Op> {
+    let mut p = Vec::new();
+    for i in 0..n as u16 {
+        p.push(Op::Mov(Reg(Reg16::AX), Abs(V1_LOC + i)));
+        p.push(Op::Mov(Reg(Reg16::BX), Abs(V2_LOC + i)));
+        p.push(Op::Add(Reg16::AX, Reg(Reg16::BX)));
+        p.push(Op::Mov(Abs(RESULT_LOC + i), Reg(Reg16::AX)));
+    }
+    p.push(Op::Halt);
+    p
+}
+
+/// Run the unrolled translation loop.
+pub fn run_translation_unrolled(cpu: Cpu, u: &[i16], v: &[i16]) -> (Vec<i16>, RunReport) {
+    assert_eq!(u.len(), v.len());
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + u.len()].copy_from_slice(u);
+    m.mem[V2_LOC as usize..V2_LOC as usize + v.len()].copy_from_slice(v);
+    let report = m.run(&translation_unrolled(u.len() as i16), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + u.len()].to_vec();
+    (out, report)
+}
+
+/// Pentium-scheduled translation loop: the Table 3 body reordered so
+/// independent simple ops are adjacent and pair in the U/V pipes — the
+/// hand-tuning a 1995-era compiler would do. Note the constraint that
+/// costs the schedule its last pairing opportunity: INC sets ZF, so
+/// `DEC SI` must stay immediately before `JNZ` (reordering it earlier is
+/// a real x86 bug).
+pub fn translation_pentium_scheduled(n: i16) -> Vec<Op> {
+    vec![
+        Op::Mov(Reg(Reg16::SP), Imm(V1_LOC as i16)),
+        Op::Mov(Reg(Reg16::BP), Imm(V2_LOC as i16)),
+        Op::Mov(Reg(Reg16::DI), Imm(RESULT_LOC as i16)),
+        Op::Mov(Reg(Reg16::SI), Imm(n)),
+        // AA: loads pair; pointer increments pair; store pairs with the
+        // destination increment.
+        Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+        Op::Mov(Reg(Reg16::BX), Mem(Reg16::BP)),
+        Op::Inc(Reg16::SP),
+        Op::Inc(Reg16::BP),
+        Op::Add(Reg16::AX, Reg(Reg16::BX)),
+        Op::Mov(Mem(Reg16::DI), Reg(Reg16::AX)),
+        Op::Inc(Reg16::DI),
+        Op::Dec(Reg16::SI),
+        Op::Jnz(4),
+        Op::Halt,
+    ]
+}
+
+/// Run the Pentium-scheduled loop.
+pub fn run_translation_scheduled(cpu: Cpu, u: &[i16], v: &[i16]) -> (Vec<i16>, RunReport) {
+    assert_eq!(u.len(), v.len());
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + u.len()].copy_from_slice(u);
+    m.mem[V2_LOC as usize..V2_LOC as usize + v.len()].copy_from_slice(v);
+    let report = m.run(&translation_pentium_scheduled(u.len() as i16), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + u.len()].to_vec();
+    (out, report)
+}
+
+/// Dense `dim × dim` matrix multiplication `C = A × B` — the baseline for
+/// the paper's rotation/composite comparison. A is row-major at
+/// [`V1_LOC`], **B column-major** at [`V2_LOC`] (the natural layout for a
+/// hand-tuned inner loop: both pointers just increment), C row-major at
+/// [`RESULT_LOC`].
+pub fn matmul_routine(dim: i16) -> Vec<Op> {
+    let mut p = Vec::new();
+    // setup
+    p.push(Op::Mov(Reg(Reg16::SP), Imm(V1_LOC as i16))); // A row ptr
+    p.push(Op::Mov(Reg(Reg16::DI), Imm(RESULT_LOC as i16))); // C ptr
+    p.push(Op::Mov(Reg(Reg16::AX), Imm(dim)));
+    p.push(Op::Mov(Abs(I_CNT), Reg(Reg16::AX)));
+    let i_loop = p.len(); // 4
+    p.push(Op::Mov(Reg(Reg16::BP), Imm(V2_LOC as i16))); // B base (col-major)
+    p.push(Op::Mov(Reg(Reg16::CX), Imm(dim))); // j counter
+    let j_loop = p.len(); // 6
+    p.push(Op::Mov(Abs(ROW_SAVE), Reg(Reg16::SP)));
+    p.push(Op::Mov(Reg(Reg16::BX), Imm(0))); // acc
+    p.push(Op::Mov(Reg(Reg16::SI), Imm(dim))); // k counter
+    let k_loop = p.len(); // 9
+    p.push(Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP))); // A[i][k]
+    p.push(Op::Mov(Reg(Reg16::DX), Mem(Reg16::BP))); // B[k][j]
+    p.push(Op::Imul(Reg(Reg16::DX)));
+    p.push(Op::Add(Reg16::BX, Reg(Reg16::AX)));
+    p.push(Op::Inc(Reg16::SP));
+    p.push(Op::Inc(Reg16::BP));
+    p.push(Op::Dec(Reg16::SI));
+    p.push(Op::Jnz(k_loop));
+    p.push(Op::Mov(Mem(Reg16::DI), Reg(Reg16::BX))); // C[i][j]
+    p.push(Op::Inc(Reg16::DI));
+    p.push(Op::Mov(Reg(Reg16::SP), Abs(ROW_SAVE))); // rewind row
+    p.push(Op::Dec(Reg16::CX));
+    p.push(Op::Jnz(j_loop));
+    p.push(Op::Add(Reg16::SP, Imm(dim))); // next row of A
+    p.push(Op::Mov(Reg(Reg16::AX), Abs(I_CNT)));
+    p.push(Op::Dec(Reg16::AX));
+    p.push(Op::Mov(Abs(I_CNT), Reg(Reg16::AX)));
+    p.push(Op::Jnz(i_loop));
+    p.push(Op::Halt);
+    p
+}
+
+/// Stage two vectors, run the translation loop, return result + report.
+pub fn run_translation(cpu: Cpu, u: &[i16], v: &[i16]) -> (Vec<i16>, RunReport) {
+    assert_eq!(u.len(), v.len());
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + u.len()].copy_from_slice(u);
+    m.mem[V2_LOC as usize..V2_LOC as usize + v.len()].copy_from_slice(v);
+    let report = m.run(&translation_routine(u.len() as i16), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + u.len()].to_vec();
+    (out, report)
+}
+
+/// Stage a vector, run the (published, additive) scaling loop.
+pub fn run_scaling(cpu: Cpu, u: &[i16], constant: i16) -> (Vec<i16>, RunReport) {
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + u.len()].copy_from_slice(u);
+    let report = m.run(&scaling_routine(u.len() as i16, constant), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + u.len()].to_vec();
+    (out, report)
+}
+
+/// Run the corrected multiplicative scaling loop.
+pub fn run_scaling_imul(cpu: Cpu, u: &[i16], constant: i16) -> (Vec<i16>, RunReport) {
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + u.len()].copy_from_slice(u);
+    let report = m.run(&scaling_routine_imul(u.len() as i16, constant), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + u.len()].to_vec();
+    (out, report)
+}
+
+/// Stage A (row-major) and B (row-major — transposed internally to the
+/// routine's column-major layout), run the matmul, return row-major C.
+pub fn run_matmul(cpu: Cpu, dim: usize, a: &[i16], b: &[i16]) -> (Vec<i16>, RunReport) {
+    assert_eq!(a.len(), dim * dim);
+    assert_eq!(b.len(), dim * dim);
+    let mut m = Interp::new(0x10000);
+    m.mem[V1_LOC as usize..V1_LOC as usize + a.len()].copy_from_slice(a);
+    for k in 0..dim {
+        for j in 0..dim {
+            // column-major: B[k][j] at V2 + j*dim + k
+            m.mem[V2_LOC as usize + j * dim + k] = b[k * dim + j];
+        }
+    }
+    let report = m.run(&matmul_routine(dim as i16), cpu);
+    let out = m.mem[RESULT_LOC as usize..RESULT_LOC as usize + dim * dim].to_vec();
+    (out, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn translation_cycles_match_table3_8_elements() {
+        let u = vec![1i16; 8];
+        let v = vec![2i16; 8];
+        // Paper Table 3: 90T on the 486, 220T on the 386.
+        assert_eq!(run_translation(Cpu::I486, &u, &v).1.cycles, 90);
+        assert_eq!(run_translation(Cpu::I386, &u, &v).1.cycles, 220);
+    }
+
+    #[test]
+    fn translation_cycles_64_elements_model_vs_paper() {
+        let u = vec![1i16; 64];
+        let v = vec![2i16; 64];
+        // The paper reports 769T (486) / 1723T (386); its own
+        // per-instruction table implies 706T / 1732T. We assert the
+        // table-derived model values; the delta is recorded in
+        // EXPERIMENTS.md §Deviations.
+        assert_eq!(run_translation(Cpu::I486, &u, &v).1.cycles, 706);
+        assert_eq!(run_translation(Cpu::I386, &u, &v).1.cycles, 1732);
+    }
+
+    #[test]
+    fn scaling_cycles_match_table4_exactly() {
+        let u = vec![3i16; 8];
+        assert_eq!(run_scaling(Cpu::I486, &u, 5).1.cycles, 74);
+        assert_eq!(run_scaling(Cpu::I386, &u, 5).1.cycles, 172);
+        let u64v = vec![3i16; 64];
+        assert_eq!(run_scaling(Cpu::I486, &u64v, 5).1.cycles, 578);
+        assert_eq!(run_scaling(Cpu::I386, &u64v, 5).1.cycles, 1348);
+    }
+
+    #[test]
+    fn translation_is_functionally_correct() {
+        let u: Vec<i16> = (0..64).collect();
+        let v: Vec<i16> = (0..64).map(|i| 100 - i).collect();
+        let (out, _) = run_translation(Cpu::I486, &u, &v);
+        assert_eq!(out, vec![100i16; 64]);
+    }
+
+    #[test]
+    fn published_scaling_listing_adds_not_multiplies() {
+        // Faithful to Table 4: the "scaling" listing adds the constant.
+        let u: Vec<i16> = (0..8).collect();
+        let (out, _) = run_scaling(Cpu::I486, &u, 5);
+        let expected: Vec<i16> = u.iter().map(|x| x + 5).collect();
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn corrected_scaling_multiplies_and_costs_more() {
+        let u: Vec<i16> = (0..8).collect();
+        let (out, rep_mul) = run_scaling_imul(Cpu::I486, &u, 5);
+        let expected: Vec<i16> = u.iter().map(|x| x * 5).collect();
+        assert_eq!(out, expected);
+        let (_, rep_add) = run_scaling(Cpu::I486, &u, 5);
+        assert!(rep_mul.cycles > rep_add.cycles);
+    }
+
+    #[test]
+    fn matmul_is_functionally_correct() {
+        let mut rng = Rng::new(3);
+        for dim in [2usize, 4, 8] {
+            let a: Vec<i16> = (0..dim * dim).map(|_| rng.range_i64(-9, 9) as i16).collect();
+            let b: Vec<i16> = (0..dim * dim).map(|_| rng.range_i64(-9, 9) as i16).collect();
+            let (c, _) = run_matmul(Cpu::I486, dim, &a, &b);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let e: i32 =
+                        (0..dim).map(|k| a[i * dim + k] as i32 * b[k * dim + j] as i32).sum();
+                    assert_eq!(c[i * dim + j], e as i16, "dim={dim} C[{i}][{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_cycle_scale_matches_paper_order() {
+        let a = vec![1i16; 64];
+        let b = vec![1i16; 64];
+        // Paper Table 5: 8×8 rotation = 27038T (486) / 10151T (Pentium).
+        // Our executable model lands in the same order of magnitude, with
+        // the Pentium ~2-3× faster thanks to its cheaper IMUL + pairing.
+        let r486 = run_matmul(Cpu::I486, 8, &a, &b).1;
+        let rp = run_matmul(Cpu::Pentium, 8, &a, &b).1;
+        assert!(r486.cycles > 10_000 && r486.cycles < 40_000, "486: {}", r486.cycles);
+        assert!(rp.cycles > 4_000 && rp.cycles < 15_000, "P5: {}", rp.cycles);
+        assert!(rp.cycles < r486.cycles);
+        assert!(rp.paired > 0);
+    }
+
+    #[test]
+    fn pentium_beats_486_on_every_routine() {
+        let u = vec![7i16; 64];
+        let v = vec![9i16; 64];
+        assert!(
+            run_translation(Cpu::Pentium, &u, &v).1.cycles
+                < run_translation(Cpu::I486, &u, &v).1.cycles
+        );
+        assert!(run_scaling(Cpu::Pentium, &u, 5).1.cycles < run_scaling(Cpu::I486, &u, 5).1.cycles);
+    }
+
+    #[test]
+    fn unrolled_translation_is_faster_but_m1_still_wins() {
+        let u: Vec<i16> = (0..64).collect();
+        let v = vec![9i16; 64];
+        let (out, unrolled) = run_translation_unrolled(Cpu::I486, &u, &v);
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a + b).collect();
+        assert_eq!(out, expected);
+        let (_, looped) = run_translation(Cpu::I486, &u, &v);
+        assert!(unrolled.cycles < looped.cycles);
+        // The M1's 96 cycles still beat the best unrolled baseline.
+        assert!(unrolled.cycles > 96 * 2, "unrolled {} cycles", unrolled.cycles);
+    }
+
+    #[test]
+    fn pentium_scheduling_cannot_beat_the_already_saturated_loop() {
+        // Finding (recorded in EXPERIMENTS.md): the paper's Table 3 loop
+        // already pairs optimally under the U/V rules — the ZF hazard
+        // (INC sets ZF, so DEC must stay adjacent to JNZ) blocks the only
+        // remaining pairing. Hand-scheduling neither helps nor hurts.
+        let u: Vec<i16> = (0..64).collect();
+        let v = vec![1i16; 64];
+        let (out, sched) = run_translation_scheduled(Cpu::Pentium, &u, &v);
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a + b).collect();
+        assert_eq!(out, expected);
+        let (_, plain) = run_translation(Cpu::Pentium, &u, &v);
+        assert!(sched.paired >= plain.paired);
+        assert_eq!(sched.cycles, plain.cycles, "pairing already saturated");
+        // Scheduling must not change results on in-order models either.
+        let (out386, _) = run_translation_scheduled(Cpu::I386, &u, &v);
+        assert_eq!(out386, expected);
+    }
+
+    #[test]
+    fn property_baseline_translation_agrees_with_native() {
+        check("x86 translation == native", 30, |rng: &mut Rng| {
+            let n = rng.range_i64(1, 64) as usize;
+            let u = rng.small_vec(n);
+            let v = rng.small_vec(n);
+            for cpu in Cpu::ALL {
+                let (out, _) = run_translation(cpu, &u, &v);
+                let expected: Vec<i16> =
+                    u.iter().zip(&v).map(|(a, b)| a.wrapping_add(*b)).collect();
+                assert_eq!(out, expected, "{cpu:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_m1_beats_all_baselines_on_cycles() {
+        // The paper's headline, as a property over sizes: for every
+        // supported size the M1 mapping needs fewer cycles than any
+        // baseline model.
+        use crate::mapping::{runner::run_routine, VecVecMapping};
+        use crate::morphosys::AluOp;
+        check("m1 < baselines", 12, |rng: &mut Rng| {
+            let n = [8usize, 16, 24, 32, 40, 48, 56, 64][rng.below(8) as usize];
+            let u = rng.small_vec(n);
+            let v = rng.small_vec(n);
+            let m1 = run_routine(&VecVecMapping { n, op: AluOp::Add }.compile(), &u, Some(&v));
+            for cpu in Cpu::ALL {
+                let (_, rep) = run_translation(cpu, &u, &v);
+                assert!(
+                    m1.report.cycles < rep.cycles,
+                    "n={n}: M1 {} !< {} {}",
+                    m1.report.cycles,
+                    cpu.name(),
+                    rep.cycles
+                );
+            }
+        });
+    }
+}

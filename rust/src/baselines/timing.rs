@@ -1,0 +1,183 @@
+//! Per-model cycle timing tables for the 80386, 80486 and Pentium.
+//!
+//! Values follow the Intel programmer's reference manuals as the paper's
+//! Tables 3–4 use them:
+//!
+//! | op                | 386 | 486 | Pentium |
+//! |-------------------|-----|-----|---------|
+//! | MOV reg, imm      | 2   | 1   | 1       |
+//! | MOV reg, reg      | 2   | 1   | 1       |
+//! | MOV reg, mem      | 4   | 1   | 1       |
+//! | MOV mem, reg      | 2   | 1   | 1       |
+//! | ALU reg, reg/imm  | 2   | 1   | 1       |
+//! | ALU reg, mem      | 6   | 2   | 2       |
+//! | INC/DEC           | 2   | 1   | 1       |
+//! | IMUL (16-bit)     | 22  | 18  | 10      |
+//! | Jcc taken / not   | 7/3 | 3/1 | 3/1     |
+//!
+//! The Pentium additionally dual-issues: two adjacent *simple* 1-cycle
+//! instructions with no register dependence issue together (U+V pipes) —
+//! implemented in [`crate::baselines::x86::Interp`] via
+//! [`Cpu::pairable`]. Clock speeds per the paper's Table 5: 40, 100 and
+//! 133 MHz.
+
+use super::x86::ast::{Op, Operand};
+
+/// Baseline CPU model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Cpu {
+    I386,
+    I486,
+    Pentium,
+}
+
+impl Cpu {
+    pub const ALL: [Cpu; 3] = [Cpu::I386, Cpu::I486, Cpu::Pentium];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cpu::I386 => "80386",
+            Cpu::I486 => "80486",
+            Cpu::Pentium => "Pentium",
+        }
+    }
+
+    /// Clock in MHz (paper Table 5: "Clock speeds for the 80386, 80486,
+    /// and Pentium are: 40, 100, and 133MHz").
+    pub fn clock_mhz(self) -> f64 {
+        match self {
+            Cpu::I386 => 40.0,
+            Cpu::I486 => 100.0,
+            Cpu::Pentium => 133.0,
+        }
+    }
+
+    pub fn dual_issue(self) -> bool {
+        self == Cpu::Pentium
+    }
+
+    /// Cycle cost of one retired instruction (`taken` applies to
+    /// branches).
+    pub fn cost(self, op: &Op, taken: bool) -> u64 {
+        let mem_src = |o: &Operand| matches!(o, Operand::Mem(_) | Operand::Abs(_));
+        match self {
+            Cpu::I386 => match op {
+                Op::Mov(Operand::Reg(_), s) if mem_src(s) => 4,
+                Op::Mov(_, _) => 2,
+                Op::Add(_, s) | Op::Sub(_, s) | Op::Cmp(_, s) if mem_src(s) => 6,
+                Op::Add(_, _) | Op::Sub(_, _) | Op::Cmp(_, _) => 2,
+                Op::Imul(_) => 22,
+                Op::Inc(_) | Op::Dec(_) => 2,
+                Op::Jnz(_) => {
+                    if taken {
+                        7
+                    } else {
+                        3
+                    }
+                }
+                Op::Jmp(_) => 7,
+                Op::Halt => 0,
+            },
+            Cpu::I486 | Cpu::Pentium => match op {
+                Op::Add(_, s) | Op::Sub(_, s) | Op::Cmp(_, s) if mem_src(s) => 2,
+                Op::Mov(_, _) | Op::Add(_, _) | Op::Sub(_, _) | Op::Cmp(_, _) => 1,
+                Op::Imul(_) => {
+                    if self == Cpu::Pentium {
+                        10
+                    } else {
+                        18
+                    }
+                }
+                Op::Inc(_) | Op::Dec(_) => 1,
+                Op::Jnz(_) => {
+                    if taken {
+                        3
+                    } else {
+                        1
+                    }
+                }
+                Op::Jmp(_) => 3,
+                Op::Halt => 0,
+            },
+        }
+    }
+
+    /// Can this instruction occupy the Pentium U pipe and accept a V-pipe
+    /// partner? (simple 1-cycle register/memory ops only).
+    pub fn u_pipe_candidate(op: &Op) -> bool {
+        matches!(
+            op,
+            Op::Mov(_, _) | Op::Add(_, _) | Op::Sub(_, _) | Op::Inc(_) | Op::Dec(_) | Op::Cmp(_, _)
+        )
+    }
+
+    /// Pentium U/V pairing rule: both simple, and the V instruction
+    /// neither reads nor writes the U instruction's destination.
+    pub fn pairable(u: &Op, v: &Op) -> bool {
+        if !Cpu::u_pipe_candidate(u) || !Cpu::u_pipe_candidate(v) {
+            return false;
+        }
+        match u.writes() {
+            Some(w) => !v.reads().contains(&w) && v.writes() != Some(w),
+            None => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::x86::ast::Operand::{Imm, Mem, Reg};
+    use crate::baselines::x86::ast::Reg16;
+
+    #[test]
+    fn table3_iteration_costs_match_paper() {
+        // The paper's Table 3 (translation loop) per-instruction clocks.
+        let body = [
+            (Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)), 1, 4),
+            (Op::Mov(Reg(Reg16::BX), Mem(Reg16::BP)), 1, 4),
+            (Op::Add(Reg16::AX, Reg(Reg16::BX)), 1, 2),
+            (Op::Mov(Mem(Reg16::DI), Reg(Reg16::AX)), 1, 2),
+            (Op::Inc(Reg16::SP), 1, 2),
+            (Op::Inc(Reg16::BP), 1, 2),
+            (Op::Inc(Reg16::DI), 1, 2),
+            (Op::Dec(Reg16::SI), 1, 2),
+        ];
+        for (op, c486, c386) in body {
+            assert_eq!(Cpu::I486.cost(&op, false), c486, "{op:?} on 486");
+            assert_eq!(Cpu::I386.cost(&op, false), c386, "{op:?} on 386");
+        }
+        // JNZ 3/1 on 486, 7/3 on 386 (paper: "3/1T", "7/3T").
+        assert_eq!(Cpu::I486.cost(&Op::Jnz(0), true), 3);
+        assert_eq!(Cpu::I486.cost(&Op::Jnz(0), false), 1);
+        assert_eq!(Cpu::I386.cost(&Op::Jnz(0), true), 7);
+        assert_eq!(Cpu::I386.cost(&Op::Jnz(0), false), 3);
+    }
+
+    #[test]
+    fn setup_costs_match_paper() {
+        // MOV reg, imm = 1T (486) / 2T (386) — Table 3 header block.
+        let op = Op::Mov(Reg(Reg16::SP), Imm(0));
+        assert_eq!(Cpu::I486.cost(&op, false), 1);
+        assert_eq!(Cpu::I386.cost(&op, false), 2);
+    }
+
+    #[test]
+    fn pairing_rules() {
+        let inc_si = Op::Inc(Reg16::SI);
+        let inc_di = Op::Inc(Reg16::DI);
+        let use_si = Op::Mov(Reg(Reg16::AX), Mem(Reg16::SI));
+        let imul = Op::Imul(Reg(Reg16::DX));
+        assert!(Cpu::pairable(&inc_si, &inc_di));
+        assert!(!Cpu::pairable(&inc_si, &use_si)); // RAW dependence
+        assert!(!Cpu::pairable(&inc_si, &imul)); // IMUL is not simple
+        assert!(!Cpu::pairable(&imul, &inc_si));
+    }
+
+    #[test]
+    fn clocks_match_table5_note() {
+        assert_eq!(Cpu::I386.clock_mhz(), 40.0);
+        assert_eq!(Cpu::I486.clock_mhz(), 100.0);
+        assert_eq!(Cpu::Pentium.clock_mhz(), 133.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Instruction AST for the x86-16 subset used by the paper's baselines.
+
+/// The eight 16-bit general registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Reg16 {
+    AX,
+    BX,
+    CX,
+    DX,
+    SI,
+    DI,
+    BP,
+    /// The paper's listings use SP as a plain pointer register.
+    SP,
+}
+
+impl Reg16 {
+    pub const ALL: [Reg16; 8] = [
+        Reg16::AX,
+        Reg16::BX,
+        Reg16::CX,
+        Reg16::DX,
+        Reg16::SI,
+        Reg16::DI,
+        Reg16::BP,
+        Reg16::SP,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            Reg16::AX => 0,
+            Reg16::BX => 1,
+            Reg16::CX => 2,
+            Reg16::DX => 3,
+            Reg16::SI => 4,
+            Reg16::DI => 5,
+            Reg16::BP => 6,
+            Reg16::SP => 7,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Reg16::AX => "AX",
+            Reg16::BX => "BX",
+            Reg16::CX => "CX",
+            Reg16::DX => "DX",
+            Reg16::SI => "SI",
+            Reg16::DI => "DI",
+            Reg16::BP => "BP",
+            Reg16::SP => "SP",
+        }
+    }
+}
+
+/// A data operand: register, immediate, register-indirect memory, or
+/// absolute memory. Data memory is element (16-bit word) addressed, which
+/// matches the paper's listings incrementing pointers by one per element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    Reg(Reg16),
+    Imm(i16),
+    /// `[reg]` — register-indirect.
+    Mem(Reg16),
+    /// `[addr]` — absolute (used for loop-counter spills in the matmul
+    /// routine).
+    Abs(u16),
+}
+
+/// One instruction of the subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// `MOV dst, src` (dst: Reg/Mem/Abs; src: any).
+    Mov(Operand, Operand),
+    /// `ADD dst, src` — dst must be a register.
+    Add(Reg16, Operand),
+    /// `SUB dst, src`.
+    Sub(Reg16, Operand),
+    /// `IMUL src` — `AX ← AX × src` (low 16 bits; we ignore DX:AX).
+    Imul(Operand),
+    /// `INC reg`.
+    Inc(Reg16),
+    /// `DEC reg`.
+    Dec(Reg16),
+    /// `CMP a, b` — sets flags from `a - b`.
+    Cmp(Reg16, Operand),
+    /// `JNZ target` (instruction index).
+    Jnz(usize),
+    /// `JMP target`.
+    Jmp(usize),
+    /// End of routine.
+    Halt,
+}
+
+impl Op {
+    /// Registers read by this instruction (for the Pentium pairing model).
+    pub fn reads(&self) -> Vec<Reg16> {
+        fn operand(r: &mut Vec<Reg16>, o: &Operand) {
+            if let Operand::Reg(x) | Operand::Mem(x) = o {
+                r.push(*x);
+            }
+        }
+        let mut r = Vec::new();
+        match self {
+            Op::Mov(dst, src) => {
+                operand(&mut r, src);
+                if let Operand::Mem(x) = dst {
+                    r.push(*x);
+                }
+            }
+            Op::Add(d, s) | Op::Sub(d, s) => {
+                r.push(*d);
+                operand(&mut r, s);
+            }
+            Op::Imul(s) => {
+                r.push(Reg16::AX);
+                operand(&mut r, s);
+            }
+            Op::Inc(x) | Op::Dec(x) => r.push(*x),
+            Op::Cmp(a, b) => {
+                r.push(*a);
+                operand(&mut r, b);
+            }
+            Op::Jnz(_) | Op::Jmp(_) | Op::Halt => {}
+        }
+        r
+    }
+
+    /// Register written by this instruction, if any.
+    pub fn writes(&self) -> Option<Reg16> {
+        match self {
+            Op::Mov(Operand::Reg(d), _) => Some(*d),
+            Op::Add(d, _) | Op::Sub(d, _) => Some(*d),
+            Op::Imul(_) => Some(Reg16::AX),
+            Op::Inc(d) | Op::Dec(d) => Some(*d),
+            _ => None,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        fn o(op: &Operand) -> String {
+            match op {
+                Operand::Reg(r) => r.name().to_string(),
+                Operand::Imm(i) => format!("{i}"),
+                Operand::Mem(r) => format!("[{}]", r.name()),
+                Operand::Abs(a) => format!("[{a:#x}]"),
+            }
+        }
+        match self {
+            Op::Mov(d, s) => format!("MOV  {}, {}", o(d), o(s)),
+            Op::Add(d, s) => format!("ADD  {}, {}", d.name(), o(s)),
+            Op::Sub(d, s) => format!("SUB  {}, {}", d.name(), o(s)),
+            Op::Imul(s) => format!("IMUL {}", o(s)),
+            Op::Inc(r) => format!("INC  {}", r.name()),
+            Op::Dec(r) => format!("DEC  {}", r.name()),
+            Op::Cmp(a, b) => format!("CMP  {}, {}", a.name(), o(b)),
+            Op::Jnz(t) => format!("JNZ  {t}"),
+            Op::Jmp(t) => format!("JMP  {t}"),
+            Op::Halt => "HLT".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_and_writes_for_pairing() {
+        let add = Op::Add(Reg16::AX, Operand::Reg(Reg16::BX));
+        assert_eq!(add.reads(), vec![Reg16::AX, Reg16::BX]);
+        assert_eq!(add.writes(), Some(Reg16::AX));
+
+        let store = Op::Mov(Operand::Mem(Reg16::DI), Operand::Reg(Reg16::AX));
+        assert!(store.reads().contains(&Reg16::DI));
+        assert!(store.reads().contains(&Reg16::AX));
+        assert_eq!(store.writes(), None);
+
+        let imul = Op::Imul(Operand::Reg(Reg16::DX));
+        assert!(imul.reads().contains(&Reg16::AX));
+        assert_eq!(imul.writes(), Some(Reg16::AX));
+    }
+
+    #[test]
+    fn render_is_readable() {
+        assert_eq!(Op::Mov(Operand::Reg(Reg16::AX), Operand::Mem(Reg16::SP)).render(), "MOV  AX, [SP]");
+        assert_eq!(Op::Jnz(4).render(), "JNZ  4");
+    }
+}

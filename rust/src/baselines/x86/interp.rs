@@ -1,0 +1,277 @@
+//! Functional interpreter for the x86-16 subset, with pluggable cycle
+//! accounting (the timing model lives in [`crate::baselines::timing`] and
+//! is queried per retired instruction, so one interpreter serves all three
+//! CPU models).
+
+use super::ast::{Op, Operand, Reg16};
+use crate::baselines::timing::Cpu;
+
+/// Cap on retired instructions — a runaway loop is a bug, not a workload.
+pub const MAX_RETIRED: u64 = 200_000_000;
+
+/// Execution result.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub cycles: u64,
+    pub retired: u64,
+    /// Instructions that issued in the V pipe alongside a U-pipe partner
+    /// (Pentium only; 0 for the single-issue models).
+    pub paired: u64,
+}
+
+impl RunReport {
+    /// Wall-clock microseconds at the model's documented clock.
+    pub fn micros(&self, cpu: Cpu) -> f64 {
+        self.cycles as f64 / cpu.clock_mhz()
+    }
+}
+
+/// Machine state: 8 registers, flags, element-addressed data memory.
+pub struct Interp {
+    pub regs: [i16; 8],
+    pub zf: bool,
+    pub sf: bool,
+    pub mem: Vec<i16>,
+}
+
+impl Interp {
+    pub fn new(mem_elems: usize) -> Interp {
+        Interp { regs: [0; 8], zf: false, sf: false, mem: vec![0; mem_elems] }
+    }
+
+    pub fn reg(&self, r: Reg16) -> i16 {
+        self.regs[r.index()]
+    }
+
+    pub fn set_reg(&mut self, r: Reg16, v: i16) {
+        self.regs[r.index()] = v;
+    }
+
+    fn load(&self, o: Operand) -> i16 {
+        match o {
+            Operand::Reg(r) => self.reg(r),
+            Operand::Imm(i) => i,
+            Operand::Mem(r) => self.mem[self.reg(r) as u16 as usize],
+            Operand::Abs(a) => self.mem[a as usize],
+        }
+    }
+
+    fn store(&mut self, o: Operand, v: i16) {
+        match o {
+            Operand::Reg(r) => self.set_reg(r, v),
+            Operand::Mem(r) => {
+                let a = self.reg(r) as u16 as usize;
+                self.mem[a] = v;
+            }
+            Operand::Abs(a) => self.mem[a as usize] = v,
+            Operand::Imm(_) => panic!("store to immediate"),
+        }
+    }
+
+    fn flags_from(&mut self, v: i16) {
+        self.zf = v == 0;
+        self.sf = v < 0;
+    }
+
+    /// Run `program` to `Halt` (or falling off the end), accumulating
+    /// cycles per `cpu`'s timing model, including its dual-issue pairing
+    /// rule when applicable.
+    pub fn run(&mut self, program: &[Op], cpu: Cpu) -> RunReport {
+        let mut pc = 0usize;
+        let mut cycles = 0u64;
+        let mut retired = 0u64;
+        let mut paired = 0u64;
+        // Pentium pairing: remembers whether the previous instruction
+        // occupies the U pipe and can still take a V-pipe partner.
+        let mut u_slot: Option<Op> = None;
+
+        while pc < program.len() {
+            let op = program[pc];
+            retired += 1;
+            assert!(retired <= MAX_RETIRED, "x86 instruction budget exhausted at pc={pc}");
+            let mut next = pc + 1;
+            let mut taken = false;
+
+            match op {
+                Op::Mov(dst, src) => {
+                    let v = self.load(src);
+                    self.store(dst, v);
+                }
+                Op::Add(d, s) => {
+                    let v = self.reg(d).wrapping_add(self.load(s));
+                    self.set_reg(d, v);
+                    self.flags_from(v);
+                }
+                Op::Sub(d, s) => {
+                    let v = self.reg(d).wrapping_sub(self.load(s));
+                    self.set_reg(d, v);
+                    self.flags_from(v);
+                }
+                Op::Imul(s) => {
+                    let v = (self.reg(Reg16::AX) as i32).wrapping_mul(self.load(s) as i32) as i16;
+                    self.set_reg(Reg16::AX, v);
+                    self.flags_from(v);
+                }
+                Op::Inc(r) => {
+                    let v = self.reg(r).wrapping_add(1);
+                    self.set_reg(r, v);
+                    self.flags_from(v);
+                }
+                Op::Dec(r) => {
+                    let v = self.reg(r).wrapping_sub(1);
+                    self.set_reg(r, v);
+                    self.flags_from(v);
+                }
+                Op::Cmp(a, b) => {
+                    let v = self.reg(a).wrapping_sub(self.load(b));
+                    self.flags_from(v);
+                }
+                Op::Jnz(t) => {
+                    if !self.zf {
+                        next = t;
+                        taken = true;
+                    }
+                }
+                Op::Jmp(t) => {
+                    next = t;
+                    taken = true;
+                }
+                Op::Halt => break,
+            }
+
+            // Cycle accounting.
+            let cost = cpu.cost(&op, taken);
+            if cpu.dual_issue() {
+                if let Some(prev) = u_slot.take() {
+                    if Cpu::pairable(&prev, &op) {
+                        // Issues in the V pipe for free alongside `prev`
+                        // (both are 1-cycle simple ops).
+                        paired += 1;
+                    } else {
+                        cycles += cost;
+                        u_slot = if Cpu::u_pipe_candidate(&op) { Some(op) } else { None };
+                    }
+                } else {
+                    cycles += cost;
+                    u_slot = if Cpu::u_pipe_candidate(&op) { Some(op) } else { None };
+                }
+                // A taken branch breaks the issue window.
+                if taken {
+                    u_slot = None;
+                }
+            } else {
+                cycles += cost;
+            }
+            pc = next;
+        }
+
+        RunReport { cycles, retired, paired }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::x86::ast::Operand::{Abs, Imm, Mem, Reg};
+
+    #[test]
+    fn mov_add_store_roundtrip() {
+        let mut m = Interp::new(64);
+        m.mem[10] = 7;
+        let prog = [
+            Op::Mov(Reg(Reg16::SP), Imm(10)),
+            Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+            Op::Add(Reg16::AX, Imm(5)),
+            Op::Mov(Abs(20), Reg(Reg16::AX)),
+            Op::Halt,
+        ];
+        m.run(&prog, Cpu::I486);
+        assert_eq!(m.mem[20], 12);
+    }
+
+    #[test]
+    fn dec_jnz_loops_count_times() {
+        let mut m = Interp::new(8);
+        let prog = [
+            Op::Mov(Reg(Reg16::SI), Imm(5)),
+            Op::Mov(Reg(Reg16::AX), Imm(0)),
+            // loop:
+            Op::Add(Reg16::AX, Imm(2)),
+            Op::Dec(Reg16::SI),
+            Op::Jnz(2),
+            Op::Halt,
+        ];
+        m.run(&prog, Cpu::I486);
+        assert_eq!(m.reg(Reg16::AX), 10);
+    }
+
+    #[test]
+    fn imul_multiplies_into_ax() {
+        let mut m = Interp::new(1);
+        let prog = [
+            Op::Mov(Reg(Reg16::AX), Imm(-7)),
+            Op::Mov(Reg(Reg16::DX), Imm(6)),
+            Op::Imul(Reg(Reg16::DX)),
+            Op::Halt,
+        ];
+        m.run(&prog, Cpu::Pentium);
+        assert_eq!(m.reg(Reg16::AX), -42);
+    }
+
+    #[test]
+    fn flags_drive_conditional_branches() {
+        let mut m = Interp::new(1);
+        let prog = [
+            Op::Mov(Reg(Reg16::AX), Imm(3)),
+            Op::Cmp(Reg16::AX, Imm(3)),
+            Op::Jnz(5), // not taken: ZF set
+            Op::Mov(Reg(Reg16::BX), Imm(1)),
+            Op::Halt,
+            Op::Mov(Reg(Reg16::BX), Imm(2)),
+        ];
+        m.run(&prog, Cpu::I386);
+        assert_eq!(m.reg(Reg16::BX), 1);
+    }
+
+    #[test]
+    fn cycle_costs_differ_by_model() {
+        let prog = [
+            Op::Mov(Reg(Reg16::SP), Imm(0)),
+            Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+            Op::Halt,
+        ];
+        let c386 = Interp::new(8).run(&prog, Cpu::I386).cycles;
+        let c486 = Interp::new(8).run(&prog, Cpu::I486).cycles;
+        // 386: 2 + 4 = 6; 486: 1 + 1 = 2 (+0 for HLT boundary marker).
+        assert!(c386 > c486);
+        assert_eq!(c486, 2);
+        assert_eq!(c386, 6);
+    }
+
+    #[test]
+    fn pentium_pairs_independent_simple_ops() {
+        // INC SI / INC DI are independent → pair on Pentium.
+        let prog = [Op::Inc(Reg16::SI), Op::Inc(Reg16::DI), Op::Halt];
+        let r = Interp::new(1).run(&prog, Cpu::Pentium);
+        assert_eq!(r.paired, 1);
+        assert_eq!(r.cycles, 1);
+        // Dependent ops do not pair.
+        let prog2 = [Op::Inc(Reg16::SI), Op::Mov(Reg(Reg16::AX), Mem(Reg16::SI)), Op::Halt];
+        let r2 = Interp::new(64).run(&prog2, Cpu::Pentium);
+        assert_eq!(r2.paired, 0);
+        assert_eq!(r2.cycles, 2);
+    }
+
+    #[test]
+    fn memory_wraps_at_16bit_pointer() {
+        let mut m = Interp::new(0x10000);
+        let prog = [
+            Op::Mov(Reg(Reg16::SP), Imm(-1)), // 0xFFFF
+            Op::Mov(Reg(Reg16::AX), Mem(Reg16::SP)),
+            Op::Halt,
+        ];
+        m.mem[0xFFFF] = 321;
+        m.run(&prog, Cpu::I486);
+        assert_eq!(m.reg(Reg16::AX), 321);
+    }
+}

@@ -1,0 +1,10 @@
+//! A 16-bit x86 subset: just enough of the 8086/80386 programmer's model
+//! to execute the paper's baseline listings — eight 16-bit registers,
+//! element-addressed data memory, ZF/SF flags, register-indirect and
+//! absolute addressing.
+
+pub mod ast;
+pub mod interp;
+
+pub use ast::{Op, Operand, Reg16};
+pub use interp::{Interp, RunReport};

@@ -1,0 +1,97 @@
+//! Self-contained micro-benchmark harness (criterion is unavailable in
+//! this offline workspace). Used by the `rust/benches/*` targets
+//! (`cargo bench`).
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! wall-clock budget and a minimum iteration count are met; report mean,
+//! p50, p95 and min over per-iteration times, plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    /// Items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(700),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+/// Run one benchmark; `f` is a single iteration.
+pub fn bench_with(config: Config, name: &str, mut f: impl FnMut()) -> Measurement {
+    // Warm-up.
+    let w0 = Instant::now();
+    while w0.elapsed() < config.warmup {
+        f();
+    }
+    // Timed iterations.
+    let mut samples: Vec<Duration> = Vec::new();
+    let t0 = Instant::now();
+    while (t0.elapsed() < config.budget || (samples.len() as u64) < config.min_iters)
+        && (samples.len() as u64) < config.max_iters
+    {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+    }
+    samples.sort_unstable();
+    let iters = samples.len() as u64;
+    let total: Duration = samples.iter().sum();
+    let p95_idx = ((samples.len() - 1) as f64 * 0.95) as usize;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[p95_idx],
+        min: samples[0],
+    };
+    println!("{}", m.render());
+    m
+}
+
+/// Run with defaults.
+pub fn bench(name: &str, f: impl FnMut()) -> Measurement {
+    bench_with(Config::default(), name, f)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

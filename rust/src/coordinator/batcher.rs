@@ -1,0 +1,357 @@
+//! Dynamic batching: group pending requests by (identical) transform,
+//! pack their points into tile-sized backend jobs, and scatter results
+//! back — the serving technique that lets many small transform requests
+//! share one artifact execution, exactly as the M1 amortized one context
+//! word over many data broadcasts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::backend::BackendKind;
+use super::request::{PendingRequest, RequestTiming, TransformResponse};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Max time the first request of a batch window waits for company.
+    pub max_wait: Duration,
+    /// Flush the window once this many points are pending.
+    pub flush_points: usize,
+    /// Largest tile a single backend job may carry (points).
+    pub max_tile: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_wait: Duration::from_millis(2),
+            flush_points: 4096,
+            max_tile: 4096,
+        }
+    }
+}
+
+/// Scatter-gather state for one in-flight request that may have been
+/// split across several tile jobs.
+pub(crate) struct Assembly {
+    pub id: u64,
+    pub reply: std::sync::mpsc::Sender<TransformResponse>,
+    pub queued: Duration,
+    state: Mutex<AsmState>,
+    /// Max over parts of backend execution time, in nanoseconds.
+    exec_ns: AtomicU64,
+    cycles: AtomicU64,
+}
+
+struct AsmState {
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    remaining: usize,
+    backend: BackendKind,
+}
+
+impl Assembly {
+    /// Record one completed part; the final part sends the response.
+    pub(crate) fn complete_part(
+        &self,
+        src_offset: usize,
+        xs: &[f32],
+        ys: &[f32],
+        backend: BackendKind,
+        exec: Duration,
+        cycles: Option<u64>,
+    ) {
+        self.exec_ns.fetch_max(exec.as_nanos() as u64, Ordering::Relaxed);
+        if let Some(c) = cycles {
+            self.cycles.fetch_add(c, Ordering::Relaxed);
+        }
+        let mut st = self.state.lock().unwrap();
+        st.xs[src_offset..src_offset + xs.len()].copy_from_slice(xs);
+        st.ys[src_offset..src_offset + ys.len()].copy_from_slice(ys);
+        st.backend = backend;
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            let cycles_total = self.cycles.load(Ordering::Relaxed);
+            let resp = TransformResponse {
+                id: self.id,
+                xs: std::mem::take(&mut st.xs),
+                ys: std::mem::take(&mut st.ys),
+                timing: RequestTiming {
+                    queued: self.queued,
+                    execute: Duration::from_nanos(self.exec_ns.load(Ordering::Relaxed)),
+                    backend: st.backend,
+                    simulated_cycles: (cycles_total > 0).then_some(cycles_total),
+                },
+            };
+            // Receiver may have hung up (client gone) — that's fine.
+            let _ = self.reply.send(resp);
+        }
+    }
+}
+
+/// One backend invocation: ≤ `max_tile` points sharing one transform.
+pub struct TileJob {
+    pub params: [f32; 6],
+    pub xs: Vec<f32>,
+    pub ys: Vec<f32>,
+    /// Scatter list: `(assembly, dst_offset_in_job, src_offset_in_request,
+    /// len)`.
+    pub(crate) parts: Vec<(Arc<Assembly>, usize, usize, usize)>,
+}
+
+impl TileJob {
+    pub fn points(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Scatter the (already transformed, in-place) job buffers back to
+    /// their requests.
+    pub(crate) fn scatter(
+        self,
+        backend: BackendKind,
+        exec: Duration,
+        cycles_per_point: Option<f64>,
+    ) {
+        for (assembly, dst, src, len) in self.parts {
+            let cycles = cycles_per_point.map(|c| (c * len as f64).round() as u64);
+            assembly.complete_part(
+                src,
+                &self.xs[dst..dst + len],
+                &self.ys[dst..dst + len],
+                backend,
+                exec,
+                cycles,
+            );
+        }
+    }
+}
+
+/// The batching planner (pure logic; the pump thread lives in
+/// [`super::server`]).
+pub struct Batcher {
+    pub config: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(config: BatcherConfig) -> Batcher {
+        assert!(config.max_tile > 0);
+        Batcher { config }
+    }
+
+    /// Turn a window of pending requests into tile jobs: group by
+    /// transform key (arrival order preserved), concatenate each group's
+    /// points, cut at `max_tile` boundaries.
+    pub(crate) fn plan(&self, window: Vec<PendingRequest>, now: Instant) -> Vec<TileJob> {
+        // Group preserving first-arrival order of keys.
+        let mut groups: Vec<(u64, [f32; 6], Vec<PendingRequest>)> = Vec::new();
+        for p in window {
+            let key = p.req.batch_key();
+            match groups.iter_mut().find(|(k, _, _)| *k == key) {
+                Some((_, _, v)) => v.push(p),
+                None => {
+                    let params = p.req.affine_params();
+                    groups.push((key, params, vec![p]));
+                }
+            }
+        }
+
+        let mut jobs = Vec::new();
+        for (_, params, pendings) in groups {
+            let mut job_xs: Vec<f32> = Vec::new();
+            let mut job_ys: Vec<f32> = Vec::new();
+            let mut parts: Vec<(Arc<Assembly>, usize, usize, usize)> = Vec::new();
+            for p in pendings {
+                let n = p.req.points();
+                let assembly = Arc::new(Assembly {
+                    id: p.req.id,
+                    reply: p.reply,
+                    queued: now.saturating_duration_since(p.submitted),
+                    state: Mutex::new(AsmState {
+                        xs: vec![0.0; n],
+                        ys: vec![0.0; n],
+                        remaining: 0, // fixed up below
+                        backend: BackendKind::Native,
+                    }),
+                    exec_ns: AtomicU64::new(0),
+                    cycles: AtomicU64::new(0),
+                });
+                if n == 0 {
+                    // Zero-point request: nothing to execute; answer now.
+                    assembly.state.lock().unwrap().remaining = 1;
+                    assembly.complete_part(
+                        0,
+                        &[],
+                        &[],
+                        BackendKind::Native,
+                        Duration::ZERO,
+                        None,
+                    );
+                    continue;
+                }
+                // Split the request across tile boundaries.
+                let mut src = 0usize;
+                let mut n_parts = 0usize;
+                while src < n {
+                    let room = self.config.max_tile - job_xs.len();
+                    if room == 0 {
+                        jobs.push(TileJob {
+                            params,
+                            xs: std::mem::take(&mut job_xs),
+                            ys: std::mem::take(&mut job_ys),
+                            parts: std::mem::take(&mut parts),
+                        });
+                        continue;
+                    }
+                    let len = room.min(n - src);
+                    let dst = job_xs.len();
+                    job_xs.extend_from_slice(&p.req.xs[src..src + len]);
+                    job_ys.extend_from_slice(&p.req.ys[src..src + len]);
+                    parts.push((assembly.clone(), dst, src, len));
+                    src += len;
+                    n_parts += 1;
+                }
+                assembly.state.lock().unwrap().remaining = n_parts;
+            }
+            if !job_xs.is_empty() {
+                jobs.push(TileJob { params, xs: job_xs, ys: job_ys, parts });
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::TransformRequest;
+    use crate::graphics::Transform;
+    use crate::testkit::{check, Rng};
+    use std::sync::mpsc;
+
+    fn pending(
+        id: u64,
+        n: usize,
+        t: Vec<Transform>,
+    ) -> (PendingRequest, mpsc::Receiver<TransformResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let xs: Vec<f32> = (0..n).map(|i| (id * 1000 + i as u64) as f32).collect();
+        let ys: Vec<f32> = (0..n).map(|i| -((id * 1000 + i as u64) as f32)).collect();
+        let p = PendingRequest {
+            req: TransformRequest::new(id, xs, ys, t),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        (p, rx)
+    }
+
+    fn drain(job: TileJob) {
+        job.scatter(BackendKind::Native, Duration::from_micros(5), None);
+    }
+
+    #[test]
+    fn same_transform_requests_share_a_tile() {
+        let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
+        let t = vec![Transform::Translate { tx: 1.0, ty: 1.0 }];
+        let (p1, _r1) = pending(1, 16, t.clone());
+        let (p2, _r2) = pending(2, 16, t);
+        let jobs = b.plan(vec![p1, p2], Instant::now());
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].points(), 32);
+        assert_eq!(jobs[0].parts.len(), 2);
+    }
+
+    #[test]
+    fn different_transforms_get_separate_jobs() {
+        let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
+        let (p1, _r1) = pending(1, 8, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
+        let (p2, _r2) = pending(2, 8, vec![Transform::Translate { tx: 2.0, ty: 0.0 }]);
+        let jobs = b.plan(vec![p1, p2], Instant::now());
+        assert_eq!(jobs.len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_splits_and_reassembles() {
+        let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
+        let (p, rx) = pending(7, 200, vec![Transform::Scale { sx: 1.0, sy: 1.0 }]);
+        let expected_xs = p.req.xs.clone();
+        let jobs = b.plan(vec![p], Instant::now());
+        assert_eq!(jobs.len(), 4); // 64+64+64+8
+        assert!(jobs.iter().all(|j| j.points() <= 64));
+        for j in jobs {
+            drain(j);
+        }
+        let resp = rx.try_recv().expect("response after all parts scattered");
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.xs, expected_xs);
+    }
+
+    #[test]
+    fn zero_point_request_still_gets_a_response() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (p, rx) = pending(3, 0, vec![]);
+        let jobs = b.plan(vec![p], Instant::now());
+        assert!(jobs.is_empty());
+        assert_eq!(rx.try_recv().unwrap().id, 3);
+    }
+
+    #[test]
+    fn property_no_request_lost_duplicated_or_reordered() {
+        check("batcher conservation", 25, |rng: &mut Rng| {
+            let b = Batcher::new(BatcherConfig {
+                max_tile: [8, 64, 100][rng.below(3) as usize],
+                ..Default::default()
+            });
+            let n_reqs = rng.range_i64(1, 12) as u64;
+            let mut pendings = Vec::new();
+            let mut receivers = Vec::new();
+            let mut expected = Vec::new();
+            for id in 0..n_reqs {
+                let n = rng.range_i64(0, 150) as usize;
+                let t = vec![Transform::Translate {
+                    tx: rng.below(3) as f32, // 3 distinct transform groups
+                    ty: 0.0,
+                }];
+                let (p, rx) = pending(id, n, t);
+                expected.push((id, p.req.xs.clone(), p.req.ys.clone()));
+                pendings.push(p);
+                receivers.push(rx);
+            }
+            let jobs = b.plan(pendings, Instant::now());
+            // Tile bound respected.
+            for j in &jobs {
+                assert!(j.points() <= b.config.max_tile);
+                assert_eq!(j.xs.len(), j.ys.len());
+            }
+            // Total points conserved.
+            let total: usize = jobs.iter().map(|j| j.points()).sum();
+            let expected_total: usize = expected.iter().map(|(_, xs, _)| xs.len()).sum();
+            assert_eq!(total, expected_total);
+            for j in jobs {
+                drain(j);
+            }
+            // Every request answered exactly once, points in order.
+            for (i, rx) in receivers.iter().enumerate() {
+                let resp = rx.try_recv().expect("one response per request");
+                let (id, xs, ys) = &expected[i];
+                assert_eq!(resp.id, *id);
+                assert_eq!(&resp.xs, xs, "x order preserved (identity scatter)");
+                assert_eq!(&resp.ys, ys);
+                assert!(rx.try_recv().is_err(), "no duplicate responses");
+            }
+        });
+    }
+
+    #[test]
+    fn queued_duration_measured_from_submit() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (mut p, rx) = pending(1, 4, vec![]);
+        p.submitted = Instant::now() - Duration::from_millis(50);
+        let jobs = b.plan(vec![p], Instant::now());
+        for j in jobs {
+            drain(j);
+        }
+        let resp = rx.try_recv().unwrap();
+        assert!(resp.timing.queued >= Duration::from_millis(50));
+    }
+}

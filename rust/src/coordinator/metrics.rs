@@ -1,0 +1,198 @@
+//! Service metrics: lock-free counters plus log₂-bucketed latency
+//! histograms (microsecond resolution).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 32; // bucket i: [2^i, 2^(i+1)) µs
+
+/// A log₂ histogram over microseconds.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper bucket bound), `q` in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses_points: AtomicU64,
+    pub points: AtomicU64,
+    pub jobs: AtomicU64,
+    pub job_points: AtomicU64,
+    pub backend_errors: AtomicU64,
+    pub simulated_cycles: AtomicU64,
+    /// Queue wait per request (submit → batch formation).
+    pub queue_wait: Histogram,
+    /// Backend execution per job.
+    pub execute: Histogram,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub points: u64,
+    pub jobs: u64,
+    pub job_points: u64,
+    pub backend_errors: u64,
+    pub simulated_cycles: u64,
+    pub queue_wait_mean_us: f64,
+    pub queue_wait_p99_us: u64,
+    pub execute_mean_us: f64,
+    pub execute_p50_us: u64,
+    pub execute_p99_us: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&self, points: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(points as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_job(&self, points: usize, exec: Duration, cycles: Option<f64>) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.job_points.fetch_add(points as u64, Ordering::Relaxed);
+        self.execute.record(exec);
+        if let Some(c) = cycles {
+            self.simulated_cycles
+                .fetch_add((c * points as f64).round() as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            points: self.points.load(Ordering::Relaxed),
+            jobs: self.jobs.load(Ordering::Relaxed),
+            job_points: self.job_points.load(Ordering::Relaxed),
+            backend_errors: self.backend_errors.load(Ordering::Relaxed),
+            simulated_cycles: self.simulated_cycles.load(Ordering::Relaxed),
+            queue_wait_mean_us: self.queue_wait.mean_us(),
+            queue_wait_p99_us: self.queue_wait.quantile_us(0.99),
+            execute_mean_us: self.execute.mean_us(),
+            execute_p50_us: self.execute.quantile_us(0.5),
+            execute_p99_us: self.execute.quantile_us(0.99),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Mean points per backend job — the batching efficiency signal.
+    pub fn mean_batch_points(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.job_points as f64 / self.jobs as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
+             queue_wait: mean={:.1}us p99<={}us\n\
+             execute:    mean={:.1}us p50<={}us p99<={}us\n\
+             simulated M1 cycles={}",
+            self.requests,
+            self.points,
+            self.jobs,
+            self.mean_batch_points(),
+            self.backend_errors,
+            self.queue_wait_mean_us,
+            self.queue_wait_p99_us,
+            self.execute_mean_us,
+            self.execute_p50_us,
+            self.execute_p99_us,
+            self.simulated_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(3)); // bucket 1 ([2,4))
+        h.record(Duration::from_micros(100)); // bucket 6 ([64,128))
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile_us(0.33) <= 4);
+        assert_eq!(h.quantile_us(1.0), 128);
+        assert!((h.mean_us() - (3.0 + 100.0 + 100.0) / 3.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_duration_lands_in_first_bucket() {
+        let h = Histogram::default();
+        h.record(Duration::ZERO);
+        assert_eq!(h.quantile_us(1.0), 2);
+    }
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::default();
+        m.record_request(100);
+        m.record_request(28);
+        m.record_job(64, Duration::from_micros(50), Some(1.5));
+        m.record_job(64, Duration::from_micros(70), None);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.points, 128);
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.mean_batch_points(), 64.0);
+        assert_eq!(s.simulated_cycles, 96);
+        assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn empty_metrics_do_not_divide_by_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_batch_points(), 0.0);
+        assert_eq!(s.execute_mean_us, 0.0);
+        assert_eq!(s.execute_p50_us, 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # Coordinator — the transform-serving runtime (L3)
+//!
+//! The serving layer that turns the paper's "graphics acceleration
+//! library" into a deployable service:
+//!
+//! ```text
+//!  clients ──submit()──► bounded queue (backpressure)
+//!                            │
+//!                      batcher thread: group by transform, pack into
+//!                      tiles (64 points — the M1's natural unit — up to
+//!                      4096 for bulk), deadline-bounded
+//!                            │
+//!                      worker threads: each owns ONE backend instance
+//!                      (PJRT executors are thread-pinned) and executes
+//!                      tile jobs, scattering results back per request
+//!                            │
+//!  clients ◄──per-request channel── responses + timing
+//! ```
+//!
+//! Backends: [`backend::NativeBackend`] (plain rust), [`backend::XlaBackend`]
+//! (the AOT artifacts via PJRT) and [`backend::M1SimBackend`] (the
+//! cycle-accurate MorphoSys simulator running the paper's mappings, which
+//! additionally reports simulated M1 cycles).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::BoundedQueue;
+pub use request::{TransformRequest, TransformResponse};
+pub use server::{BackendChoice, Coordinator, CoordinatorConfig};

@@ -1,0 +1,116 @@
+//! Request/response types of the transform service.
+
+use std::time::{Duration, Instant};
+
+use crate::graphics::{Transform, TransformPipeline};
+
+use super::backend::BackendKind;
+
+/// A client request: apply a transform sequence to a point set.
+#[derive(Debug, Clone)]
+pub struct TransformRequest {
+    pub id: u64,
+    pub xs: Vec<f32>,
+    pub ys: Vec<f32>,
+    pub transforms: Vec<Transform>,
+}
+
+impl TransformRequest {
+    pub fn new(id: u64, xs: Vec<f32>, ys: Vec<f32>, transforms: Vec<Transform>) -> Self {
+        assert_eq!(xs.len(), ys.len(), "xs/ys must be parallel");
+        TransformRequest { id, xs, ys, transforms }
+    }
+
+    pub fn points(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// The composed affine parameters `[a, b, c, d, tx, ty]` — the
+    /// batcher's grouping key and the artifact's runtime input.
+    pub fn affine_params(&self) -> [f32; 6] {
+        let m = TransformPipeline::new(self.transforms.clone()).matrix();
+        let [a, b, c, d] = m.linear();
+        let (tx, ty) = m.translation();
+        [a, b, c, d, tx, ty]
+    }
+
+    /// Bitwise grouping key over the composed parameters (batching only
+    /// merges requests whose transforms are *identical*).
+    pub fn batch_key(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a over param bits
+        for p in self.affine_params() {
+            h ^= p.to_bits() as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Per-request service timing.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    /// Queue wait (submit → batch formation).
+    pub queued: Duration,
+    /// Backend execution (batch dispatch → completion).
+    pub execute: Duration,
+    /// Which backend served it.
+    pub backend: BackendKind,
+    /// Simulated M1 cycles (M1Sim backend only).
+    pub simulated_cycles: Option<u64>,
+}
+
+/// The service's reply.
+#[derive(Debug, Clone)]
+pub struct TransformResponse {
+    pub id: u64,
+    pub xs: Vec<f32>,
+    pub ys: Vec<f32>,
+    pub timing: RequestTiming,
+}
+
+/// Internal: a request annotated with its submit time and reply channel.
+pub(crate) struct PendingRequest {
+    pub req: TransformRequest,
+    pub submitted: Instant,
+    pub reply: std::sync::mpsc::Sender<TransformResponse>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_key_groups_identical_transforms() {
+        let t = vec![Transform::Translate { tx: 1.0, ty: 2.0 }];
+        let a = TransformRequest::new(1, vec![0.0], vec![0.0], t.clone());
+        let b = TransformRequest::new(2, vec![5.0], vec![6.0], t);
+        assert_eq!(a.batch_key(), b.batch_key());
+        let c = TransformRequest::new(
+            3,
+            vec![0.0],
+            vec![0.0],
+            vec![Transform::Translate { tx: 1.0, ty: 2.5 }],
+        );
+        assert_ne!(a.batch_key(), c.batch_key());
+    }
+
+    #[test]
+    fn affine_params_compose() {
+        let r = TransformRequest::new(
+            1,
+            vec![],
+            vec![],
+            vec![
+                Transform::Scale { sx: 2.0, sy: 2.0 },
+                Transform::Translate { tx: 1.0, ty: 0.0 },
+            ],
+        );
+        assert_eq!(r.affine_params(), [2.0, 0.0, 0.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel")]
+    fn mismatched_coords_rejected() {
+        TransformRequest::new(1, vec![0.0], vec![], vec![]);
+    }
+}

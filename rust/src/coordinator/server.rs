@@ -1,0 +1,360 @@
+//! The coordinator service: submit → queue → batcher pump → worker pool →
+//! per-request response channels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::graphics::Transform;
+
+use super::backend::{apply_native, Backend, M1SimBackend, NativeBackend, XlaBackend};
+use super::batcher::{Batcher, BatcherConfig, TileJob};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::queue::BoundedQueue;
+use super::request::{PendingRequest, TransformRequest, TransformResponse};
+
+/// Which backend the workers construct (each worker builds its own
+/// instance on its own thread — PJRT clients are thread-pinned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    Native,
+    Xla,
+    M1Sim,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub backend: BackendChoice,
+    /// Admission queue capacity (requests) — the backpressure bound.
+    pub queue_capacity: usize,
+    /// In-flight job queue capacity.
+    pub job_capacity: usize,
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            backend: BackendChoice::Native,
+            queue_capacity: 1024,
+            job_capacity: 256,
+            workers: 2,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    submit_q: Arc<BoundedQueue<PendingRequest>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the pump and worker threads.
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        let submit_q = Arc::new(BoundedQueue::<PendingRequest>::new(config.queue_capacity));
+        let job_q = Arc::new(BoundedQueue::<TileJob>::new(config.job_capacity));
+        let metrics = Arc::new(Metrics::default());
+        let mut threads = Vec::new();
+
+        // Batcher pump.
+        {
+            let submit_q = submit_q.clone();
+            let job_q = job_q.clone();
+            let metrics = metrics.clone();
+            let batcher = Batcher::new(config.batcher);
+            threads.push(std::thread::Builder::new().name("morpho-pump".into()).spawn(
+                move || {
+                    pump_loop(&submit_q, &job_q, &metrics, &batcher);
+                    job_q.close();
+                },
+            )?);
+        }
+
+        // Workers.
+        for w in 0..config.workers.max(1) {
+            let job_q = job_q.clone();
+            let metrics = metrics.clone();
+            let choice = config.backend;
+            threads.push(std::thread::Builder::new().name(format!("morpho-worker-{w}")).spawn(
+                move || {
+                    // Backend construction happens on the worker thread
+                    // (XLA executors are not Send).
+                    let mut backend: Box<dyn Backend> = match choice {
+                        BackendChoice::Native => Box::new(NativeBackend),
+                        BackendChoice::M1Sim => Box::new(M1SimBackend::new()),
+                        BackendChoice::Xla => match XlaBackend::discover() {
+                            Ok(b) => Box::new(b),
+                            Err(e) => {
+                                eprintln!(
+                                    "morpho-worker-{w}: XLA backend unavailable ({e:#}); \
+                                     falling back to native"
+                                );
+                                Box::new(NativeBackend)
+                            }
+                        },
+                    };
+                    worker_loop(&job_q, &metrics, backend.as_mut());
+                },
+            )?);
+        }
+
+        Ok(Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    /// Blocks when the admission queue is full (backpressure).
+    pub fn submit(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+    ) -> Result<mpsc::Receiver<TransformResponse>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_request(TransformRequest::new(id, xs, ys, transforms))
+    }
+
+    /// Submit a pre-built request.
+    pub fn submit_request(
+        &self,
+        req: TransformRequest,
+    ) -> Result<mpsc::Receiver<TransformResponse>> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.record_request(req.points());
+        let pending = PendingRequest { req, submitted: Instant::now(), reply: tx };
+        self.submit_q
+            .push(pending)
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn transform_blocking(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+    ) -> Result<TransformResponse> {
+        let rx = self.submit(xs, ys, transforms)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.submit_q.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.submit_q.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Batch-window loop: wait for a first request, give it `max_wait` to
+/// attract company (or until `flush_points` accumulate), then plan jobs.
+fn pump_loop(
+    submit_q: &BoundedQueue<PendingRequest>,
+    job_q: &BoundedQueue<TileJob>,
+    metrics: &Metrics,
+    batcher: &Batcher,
+) {
+    while let Some(first) = submit_q.pop() {
+        let mut window = vec![first];
+        let mut points = window[0].req.points();
+        let deadline = Instant::now() + batcher.config.max_wait;
+        while points < batcher.config.flush_points {
+            match submit_q.pop_until(deadline) {
+                Ok(Some(p)) => {
+                    points += p.req.points();
+                    window.push(p);
+                }
+                Ok(None) | Err(()) => break, // closed or window expired
+            }
+        }
+        let now = Instant::now();
+        for p in &window {
+            metrics.queue_wait.record(now.saturating_duration_since(p.submitted));
+        }
+        for job in batcher.plan(window, now) {
+            if job_q.push(job).is_err() {
+                return; // shutting down
+            }
+        }
+    }
+}
+
+/// Worker loop: execute jobs on the backend, scatter results.
+fn worker_loop(job_q: &BoundedQueue<TileJob>, metrics: &Metrics, backend: &mut dyn Backend) {
+    while let Some(mut job) = job_q.pop() {
+        let params = job.params;
+        let t0 = Instant::now();
+        let cycles = match backend.apply(&params, &mut job.xs, &mut job.ys) {
+            Ok(c) => c,
+            Err(e) => {
+                metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("backend {} failed ({e:#}); native fallback", backend.kind().name());
+                apply_native(&params, &mut job.xs, &mut job.ys);
+                None
+            }
+        };
+        let exec = t0.elapsed();
+        metrics.record_job(job.points(), exec, cycles);
+        job.scatter(backend.kind(), exec, cycles);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::backend::BackendKind;
+    use crate::testkit::{check, Rng};
+    use std::time::Duration;
+
+    fn native_coordinator() -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::Native,
+            batcher: BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn end_to_end_translate() {
+        let c = native_coordinator();
+        let resp = c
+            .transform_blocking(
+                vec![1.0, 2.0, 3.0],
+                vec![4.0, 5.0, 6.0],
+                vec![Transform::Translate { tx: 10.0, ty: 20.0 }],
+            )
+            .unwrap();
+        assert_eq!(resp.xs, vec![11.0, 12.0, 13.0]);
+        assert_eq!(resp.ys, vec![24.0, 25.0, 26.0]);
+        assert_eq!(resp.timing.backend, BackendKind::Native);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered_correctly() {
+        let c = Arc::new(native_coordinator());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..20u64 {
+                        let n = (t * 37 + i * 13) as usize % 300 + 1;
+                        let xs: Vec<f32> = (0..n).map(|k| k as f32).collect();
+                        let ys: Vec<f32> = (0..n).map(|k| -(k as f32)).collect();
+                        let tx = (t % 3) as f32;
+                        let resp = c
+                            .transform_blocking(
+                                xs.clone(),
+                                ys,
+                                vec![Transform::Translate { tx, ty: 1.0 }],
+                            )
+                            .unwrap();
+                        for (k, x) in resp.xs.iter().enumerate() {
+                            assert_eq!(*x, xs[k] + tx);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 160);
+        assert!(m.jobs > 0);
+        assert!(m.backend_errors == 0);
+    }
+
+    #[test]
+    fn m1sim_coordinator_reports_simulated_cycles() {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::M1Sim,
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let resp = c
+            .transform_blocking(
+                vec![1.0; 64],
+                vec![2.0; 64],
+                vec![Transform::Translate { tx: 3.0, ty: 4.0 }],
+            )
+            .unwrap();
+        assert_eq!(resp.timing.backend, BackendKind::M1Sim);
+        assert!(resp.timing.simulated_cycles.unwrap() > 0);
+        assert_eq!(resp.xs, vec![4.0; 64]);
+        let m = c.metrics();
+        assert!(m.simulated_cycles > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let c = native_coordinator();
+        let q = c.submit_q.clone();
+        c.shutdown();
+        assert!(q
+            .push(PendingRequest {
+                req: TransformRequest::new(9, vec![], vec![], vec![]),
+                submitted: Instant::now(),
+                reply: mpsc::channel().0,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn property_random_pipelines_match_native_reference() {
+        let c = native_coordinator();
+        check("coordinator == native", 20, |rng: &mut Rng| {
+            let n = rng.range_i64(1, 200) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32_range(-50.0, 50.0)).collect();
+            let ys: Vec<f32> = (0..n).map(|_| rng.f32_range(-50.0, 50.0)).collect();
+            let transforms = vec![
+                Transform::Rotate { theta: rng.f32_range(-3.0, 3.0) },
+                Transform::Scale { sx: rng.f32_range(0.5, 2.0), sy: rng.f32_range(0.5, 2.0) },
+                Transform::Translate {
+                    tx: rng.f32_range(-10.0, 10.0),
+                    ty: rng.f32_range(-10.0, 10.0),
+                },
+            ];
+            let resp =
+                c.transform_blocking(xs.clone(), ys.clone(), transforms.clone()).unwrap();
+            let pipe = crate::graphics::TransformPipeline::new(transforms);
+            let mut nx = xs;
+            let mut ny = ys;
+            pipe.apply_native(&mut nx, &mut ny);
+            for i in 0..n {
+                assert!((resp.xs[i] - nx[i]).abs() < 1e-3);
+                assert!((resp.ys[i] - ny[i]).abs() < 1e-3);
+            }
+        });
+        c.shutdown();
+    }
+}

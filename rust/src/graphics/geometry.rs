@@ -1,0 +1,160 @@
+//! Points and homogeneous 3×3 matrices (the standard computer-graphics
+//! formulation of §4's transformations).
+
+/// A 2-D point (also used as a vector).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Point2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+impl Point2 {
+    pub fn new(x: f32, y: f32) -> Point2 {
+        Point2 { x, y }
+    }
+
+    pub fn dist(self, other: Point2) -> f32 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+impl std::ops::Add for Point2 {
+    type Output = Point2;
+    fn add(self, o: Point2) -> Point2 {
+        Point2::new(self.x + o.x, self.y + o.y)
+    }
+}
+
+impl std::ops::Sub for Point2 {
+    type Output = Point2;
+    fn sub(self, o: Point2) -> Point2 {
+        Point2::new(self.x - o.x, self.y - o.y)
+    }
+}
+
+/// Row-major homogeneous 3×3 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f32; 3]; 3],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 =
+        Mat3 { m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]] };
+
+    /// Translation by `(tx, ty)` (paper §4, "Translations").
+    pub fn translate(tx: f32, ty: f32) -> Mat3 {
+        Mat3 { m: [[1.0, 0.0, tx], [0.0, 1.0, ty], [0.0, 0.0, 1.0]] }
+    }
+
+    /// Scaling about the origin (paper §4, "Scaling").
+    pub fn scale(sx: f32, sy: f32) -> Mat3 {
+        Mat3 { m: [[sx, 0.0, 0.0], [0.0, sy, 0.0], [0.0, 0.0, 1.0]] }
+    }
+
+    /// Counter-clockwise rotation about the origin by `theta` radians.
+    pub fn rotate(theta: f32) -> Mat3 {
+        let (s, c) = theta.sin_cos();
+        Mat3 { m: [[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]] }
+    }
+
+    /// Matrix product `self × other` (apply `other` first).
+    pub fn mul(&self, other: &Mat3) -> Mat3 {
+        let mut r = [[0.0f32; 3]; 3];
+        for (i, row) in r.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = (0..3).map(|k| self.m[i][k] * other.m[k][j]).sum();
+            }
+        }
+        Mat3 { m: r }
+    }
+
+    /// Transform one point.
+    pub fn apply(&self, p: Point2) -> Point2 {
+        Point2::new(
+            self.m[0][0] * p.x + self.m[0][1] * p.y + self.m[0][2],
+            self.m[1][0] * p.x + self.m[1][1] * p.y + self.m[1][2],
+        )
+    }
+
+    /// The linear 2×2 part, row-major.
+    pub fn linear(&self) -> [f32; 4] {
+        [self.m[0][0], self.m[0][1], self.m[1][0], self.m[1][1]]
+    }
+
+    /// The translation column.
+    pub fn translation(&self) -> (f32, f32) {
+        (self.m[0][2], self.m[1][2])
+    }
+
+    /// Largest absolute difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Mat3) -> f32 {
+        let mut d = 0.0f32;
+        for i in 0..3 {
+            for j in 0..3 {
+                d = d.max((self.m[i][j] - other.m[i][j]).abs());
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f32 = 1e-5;
+
+    #[test]
+    fn translate_matches_paper_definition() {
+        // q = p + t (paper: q = [x + tx, y + ty]).
+        let q = Mat3::translate(3.0, -2.0).apply(Point2::new(1.0, 1.0));
+        assert_eq!(q, Point2::new(4.0, -1.0));
+    }
+
+    #[test]
+    fn scale_matches_paper_definition() {
+        // q = S × p = [sx·x, sy·y].
+        let q = Mat3::scale(2.0, 0.5).apply(Point2::new(3.0, 8.0));
+        assert_eq!(q, Point2::new(6.0, 4.0));
+    }
+
+    #[test]
+    fn rotation_quarter_turn() {
+        let q = Mat3::rotate(std::f32::consts::FRAC_PI_2).apply(Point2::new(1.0, 0.0));
+        assert!(q.dist(Point2::new(0.0, 1.0)) < EPS);
+    }
+
+    #[test]
+    fn composition_applies_right_to_left() {
+        // Scale then translate ≠ translate then scale.
+        let p = Point2::new(1.0, 1.0);
+        let scale_then_translate = Mat3::translate(10.0, 0.0).mul(&Mat3::scale(2.0, 2.0));
+        assert!(scale_then_translate.apply(p).dist(Point2::new(12.0, 2.0)) < EPS);
+        let translate_then_scale = Mat3::scale(2.0, 2.0).mul(&Mat3::translate(10.0, 0.0));
+        assert!(translate_then_scale.apply(p).dist(Point2::new(22.0, 2.0)) < EPS);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let m = Mat3::rotate(0.7).mul(&Mat3::translate(1.0, 2.0));
+        assert!(m.mul(&Mat3::IDENTITY).max_abs_diff(&m) < EPS);
+        assert!(Mat3::IDENTITY.mul(&m).max_abs_diff(&m) < EPS);
+    }
+
+    #[test]
+    fn rotation_preserves_distance() {
+        let p = Point2::new(3.0, 4.0);
+        let q = Mat3::rotate(1.234).apply(p);
+        assert!((q.dist(Point2::default()) - 5.0).abs() < EPS);
+    }
+
+    #[test]
+    fn scaling_shows_inherent_translation_of_figure6() {
+        // Paper Figure 6: scaling is about the origin, so an off-origin
+        // object also moves.
+        let p = Point2::new(2.0, 2.0);
+        let q = Mat3::scale(2.0, 2.0).apply(p);
+        assert!(q.dist(p) > 0.0);
+    }
+}

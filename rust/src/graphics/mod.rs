@@ -1,0 +1,19 @@
+//! # 2-D graphics: geometry, transformations, scenes
+//!
+//! The application layer the paper motivates (§4): points, homogeneous
+//! transforms (translation, scaling, rotation, composition) and simple
+//! scenes. This is the "complete graphics acceleration library" of §7 —
+//! the [`crate::coordinator`] accelerates [`pipeline::TransformPipeline`]
+//! applications over the M1 simulator, the XLA runtime, or native code.
+
+pub mod geometry;
+pub mod pipeline;
+pub mod scene;
+pub mod three_d;
+pub mod transform;
+
+pub use geometry::{Mat3, Point2};
+pub use pipeline::{FixedPointParams, TransformPipeline};
+pub use scene::Scene;
+pub use three_d::{Mat4, Pipeline3D, Point3};
+pub use transform::Transform;

@@ -1,0 +1,201 @@
+//! Transform pipelines: compose a transform sequence once, then apply it
+//! to batched point sets — the unit of work the coordinator schedules onto
+//! a backend. Also the float ↔ fixed-point bridge to the M1's 16-bit
+//! integer datapath.
+
+use super::geometry::Mat3;
+use super::transform::Transform;
+
+/// A composed sequence of transforms applied to batches of points.
+#[derive(Debug, Clone, Default)]
+pub struct TransformPipeline {
+    pub transforms: Vec<Transform>,
+}
+
+impl TransformPipeline {
+    pub fn new(transforms: Vec<Transform>) -> TransformPipeline {
+        TransformPipeline { transforms }
+    }
+
+    /// The single composed homogeneous matrix.
+    pub fn matrix(&self) -> Mat3 {
+        Transform::compose(&self.transforms)
+    }
+
+    /// Apply natively (f32 reference path) to parallel coordinate arrays,
+    /// in place.
+    pub fn apply_native(&self, xs: &mut [f32], ys: &mut [f32]) {
+        assert_eq!(xs.len(), ys.len());
+        let m = self.matrix();
+        let [a, b, c, d] = m.linear();
+        let (tx, ty) = m.translation();
+        for i in 0..xs.len() {
+            let (x, y) = (xs[i], ys[i]);
+            xs[i] = a * x + b * y + tx;
+            ys[i] = c * x + d * y + ty;
+        }
+    }
+}
+
+/// Fixed-point quantization of an affine transform for the M1's integer
+/// datapath: the 2×2 linear part in `Q(shift)` (scaled by `2^shift`,
+/// clamped to the 8-bit context-immediate range), translation as plain
+/// integers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPointParams {
+    /// Row-major quantized 2×2 matrix.
+    pub m: [i16; 4],
+    /// Integer translation.
+    pub t: [i16; 2],
+    /// The Q shift.
+    pub shift: u8,
+}
+
+impl FixedPointParams {
+    /// Quantize `mat`'s linear part with `shift` fractional bits. Returns
+    /// `None` if any scaled entry exceeds the i8 context-immediate range
+    /// or the translation exceeds it (the caller then falls back to a
+    /// float backend or a smaller shift).
+    pub fn quantize(mat: &Mat3, shift: u8) -> Option<FixedPointParams> {
+        let scale = (1i32 << shift) as f32;
+        let lin = mat.linear();
+        let mut m = [0i16; 4];
+        for (q, &v) in m.iter_mut().zip(lin.iter()) {
+            let s = (v * scale).round();
+            if !(-128.0..=127.0).contains(&s) {
+                return None;
+            }
+            *q = s as i16;
+        }
+        let (tx, ty) = mat.translation();
+        let (tx, ty) = (tx.round(), ty.round());
+        if !(-128.0..=127.0).contains(&tx) || !(-128.0..=127.0).contains(&ty) {
+            return None;
+        }
+        Some(FixedPointParams { m, t: [tx as i16, ty as i16], shift })
+    }
+
+    /// Native fixed-point reference: exactly what the M1 point-transform
+    /// mapping computes (`q = ((M·p) >> shift) + t` with 16-bit wrap).
+    pub fn apply(&self, xs: &[i16], ys: &[i16]) -> (Vec<i16>, Vec<i16>) {
+        assert_eq!(xs.len(), ys.len());
+        let mut ox = Vec::with_capacity(xs.len());
+        let mut oy = Vec::with_capacity(xs.len());
+        for i in 0..xs.len() {
+            let (x, y) = (xs[i] as i32, ys[i] as i32);
+            let xp = ((self.m[0] as i32 * x + self.m[1] as i32 * y) >> self.shift)
+                .wrapping_add(self.t[0] as i32);
+            let yp = ((self.m[2] as i32 * x + self.m[3] as i32 * y) >> self.shift)
+                .wrapping_add(self.t[1] as i32);
+            ox.push(xp as i16);
+            oy.push(yp as i16);
+        }
+        (ox, oy)
+    }
+
+    /// Worst-case coordinate error (vs the float transform) for inputs
+    /// bounded by `max_coord`: quantization error of the matrix entries
+    /// (≤ 2⁻ˢʰⁱᶠᵗ⁻¹ each) times 2·|coord|, plus 1 for the truncating
+    /// shift, plus 0.5 for translation rounding.
+    pub fn error_bound(&self, max_coord: f32) -> f32 {
+        let q = 0.5 / (1i32 << self.shift) as f32;
+        2.0 * q * max_coord + 1.0 + 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphics::geometry::Point2;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn pipeline_matches_pointwise_application() {
+        let pipe = TransformPipeline::new(vec![
+            Transform::Rotate { theta: 0.3 },
+            Transform::Scale { sx: 2.0, sy: 0.5 },
+            Transform::Translate { tx: 10.0, ty: -5.0 },
+        ]);
+        let pts = [Point2::new(1.0, 2.0), Point2::new(-3.0, 0.5)];
+        let mut xs: Vec<f32> = pts.iter().map(|p| p.x).collect();
+        let mut ys: Vec<f32> = pts.iter().map(|p| p.y).collect();
+        pipe.apply_native(&mut xs, &mut ys);
+        for (i, p) in pts.iter().enumerate() {
+            let q = pts[i];
+            let expected = pipe.matrix().apply(q);
+            assert!(Point2::new(xs[i], ys[i]).dist(expected) < 1e-4, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_identity_is_exact() {
+        let fp = FixedPointParams::quantize(&Mat3::IDENTITY, 6).unwrap();
+        assert_eq!(fp.m, [64, 0, 0, 64]);
+        assert_eq!(fp.t, [0, 0]);
+        let (xs, ys) = fp.apply(&[5, -7], &[9, 11]);
+        assert_eq!(xs, vec![5, -7]);
+        assert_eq!(ys, vec![9, 11]);
+    }
+
+    #[test]
+    fn quantize_rejects_out_of_range() {
+        // 3.0 in Q6 = 192 > 127.
+        assert!(FixedPointParams::quantize(&Mat3::scale(3.0, 1.0), 6).is_none());
+        // Fits at a smaller shift.
+        assert!(FixedPointParams::quantize(&Mat3::scale(3.0, 1.0), 5).is_some());
+        // Oversized translation.
+        assert!(FixedPointParams::quantize(&Mat3::translate(1000.0, 0.0), 6).is_none());
+    }
+
+    #[test]
+    fn fixed_point_rotation_stays_within_error_bound() {
+        check("fixed-point error bound", 30, |rng: &mut Rng| {
+            let theta = rng.f32_range(-3.1, 3.1);
+            let mat = Mat3::rotate(theta);
+            let fp = FixedPointParams::quantize(&mat, 6).unwrap();
+            let xs: Vec<i16> = (0..32).map(|_| rng.range_i64(-100, 100) as i16).collect();
+            let ys: Vec<i16> = (0..32).map(|_| rng.range_i64(-100, 100) as i16).collect();
+            let (ox, oy) = fp.apply(&xs, &ys);
+            let bound = fp.error_bound(100.0);
+            for i in 0..xs.len() {
+                let exact = mat.apply(Point2::new(xs[i] as f32, ys[i] as f32));
+                assert!(
+                    (ox[i] as f32 - exact.x).abs() <= bound,
+                    "x: {} vs {} (bound {bound})",
+                    ox[i],
+                    exact.x
+                );
+                assert!((oy[i] as f32 - exact.y).abs() <= bound);
+            }
+        });
+    }
+
+    #[test]
+    fn fixed_point_agrees_with_m1_point_transform_mapping() {
+        // The native fixed-point reference and the simulated M1 routine
+        // must agree bit-for-bit.
+        use crate::mapping::{runner::run_routine, PointTransformMapping};
+        check("fp == M1 mapping", 20, |rng: &mut Rng| {
+            let theta = rng.f32_range(-3.1, 3.1);
+            let fp = FixedPointParams::quantize(&Mat3::rotate(theta), 6).unwrap();
+            let xs: Vec<i16> = (0..8).map(|_| rng.range_i64(-100, 100) as i16).collect();
+            let ys: Vec<i16> = (0..8).map(|_| rng.range_i64(-100, 100) as i16).collect();
+            let mapping = PointTransformMapping { n: 8, m: fp.m, t: fp.t, shift: fp.shift };
+            let out = run_routine(&mapping.compile(), &xs, Some(&ys));
+            let (ex, ey) = fp.apply(&xs, &ys);
+            let (mx, my) = out.result.split_at(8);
+            assert_eq!(mx, &ex[..]);
+            assert_eq!(my, &ey[..]);
+        });
+    }
+
+    #[test]
+    fn empty_pipeline_is_identity() {
+        let pipe = TransformPipeline::default();
+        let mut xs = vec![1.0, 2.0];
+        let mut ys = vec![3.0, 4.0];
+        pipe.apply_native(&mut xs, &mut ys);
+        assert_eq!(xs, vec![1.0, 2.0]);
+        assert_eq!(ys, vec![3.0, 4.0]);
+    }
+}

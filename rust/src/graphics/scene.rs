@@ -1,0 +1,138 @@
+//! Scenes: batched point sets with polygon connectivity, plus synthetic
+//! generators for the examples/benches (the paper's Figure 4 image-
+//! tracking workload, in spirit).
+
+use super::geometry::Point2;
+use crate::testkit::Rng;
+
+/// A 2-D scene: a flat point (vertex) pool plus polygons indexing into it.
+#[derive(Debug, Clone, Default)]
+pub struct Scene {
+    pub points: Vec<Point2>,
+    /// Each polygon is a list of vertex indices (closed implicitly).
+    pub polygons: Vec<Vec<u32>>,
+}
+
+impl Scene {
+    pub fn new() -> Scene {
+        Scene::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Add a regular `sides`-gon centred at `c` with circumradius `r`.
+    pub fn add_regular_polygon(&mut self, c: Point2, r: f32, sides: usize) {
+        assert!(sides >= 3);
+        let base = self.points.len() as u32;
+        for k in 0..sides {
+            let a = 2.0 * std::f32::consts::PI * k as f32 / sides as f32;
+            self.points.push(Point2::new(c.x + r * a.cos(), c.y + r * a.sin()));
+        }
+        self.polygons.push((base..base + sides as u32).collect());
+    }
+
+    /// Synthetic scene: `polygons` regular polygons with 3–10 sides
+    /// scattered over `[-extent, extent]²`. Deterministic for a given
+    /// seed.
+    pub fn synthetic(polygons: usize, extent: f32, seed: u64) -> Scene {
+        let mut rng = Rng::new(seed);
+        let mut scene = Scene::new();
+        for _ in 0..polygons {
+            let c = Point2::new(
+                rng.f32_range(-extent, extent),
+                rng.f32_range(-extent, extent),
+            );
+            let r = rng.f32_range(extent * 0.01, extent * 0.1);
+            let sides = rng.range_i64(3, 10) as usize;
+            scene.add_regular_polygon(c, r, sides);
+        }
+        scene
+    }
+
+    /// Flatten to parallel x / y coordinate vectors (the layout the
+    /// accelerator backends consume).
+    pub fn coords(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.points.iter().map(|p| p.x).collect(),
+            self.points.iter().map(|p| p.y).collect(),
+        )
+    }
+
+    /// Axis-aligned bounding box `(min, max)`.
+    pub fn bounds(&self) -> (Point2, Point2) {
+        let mut lo = Point2::new(f32::INFINITY, f32::INFINITY);
+        let mut hi = Point2::new(f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for p in &self.points {
+            lo.x = lo.x.min(p.x);
+            lo.y = lo.y.min(p.y);
+            hi.x = hi.x.max(p.x);
+            hi.y = hi.y.max(p.y);
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regular_polygon_vertices_on_circle() {
+        let mut s = Scene::new();
+        s.add_regular_polygon(Point2::new(1.0, 2.0), 3.0, 6);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.polygons.len(), 1);
+        for &i in &s.polygons[0] {
+            let d = s.points[i as usize].dist(Point2::new(1.0, 2.0));
+            assert!((d - 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Scene::synthetic(10, 100.0, 7);
+        let b = Scene::synthetic(10, 100.0, 7);
+        assert_eq!(a.points.len(), b.points.len());
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p, q);
+        }
+        let c = Scene::synthetic(10, 100.0, 8);
+        assert_ne!(
+            a.points.iter().map(|p| p.x).sum::<f32>(),
+            c.points.iter().map(|p| p.x).sum::<f32>()
+        );
+    }
+
+    #[test]
+    fn coords_are_parallel_arrays() {
+        let s = Scene::synthetic(5, 10.0, 1);
+        let (xs, ys) = s.coords();
+        assert_eq!(xs.len(), s.len());
+        assert_eq!(ys.len(), s.len());
+        assert_eq!(xs[3], s.points[3].x);
+        assert_eq!(ys[3], s.points[3].y);
+    }
+
+    #[test]
+    fn bounds_contain_all_points() {
+        let s = Scene::synthetic(20, 50.0, 3);
+        let (lo, hi) = s.bounds();
+        for p in &s.points {
+            assert!(p.x >= lo.x && p.x <= hi.x);
+            assert!(p.y >= lo.y && p.y <= hi.y);
+        }
+    }
+
+    #[test]
+    fn polygon_count_matches_request() {
+        let s = Scene::synthetic(13, 10.0, 42);
+        assert_eq!(s.polygons.len(), 13);
+        assert!(s.len() >= 13 * 3);
+    }
+}

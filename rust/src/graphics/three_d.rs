@@ -1,0 +1,257 @@
+//! 3-D geometry and transforms — the extension the authors pursued in
+//! "2D and 3D Computer Graphics Algorithms under MorphoSys" (paper
+//! reference [8]): homogeneous 4×4 matrices over 3-D points, with the
+//! same translate/scale/rotate vocabulary.
+
+use crate::testkit::Rng;
+
+/// A 3-D point.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Point3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Point3 {
+    pub fn new(x: f32, y: f32, z: f32) -> Point3 {
+        Point3 { x, y, z }
+    }
+
+    pub fn dist(self, o: Point3) -> f32 {
+        ((self.x - o.x).powi(2) + (self.y - o.y).powi(2) + (self.z - o.z).powi(2)).sqrt()
+    }
+}
+
+/// Row-major homogeneous 4×4 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    pub fn translate(tx: f32, ty: f32, tz: f32) -> Mat4 {
+        let mut m = Mat4::IDENTITY;
+        m.m[0][3] = tx;
+        m.m[1][3] = ty;
+        m.m[2][3] = tz;
+        m
+    }
+
+    pub fn scale(sx: f32, sy: f32, sz: f32) -> Mat4 {
+        let mut m = Mat4::IDENTITY;
+        m.m[0][0] = sx;
+        m.m[1][1] = sy;
+        m.m[2][2] = sz;
+        m
+    }
+
+    /// Rotation about the X axis.
+    pub fn rotate_x(theta: f32) -> Mat4 {
+        let (s, c) = theta.sin_cos();
+        let mut m = Mat4::IDENTITY;
+        m.m[1][1] = c;
+        m.m[1][2] = -s;
+        m.m[2][1] = s;
+        m.m[2][2] = c;
+        m
+    }
+
+    /// Rotation about the Y axis.
+    pub fn rotate_y(theta: f32) -> Mat4 {
+        let (s, c) = theta.sin_cos();
+        let mut m = Mat4::IDENTITY;
+        m.m[0][0] = c;
+        m.m[0][2] = s;
+        m.m[2][0] = -s;
+        m.m[2][2] = c;
+        m
+    }
+
+    /// Rotation about the Z axis.
+    pub fn rotate_z(theta: f32) -> Mat4 {
+        let (s, c) = theta.sin_cos();
+        let mut m = Mat4::IDENTITY;
+        m.m[0][0] = c;
+        m.m[0][1] = -s;
+        m.m[1][0] = s;
+        m.m[1][1] = c;
+        m
+    }
+
+    pub fn mul(&self, o: &Mat4) -> Mat4 {
+        let mut r = [[0.0f32; 4]; 4];
+        for (i, row) in r.iter_mut().enumerate() {
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = (0..4).map(|k| self.m[i][k] * o.m[k][j]).sum();
+            }
+        }
+        Mat4 { m: r }
+    }
+
+    pub fn apply(&self, p: Point3) -> Point3 {
+        Point3::new(
+            self.m[0][0] * p.x + self.m[0][1] * p.y + self.m[0][2] * p.z + self.m[0][3],
+            self.m[1][0] * p.x + self.m[1][1] * p.y + self.m[1][2] * p.z + self.m[1][3],
+            self.m[2][0] * p.x + self.m[2][1] * p.y + self.m[2][2] * p.z + self.m[2][3],
+        )
+    }
+
+    /// The linear 3×3 part, row-major.
+    pub fn linear(&self) -> [f32; 9] {
+        [
+            self.m[0][0], self.m[0][1], self.m[0][2],
+            self.m[1][0], self.m[1][1], self.m[1][2],
+            self.m[2][0], self.m[2][1], self.m[2][2],
+        ]
+    }
+
+    pub fn translation(&self) -> (f32, f32, f32) {
+        (self.m[0][3], self.m[1][3], self.m[2][3])
+    }
+
+    /// The 12 affine parameters the `affine3d` artifact consumes:
+    /// `[m00..m22 row-major, tx, ty, tz]`.
+    pub fn affine_params(&self) -> [f32; 12] {
+        let l = self.linear();
+        let (tx, ty, tz) = self.translation();
+        [l[0], l[1], l[2], l[3], l[4], l[5], l[6], l[7], l[8], tx, ty, tz]
+    }
+}
+
+/// A 3-D transform sequence, composed left-to-right.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline3D {
+    pub matrices: Vec<Mat4>,
+}
+
+impl Pipeline3D {
+    pub fn new(matrices: Vec<Mat4>) -> Pipeline3D {
+        Pipeline3D { matrices }
+    }
+
+    pub fn matrix(&self) -> Mat4 {
+        self.matrices.iter().fold(Mat4::IDENTITY, |acc, m| m.mul(&acc))
+    }
+
+    /// Apply natively to parallel coordinate arrays, in place.
+    pub fn apply_native(&self, xs: &mut [f32], ys: &mut [f32], zs: &mut [f32]) {
+        assert!(xs.len() == ys.len() && ys.len() == zs.len());
+        let m = self.matrix();
+        for i in 0..xs.len() {
+            let p = m.apply(Point3::new(xs[i], ys[i], zs[i]));
+            xs[i] = p.x;
+            ys[i] = p.y;
+            zs[i] = p.z;
+        }
+    }
+}
+
+/// A random rigid-ish 3-D transform for tests/benches.
+pub fn random_transform(rng: &mut Rng) -> Mat4 {
+    Mat4::translate(
+        rng.f32_range(-10.0, 10.0),
+        rng.f32_range(-10.0, 10.0),
+        rng.f32_range(-10.0, 10.0),
+    )
+    .mul(&Mat4::rotate_z(rng.f32_range(-3.0, 3.0)))
+    .mul(&Mat4::rotate_x(rng.f32_range(-3.0, 3.0)))
+    .mul(&Mat4::scale(rng.f32_range(0.5, 1.5), rng.f32_range(0.5, 1.5), rng.f32_range(0.5, 1.5)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    const EPS: f32 = 1e-4;
+
+    #[test]
+    fn translate_and_scale() {
+        let p = Point3::new(1.0, 2.0, 3.0);
+        assert_eq!(Mat4::translate(1.0, -1.0, 0.5).apply(p), Point3::new(2.0, 1.0, 3.5));
+        assert_eq!(Mat4::scale(2.0, 3.0, -1.0).apply(p), Point3::new(2.0, 6.0, -3.0));
+    }
+
+    #[test]
+    fn axis_rotations_quarter_turn() {
+        let p = Point3::new(1.0, 0.0, 0.0);
+        let q = Mat4::rotate_z(std::f32::consts::FRAC_PI_2).apply(p);
+        assert!(q.dist(Point3::new(0.0, 1.0, 0.0)) < EPS);
+        let q = Mat4::rotate_y(std::f32::consts::FRAC_PI_2).apply(p);
+        assert!(q.dist(Point3::new(0.0, 0.0, -1.0)) < EPS);
+        let p = Point3::new(0.0, 1.0, 0.0);
+        let q = Mat4::rotate_x(std::f32::consts::FRAC_PI_2).apply(p);
+        assert!(q.dist(Point3::new(0.0, 0.0, 1.0)) < EPS);
+    }
+
+    #[test]
+    fn rotations_preserve_norm() {
+        check("rot3 preserves norm", 20, |rng| {
+            let m = Mat4::rotate_x(rng.f32_range(-3.0, 3.0))
+                .mul(&Mat4::rotate_y(rng.f32_range(-3.0, 3.0)))
+                .mul(&Mat4::rotate_z(rng.f32_range(-3.0, 3.0)));
+            let p = Point3::new(
+                rng.f32_range(-5.0, 5.0),
+                rng.f32_range(-5.0, 5.0),
+                rng.f32_range(-5.0, 5.0),
+            );
+            let q = m.apply(p);
+            let n0 = p.dist(Point3::default());
+            let n1 = q.dist(Point3::default());
+            assert!((n0 - n1).abs() < 1e-3 * (1.0 + n0));
+        });
+    }
+
+    #[test]
+    fn pipeline_matches_pointwise() {
+        let pipe = Pipeline3D::new(vec![
+            Mat4::scale(2.0, 2.0, 2.0),
+            Mat4::rotate_z(0.5),
+            Mat4::translate(1.0, 2.0, 3.0),
+        ]);
+        let mut xs = vec![1.0f32, -2.0];
+        let mut ys = vec![0.5f32, 1.5];
+        let mut zs = vec![3.0f32, -1.0];
+        let (oxs, oys, ozs) = (xs.clone(), ys.clone(), zs.clone());
+        pipe.apply_native(&mut xs, &mut ys, &mut zs);
+        for i in 0..2 {
+            let q = pipe.matrix().apply(Point3::new(oxs[i], oys[i], ozs[i]));
+            assert!(Point3::new(xs[i], ys[i], zs[i]).dist(q) < EPS);
+        }
+    }
+
+    #[test]
+    fn affine_params_roundtrip() {
+        let m = Mat4::translate(1.0, 2.0, 3.0).mul(&Mat4::rotate_y(0.7));
+        let p = m.affine_params();
+        let point = Point3::new(4.0, -5.0, 6.0);
+        let q = m.apply(point);
+        let manual = Point3::new(
+            p[0] * point.x + p[1] * point.y + p[2] * point.z + p[9],
+            p[3] * point.x + p[4] * point.y + p[5] * point.z + p[10],
+            p[6] * point.x + p[7] * point.y + p[8] * point.z + p[11],
+        );
+        assert!(q.dist(manual) < EPS);
+    }
+
+    #[test]
+    fn composition_is_left_to_right() {
+        let pipe = Pipeline3D::new(vec![
+            Mat4::translate(1.0, 0.0, 0.0),
+            Mat4::scale(2.0, 2.0, 2.0),
+        ]);
+        // (0,0,0) → translate → (1,0,0) → scale → (2,0,0).
+        let q = pipe.matrix().apply(Point3::default());
+        assert!(q.dist(Point3::new(2.0, 0.0, 0.0)) < EPS);
+    }
+}

@@ -1,0 +1,103 @@
+//! The transformation vocabulary of the paper's §4: translation, scaling,
+//! rotation, and their compositions.
+
+use super::geometry::{Mat3, Point2};
+
+/// One 2-D geometric transformation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Transform {
+    /// `q = p + (tx, ty)` — the paper's vector-vector mapping.
+    Translate { tx: f32, ty: f32 },
+    /// `q = (sx·x, sy·y)` — the paper's vector-scalar mapping.
+    Scale { sx: f32, sy: f32 },
+    /// Counter-clockwise rotation about the origin, radians — the
+    /// paper's matrix-multiplication mapping.
+    Rotate { theta: f32 },
+    /// Rotation about an arbitrary pivot (a composite: T · R · T⁻¹).
+    RotateAbout { theta: f32, cx: f32, cy: f32 },
+}
+
+impl Transform {
+    /// Homogeneous matrix of this transform.
+    pub fn matrix(&self) -> Mat3 {
+        match *self {
+            Transform::Translate { tx, ty } => Mat3::translate(tx, ty),
+            Transform::Scale { sx, sy } => Mat3::scale(sx, sy),
+            Transform::Rotate { theta } => Mat3::rotate(theta),
+            Transform::RotateAbout { theta, cx, cy } => Mat3::translate(cx, cy)
+                .mul(&Mat3::rotate(theta))
+                .mul(&Mat3::translate(-cx, -cy)),
+        }
+    }
+
+    /// Apply to a single point.
+    pub fn apply(&self, p: Point2) -> Point2 {
+        self.matrix().apply(p)
+    }
+
+    /// Compose a sequence (applied left to right) into one matrix.
+    pub fn compose(seq: &[Transform]) -> Mat3 {
+        seq.iter().fold(Mat3::IDENTITY, |acc, t| t.matrix().mul(&acc))
+    }
+
+    /// Is this a pure translation (maps to the vector-vector routine)?
+    pub fn is_translation(&self) -> bool {
+        matches!(self, Transform::Translate { .. })
+    }
+
+    /// Is this a pure scaling (maps to the vector-scalar routine)?
+    pub fn is_scaling(&self) -> bool {
+        matches!(self, Transform::Scale { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f32 = 1e-5;
+
+    #[test]
+    fn each_variant_matches_its_matrix() {
+        let p = Point2::new(2.0, -1.0);
+        for t in [
+            Transform::Translate { tx: 3.0, ty: 4.0 },
+            Transform::Scale { sx: -2.0, sy: 0.5 },
+            Transform::Rotate { theta: 0.9 },
+            Transform::RotateAbout { theta: 0.9, cx: 1.0, cy: 1.0 },
+        ] {
+            assert!(t.apply(p).dist(t.matrix().apply(p)) < EPS);
+        }
+    }
+
+    #[test]
+    fn rotate_about_pivot_fixes_the_pivot() {
+        let t = Transform::RotateAbout { theta: 2.1, cx: 5.0, cy: -3.0 };
+        let pivot = Point2::new(5.0, -3.0);
+        assert!(t.apply(pivot).dist(pivot) < 1e-4);
+    }
+
+    #[test]
+    fn compose_applies_left_to_right() {
+        let seq = [
+            Transform::Scale { sx: 2.0, sy: 2.0 },
+            Transform::Translate { tx: 1.0, ty: 0.0 },
+        ];
+        let m = Transform::compose(&seq);
+        // (1,1) → scaled (2,2) → translated (3,2).
+        assert!(m.apply(Point2::new(1.0, 1.0)).dist(Point2::new(3.0, 2.0)) < EPS);
+    }
+
+    #[test]
+    fn compose_empty_is_identity() {
+        assert_eq!(Transform::compose(&[]), Mat3::IDENTITY);
+    }
+
+    #[test]
+    fn classification_predicates() {
+        assert!(Transform::Translate { tx: 1.0, ty: 2.0 }.is_translation());
+        assert!(!Transform::Translate { tx: 1.0, ty: 2.0 }.is_scaling());
+        assert!(Transform::Scale { sx: 1.0, sy: 2.0 }.is_scaling());
+        assert!(!Transform::Rotate { theta: 1.0 }.is_translation());
+    }
+}

@@ -1,0 +1,51 @@
+//! # morpho — reconfigurable-computing graphics acceleration, reproduced
+//!
+//! Reproduction of *"Performance Analysis of Linear Algebraic Functions
+//! using Reconfigurable Computing"* (Damaj & Diab). The paper maps 2-D
+//! geometrical transformations — translation (vector-vector ops), scaling
+//! (vector-scalar ops) and rotation/composite (matrix multiplication) —
+//! onto the MorphoSys **M1** reconfigurable system and compares cycle
+//! counts against Intel 80386/80486/Pentium baselines.
+//!
+//! This crate provides everything the paper's evaluation needs, built from
+//! scratch:
+//!
+//! * [`morphosys`] — a cycle-accurate simulator of the M1 chip: TinyRISC
+//!   control processor, the 8×8 RC array with context-word-programmed
+//!   cells, the three-level interconnect, the dual-set frame buffer,
+//!   context memory and the DMA controller. This plays the role of the
+//!   authors' *mULATE* emulator.
+//! * [`baselines`] — an x86-subset interpreter plus per-model cycle timing
+//!   tables for the 80386, 80486 and Pentium, executing the paper's exact
+//!   assembly listings (Tables 3–4) and the rotation matmul routine.
+//! * [`mapping`] — the paper's contribution: the algorithm-mapping
+//!   compiler that emits TinyRISC programs + RC-array context words for
+//!   vector-vector, vector-scalar and matrix-multiplication mappings
+//!   (Tables 1–2, §5.3), with a cost model cross-checked against the
+//!   simulator.
+//! * [`graphics`] — the 2-D geometry/transform library the mappings
+//!   accelerate (the "complete graphics acceleration library" of §7).
+//! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled
+//!   JAX/Pallas transform pipeline (`artifacts/*.hlo.txt`) and executes it
+//!   from the request path with no Python involved.
+//! * [`coordinator`] — the serving layer: async request queue, dynamic
+//!   batcher packing requests into 64-element tiles (the M1's natural
+//!   unit), scheduler and pluggable backends (XLA / M1 simulator / native).
+//! * [`perf`] — the reproduction harness that regenerates every table and
+//!   figure of the paper's evaluation (Tables 1–5, Figures 9–16).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod coordinator;
+pub mod graphics;
+pub mod mapping;
+pub mod morphosys;
+pub mod perf;
+pub mod runtime;
+pub mod testkit;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

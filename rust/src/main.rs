@@ -1,0 +1,182 @@
+//! `repro` — the reproduction CLI.
+//!
+//! ```text
+//! repro all                 regenerate every table and figure
+//! repro table <1..5>        one table (1–2: TinyRISC listings)
+//! repro figure <9..16>      one figure (ASCII chart)
+//! repro csv <dir>           write tables 3–5 and figures 9–16 as CSV
+//! repro trace <translation|scaling> [n]   mULATE-style execution trace
+//! repro artifacts           list AOT artifacts and PJRT platform
+//! repro serve [requests]    quick coordinator smoke run (XLA backend)
+//! ```
+
+use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use morpho::graphics::Transform;
+use morpho::mapping::{VecScalarMapping, VecVecMapping};
+use morpho::morphosys::{AluOp, M1System};
+use morpho::perf::{
+    figure, render_figure, render_table, table1_listing, table2_listing, table3, table4, table5,
+    to_csv,
+};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <all | table N | figure N | csv DIR | trace ALG [n] | artifacts | serve [N]>"
+    );
+    std::process::exit(2)
+}
+
+fn print_table(n: u32) {
+    match n {
+        1 => println!("{}", table1_listing()),
+        2 => println!("{}", table2_listing()),
+        3 => println!(
+            "{}",
+            render_table(
+                "Table 3 — vector-vector (translation) on the Intel baselines",
+                &[table3()]
+            )
+        ),
+        4 => println!(
+            "{}",
+            render_table(
+                "Table 4 — vector-scalar (scaling) on the Intel baselines",
+                &[table4()]
+            )
+        ),
+        5 => println!(
+            "{}",
+            render_table("Table 5 — comparisons between algorithms and systems", &table5())
+        ),
+        _ => usage(),
+    }
+}
+
+fn print_figure(n: u32) {
+    if !(9..=16).contains(&n) {
+        usage();
+    }
+    let (title, rows, per_elem) = figure(n);
+    println!("{}", render_figure(&title, &rows, per_elem));
+}
+
+fn trace(alg: &str, n: usize) {
+    let routine = match alg {
+        "translation" => VecVecMapping { n, op: AluOp::Add }.compile(),
+        "scaling" => VecScalarMapping { n, op: AluOp::Cmul, scalar: 5 }.compile(),
+        _ => usage(),
+    };
+    let mut sys = M1System::new().with_trace();
+    let u: Vec<i16> = (0..n as i16).collect();
+    let v = vec![5i16; n];
+    let out = morpho::mapping::runner::run_routine_on(
+        &mut sys,
+        &routine,
+        &u,
+        routine.v_elems.map(|_| &v[..]),
+    );
+    if let Some(t) = sys.take_trace() {
+        println!("{}", t.render());
+    }
+    println!(
+        "cycles={} ({}µs @100MHz)   result[..8]={:?}",
+        out.report.cycles,
+        out.report.micros(),
+        &out.result[..8.min(out.result.len())]
+    );
+}
+
+fn artifacts() {
+    match morpho::runtime::Executor::discover() {
+        Ok(exec) => {
+            println!("PJRT platform: {}", exec.platform());
+            println!("artifacts in {}:", exec.registry().dir().display());
+            for name in exec.registry().names() {
+                println!("  {name}");
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn serve(requests: usize) {
+    let c = Coordinator::start(CoordinatorConfig {
+        backend: BackendChoice::Xla,
+        workers: 1,
+        ..Default::default()
+    })
+    .expect("start coordinator");
+    let receivers: Vec<_> = (0..requests)
+        .map(|i| {
+            let n = 64 + (i * 191) % 2048;
+            let xs: Vec<f32> = (0..n).map(|k| k as f32).collect();
+            let ys = vec![0.5f32; n];
+            c.submit(
+                xs,
+                ys,
+                vec![
+                    Transform::Rotate { theta: 0.1 * (i % 7) as f32 },
+                    Transform::Translate { tx: 3.0, ty: -1.0 },
+                ],
+            )
+            .unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap();
+    }
+    println!("{}", c.metrics().render());
+    c.shutdown();
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter().map(String::as_str);
+    match it.next() {
+        Some("all") => {
+            print_table(1);
+            print_table(2);
+            print_table(3);
+            print_table(4);
+            print_table(5);
+            for f in 9..=16 {
+                print_figure(f);
+                println!();
+            }
+        }
+        Some("table") => {
+            let n = it.next().and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            print_table(n);
+        }
+        Some("figure") => {
+            let n = it.next().and_then(|s| s.parse().ok()).unwrap_or_else(|| usage());
+            print_figure(n);
+        }
+        Some("csv") => {
+            let dir = it.next().unwrap_or_else(|| usage());
+            std::fs::create_dir_all(dir).expect("create csv dir");
+            std::fs::write(format!("{dir}/table3.csv"), to_csv(&[table3()])).unwrap();
+            std::fs::write(format!("{dir}/table4.csv"), to_csv(&[table4()])).unwrap();
+            std::fs::write(format!("{dir}/table5.csv"), to_csv(&table5())).unwrap();
+            for f in 9..=16 {
+                let (_, rows, _) = figure(f);
+                std::fs::write(format!("{dir}/figure{f}.csv"), to_csv(&[rows])).unwrap();
+            }
+            println!("wrote table3/4/5.csv and figure9..16.csv to {dir}");
+        }
+        Some("trace") => {
+            let alg = it.next().unwrap_or_else(|| usage());
+            let n = it.next().and_then(|s| s.parse().ok()).unwrap_or(64);
+            trace(alg, n);
+        }
+        Some("artifacts") => artifacts(),
+        Some("serve") => {
+            let n = it.next().and_then(|s| s.parse().ok()).unwrap_or(100);
+            serve(n);
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,99 @@
+//! Data layout conventions of the paper's mappings.
+//!
+//! A 64-element vector is tiled over the 8×8 RC array **column-major**
+//! (paper Figures 7–8): element `i` lands in cell `(row = i mod 8,
+//! col = i div 8)`, because each column broadcast consumes eight
+//! consecutive frame-buffer elements. The frame buffer is element (16-bit)
+//! addressed; the chunk feeding column `c` starts at element `8·c`.
+
+use crate::morphosys::rc_array::ARRAY_DIM;
+
+/// Main-memory word address of vector U / matrix B (paper: `10,000_hex`).
+pub const U_ADDR: usize = 0x10000;
+/// Main-memory word address of vector V (paper: `20,000_hex`).
+pub const V_ADDR: usize = 0x20000;
+/// Main-memory word address of the context words (paper: `30,000_hex`).
+pub const CTX_ADDR: usize = 0x30000;
+/// Main-memory word address of the result (paper: `40,000_hex`).
+pub const RESULT_ADDR: usize = 0x40000;
+/// Main-memory word address of a third input stream (z coordinates of
+/// the 3-D mappings; outside the paper's 2-D address map).
+pub const W_ADDR: usize = 0x50000;
+
+/// The column-major vector→array layout.
+#[derive(Debug, Clone, Copy)]
+pub struct Layout;
+
+impl Layout {
+    /// Cell coordinates of vector element `i` (Figure 7/8).
+    pub fn cell_of(i: usize) -> (usize, usize) {
+        (i % ARRAY_DIM, i / ARRAY_DIM)
+    }
+
+    /// Vector element held by cell `(row, col)`.
+    pub fn element_of(row: usize, col: usize) -> usize {
+        col * ARRAY_DIM + row
+    }
+
+    /// Frame-buffer element address of the 8-element chunk feeding column
+    /// `c`.
+    pub fn column_chunk(c: usize) -> usize {
+        c * ARRAY_DIM
+    }
+
+    /// Number of column broadcasts needed for an `n`-element vector.
+    pub fn columns_for(n: usize) -> usize {
+        assert!(n % ARRAY_DIM == 0, "vector length {n} must be a multiple of {ARRAY_DIM}");
+        assert!(n <= ARRAY_DIM * ARRAY_DIM, "vector length {n} exceeds one array tile");
+        n / ARRAY_DIM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_paper_figure7() {
+        // Figure 7: U9+V9 sits at row 1, column 1; U56+V56 at row 0, col 7.
+        assert_eq!(Layout::cell_of(9), (1, 1));
+        assert_eq!(Layout::cell_of(56), (0, 7));
+        assert_eq!(Layout::cell_of(63), (7, 7));
+        assert_eq!(Layout::cell_of(0), (0, 0));
+    }
+
+    #[test]
+    fn cell_of_and_element_of_are_inverse() {
+        for i in 0..64 {
+            let (r, c) = Layout::cell_of(i);
+            assert_eq!(Layout::element_of(r, c), i);
+        }
+    }
+
+    #[test]
+    fn column_chunks_stride_by_eight() {
+        assert_eq!(Layout::column_chunk(0), 0);
+        assert_eq!(Layout::column_chunk(3), 24);
+        assert_eq!(Layout::column_chunk(7), 56);
+    }
+
+    #[test]
+    fn columns_for_valid_sizes() {
+        assert_eq!(Layout::columns_for(8), 1);
+        assert_eq!(Layout::columns_for(64), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn columns_for_rejects_ragged_sizes() {
+        Layout::columns_for(12);
+    }
+
+    #[test]
+    fn paper_address_map() {
+        assert_eq!(U_ADDR, 0x10000);
+        assert_eq!(V_ADDR, 0x20000);
+        assert_eq!(CTX_ADDR, 0x30000);
+        assert_eq!(RESULT_ADDR, 0x40000);
+    }
+}

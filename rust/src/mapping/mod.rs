@@ -1,0 +1,37 @@
+//! # Algorithm mapping — the paper's contribution
+//!
+//! §5 of the paper maps linear-algebraic kernels onto the M1:
+//!
+//! * **§5.1 vector-vector operations** (translation): both operands DMA'd
+//!   into the two frame-buffer banks, one *double-bank column broadcast*
+//!   (`dbcdc`) per 8-element column, context word `0000F400` (`OUT=A+B`).
+//! * **§5.2 vector-scalar operations** (scaling): one operand in bank A,
+//!   the scalar carried in the context-word immediate (`00009005` =
+//!   `OUT = 5×A`), one *single-bank column broadcast* (`sbcb`) per column.
+//! * **§5.3 matrix multiplication** (rotation/composite): matrix A enters
+//!   through per-step context words (constant-multiply-accumulate), matrix
+//!   B is broadcast row by row.
+//!
+//! This module is the *mapping compiler*: given an operation and a size it
+//! emits the TinyRISC program, the context words to stage in main memory,
+//! and a static cycle prediction — and the prediction is asserted equal to
+//! the simulator's measured cycles by the [`plan`] tests. The paper's
+//! main-memory address map is kept: vector U at word `0x10000`, V at
+//! `0x20000`, context words at `0x30000`, results at `0x40000`.
+
+pub mod extended;
+pub mod layout;
+pub mod plan;
+pub mod routines;
+pub mod runner;
+pub mod streamed;
+
+pub use extended::{DotProductMapping, MatVecMapping, SaxpyMapping, VecReduceMapping};
+pub use layout::{Layout, CTX_ADDR, RESULT_ADDR, U_ADDR, V_ADDR};
+pub use plan::MappingPlan;
+pub use routines::{
+    MappedRoutine, MatMulMapping, Point3TransformMapping, PointTransformMapping,
+    VecScalarMapping, VecVecMapping,
+};
+pub use runner::{run_routine, RoutineOutput};
+pub use streamed::TiledVecVecMapping;

@@ -1,0 +1,134 @@
+//! Static analysis of mapped routines: per-phase cycle breakdown and the
+//! calibration of the cost model against the paper's published numbers.
+//!
+//! The breakdown splits a routine's issue slots into the four phases of
+//! every M1 mapping — input DMA, configuration (context load), compute
+//! (broadcast triggers) and write-back/store — which is the basis of the
+//! ablation study in `EXPERIMENTS.md` (where does the M1's advantage come
+//! from, and what would a slower context bus cost?).
+
+use crate::morphosys::tinyrisc::{Instruction, Program};
+
+/// Per-phase slot breakdown of a mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MappingPlan {
+    /// Slots spent loading application data (ldfb + address formation).
+    pub load: u64,
+    /// Slots spent loading configuration (ldctxt + address formation).
+    pub config: u64,
+    /// Slots spent triggering RC-array broadcasts.
+    pub compute: u64,
+    /// Slots spent writing back and storing results (wfbi + stfb).
+    pub store: u64,
+    /// Anything else (branches, scalar arithmetic).
+    pub other: u64,
+}
+
+impl MappingPlan {
+    /// Classify a straight-line program into phases. Address-formation
+    /// instructions (`ldui`/`ldli`) are attributed to the phase of the
+    /// *next* non-scalar instruction.
+    pub fn analyze(program: &Program) -> MappingPlan {
+        let mut plan = MappingPlan::default();
+        let mut pending_scalar = 0u64;
+        for instr in &program.instructions {
+            let slots = instr.issue_slots();
+            match instr {
+                Instruction::Ldui { .. }
+                | Instruction::Ldli { .. }
+                | Instruction::Addi { .. }
+                | Instruction::Add { .. }
+                | Instruction::Sub { .. } => pending_scalar += slots,
+                Instruction::Ldfb { .. } => {
+                    plan.load += slots + pending_scalar;
+                    pending_scalar = 0;
+                }
+                Instruction::Ldctxt { .. } => {
+                    plan.config += slots + pending_scalar;
+                    pending_scalar = 0;
+                }
+                Instruction::Dbcdc { .. }
+                | Instruction::Dbcdr { .. }
+                | Instruction::Sbcb { .. }
+                | Instruction::Sbcbr { .. } => {
+                    plan.compute += slots + pending_scalar;
+                    pending_scalar = 0;
+                }
+                Instruction::Wfbi { .. } | Instruction::Wfbir { .. } | Instruction::Stfb { .. } => {
+                    plan.store += slots + pending_scalar;
+                    pending_scalar = 0;
+                }
+                Instruction::Jmp { .. } | Instruction::Bnez { .. } | Instruction::Halt => {
+                    plan.other += slots + pending_scalar;
+                    pending_scalar = 0;
+                }
+            }
+        }
+        plan.other += pending_scalar;
+        plan
+    }
+
+    pub fn total_slots(&self) -> u64 {
+        self.load + self.config + self.compute + self.store + self.other
+    }
+
+    /// Fraction of slots doing RC-array compute (vs data movement).
+    pub fn compute_fraction(&self) -> f64 {
+        self.compute as f64 / self.total_slots() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::routines::{VecScalarMapping, VecVecMapping};
+    use crate::morphosys::AluOp;
+
+    #[test]
+    fn breakdown_of_translation_64() {
+        // Table 1 structure: 66 load slots, 5 config, 16 compute; store =
+        // 8 wfbi + 1 ldui + 32 stfb-DMA slots (the DMA tail beyond the
+        // paper's counting window).
+        let r = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let plan = MappingPlan::analyze(&r.program);
+        assert_eq!(plan.load, 66);
+        assert_eq!(plan.config, 5);
+        assert_eq!(plan.compute, 16);
+        assert_eq!(plan.store, 41);
+        assert_eq!(plan.other, 0);
+        assert_eq!(plan.total_slots(), 128);
+    }
+
+    #[test]
+    fn breakdown_of_scaling_64() {
+        let r = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+        let plan = MappingPlan::analyze(&r.program);
+        assert_eq!(plan.load, 33);
+        assert_eq!(plan.config, 5);
+        assert_eq!(plan.compute, 8);
+        assert_eq!(plan.store, 41);
+        assert_eq!(plan.total_slots(), 87);
+    }
+
+    #[test]
+    fn data_movement_dominates_the_m1_budget() {
+        // The headline insight the ablation bench quantifies: even on the
+        // winning platform, ≥ 2/3 of the 64-element translation budget is
+        // DMA, not compute.
+        let r = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let plan = MappingPlan::analyze(&r.program);
+        assert!(plan.compute_fraction() < 0.25);
+        assert!((plan.load + plan.store) as f64 / plan.total_slots() as f64 > 0.6);
+    }
+
+    #[test]
+    fn plan_total_matches_program_slots() {
+        for n in [8, 16, 32, 64] {
+            let r = VecVecMapping { n, op: AluOp::Add }.compile();
+            assert_eq!(
+                MappingPlan::analyze(&r.program).total_slots(),
+                r.program.straight_line_slots()
+            );
+        }
+    }
+}

@@ -1,0 +1,656 @@
+//! TinyRISC code generators for the paper's mappings.
+//!
+//! Each mapping compiles to a [`MappedRoutine`]: the TinyRISC program, the
+//! context words to stage in main memory, the result location, and a
+//! static cycle prediction (the paper's convention — final-instruction
+//! issue index). The emitted structure mirrors the paper's listings
+//! (Tables 1–2) including the `ldli r4` bank-address formation step before
+//! every `dbcdc`, which is architecturally required by the real TinyRISC
+//! and is part of the published cycle budget.
+
+use crate::morphosys::context_memory::Block;
+use crate::morphosys::frame_buffer::{Bank, Set};
+use crate::morphosys::rc_array::{AluOp, ContextWord, MuxASel, ARRAY_DIM};
+use crate::morphosys::tinyrisc::{Instruction, Program, Reg};
+
+use super::layout::{Layout, CTX_ADDR, RESULT_ADDR, U_ADDR, V_ADDR, W_ADDR};
+
+/// A compiled mapping: everything needed to run it on the simulator.
+#[derive(Debug, Clone)]
+pub struct MappedRoutine {
+    pub name: String,
+    pub program: Program,
+    /// Context words to stage in main memory: `(word address, raw word)`.
+    pub ctx_words: Vec<(usize, u32)>,
+    /// Elements expected at [`U_ADDR`].
+    pub u_elems: usize,
+    /// Elements expected at [`V_ADDR`] (vector-vector mappings only).
+    pub v_elems: Option<usize>,
+    /// Elements expected at [`W_ADDR`] (third stream; 3-D mappings only).
+    pub w_elems: Option<usize>,
+    /// Result location and length (elements at [`RESULT_ADDR`]).
+    pub result_elems: usize,
+    /// Predicted cycles (paper convention). Asserted equal to the
+    /// simulator-measured count by the `plan` tests.
+    pub predicted_cycles: u64,
+}
+
+fn words_for(elems: usize) -> usize {
+    crate::morphosys::dma::words_for_elements(elems)
+}
+
+/// Split a word address into the paper's `ldui`/`ldli` halves, emitting
+/// `ldli` only when the low half is non-zero (the paper's base addresses
+/// are `ldui`-only).
+fn load_address(prog: &mut Vec<Instruction>, reg: Reg, addr: usize) {
+    prog.push(Instruction::Ldui { rd: reg, imm: (addr >> 16) as u16 });
+    if addr & 0xFFFF != 0 {
+        prog.push(Instruction::Ldli { rd: reg, imm: (addr & 0xFFFF) as u16 });
+    }
+}
+
+/// §5.1 — element-wise vector-vector operation (translation when
+/// `op = Add`): `result[i] = U[i] op V[i]`.
+#[derive(Debug, Clone, Copy)]
+pub struct VecVecMapping {
+    /// Vector length; multiple of 8, at most 64 (one array tile). Larger
+    /// workloads are tiled by the coordinator.
+    pub n: usize,
+    /// Any two-port ALU op (Add for translation, Sub, Mul, And, …).
+    pub op: AluOp,
+}
+
+impl VecVecMapping {
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(!self.op.uses_immediate(), "vector-vector op must be two-port");
+        let cols = Layout::columns_for(self.n);
+        let words = words_for(self.n);
+        let mut prog = Vec::new();
+
+        // Load U into set 0 bank A, V into set 0 bank B (Table 1, 0–65).
+        load_address(&mut prog, Reg(1), U_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words, fb_addr: 0 });
+        load_address(&mut prog, Reg(2), V_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(2), set: Set::Zero, bank: Bank::B, words, fb_addr: 0 });
+
+        // Load the single context word (Table 1, 66–70).
+        load_address(&mut prog, Reg(3), CTX_ADDR);
+        prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
+
+        // One double-bank column broadcast per column, each preceded by
+        // the bank-address formation `ldli r4` (Table 1, 71–86).
+        for c in 0..cols {
+            let chunk = Layout::column_chunk(c);
+            prog.push(Instruction::Ldli { rd: Reg(4), imm: chunk as u16 });
+            prog.push(Instruction::Dbcdc { plane: 0, cw: 0, col: c, set: Set::Zero, addr_a: chunk, addr_b: chunk });
+        }
+
+        // Write results back to set 1 bank A (Table 1, 87–94).
+        for c in 0..cols {
+            prog.push(Instruction::Wfbi { col: c, set: Set::One, bank: Bank::A, addr: Layout::column_chunk(c) });
+        }
+
+        // Store to main memory (Table 1, 95–96).
+        load_address(&mut prog, Reg(5), RESULT_ADDR);
+        prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::A, words, fb_addr: 0 });
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("vecvec-{:?}-{}", self.op, self.n),
+            program,
+            ctx_words: vec![(CTX_ADDR, ContextWord::two_port(self.op).encode())],
+            u_elems: self.n,
+            v_elems: Some(self.n),
+            w_elems: None,
+            result_elems: self.n,
+            predicted_cycles,
+        }
+    }
+}
+
+/// §5.2 — vector-scalar operation (scaling when `op = Cmul`):
+/// `result[i] = U[i] op scalar`, the scalar riding in the context-word
+/// immediate.
+#[derive(Debug, Clone, Copy)]
+pub struct VecScalarMapping {
+    pub n: usize,
+    /// Any immediate-class op (Cmul for scaling, Cadd, Csub, Shl, Shr).
+    pub op: AluOp,
+    /// The scalar; must fit the 8-bit context immediate.
+    pub scalar: i16,
+}
+
+impl VecScalarMapping {
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(self.op.uses_immediate(), "vector-scalar op must be immediate-class");
+        let cols = Layout::columns_for(self.n);
+        let words = words_for(self.n);
+        let mut prog = Vec::new();
+
+        // Load U into set 0 bank A (Table 2, 0–32).
+        load_address(&mut prog, Reg(1), U_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words, fb_addr: 0 });
+
+        // Load the context word (Table 2, 33–37).
+        load_address(&mut prog, Reg(3), CTX_ADDR);
+        prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
+
+        // One single-bank column broadcast per column (Table 2, 38–45) —
+        // no address-formation step: the scalar is in the context word.
+        for c in 0..cols {
+            prog.push(Instruction::Sbcb { plane: 0, cw: 0, col: c, set: Set::Zero, bank: Bank::A, addr: Layout::column_chunk(c) });
+        }
+
+        // Write back and store (Table 2, 46–55).
+        for c in 0..cols {
+            prog.push(Instruction::Wfbi { col: c, set: Set::One, bank: Bank::A, addr: Layout::column_chunk(c) });
+        }
+        load_address(&mut prog, Reg(5), RESULT_ADDR);
+        prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::A, words, fb_addr: 0 });
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("vecscalar-{:?}-{}x{}", self.op, self.n, self.scalar),
+            program,
+            ctx_words: vec![(CTX_ADDR, ContextWord::immediate(self.op, self.scalar).encode())],
+            u_elems: self.n,
+            v_elems: None,
+            w_elems: None,
+            result_elems: self.n,
+            predicted_cycles,
+        }
+    }
+}
+
+/// §5.3 — dense matrix multiplication `C = A × B` (rotation/composite
+/// transformations). Matrix A (compile-time, 8-bit entries) enters through
+/// per-row context words as constant-multiply-accumulate steps; matrix B
+/// (runtime) is broadcast row by row from the frame buffer. Column `i` of
+/// the RC array accumulates row `i` of C.
+///
+/// With `shift > 0` every accumulated element is arithmetically
+/// right-shifted before write-back, supporting fixed-point rotation
+/// matrices (entries pre-scaled by `2^shift`).
+#[derive(Debug, Clone)]
+pub struct MatMulMapping {
+    /// Matrix dimension (≤ 8).
+    pub dim: usize,
+    /// Row-major A, `dim × dim`, entries in the i8 immediate range.
+    pub a: Vec<i16>,
+    /// Post-accumulate arithmetic right shift (fixed-point scaling).
+    pub shift: u8,
+}
+
+impl MatMulMapping {
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(self.dim >= 1 && self.dim <= ARRAY_DIM, "dim must be 1..=8");
+        assert_eq!(self.a.len(), self.dim * self.dim, "A must be dim×dim");
+        let n = self.dim * self.dim;
+        let b_words = words_for(n);
+        // Each row i of A becomes `dim` CMUL-accumulate words (+ optional
+        // shift word), staged consecutively in main memory.
+        let words_per_row = self.dim + usize::from(self.shift > 0);
+        let mut ctx_words = Vec::new();
+        for i in 0..self.dim {
+            for k in 0..self.dim {
+                let mut cw = ContextWord::cmula(self.a[i * self.dim + k], k == 0);
+                if self.shift > 0 && k == self.dim - 1 {
+                    cw.reg_write = 0b0001; // final value → r0 for the shift
+                }
+                ctx_words.push((CTX_ADDR + i * words_per_row + k, cw.encode()));
+            }
+            if self.shift > 0 {
+                let mut cw = ContextWord::immediate(AluOp::Shr, self.shift as i16);
+                cw.mux_a = MuxASel::Reg(0);
+                ctx_words.push((CTX_ADDR + i * words_per_row + self.dim, cw.encode()));
+            }
+        }
+
+        let mut prog = Vec::new();
+        // B (row-major) → set 0 bank A; row k occupies addresses
+        // dim·k .. dim·k+dim.
+        load_address(&mut prog, Reg(1), U_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: b_words, fb_addr: 0 });
+
+        for i in 0..self.dim {
+            // Context words for row i of A.
+            load_address(&mut prog, Reg(3), CTX_ADDR + i * words_per_row);
+            prog.push(Instruction::Ldctxt {
+                rs: Reg(3),
+                block: Block::Column,
+                plane: 0,
+                word: 0,
+                count: words_per_row,
+            });
+            // k-loop: column i accumulates Σ_k A[i][k] · B[k][*].
+            for k in 0..self.dim {
+                prog.push(Instruction::Sbcb {
+                    plane: 0,
+                    cw: k,
+                    col: i,
+                    set: Set::Zero,
+                    bank: Bank::A,
+                    addr: self.dim * k,
+                });
+            }
+            if self.shift > 0 {
+                // Fixed-point post-shift (operand bus unused).
+                prog.push(Instruction::Sbcb {
+                    plane: 0,
+                    cw: self.dim,
+                    col: i,
+                    set: Set::Zero,
+                    bank: Bank::A,
+                    addr: 0,
+                });
+            }
+            // Row i of C → set 1 bank A at 8·i (array-column granularity).
+            prog.push(Instruction::Wfbi { col: i, set: Set::One, bank: Bank::A, addr: ARRAY_DIM * i });
+        }
+
+        // Store all written columns.
+        load_address(&mut prog, Reg(5), RESULT_ADDR);
+        prog.push(Instruction::Stfb {
+            rs: Reg(5),
+            set: Set::One,
+            bank: Bank::A,
+            words: words_for(self.dim * ARRAY_DIM),
+            fb_addr: 0,
+        });
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("matmul-{0}x{0}", self.dim),
+            program,
+            ctx_words,
+            u_elems: n,
+            v_elems: None,
+            w_elems: None,
+            // Row i of C lives at result[8·i .. 8·i+dim].
+            result_elems: self.dim * ARRAY_DIM,
+            predicted_cycles,
+        }
+    }
+
+    /// Extract the dense `dim × dim` C from the raw (stride-8) result.
+    pub fn extract(&self, raw: &[i16]) -> Vec<i16> {
+        let mut c = Vec::with_capacity(self.dim * self.dim);
+        for i in 0..self.dim {
+            c.extend_from_slice(&raw[ARRAY_DIM * i..ARRAY_DIM * i + self.dim]);
+        }
+        c
+    }
+}
+
+/// Composite 2-D point transformation `q = ((M · p) >> shift) + t` applied
+/// element-wise to `n` points — the paper's "general composite algorithm"
+/// realized with the §5.2/§5.3 machinery. X coordinates stream through
+/// bank A, Y coordinates through bank B; each coordinate needs four
+/// broadcast steps (two CMUL-accumulates, a fixed-point shift, and a
+/// constant-add of the translation component).
+#[derive(Debug, Clone)]
+pub struct PointTransformMapping {
+    /// Number of points; multiple of 8, at most 64 per tile.
+    pub n: usize,
+    /// Row-major 2×2 matrix, fixed-point `Q(shift)`, i8 range.
+    pub m: [i16; 4],
+    /// Translation, applied after the shift (plain integer).
+    pub t: [i16; 2],
+    /// Fixed-point shift for the matrix product.
+    pub shift: u8,
+}
+
+impl PointTransformMapping {
+    /// Context-word schedule for one output coordinate `r` (0 = x', 1 = y').
+    fn coord_words(&self, r: usize) -> Vec<u32> {
+        let mut words = Vec::new();
+        // acc = m[r][0]·x  (+ m[r][1]·y), final step latches to r0.
+        let w0 = ContextWord::cmula(self.m[2 * r], true);
+        let mut w1 = ContextWord::cmula(self.m[2 * r + 1], false);
+        if self.shift > 0 {
+            w1.reg_write = 0b0001;
+            let mut ws = ContextWord::immediate(AluOp::Shr, self.shift as i16);
+            ws.mux_a = MuxASel::Reg(0);
+            ws.reg_write = 0b0001;
+            let mut wt = ContextWord::immediate(AluOp::Cadd, self.t[r]);
+            wt.mux_a = MuxASel::Reg(0);
+            words.extend([w0.encode(), w1.encode(), ws.encode(), wt.encode()]);
+        } else {
+            w1.reg_write = 0b0001;
+            let mut wt = ContextWord::immediate(AluOp::Cadd, self.t[r]);
+            wt.mux_a = MuxASel::Reg(0);
+            words.extend([w0.encode(), w1.encode(), wt.encode()]);
+        }
+        words
+    }
+
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(
+            (-128..=127).contains(&self.t[0]) && (-128..=127).contains(&self.t[1]),
+            "translation components must fit the 8-bit context immediate"
+        );
+        let cols = Layout::columns_for(self.n);
+        let words = words_for(self.n);
+        let x_sched = self.coord_words(0);
+        let y_sched = self.coord_words(1);
+        let per = x_sched.len(); // steps per coordinate (3 or 4)
+        let mut ctx_words = Vec::new();
+        for (w, raw) in x_sched.iter().chain(y_sched.iter()).enumerate() {
+            ctx_words.push((CTX_ADDR + w, *raw));
+        }
+
+        let mut prog = Vec::new();
+        // X coords → set 0 bank A; Y coords → set 0 bank B.
+        load_address(&mut prog, Reg(1), U_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words, fb_addr: 0 });
+        load_address(&mut prog, Reg(2), V_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(2), set: Set::Zero, bank: Bank::B, words, fb_addr: 0 });
+
+        // All context words in one transfer.
+        load_address(&mut prog, Reg(3), CTX_ADDR);
+        prog.push(Instruction::Ldctxt {
+            rs: Reg(3),
+            block: Block::Column,
+            plane: 0,
+            word: 0,
+            count: 2 * per,
+        });
+
+        for c in 0..cols {
+            let chunk = Layout::column_chunk(c);
+            for (base, out_bank) in [(0, Bank::A), (per, Bank::B)] {
+                // CMUL·x from bank A, CMUL·y from bank B, then shift/add
+                // (operand bus unused by the register-sourced steps).
+                prog.push(Instruction::Sbcb { plane: 0, cw: base, col: c, set: Set::Zero, bank: Bank::A, addr: chunk });
+                prog.push(Instruction::Sbcb { plane: 0, cw: base + 1, col: c, set: Set::Zero, bank: Bank::B, addr: chunk });
+                for s in 2..per {
+                    prog.push(Instruction::Sbcb { plane: 0, cw: base + s, col: c, set: Set::Zero, bank: Bank::A, addr: chunk });
+                }
+                prog.push(Instruction::Wfbi { col: c, set: Set::One, bank: out_bank, addr: chunk });
+            }
+        }
+
+        // x' then y' stored contiguously at RESULT_ADDR.
+        load_address(&mut prog, Reg(5), RESULT_ADDR);
+        prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::A, words, fb_addr: 0 });
+        load_address(&mut prog, Reg(6), RESULT_ADDR + words);
+        prog.push(Instruction::Stfb { rs: Reg(6), set: Set::One, bank: Bank::B, words, fb_addr: 0 });
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("pointxf-{}", self.n),
+            program,
+            ctx_words,
+            u_elems: self.n,
+            v_elems: Some(self.n),
+            w_elems: None,
+            result_elems: 2 * self.n,
+            predicted_cycles,
+        }
+    }
+}
+
+/// Composite 3-D point transformation `q = ((M·p) >> shift) + t` over `n`
+/// points — the extension of [`PointTransformMapping`] the authors pursued
+/// in reference [8] ("2D and 3D Computer Graphics Algorithms under
+/// MorphoSys"). The third coordinate stream occupies **frame-buffer set 1
+/// bank A** (the M1's four banks exactly cover x/y/z plus an output
+/// region), so one tile needs no extra DMA passes.
+#[derive(Debug, Clone)]
+pub struct Point3TransformMapping {
+    /// Number of points; multiple of 8, at most 64 per tile.
+    pub n: usize,
+    /// Row-major 3×3 matrix, fixed-point `Q(shift)`, i8 range.
+    pub m: [i16; 9],
+    /// Translation, applied after the shift.
+    pub t: [i16; 3],
+    pub shift: u8,
+}
+
+impl Point3TransformMapping {
+    /// Context words for output coordinate `r` (x'=0, y'=1, z'=2).
+    fn coord_words(&self, r: usize) -> Vec<u32> {
+        let w0 = ContextWord::cmula(self.m[3 * r], true);
+        let w1 = ContextWord::cmula(self.m[3 * r + 1], false);
+        let mut w2 = ContextWord::cmula(self.m[3 * r + 2], false);
+        w2.reg_write = 0b0001;
+        let mut wt = ContextWord::immediate(AluOp::Cadd, self.t[r]);
+        wt.mux_a = MuxASel::Reg(0);
+        if self.shift > 0 {
+            let mut ws = ContextWord::immediate(AluOp::Shr, self.shift as i16);
+            ws.mux_a = MuxASel::Reg(0);
+            ws.reg_write = 0b0001;
+            vec![w0.encode(), w1.encode(), w2.encode(), ws.encode(), wt.encode()]
+        } else {
+            vec![w0.encode(), w1.encode(), w2.encode(), wt.encode()]
+        }
+    }
+
+    pub fn compile(&self) -> MappedRoutine {
+        for &t in &self.t {
+            assert!((-128..=127).contains(&t), "translation must fit the 8-bit immediate");
+        }
+        let cols = Layout::columns_for(self.n);
+        let words = words_for(self.n);
+        let per = self.coord_words(0).len(); // 4 or 5 steps per coordinate
+        let mut ctx_words = Vec::new();
+        for r in 0..3 {
+            for (k, raw) in self.coord_words(r).into_iter().enumerate() {
+                ctx_words.push((CTX_ADDR + r * per + k, raw));
+            }
+        }
+
+        let mut prog = Vec::new();
+        // x → set0/A, y → set0/B, z → set1/A.
+        load_address(&mut prog, Reg(1), U_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words, fb_addr: 0 });
+        load_address(&mut prog, Reg(2), V_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(2), set: Set::Zero, bank: Bank::B, words, fb_addr: 0 });
+        load_address(&mut prog, Reg(6), W_ADDR);
+        prog.push(Instruction::Ldfb { rs: Reg(6), set: Set::One, bank: Bank::A, words, fb_addr: 0 });
+
+        load_address(&mut prog, Reg(3), CTX_ADDR);
+        prog.push(Instruction::Ldctxt {
+            rs: Reg(3),
+            block: Block::Column,
+            plane: 0,
+            word: 0,
+            count: 3 * per,
+        });
+
+        // Output regions in set1 bank B (x' at 0.., y' at 512.., z' at
+        // 1024..).
+        const OUT: usize = 512;
+        for c in 0..cols {
+            let chunk = Layout::column_chunk(c);
+            for r in 0..3 {
+                let base = r * per;
+                // The three CMUL-accumulate steps read x, y, z.
+                prog.push(Instruction::Sbcb { plane: 0, cw: base, col: c, set: Set::Zero, bank: Bank::A, addr: chunk });
+                prog.push(Instruction::Sbcb { plane: 0, cw: base + 1, col: c, set: Set::Zero, bank: Bank::B, addr: chunk });
+                prog.push(Instruction::Sbcb { plane: 0, cw: base + 2, col: c, set: Set::One, bank: Bank::A, addr: chunk });
+                // Shift/translate steps (operand bus unused).
+                for s in 3..per {
+                    prog.push(Instruction::Sbcb { plane: 0, cw: base + s, col: c, set: Set::Zero, bank: Bank::A, addr: chunk });
+                }
+                prog.push(Instruction::Wfbi { col: c, set: Set::One, bank: Bank::B, addr: r * OUT + chunk });
+            }
+        }
+
+        // Store x', y', z' contiguously at RESULT_ADDR.
+        for r in 0..3 {
+            load_address(&mut prog, Reg(5), RESULT_ADDR + r * words);
+            prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::B, words, fb_addr: r * OUT });
+        }
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("point3xf-{}", self.n),
+            program,
+            ctx_words,
+            u_elems: self.n,
+            v_elems: Some(self.n),
+            w_elems: Some(self.n),
+            result_elems: 3 * self.n,
+            predicted_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn translation_64_matches_paper_cycle_count() {
+        // Table 5: 64-element vector-vector translation = 96 cycles.
+        let r = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        assert_eq!(r.predicted_cycles, 96);
+    }
+
+    #[test]
+    fn translation_8_matches_paper_cycle_count() {
+        // Table 5: 8-element translation = 21 cycles.
+        let r = VecVecMapping { n: 8, op: AluOp::Add }.compile();
+        assert_eq!(r.predicted_cycles, 21);
+    }
+
+    #[test]
+    fn scaling_64_matches_paper_cycle_count() {
+        // Table 5: 64-element vector-scalar scaling = 55 cycles.
+        let r = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+        assert_eq!(r.predicted_cycles, 55);
+    }
+
+    #[test]
+    fn scaling_8_matches_paper_cycle_count() {
+        // Table 5: 8-element scaling = 14 cycles.
+        let r = VecScalarMapping { n: 8, op: AluOp::Cmul, scalar: 5 }.compile();
+        assert_eq!(r.predicted_cycles, 14);
+    }
+
+    #[test]
+    fn translation_routine_uses_paper_context_word() {
+        let r = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        assert_eq!(r.ctx_words, vec![(CTX_ADDR, 0x0000_F400)]);
+    }
+
+    #[test]
+    fn scaling_routine_uses_paper_context_word() {
+        let r = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+        assert_eq!(r.ctx_words, vec![(CTX_ADDR, 0x0000_9005)]);
+    }
+
+    #[test]
+    fn matmul_context_schedule_covers_all_rows() {
+        let m = MatMulMapping { dim: 4, a: (1..=16).collect(), shift: 0 };
+        let r = m.compile();
+        assert_eq!(r.ctx_words.len(), 16);
+        // First word of each row resets the accumulator.
+        for i in 0..4 {
+            let (_, raw) = r.ctx_words[i * 4];
+            assert!(ContextWord::decode(raw).acc_reset);
+            let (_, raw1) = r.ctx_words[i * 4 + 1];
+            assert!(!ContextWord::decode(raw1).acc_reset);
+        }
+    }
+
+    #[test]
+    fn matmul_with_shift_appends_shift_word_per_row() {
+        let m = MatMulMapping { dim: 4, a: vec![1; 16], shift: 3 };
+        let r = m.compile();
+        assert_eq!(r.ctx_words.len(), 20);
+        let (_, raw) = r.ctx_words[4]; // row 0, word 4 = shift word
+        let cw = ContextWord::decode(raw);
+        assert_eq!(cw.op, AluOp::Shr);
+        assert_eq!(cw.imm, 3);
+        assert_eq!(cw.mux_a, MuxASel::Reg(0));
+    }
+
+    #[test]
+    fn point_transform_word_counts() {
+        let no_shift = PointTransformMapping { n: 8, m: [1, 0, 0, 1], t: [3, 4], shift: 0 };
+        assert_eq!(no_shift.compile().ctx_words.len(), 6);
+        let with_shift = PointTransformMapping { n: 8, m: [64, 0, 0, 64], t: [3, 4], shift: 6 };
+        assert_eq!(with_shift.compile().ctx_words.len(), 8);
+    }
+
+    #[test]
+    fn vecvec_rejects_immediate_ops() {
+        let r = std::panic::catch_unwind(|| VecVecMapping { n: 8, op: AluOp::Cmul }.compile());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn point3_transform_identity_translation() {
+        use crate::mapping::runner::run_routine3_on;
+        use crate::morphosys::M1System;
+        let xs: Vec<i16> = (0..8).collect();
+        let ys: Vec<i16> = (10..18).collect();
+        let zs: Vec<i16> = (20..28).collect();
+        let m = Point3TransformMapping {
+            n: 8,
+            m: [1, 0, 0, 0, 1, 0, 0, 0, 1],
+            t: [5, -3, 7],
+            shift: 0,
+        };
+        let out = run_routine3_on(&mut M1System::new(), &m.compile(), &xs, Some(&ys), Some(&zs));
+        let (xp, rest) = out.result.split_at(8);
+        let (yp, zp) = rest.split_at(8);
+        for i in 0..8 {
+            assert_eq!(xp[i], xs[i] + 5);
+            assert_eq!(yp[i], ys[i] - 3);
+            assert_eq!(zp[i], zs[i] + 7);
+        }
+    }
+
+    #[test]
+    fn point3_transform_q6_rotation_about_z() {
+        use crate::mapping::runner::run_routine3_on;
+        use crate::morphosys::M1System;
+        // 90° about Z in Q6: x' = -y, y' = x, z' = z.
+        let m = Point3TransformMapping {
+            n: 64,
+            m: [0, -64, 0, 64, 0, 0, 0, 0, 64],
+            t: [0, 0, 0],
+            shift: 6,
+        };
+        let xs: Vec<i16> = (0..64).collect();
+        let ys: Vec<i16> = (0..64).map(|i| 100 - i).collect();
+        let zs: Vec<i16> = (0..64).map(|i| -i).collect();
+        let out = run_routine3_on(&mut M1System::new(), &m.compile(), &xs, Some(&ys), Some(&zs));
+        let (xp, rest) = out.result.split_at(64);
+        let (yp, zp) = rest.split_at(64);
+        for i in 0..64 {
+            assert_eq!(xp[i], -ys[i], "x'[{i}]");
+            assert_eq!(yp[i], xs[i], "y'[{i}]");
+            assert_eq!(zp[i], zs[i], "z'[{i}]");
+        }
+    }
+
+    #[test]
+    fn point3_context_schedule_fits_one_plane() {
+        let m = Point3TransformMapping {
+            n: 8,
+            m: [64, 0, 0, 0, 64, 0, 0, 0, 64],
+            t: [1, 2, 3],
+            shift: 6,
+        };
+        let r = m.compile();
+        assert_eq!(r.ctx_words.len(), 15); // 3 coords × 5 steps ≤ 16/plane
+        assert!(r.w_elems == Some(8));
+    }
+
+    #[test]
+    fn vecscalar_rejects_two_port_ops() {
+        let r = std::panic::catch_unwind(|| {
+            VecScalarMapping { n: 8, op: AluOp::Add, scalar: 1 }.compile()
+        });
+        assert!(r.is_err());
+    }
+}

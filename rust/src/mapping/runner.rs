@@ -1,0 +1,280 @@
+//! Execute a compiled mapping on the M1 simulator: stage inputs and
+//! context words in main memory, run the TinyRISC program, read back the
+//! result.
+
+use crate::morphosys::{ExecutionReport, M1System};
+
+use super::layout::{RESULT_ADDR, U_ADDR, V_ADDR, W_ADDR};
+use super::routines::MappedRoutine;
+
+/// Result of running a mapped routine.
+#[derive(Debug, Clone)]
+pub struct RoutineOutput {
+    pub result: Vec<i16>,
+    pub report: ExecutionReport,
+}
+
+std::thread_local! {
+    // Reused per-thread system: constructing an M1System zeroes a 2 MiB
+    // main memory, which dominated run_routine's cost (§Perf). Routines
+    // stage all the memory they read, so chip-reset + reuse is sound.
+    static SHARED_SYS: std::cell::RefCell<M1System> =
+        std::cell::RefCell::new(M1System::new());
+}
+
+/// Stage `u` (and optionally `v`) per the routine's input spec, stage the
+/// context words, run, and read the result back from main memory.
+pub fn run_routine(routine: &MappedRoutine, u: &[i16], v: Option<&[i16]>) -> RoutineOutput {
+    SHARED_SYS.with(|sys| {
+        let mut sys = sys.borrow_mut();
+        sys.reset_chip();
+        run_routine_on(&mut sys, routine, u, v)
+    })
+}
+
+/// As [`run_routine`], but on a caller-provided system (so traces or
+/// pre-staged memory can be observed).
+pub fn run_routine_on(
+    sys: &mut M1System,
+    routine: &MappedRoutine,
+    u: &[i16],
+    v: Option<&[i16]>,
+) -> RoutineOutput {
+    run_routine3_on(sys, routine, u, v, None)
+}
+
+/// Three-stream variant for the 3-D mappings (`w` = z coordinates at
+/// [`W_ADDR`]).
+pub fn run_routine3_on(
+    sys: &mut M1System,
+    routine: &MappedRoutine,
+    u: &[i16],
+    v: Option<&[i16]>,
+    w: Option<&[i16]>,
+) -> RoutineOutput {
+    assert_eq!(u.len(), routine.u_elems, "{}: U length", routine.name);
+    sys.mem.store_elements(U_ADDR, u);
+    match (routine.v_elems, v) {
+        (Some(n), Some(v)) => {
+            assert_eq!(v.len(), n, "{}: V length", routine.name);
+            sys.mem.store_elements(V_ADDR, v);
+        }
+        (None, None) => {}
+        (Some(_), None) => panic!("{}: routine requires V input", routine.name),
+        (None, Some(_)) => panic!("{}: routine takes no V input", routine.name),
+    }
+    match (routine.w_elems, w) {
+        (Some(n), Some(w)) => {
+            assert_eq!(w.len(), n, "{}: W length", routine.name);
+            sys.mem.store_elements(W_ADDR, w);
+        }
+        (None, None) => {}
+        (Some(_), None) => panic!("{}: routine requires W input", routine.name),
+        (None, Some(_)) => panic!("{}: routine takes no W input", routine.name),
+    }
+    for &(addr, word) in &routine.ctx_words {
+        sys.mem.write_word(addr, word);
+    }
+    let report = sys.run(&routine.program);
+    let result = sys.mem.load_elements(RESULT_ADDR, routine.result_elems);
+    RoutineOutput { result, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::routines::{
+        MatMulMapping, PointTransformMapping, VecScalarMapping, VecVecMapping,
+    };
+    use crate::morphosys::AluOp;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn translation_64_computes_elementwise_sum() {
+        let u: Vec<i16> = (0..64).collect();
+        let v: Vec<i16> = (0..64).map(|i| 1000 + 3 * i).collect();
+        let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let out = run_routine(&routine, &u, Some(&v));
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a + b).collect();
+        assert_eq!(out.result, expected);
+        // Measured cycles equal the static prediction (and the paper).
+        assert_eq!(out.report.cycles, routine.predicted_cycles);
+        assert_eq!(out.report.cycles, 96);
+    }
+
+    #[test]
+    fn translation_8_computes_and_matches_cycles() {
+        let u: Vec<i16> = (1..=8).collect();
+        let v: Vec<i16> = (11..=18).collect();
+        let routine = VecVecMapping { n: 8, op: AluOp::Add }.compile();
+        let out = run_routine(&routine, &u, Some(&v));
+        assert_eq!(out.result, vec![12, 14, 16, 18, 20, 22, 24, 26]);
+        assert_eq!(out.report.cycles, 21);
+    }
+
+    #[test]
+    fn scaling_64_computes_and_matches_cycles() {
+        let u: Vec<i16> = (0..64).collect();
+        let routine = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+        let out = run_routine(&routine, &u, None);
+        let expected: Vec<i16> = u.iter().map(|a| 5 * a).collect();
+        assert_eq!(out.result, expected);
+        assert_eq!(out.report.cycles, 55);
+    }
+
+    #[test]
+    fn scaling_8_computes_and_matches_cycles() {
+        let u: Vec<i16> = (1..=8).collect();
+        let routine = VecScalarMapping { n: 8, op: AluOp::Cmul, scalar: 5 }.compile();
+        let out = run_routine(&routine, &u, None);
+        assert_eq!(out.result, vec![5, 10, 15, 20, 25, 30, 35, 40]);
+        assert_eq!(out.report.cycles, 14);
+    }
+
+    #[test]
+    fn subtraction_and_logic_mappings_work() {
+        let u: Vec<i16> = (0..8).map(|i| 10 * i).collect();
+        let v: Vec<i16> = (0..8).collect();
+        for (op, f) in [
+            (AluOp::Sub, (|a: i16, b: i16| a.wrapping_sub(b)) as fn(i16, i16) -> i16),
+            (AluOp::Mul, |a, b| a.wrapping_mul(b)),
+            (AluOp::And, |a, b| a & b),
+            (AluOp::Or, |a, b| a | b),
+            (AluOp::Xor, |a, b| a ^ b),
+        ] {
+            let routine = VecVecMapping { n: 8, op }.compile();
+            let out = run_routine(&routine, &u, Some(&v));
+            let expected: Vec<i16> = u.iter().zip(&v).map(|(&a, &b)| f(a, b)).collect();
+            assert_eq!(out.result, expected, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn matmul_8x8_matches_reference() {
+        let mut rng = Rng::new(99);
+        let a: Vec<i16> = (0..64).map(|_| rng.range_i64(-9, 9) as i16).collect();
+        let b: Vec<i16> = (0..64).map(|_| rng.range_i64(-9, 9) as i16).collect();
+        let mapping = MatMulMapping { dim: 8, a: a.clone(), shift: 0 };
+        let routine = mapping.compile();
+        let out = run_routine(&routine, &b, None);
+        let c = mapping.extract(&out.result);
+        for i in 0..8 {
+            for j in 0..8 {
+                let expected: i32 = (0..8).map(|k| a[i * 8 + k] as i32 * b[k * 8 + j] as i32).sum();
+                assert_eq!(c[i * 8 + j], expected as i16, "C[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_4x4_matches_reference() {
+        let a: Vec<i16> = (1..=16).collect();
+        let b: Vec<i16> = (0..16).map(|i| (i % 5) as i16 - 2).collect();
+        let mapping = MatMulMapping { dim: 4, a: a.clone(), shift: 0 };
+        let routine = mapping.compile();
+        let out = run_routine(&routine, &b, None);
+        let c = mapping.extract(&out.result);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expected: i32 = (0..4).map(|k| a[i * 4 + k] as i32 * b[k * 4 + j] as i32).sum();
+                assert_eq!(c[i * 4 + j], expected as i16, "C[{i}][{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_fixed_point_shift_scales_result() {
+        // A = 2^4 · I, shift 4 → C = B.
+        let mut a = vec![0i16; 16];
+        for i in 0..4 {
+            a[i * 4 + i] = 16;
+        }
+        let b: Vec<i16> = (1..=16).collect();
+        let mapping = MatMulMapping { dim: 4, a, shift: 4 };
+        let out = run_routine(&mapping.compile(), &b, None);
+        assert_eq!(mapping.extract(&out.result), b);
+    }
+
+    #[test]
+    fn point_transform_identity_plus_translation() {
+        let xs: Vec<i16> = (0..8).collect();
+        let ys: Vec<i16> = (10..18).collect();
+        let mapping = PointTransformMapping { n: 8, m: [1, 0, 0, 1], t: [5, -3], shift: 0 };
+        let out = run_routine(&mapping.compile(), &xs, Some(&ys));
+        let (xp, yp) = out.result.split_at(8);
+        for i in 0..8 {
+            assert_eq!(xp[i], xs[i] + 5);
+            assert_eq!(yp[i], ys[i] - 3);
+        }
+    }
+
+    #[test]
+    fn point_transform_fixed_point_rotation_90deg() {
+        // 90° rotation in Q6: m = [[0,-64],[64,0]], shift 6:
+        // x' = -y, y' = x.
+        let xs: Vec<i16> = (1..=8).collect();
+        let ys: Vec<i16> = (21..=28).collect();
+        let mapping = PointTransformMapping { n: 8, m: [0, -64, 64, 0], t: [0, 0], shift: 6 };
+        let out = run_routine(&mapping.compile(), &xs, Some(&ys));
+        let (xp, yp) = out.result.split_at(8);
+        for i in 0..8 {
+            assert_eq!(xp[i], -ys[i], "x'[{i}]");
+            assert_eq!(yp[i], xs[i], "y'[{i}]");
+        }
+    }
+
+    #[test]
+    fn property_vecvec_agrees_with_native_for_random_vectors() {
+        check("vecvec == native", 40, |rng: &mut Rng| {
+            let n = [8, 16, 24, 32, 40, 48, 56, 64][rng.below(8) as usize];
+            let u = rng.small_vec(n);
+            let v = rng.small_vec(n);
+            let routine = VecVecMapping { n, op: AluOp::Add }.compile();
+            let out = run_routine(&routine, &u, Some(&v));
+            let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a.wrapping_add(*b)).collect();
+            assert_eq!(out.result, expected);
+            assert_eq!(out.report.cycles, routine.predicted_cycles);
+        });
+    }
+
+    #[test]
+    fn property_vecscalar_agrees_with_native() {
+        check("vecscalar == native", 40, |rng: &mut Rng| {
+            let n = [8, 16, 32, 64][rng.below(4) as usize];
+            let u = rng.small_vec(n);
+            let s = rng.range_i64(-128, 127) as i16;
+            let routine = VecScalarMapping { n, op: AluOp::Cmul, scalar: s }.compile();
+            let out = run_routine(&routine, &u, None);
+            let expected: Vec<i16> =
+                u.iter().map(|a| (s as i32).wrapping_mul(*a as i32) as i16).collect();
+            assert_eq!(out.result, expected);
+            assert_eq!(out.report.cycles, routine.predicted_cycles);
+        });
+    }
+
+    #[test]
+    fn property_matmul_agrees_with_native() {
+        check("matmul == native", 25, |rng: &mut Rng| {
+            let dim = rng.range_i64(1, 8) as usize;
+            let a: Vec<i16> = (0..dim * dim).map(|_| rng.range_i64(-10, 10) as i16).collect();
+            let b: Vec<i16> = (0..dim * dim).map(|_| rng.range_i64(-10, 10) as i16).collect();
+            let mapping = MatMulMapping { dim, a: a.clone(), shift: 0 };
+            let out = run_routine(&mapping.compile(), &b, None);
+            let c = mapping.extract(&out.result);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let e: i32 =
+                        (0..dim).map(|k| a[i * dim + k] as i32 * b[k * dim + j] as i32).sum();
+                    assert_eq!(c[i * dim + j], e as i16);
+                }
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "requires V input")]
+    fn missing_v_input_panics() {
+        let routine = VecVecMapping { n: 8, op: AluOp::Add }.compile();
+        run_routine(&routine, &[0; 8], None);
+    }
+}

@@ -1,0 +1,122 @@
+//! Context memory: storage for the RC array's configuration program.
+//!
+//! Two **blocks** (column-broadcast words and row-broadcast words), each
+//! with two **planes** of 16 context words. Like the frame buffer's two
+//! sets, the two planes allow the DMA to load the next configuration while
+//! the RC array executes from the current one ("configuration data is also
+//! loaded into context memory without interrupting RC array operation").
+
+/// Context words per plane.
+pub const PLANE_WORDS: usize = 16;
+
+/// Number of planes per block.
+pub const PLANES: usize = 2;
+
+/// Context block: which broadcast direction the words configure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Block {
+    Column,
+    Row,
+}
+
+impl Block {
+    pub fn index(self) -> usize {
+        match self {
+            Block::Column => 0,
+            Block::Row => 1,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Block {
+        if i == 0 {
+            Block::Column
+        } else {
+            Block::Row
+        }
+    }
+}
+
+/// The context memory.
+#[derive(Debug, Clone)]
+pub struct ContextMemory {
+    // [block][plane][word]
+    words: Vec<u32>,
+}
+
+impl Default for ContextMemory {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ContextMemory {
+    pub fn new() -> ContextMemory {
+        ContextMemory { words: vec![0; 2 * PLANES * PLANE_WORDS] }
+    }
+
+    /// Zero all contents in place (no reallocation).
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    fn idx(block: Block, plane: usize, word: usize) -> usize {
+        assert!(plane < PLANES, "context plane {plane} out of range");
+        assert!(word < PLANE_WORDS, "context word {word} out of range");
+        (block.index() * PLANES + plane) * PLANE_WORDS + word
+    }
+
+    pub fn read(&self, block: Block, plane: usize, word: usize) -> u32 {
+        self.words[Self::idx(block, plane, word)]
+    }
+
+    pub fn write(&mut self, block: Block, plane: usize, word: usize, value: u32) {
+        self.words[Self::idx(block, plane, word)] = value;
+    }
+
+    /// DMA fill of consecutive words within one plane.
+    pub fn write_slice(&mut self, block: Block, plane: usize, word: usize, values: &[u32]) {
+        assert!(word + values.len() <= PLANE_WORDS, "context fill out of range");
+        let base = Self::idx(block, plane, word);
+        self.words[base..base + values.len()].copy_from_slice(values);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_and_planes_are_disjoint() {
+        let mut cm = ContextMemory::new();
+        cm.write(Block::Column, 0, 3, 0xF400);
+        cm.write(Block::Column, 1, 3, 0x9005);
+        cm.write(Block::Row, 0, 3, 0x1234);
+        assert_eq!(cm.read(Block::Column, 0, 3), 0xF400);
+        assert_eq!(cm.read(Block::Column, 1, 3), 0x9005);
+        assert_eq!(cm.read(Block::Row, 0, 3), 0x1234);
+        assert_eq!(cm.read(Block::Row, 1, 3), 0);
+    }
+
+    #[test]
+    fn slice_fill() {
+        let mut cm = ContextMemory::new();
+        let words: Vec<u32> = (0..8).map(|i| 0xC000 + i).collect();
+        cm.write_slice(Block::Row, 1, 4, &words);
+        for (i, w) in words.iter().enumerate() {
+            assert_eq!(cm.read(Block::Row, 1, 4 + i), *w);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn overflowing_fill_panics() {
+        let mut cm = ContextMemory::new();
+        cm.write_slice(Block::Column, 0, 10, &[0; 8]);
+    }
+
+    #[test]
+    fn block_index_roundtrip() {
+        assert_eq!(Block::from_index(Block::Column.index()), Block::Column);
+        assert_eq!(Block::from_index(Block::Row.index()), Block::Row);
+    }
+}

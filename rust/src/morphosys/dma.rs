@@ -1,0 +1,175 @@
+//! The DMA controller and main memory.
+//!
+//! Main memory is 32-bit-word addressed; 16-bit frame-buffer elements are
+//! packed two per word (low half first). The DMA controller moves words
+//! between main memory and the frame buffer / context memory; its bus
+//! occupancy (and therefore the TinyRISC stall slots visible as NOP runs
+//! in the paper's listings) is modelled in [`super::timing`].
+
+use super::context_memory::{Block, ContextMemory};
+use super::frame_buffer::{Bank, FrameBuffer, Set};
+
+/// Word-addressed 32-bit main memory.
+#[derive(Debug, Clone)]
+pub struct MainMemory {
+    words: Vec<u32>,
+}
+
+impl MainMemory {
+    /// Memory sized in 32-bit words.
+    pub fn new(words: usize) -> MainMemory {
+        MainMemory { words: vec![0; words] }
+    }
+
+    /// 512K words (2 MiB) — covers the paper's address map (vector U at
+    /// word 0x10000, V at 0x20000, context at 0x30000, result at 0x40000)
+    /// with room for larger workloads.
+    pub fn default_size() -> MainMemory {
+        MainMemory::new(1 << 19)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn read_word(&self, addr: usize) -> u32 {
+        assert!(addr < self.words.len(), "main memory read {addr:#x} out of range");
+        self.words[addr]
+    }
+
+    pub fn write_word(&mut self, addr: usize, value: u32) {
+        assert!(addr < self.words.len(), "main memory write {addr:#x} out of range");
+        self.words[addr] = value;
+    }
+
+    /// Store a vector of 16-bit elements starting at word address `addr`,
+    /// packed two per word (low half first). Returns the number of words
+    /// written.
+    pub fn store_elements(&mut self, addr: usize, elems: &[i16]) -> usize {
+        let words = elems.len().div_ceil(2);
+        for w in 0..words {
+            let lo = elems[2 * w] as u16 as u32;
+            let hi = elems.get(2 * w + 1).copied().unwrap_or(0) as u16 as u32;
+            self.write_word(addr + w, lo | (hi << 16));
+        }
+        words
+    }
+
+    /// Load `count` 16-bit elements starting at word address `addr`.
+    pub fn load_elements(&self, addr: usize, count: usize) -> Vec<i16> {
+        let mut out = Vec::with_capacity(count);
+        for i in 0..count {
+            let w = self.read_word(addr + i / 2);
+            let half = if i % 2 == 0 { w & 0xFFFF } else { w >> 16 };
+            out.push(half as u16 as i16);
+        }
+        out
+    }
+}
+
+/// Number of 32-bit words occupied by `elems` 16-bit elements.
+pub fn words_for_elements(elems: usize) -> usize {
+    elems.div_ceil(2)
+}
+
+/// DMA transfer: main memory → frame buffer. `words` 32-bit words from
+/// `mem_addr` unpack into `2 × words` elements at `fb_addr`.
+pub fn mem_to_fb(
+    mem: &MainMemory,
+    fb: &mut FrameBuffer,
+    mem_addr: usize,
+    set: Set,
+    bank: Bank,
+    fb_addr: usize,
+    words: usize,
+) {
+    let elems = mem.load_elements(mem_addr, 2 * words);
+    fb.write_slice(set, bank, fb_addr, &elems);
+}
+
+/// DMA transfer: frame buffer → main memory.
+pub fn fb_to_mem(
+    fb: &FrameBuffer,
+    mem: &mut MainMemory,
+    set: Set,
+    bank: Bank,
+    fb_addr: usize,
+    mem_addr: usize,
+    words: usize,
+) {
+    let elems = fb.read_slice(set, bank, fb_addr, 2 * words).to_vec();
+    mem.store_elements(mem_addr, &elems);
+}
+
+/// DMA transfer: main memory → context memory (one 32-bit context word per
+/// memory word).
+pub fn mem_to_ctx(
+    mem: &MainMemory,
+    ctx: &mut ContextMemory,
+    mem_addr: usize,
+    block: Block,
+    plane: usize,
+    word: usize,
+    count: usize,
+) {
+    let words: Vec<u32> = (0..count).map(|i| mem.read_word(mem_addr + i)).collect();
+    ctx.write_slice(block, plane, word, &words);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_packing_roundtrip() {
+        let mut mem = MainMemory::new(64);
+        let v: Vec<i16> = vec![1, -2, 3, -4, 5];
+        let words = mem.store_elements(0x10, &v);
+        assert_eq!(words, 3); // 5 elements → 3 words (last padded)
+        assert_eq!(mem.load_elements(0x10, 5), v);
+    }
+
+    #[test]
+    fn words_for_elements_rounds_up() {
+        assert_eq!(words_for_elements(64), 32);
+        assert_eq!(words_for_elements(8), 4);
+        assert_eq!(words_for_elements(7), 4);
+        assert_eq!(words_for_elements(1), 1);
+    }
+
+    #[test]
+    fn mem_to_fb_and_back() {
+        let mut mem = MainMemory::new(256);
+        let mut fb = FrameBuffer::new();
+        let v: Vec<i16> = (0..64).map(|i| i * 3 - 50).collect();
+        mem.store_elements(0x40, &v);
+        mem_to_fb(&mem, &mut fb, 0x40, Set::Zero, Bank::A, 0, 32);
+        assert_eq!(fb.read_slice(Set::Zero, Bank::A, 0, 64), &v[..]);
+
+        let mut mem2 = MainMemory::new(256);
+        fb_to_mem(&fb, &mut mem2, Set::Zero, Bank::A, 0, 0x80, 32);
+        assert_eq!(mem2.load_elements(0x80, 64), v);
+    }
+
+    #[test]
+    fn mem_to_ctx_loads_context_words() {
+        let mut mem = MainMemory::new(64);
+        mem.write_word(0x8, 0x0000_F400);
+        mem.write_word(0x9, 0x0000_9005);
+        let mut ctx = ContextMemory::new();
+        mem_to_ctx(&mem, &mut ctx, 0x8, Block::Column, 0, 0, 2);
+        assert_eq!(ctx.read(Block::Column, 0, 0), 0x0000_F400);
+        assert_eq!(ctx.read(Block::Column, 0, 1), 0x0000_9005);
+    }
+
+    #[test]
+    fn negative_elements_survive_packing() {
+        let mut mem = MainMemory::new(8);
+        mem.store_elements(0, &[-32768, 32767, -1, 0]);
+        assert_eq!(mem.load_elements(0, 4), vec![-32768, 32767, -1, 0]);
+    }
+}

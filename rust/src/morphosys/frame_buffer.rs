@@ -1,0 +1,178 @@
+//! The frame buffer: the M1's on-chip data staging memory.
+//!
+//! Organised as **two sets × two banks** of 16-bit elements. The two banks
+//! of a set feed the RC array's two operand buses (bank A → mux A's
+//! operand bus, bank B → mux B's), which is what makes single-cycle
+//! vector-vector operations possible. The two *sets* double-buffer: the
+//! DMA controller fills one set while the RC array streams from the other
+//! ("new application data can be loaded into it without interrupting the
+//! operation of the RC array").
+//!
+//! Addresses are element (16-bit) granular.
+
+use crate::morphosys::rc_array::ARRAY_DIM;
+
+/// Elements per bank. Sized generously (the real FB is 2×128×64 bits);
+/// capacity only bounds workload size, not timing.
+pub const BANK_ELEMS: usize = 2048;
+
+/// Frame-buffer set select (double buffering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Set {
+    Zero,
+    One,
+}
+
+impl Set {
+    pub fn index(self) -> usize {
+        match self {
+            Set::Zero => 0,
+            Set::One => 1,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Set {
+        if i == 0 {
+            Set::Zero
+        } else {
+            Set::One
+        }
+    }
+}
+
+/// Frame-buffer bank select (operand bus A / B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bank {
+    A,
+    B,
+}
+
+impl Bank {
+    pub fn index(self) -> usize {
+        match self {
+            Bank::A => 0,
+            Bank::B => 1,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Bank {
+        if i == 0 {
+            Bank::A
+        } else {
+            Bank::B
+        }
+    }
+}
+
+/// The frame buffer.
+#[derive(Debug, Clone)]
+pub struct FrameBuffer {
+    // [set][bank][element]
+    data: Vec<i16>,
+}
+
+impl Default for FrameBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameBuffer {
+    pub fn new() -> FrameBuffer {
+        FrameBuffer { data: vec![0; 2 * 2 * BANK_ELEMS] }
+    }
+
+    /// Zero all contents in place (no reallocation).
+    pub fn clear(&mut self) {
+        self.data.fill(0);
+    }
+
+    fn base(set: Set, bank: Bank) -> usize {
+        (set.index() * 2 + bank.index()) * BANK_ELEMS
+    }
+
+    /// Read one element.
+    pub fn read(&self, set: Set, bank: Bank, addr: usize) -> i16 {
+        assert!(addr < BANK_ELEMS, "FB read {addr} out of range");
+        self.data[Self::base(set, bank) + addr]
+    }
+
+    /// Write one element.
+    pub fn write(&mut self, set: Set, bank: Bank, addr: usize, value: i16) {
+        assert!(addr < BANK_ELEMS, "FB write {addr} out of range");
+        self.data[Self::base(set, bank) + addr] = value;
+    }
+
+    /// Write a slice starting at `addr` (DMA fill).
+    pub fn write_slice(&mut self, set: Set, bank: Bank, addr: usize, values: &[i16]) {
+        assert!(addr + values.len() <= BANK_ELEMS, "FB fill out of range");
+        let base = Self::base(set, bank) + addr;
+        self.data[base..base + values.len()].copy_from_slice(values);
+    }
+
+    /// Read `len` elements starting at `addr` (DMA drain).
+    pub fn read_slice(&self, set: Set, bank: Bank, addr: usize, len: usize) -> &[i16] {
+        assert!(addr + len <= BANK_ELEMS, "FB drain out of range");
+        let base = Self::base(set, bank) + addr;
+        &self.data[base..base + len]
+    }
+
+    /// Fetch the eight consecutive elements an operand bus delivers for a
+    /// broadcast step starting at `addr`.
+    pub fn operand_bus(&self, set: Set, bank: Bank, addr: usize) -> [i16; ARRAY_DIM] {
+        let mut bus = [0i16; ARRAY_DIM];
+        for (i, v) in bus.iter_mut().enumerate() {
+            *v = self.read(set, bank, addr + i);
+        }
+        bus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sets_and_banks_are_disjoint() {
+        let mut fb = FrameBuffer::new();
+        fb.write(Set::Zero, Bank::A, 5, 10);
+        fb.write(Set::Zero, Bank::B, 5, 20);
+        fb.write(Set::One, Bank::A, 5, 30);
+        fb.write(Set::One, Bank::B, 5, 40);
+        assert_eq!(fb.read(Set::Zero, Bank::A, 5), 10);
+        assert_eq!(fb.read(Set::Zero, Bank::B, 5), 20);
+        assert_eq!(fb.read(Set::One, Bank::A, 5), 30);
+        assert_eq!(fb.read(Set::One, Bank::B, 5), 40);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut fb = FrameBuffer::new();
+        let v: Vec<i16> = (0..64).collect();
+        fb.write_slice(Set::Zero, Bank::A, 100, &v);
+        assert_eq!(fb.read_slice(Set::Zero, Bank::A, 100, 64), &v[..]);
+    }
+
+    #[test]
+    fn operand_bus_reads_eight_consecutive() {
+        let mut fb = FrameBuffer::new();
+        let v: Vec<i16> = (10..26).collect();
+        fb.write_slice(Set::One, Bank::B, 8, &v);
+        assert_eq!(fb.operand_bus(Set::One, Bank::B, 8), [10, 11, 12, 13, 14, 15, 16, 17]);
+        assert_eq!(fb.operand_bus(Set::One, Bank::B, 16), [18, 19, 20, 21, 22, 23, 24, 25]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_read_panics() {
+        FrameBuffer::new().read(Set::Zero, Bank::A, BANK_ELEMS);
+    }
+
+    #[test]
+    fn set_bank_index_roundtrip() {
+        assert_eq!(Set::from_index(Set::Zero.index()), Set::Zero);
+        assert_eq!(Set::from_index(Set::One.index()), Set::One);
+        assert_eq!(Bank::from_index(Bank::A.index()), Bank::A);
+        assert_eq!(Bank::from_index(Bank::B.index()), Bank::B);
+    }
+}

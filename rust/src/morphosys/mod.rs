@@ -1,0 +1,34 @@
+//! # MorphoSys M1 — cycle-accurate simulator
+//!
+//! The paper's numbers come from the authors' *mULATE* emulator of the
+//! MorphoSys M1 chip (UC Irvine), not from silicon. This module is our
+//! substitute: a cycle-accurate, instruction-level simulator of the whole
+//! M1 system of Figure 1 of the paper:
+//!
+//! ```text
+//!   main memory ──DMA──┬── frame buffer (2 sets × 2 banks, 16-bit data)
+//!                      └── context memory (row/col blocks × 2 planes)
+//!   TinyRISC ── issues DMA + broadcast instructions, 1 instr/cycle
+//!   RC array ── 8×8 reconfigurable cells, context-word-programmed,
+//!               column/row context broadcast, 3-level interconnect
+//! ```
+//!
+//! Cycle accounting (calibrated in [`timing`], asserted by calibration
+//! tests against the paper's Table 5) follows the paper's convention: the
+//! reported cycle count of a routine is the cycle index at which its final
+//! instruction issues — i.e. `total issue slots - 1` (Table 1's listing
+//! occupies slots 0..=96 and the paper reports 96 cycles).
+
+pub mod context_memory;
+pub mod dma;
+pub mod frame_buffer;
+pub mod mulate;
+pub mod rc_array;
+pub mod system;
+pub mod timing;
+pub mod tinyrisc;
+
+pub use frame_buffer::{Bank, FrameBuffer, Set};
+pub use rc_array::{AluOp, ContextWord, RcArray};
+pub use system::{ExecutionReport, M1System};
+pub use tinyrisc::{Instruction, Program, Reg};

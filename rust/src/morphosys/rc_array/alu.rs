@@ -1,0 +1,199 @@
+//! ALU/multiplier of a reconfigurable cell.
+//!
+//! The datapath is 16-bit signed (the paper: "the ALU-Multiplier operates
+//! only on signed numbers" in the M1 prototype) with a 32-bit
+//! accumulator for multiply-accumulate, which executes in a single cycle.
+//!
+//! Opcode assignments are chosen so that the two context words published
+//! in the paper decode to their published semantics:
+//! `0000F400` → `OUT = A + B` (opcode `0xF` = ADD) and
+//! `00009005` → `OUT = c × A` with `c = 5` (opcode `0x9` = CMUL).
+
+/// ALU operation, encoded in bits `[15:12]` of a context word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum AluOp {
+    /// No operation; output register unchanged.
+    Nop = 0x0,
+    /// `OUT = A`.
+    PassA = 0x1,
+    /// `OUT = B`.
+    PassB = 0x2,
+    /// `OUT = A - B`.
+    Sub = 0x3,
+    /// `OUT = A × B` (low 16 bits of the signed product).
+    Mul = 0x4,
+    /// `OUT = A & B`.
+    And = 0x5,
+    /// `OUT = A | B`.
+    Or = 0x6,
+    /// `OUT = A ^ B`.
+    Xor = 0x7,
+    /// `OUT = !A`.
+    NotA = 0x8,
+    /// Constant multiply: `OUT = imm × A` (the §5.2 / §5.3 CMUL op).
+    Cmul = 0x9,
+    /// Constant add: `OUT = A + imm`.
+    Cadd = 0xA,
+    /// Constant subtract: `OUT = A - imm`.
+    Csub = 0xB,
+    /// Multiply-accumulate: `ACC += A × B; OUT = ACC` (single cycle).
+    Mula = 0xC,
+    /// Shift left by `imm & 0x1F` (32-bit shift unit).
+    Shl = 0xD,
+    /// Arithmetic shift right by `imm & 0x1F`.
+    Shr = 0xE,
+    /// `OUT = A + B`.
+    Add = 0xF,
+}
+
+impl AluOp {
+    /// Decode from a 4-bit opcode field. Total over all 16 encodings.
+    pub fn from_bits(bits: u8) -> AluOp {
+        match bits & 0xF {
+            0x0 => AluOp::Nop,
+            0x1 => AluOp::PassA,
+            0x2 => AluOp::PassB,
+            0x3 => AluOp::Sub,
+            0x4 => AluOp::Mul,
+            0x5 => AluOp::And,
+            0x6 => AluOp::Or,
+            0x7 => AluOp::Xor,
+            0x8 => AluOp::NotA,
+            0x9 => AluOp::Cmul,
+            0xA => AluOp::Cadd,
+            0xB => AluOp::Csub,
+            0xC => AluOp::Mula,
+            0xD => AluOp::Shl,
+            0xE => AluOp::Shr,
+            _ => AluOp::Add,
+        }
+    }
+
+    /// Encode to the 4-bit opcode field.
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Does this op consume the context-word immediate instead of port B?
+    pub fn uses_immediate(self) -> bool {
+        matches!(
+            self,
+            AluOp::Cmul | AluOp::Cadd | AluOp::Csub | AluOp::Shl | AluOp::Shr
+        )
+    }
+}
+
+/// Result of one ALU evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AluResult {
+    /// Value latched into the output register (16-bit datapath).
+    pub out: i16,
+    /// New accumulator value (32-bit, only changed by MULA).
+    pub acc: i32,
+}
+
+/// Evaluate one ALU operation. `a`/`b` are the mux outputs, `imm` the
+/// context-word immediate, `acc` the current accumulator.
+pub fn eval(op: AluOp, a: i16, b: i16, imm: i16, acc: i32) -> AluResult {
+    let (out, acc) = match op {
+        AluOp::Nop => (0, acc),
+        AluOp::PassA => (a, acc),
+        AluOp::PassB => (b, acc),
+        AluOp::Sub => (a.wrapping_sub(b), acc),
+        AluOp::Mul => ((a as i32).wrapping_mul(b as i32) as i16, acc),
+        AluOp::And => (a & b, acc),
+        AluOp::Or => (a | b, acc),
+        AluOp::Xor => (a ^ b, acc),
+        AluOp::NotA => (!a, acc),
+        AluOp::Cmul => ((imm as i32).wrapping_mul(a as i32) as i16, acc),
+        AluOp::Cadd => (a.wrapping_add(imm), acc),
+        AluOp::Csub => (a.wrapping_sub(imm), acc),
+        AluOp::Mula => {
+            let acc = acc.wrapping_add((a as i32).wrapping_mul(b as i32));
+            (acc as i16, acc)
+        }
+        AluOp::Shl => (((a as i32) << (imm as u32 & 0x1F)) as i16, acc),
+        AluOp::Shr => (((a as i32) >> (imm as u32 & 0x1F)) as i16, acc),
+        AluOp::Add => (a.wrapping_add(b), acc),
+    };
+    AluResult { out, acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(op: AluOp, a: i16, b: i16, imm: i16) -> i16 {
+        eval(op, a, b, imm, 0).out
+    }
+
+    #[test]
+    fn opcode_roundtrip_is_total() {
+        for bits in 0..16u8 {
+            assert_eq!(AluOp::from_bits(bits).bits(), bits);
+        }
+    }
+
+    #[test]
+    fn paper_ops_have_paper_encodings() {
+        // 0000F400 decodes to OUT = A + B; 00009005 to OUT = 5 × A.
+        assert_eq!(AluOp::from_bits(0xF), AluOp::Add);
+        assert_eq!(AluOp::from_bits(0x9), AluOp::Cmul);
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        assert_eq!(run(AluOp::Add, 3, 4, 0), 7);
+        assert_eq!(run(AluOp::Sub, 3, 4, 0), -1);
+        assert_eq!(run(AluOp::Mul, -3, 4, 0), -12);
+        assert_eq!(run(AluOp::Cmul, 7, 0, 5), 35);
+        assert_eq!(run(AluOp::Cadd, 7, 0, 5), 12);
+        assert_eq!(run(AluOp::Csub, 7, 0, 5), 2);
+    }
+
+    #[test]
+    fn logic_ops() {
+        assert_eq!(run(AluOp::And, 0b1100, 0b1010, 0), 0b1000);
+        assert_eq!(run(AluOp::Or, 0b1100, 0b1010, 0), 0b1110);
+        assert_eq!(run(AluOp::Xor, 0b1100, 0b1010, 0), 0b0110);
+        assert_eq!(run(AluOp::NotA, 0, 0, 0), -1);
+    }
+
+    #[test]
+    fn passthrough_ops() {
+        assert_eq!(run(AluOp::PassA, 11, 22, 0), 11);
+        assert_eq!(run(AluOp::PassB, 11, 22, 0), 22);
+        assert_eq!(run(AluOp::Nop, 11, 22, 0), 0);
+    }
+
+    #[test]
+    fn shifts_use_immediate() {
+        assert_eq!(run(AluOp::Shl, 1, 0, 4), 16);
+        assert_eq!(run(AluOp::Shr, -16, 0, 2), -4);
+        assert!(AluOp::Shl.uses_immediate());
+    }
+
+    #[test]
+    fn mula_accumulates_across_steps() {
+        // Single-cycle multiply-accumulate, as the paper highlights.
+        let r1 = eval(AluOp::Mula, 2, 3, 0, 0);
+        assert_eq!(r1.acc, 6);
+        let r2 = eval(AluOp::Mula, 4, 5, 0, r1.acc);
+        assert_eq!(r2.acc, 26);
+        assert_eq!(r2.out, 26);
+    }
+
+    #[test]
+    fn signed_wraparound_matches_16bit_datapath() {
+        assert_eq!(run(AluOp::Add, i16::MAX, 1, 0), i16::MIN);
+        assert_eq!(run(AluOp::Mul, 300, 300, 0), (300i32 * 300) as i16);
+    }
+
+    #[test]
+    fn mula_accumulator_is_32bit() {
+        // 200 * 200 = 40_000 overflows i16 but not the 32-bit accumulator.
+        let r = eval(AluOp::Mula, 200, 200, 0, 0);
+        assert_eq!(r.acc, 40_000);
+    }
+}

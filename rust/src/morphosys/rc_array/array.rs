@@ -1,0 +1,226 @@
+//! The 8×8 RC array: context broadcast execution.
+//!
+//! MorphoSys executes SIMD-style: in **column broadcast** mode one context
+//! word drives all eight cells of one column, each cell reading its own
+//! element of the operand buses (bank A / bank B of the frame buffer). Row
+//! broadcast is symmetric. Cells latch simultaneously; interconnect ports
+//! observe the *previous* step's output registers.
+
+use super::cell::{CellInputs, RcCell};
+use super::context::{ContextWord, MuxASel, MuxBSel};
+use super::interconnect::Interconnect;
+
+/// Edge length of the RC array (64 cells as an 8×8 matrix).
+pub const ARRAY_DIM: usize = 8;
+
+/// Context broadcast direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BroadcastMode {
+    /// One context word drives a whole column; operand buses deliver one
+    /// element per row.
+    Column,
+    /// One context word drives a whole row; operand buses deliver one
+    /// element per column.
+    Row,
+}
+
+/// The RC array.
+#[derive(Debug, Clone)]
+pub struct RcArray {
+    cells: Vec<RcCell>, // row-major 8×8
+}
+
+impl Default for RcArray {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RcArray {
+    pub fn new() -> RcArray {
+        RcArray { cells: vec![RcCell::new(); ARRAY_DIM * ARRAY_DIM] }
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> &RcCell {
+        &self.cells[row * ARRAY_DIM + col]
+    }
+
+    pub fn cell_mut(&mut self, row: usize, col: usize) -> &mut RcCell {
+        &mut self.cells[row * ARRAY_DIM + col]
+    }
+
+    /// Snapshot all output registers.
+    pub fn outputs(&self) -> [[i16; ARRAY_DIM]; ARRAY_DIM] {
+        let mut o = [[0i16; ARRAY_DIM]; ARRAY_DIM];
+        for r in 0..ARRAY_DIM {
+            for c in 0..ARRAY_DIM {
+                o[r][c] = self.cell(r, c).out;
+            }
+        }
+        o
+    }
+
+    fn express_latches(&self) -> [[Option<i16>; ARRAY_DIM]; ARRAY_DIM] {
+        let mut x = [[None; ARRAY_DIM]; ARRAY_DIM];
+        for r in 0..ARRAY_DIM {
+            for c in 0..ARRAY_DIM {
+                x[r][c] = self.cell(r, c).express;
+            }
+        }
+        x
+    }
+
+    /// Execute one broadcast step: the context word drives line `index`
+    /// (a column in `Column` mode, a row in `Row` mode); `bus_a`/`bus_b`
+    /// carry the eight operand-bus elements for that line.
+    pub fn broadcast(
+        &mut self,
+        mode: BroadcastMode,
+        index: usize,
+        cw: &ContextWord,
+        bus_a: &[i16; ARRAY_DIM],
+        bus_b: &[i16; ARRAY_DIM],
+    ) {
+        assert!(index < ARRAY_DIM, "broadcast line {index} out of range");
+        let outs = self.outputs();
+        let express = self.express_latches();
+        for lane in 0..ARRAY_DIM {
+            let (row, col) = match mode {
+                BroadcastMode::Column => (lane, index),
+                BroadcastMode::Row => (index, lane),
+            };
+            let ic = Interconnect { outs: &outs, express: &express };
+            let cell = self.cell(row, col);
+            let a = match cw.mux_a {
+                MuxASel::OperandBusA => bus_a[lane],
+                MuxASel::Reg(r) => cell.regs[r as usize & 3],
+                sel => ic.mux_a(row, col, sel).expect("interconnect source"),
+            };
+            let b = match cw.mux_b {
+                MuxBSel::OperandBusB => bus_b[lane],
+                MuxBSel::Reg(r) => cell.regs[r as usize & 3],
+                sel => ic.mux_b(row, col, sel).expect("interconnect source"),
+            };
+            self.cell_mut(row, col).execute(cw, CellInputs { a, b });
+        }
+    }
+
+    /// Read the eight output registers of a column (what `wfbi` writes
+    /// back to the frame buffer).
+    pub fn column_outputs(&self, col: usize) -> [i16; ARRAY_DIM] {
+        let mut o = [0i16; ARRAY_DIM];
+        for (r, v) in o.iter_mut().enumerate() {
+            *v = self.cell(r, col).out;
+        }
+        o
+    }
+
+    /// Read the eight output registers of a row.
+    pub fn row_outputs(&self, row: usize) -> [i16; ARRAY_DIM] {
+        let mut o = [0i16; ARRAY_DIM];
+        for (c, v) in o.iter_mut().enumerate() {
+            *v = self.cell(row, c).out;
+        }
+        o
+    }
+
+    /// Reset every cell.
+    pub fn reset(&mut self) {
+        for cell in &mut self.cells {
+            cell.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morphosys::rc_array::alu::AluOp;
+
+    #[test]
+    fn column_broadcast_adds_buses_elementwise() {
+        let mut arr = RcArray::new();
+        let cw = ContextWord::two_port(AluOp::Add);
+        let a = [1, 2, 3, 4, 5, 6, 7, 8];
+        let b = [10, 20, 30, 40, 50, 60, 70, 80];
+        arr.broadcast(BroadcastMode::Column, 3, &cw, &a, &b);
+        assert_eq!(arr.column_outputs(3), [11, 22, 33, 44, 55, 66, 77, 88]);
+        // Other columns untouched.
+        assert_eq!(arr.column_outputs(0), [0; 8]);
+    }
+
+    #[test]
+    fn row_broadcast_scales_by_immediate() {
+        let mut arr = RcArray::new();
+        let cw = ContextWord::immediate(AluOp::Cmul, 5);
+        let a = [1, 2, 3, 4, 5, 6, 7, 8];
+        arr.broadcast(BroadcastMode::Row, 6, &cw, &a, &[0; 8]);
+        assert_eq!(arr.row_outputs(6), [5, 10, 15, 20, 25, 30, 35, 40]);
+    }
+
+    #[test]
+    fn paper_figure7_layout_64_element_add() {
+        // Figure 7: after 8 column broadcasts, cell (r, c) holds
+        // U[c*8 + r] + V[c*8 + r].
+        let u: Vec<i16> = (0..64).collect();
+        let v: Vec<i16> = (0..64).map(|i| 100 + i).collect();
+        let mut arr = RcArray::new();
+        let cw = ContextWord::two_port(AluOp::Add);
+        for col in 0..ARRAY_DIM {
+            let mut a = [0i16; 8];
+            let mut b = [0i16; 8];
+            for r in 0..8 {
+                a[r] = u[col * 8 + r];
+                b[r] = v[col * 8 + r];
+            }
+            arr.broadcast(BroadcastMode::Column, col, &cw, &a, &b);
+        }
+        for r in 0..8 {
+            for c in 0..8 {
+                let i = c * 8 + r;
+                assert_eq!(arr.cell(r, c).out, u[i] + v[i], "cell ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbour_ports_read_previous_step_snapshot() {
+        let mut arr = RcArray::new();
+        // Preload column 0 outputs with known values.
+        for r in 0..ARRAY_DIM {
+            arr.cell_mut(r, 0).out = (r as i16 + 1) * 10;
+        }
+        // Column 1 reads its West neighbour (column 0) through mux A.
+        let mut cw = ContextWord::two_port(AluOp::PassA);
+        cw.mux_a = MuxASel::West;
+        arr.broadcast(BroadcastMode::Column, 1, &cw, &[0; 8], &[0; 8]);
+        assert_eq!(arr.column_outputs(1), [10, 20, 30, 40, 50, 60, 70, 80]);
+    }
+
+    #[test]
+    fn register_file_sources_feed_mux() {
+        let mut arr = RcArray::new();
+        for r in 0..ARRAY_DIM {
+            arr.cell_mut(r, 2).regs[1] = 7;
+        }
+        let mut cw = ContextWord::two_port(AluOp::Add);
+        cw.mux_a = MuxASel::Reg(1);
+        cw.mux_b = MuxBSel::Reg(1);
+        arr.broadcast(BroadcastMode::Column, 2, &cw, &[0; 8], &[0; 8]);
+        assert_eq!(arr.column_outputs(2), [14; 8]);
+    }
+
+    #[test]
+    fn reset_clears_all_state() {
+        let mut arr = RcArray::new();
+        arr.broadcast(
+            BroadcastMode::Column,
+            0,
+            &ContextWord::two_port(AluOp::Add),
+            &[1; 8],
+            &[1; 8],
+        );
+        arr.reset();
+        assert_eq!(arr.outputs(), [[0; 8]; 8]);
+    }
+}

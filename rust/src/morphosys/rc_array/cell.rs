@@ -1,0 +1,131 @@
+//! A single reconfigurable cell (paper Figure 3): ALU/multiplier + shift
+//! unit, input muxes, a four-register file, an output register and the
+//! context register.
+
+use super::alu::{self, AluOp};
+use super::context::ContextWord;
+
+/// Resolved input operands for one cell execution, produced by the
+/// interconnect from the mux selects of the context word.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CellInputs {
+    pub a: i16,
+    pub b: i16,
+}
+
+/// One reconfigurable cell.
+#[derive(Debug, Clone, Default)]
+pub struct RcCell {
+    /// Register file: four 16-bit registers.
+    pub regs: [i16; 4],
+    /// Output register, visible to neighbours via the interconnect.
+    pub out: i16,
+    /// 32-bit multiply-accumulate register.
+    pub acc: i32,
+    /// Express-lane latch (set when the context word has `express_write`).
+    pub express: Option<i16>,
+}
+
+impl RcCell {
+    pub fn new() -> RcCell {
+        RcCell::default()
+    }
+
+    /// Execute one context word with resolved inputs. Returns the value
+    /// latched into the output register.
+    pub fn execute(&mut self, cw: &ContextWord, inputs: CellInputs) -> i16 {
+        if cw.acc_reset {
+            self.acc = 0;
+        }
+        let mut r = alu::eval(cw.op, inputs.a, inputs.b, cw.imm, self.acc);
+        if cw.acc_accumulate {
+            // Fused accumulate: ACC += result, accumulator drives the
+            // output register (the CMUL-accumulate of the §5.3 matmul).
+            r.acc = self.acc.wrapping_add(r.out as i32);
+            r.out = r.acc as i16;
+        }
+        self.acc = r.acc;
+        // NOP leaves the output register unchanged (the cell is idle).
+        if cw.op != AluOp::Nop {
+            self.out = r.out;
+        }
+        for i in 0..4 {
+            if cw.reg_write & (1 << i) != 0 {
+                self.regs[i] = r.out;
+            }
+        }
+        self.express = if cw.express_write { Some(r.out) } else { None };
+        self.out
+    }
+
+    /// Reset all architectural state.
+    pub fn reset(&mut self) {
+        *self = RcCell::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morphosys::rc_array::context::ContextWord;
+
+    #[test]
+    fn execute_latches_output_register() {
+        let mut cell = RcCell::new();
+        let cw = ContextWord::two_port(AluOp::Add);
+        let out = cell.execute(&cw, CellInputs { a: 2, b: 5 });
+        assert_eq!(out, 7);
+        assert_eq!(cell.out, 7);
+    }
+
+    #[test]
+    fn nop_preserves_output_register() {
+        let mut cell = RcCell::new();
+        cell.out = 42;
+        cell.execute(&ContextWord::two_port(AluOp::Nop), CellInputs::default());
+        assert_eq!(cell.out, 42);
+    }
+
+    #[test]
+    fn reg_write_mask_updates_register_file() {
+        let mut cell = RcCell::new();
+        let mut cw = ContextWord::two_port(AluOp::Add);
+        cw.reg_write = 0b1010; // r1 and r3
+        cell.execute(&cw, CellInputs { a: 1, b: 2 });
+        assert_eq!(cell.regs, [0, 3, 0, 3]);
+    }
+
+    #[test]
+    fn acc_reset_then_mula_chain() {
+        let mut cell = RcCell::new();
+        cell.execute(&ContextWord::mula(true), CellInputs { a: 2, b: 3 });
+        cell.execute(&ContextWord::mula(false), CellInputs { a: 4, b: 5 });
+        assert_eq!(cell.acc, 26);
+        // Restarting with acc_reset discards the old accumulation.
+        cell.execute(&ContextWord::mula(true), CellInputs { a: 1, b: 1 });
+        assert_eq!(cell.acc, 1);
+    }
+
+    #[test]
+    fn cmula_accumulates_constant_products() {
+        // The §5.3 building block: acc = Σ_k (imm_k × a_k).
+        let mut cell = RcCell::new();
+        cell.execute(&ContextWord::cmula(3, true), CellInputs { a: 10, b: 0 });
+        assert_eq!(cell.out, 30);
+        cell.execute(&ContextWord::cmula(-2, false), CellInputs { a: 4, b: 0 });
+        assert_eq!(cell.out, 22);
+        assert_eq!(cell.acc, 22);
+    }
+
+    #[test]
+    fn express_latch_follows_express_write_flag() {
+        let mut cell = RcCell::new();
+        let mut cw = ContextWord::two_port(AluOp::Add);
+        cw.express_write = true;
+        cell.execute(&cw, CellInputs { a: 1, b: 1 });
+        assert_eq!(cell.express, Some(2));
+        cw.express_write = false;
+        cell.execute(&cw, CellInputs { a: 1, b: 1 });
+        assert_eq!(cell.express, None);
+    }
+}

@@ -1,0 +1,357 @@
+//! The 32-bit context word — the configuration unit of the RC array.
+//!
+//! A context word configures every cell of one row/column: ALU opcode,
+//! input-multiplexer selects, an immediate operand field, result
+//! destination, and accumulator control. The layout is reverse-engineered
+//! to be consistent with the two words published in the paper:
+//!
+//! * `0000F400` — "Out = A + B" for the translation routine (Table 1):
+//!   opcode `F` = ADD, mux A = operand bus A, mux B = operand bus B.
+//! * `00009005` — "Out = c × A" with `c = 5` for the scaling routine
+//!   (Table 2): opcode `9` = CMUL, mux A = operand bus A, `imm = 5`.
+//!
+//! ```text
+//!  31         22  21  20   19..16   15..12   11..8    7..4     3..0
+//! ┌─────────────┬───┬───┬────────┬────────┬───────┬────────┬────────┐
+//! │  reserved   │ACC│XPR│ regwr  │ opcode │ mux A │ mux B  │ dest   │  two-port ops
+//! │  reserved   │ACC│XPR│ regwr  │ opcode │ mux A │    immediate    │  immediate ops
+//! └─────────────┴───┴───┴────────┴────────┴───────┴────────┴────────┘
+//! ```
+//!
+//! Immediate-class opcodes (CMUL/CADD/CSUB/SHL/SHR) repurpose bits `[7:0]`
+//! as an 8-bit immediate and use a compact mux-A encoding in which `0`
+//! selects the operand bus (hence `00009005` reads the operand bus).
+
+use super::alu::AluOp;
+
+/// Mux A source select for two-port operations (bits `[11:8]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MuxASel {
+    /// Nearest-neighbour inputs in the 2-D mesh.
+    North,
+    East,
+    South,
+    West,
+    /// The operand data bus, bank A (frame-buffer broadcast).
+    OperandBusA,
+    /// Intra-quadrant row lane.
+    RowQuad,
+    /// Intra-quadrant column lane.
+    ColQuad,
+    /// Inter-quadrant express lane.
+    Express,
+    /// Internal register file, r0–r3.
+    Reg(u8),
+}
+
+impl MuxASel {
+    pub fn bits(self) -> u8 {
+        match self {
+            MuxASel::North => 0,
+            MuxASel::East => 1,
+            MuxASel::South => 2,
+            MuxASel::West => 3,
+            MuxASel::OperandBusA => 4,
+            MuxASel::RowQuad => 5,
+            MuxASel::ColQuad => 6,
+            MuxASel::Express => 7,
+            MuxASel::Reg(r) => 8 + (r & 3),
+        }
+    }
+
+    pub fn from_bits(bits: u8) -> MuxASel {
+        match bits & 0xF {
+            0 => MuxASel::North,
+            1 => MuxASel::East,
+            2 => MuxASel::South,
+            3 => MuxASel::West,
+            4 => MuxASel::OperandBusA,
+            5 => MuxASel::RowQuad,
+            6 => MuxASel::ColQuad,
+            7 => MuxASel::Express,
+            b => MuxASel::Reg((b - 8) & 3),
+        }
+    }
+
+    /// Compact encoding used by immediate-class context words, where `0`
+    /// selects the operand bus (the common case).
+    pub fn bits_compact(self) -> u8 {
+        match self {
+            MuxASel::OperandBusA => 0,
+            MuxASel::North => 1,
+            MuxASel::East => 2,
+            MuxASel::South => 3,
+            MuxASel::West => 4,
+            MuxASel::RowQuad => 5,
+            MuxASel::ColQuad => 6,
+            MuxASel::Express => 7,
+            MuxASel::Reg(r) => 8 + (r & 3),
+        }
+    }
+
+    pub fn from_bits_compact(bits: u8) -> MuxASel {
+        match bits & 0xF {
+            0 => MuxASel::OperandBusA,
+            1 => MuxASel::North,
+            2 => MuxASel::East,
+            3 => MuxASel::South,
+            4 => MuxASel::West,
+            5 => MuxASel::RowQuad,
+            6 => MuxASel::ColQuad,
+            7 => MuxASel::Express,
+            b => MuxASel::Reg((b - 8) & 3),
+        }
+    }
+}
+
+/// Mux B source select (bits `[7:4]` of two-port context words). Mux B has
+/// fewer sources than mux A (paper Figure 3: three nearest neighbours, the
+/// operand bus, the register file).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MuxBSel {
+    /// The operand data bus, bank B.
+    OperandBusB,
+    North,
+    East,
+    West,
+    /// Internal register file, r0–r3.
+    Reg(u8),
+}
+
+impl MuxBSel {
+    pub fn bits(self) -> u8 {
+        match self {
+            MuxBSel::OperandBusB => 0,
+            MuxBSel::North => 1,
+            MuxBSel::East => 2,
+            MuxBSel::West => 3,
+            MuxBSel::Reg(r) => 4 + (r & 3),
+        }
+    }
+
+    pub fn from_bits(bits: u8) -> MuxBSel {
+        match bits & 0x7 {
+            0 => MuxBSel::OperandBusB,
+            1 => MuxBSel::North,
+            2 => MuxBSel::East,
+            3 => MuxBSel::West,
+            b => MuxBSel::Reg((b - 4) & 3),
+        }
+    }
+}
+
+/// A decoded context word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContextWord {
+    pub op: AluOp,
+    pub mux_a: MuxASel,
+    /// Ignored (forced to `OperandBusB`) for immediate-class ops.
+    pub mux_b: MuxBSel,
+    /// Sign-extended 8-bit immediate; meaningful for immediate-class ops.
+    pub imm: i16,
+    /// Register-file write mask, one bit per r0–r3 (bits `[19:16]`).
+    pub reg_write: u8,
+    /// Drive the result onto the express lane (bit 20).
+    pub express_write: bool,
+    /// Clear the accumulator before executing (bit 21); used by the first
+    /// MULA step of a dot product.
+    pub acc_reset: bool,
+    /// Fused accumulate (bit 22): after the ALU op, `ACC += result` and
+    /// the accumulator value is latched to the output register. Combined
+    /// with CMUL this gives the constant-multiply-accumulate step the
+    /// §5.3 matrix-multiplication mapping is built on.
+    pub acc_accumulate: bool,
+    /// Destination select, bits `[3:0]` of two-port words (0 = output
+    /// register only).
+    pub dest: u8,
+}
+
+impl ContextWord {
+    /// The paper's Table 1 word: `OUT = A + B` from the two operand buses.
+    pub const ADD_AB: u32 = 0x0000_F400;
+
+    /// Decode a raw 32-bit context word.
+    pub fn decode(raw: u32) -> ContextWord {
+        let op = AluOp::from_bits(((raw >> 12) & 0xF) as u8);
+        let reg_write = ((raw >> 16) & 0xF) as u8;
+        let express_write = raw & (1 << 20) != 0;
+        let acc_reset = raw & (1 << 21) != 0;
+        let acc_accumulate = raw & (1 << 22) != 0;
+        if op.uses_immediate() {
+            ContextWord {
+                op,
+                mux_a: MuxASel::from_bits_compact(((raw >> 8) & 0xF) as u8),
+                mux_b: MuxBSel::OperandBusB,
+                imm: (raw & 0xFF) as u8 as i8 as i16,
+                reg_write,
+                express_write,
+                acc_reset,
+                acc_accumulate,
+                dest: 0,
+            }
+        } else {
+            ContextWord {
+                op,
+                mux_a: MuxASel::from_bits(((raw >> 8) & 0xF) as u8),
+                mux_b: MuxBSel::from_bits(((raw >> 4) & 0xF) as u8),
+                imm: 0,
+                reg_write,
+                express_write,
+                acc_reset,
+                acc_accumulate,
+                dest: (raw & 0xF) as u8,
+            }
+        }
+    }
+
+    /// Encode back to the raw 32-bit form.
+    pub fn encode(&self) -> u32 {
+        let mut raw = (self.op.bits() as u32) << 12;
+        raw |= (self.reg_write as u32 & 0xF) << 16;
+        if self.express_write {
+            raw |= 1 << 20;
+        }
+        if self.acc_reset {
+            raw |= 1 << 21;
+        }
+        if self.acc_accumulate {
+            raw |= 1 << 22;
+        }
+        if self.op.uses_immediate() {
+            raw |= (self.mux_a.bits_compact() as u32) << 8;
+            raw |= self.imm as u8 as u32;
+        } else {
+            raw |= (self.mux_a.bits() as u32) << 8;
+            raw |= (self.mux_b.bits() as u32) << 4;
+            raw |= self.dest as u32 & 0xF;
+        }
+        raw
+    }
+
+    /// Two-port op reading both operand buses (the vector-vector pattern).
+    pub fn two_port(op: AluOp) -> ContextWord {
+        ContextWord {
+            op,
+            mux_a: MuxASel::OperandBusA,
+            mux_b: MuxBSel::OperandBusB,
+            imm: 0,
+            reg_write: 0,
+            express_write: false,
+            acc_reset: false,
+            acc_accumulate: false,
+            dest: 0,
+        }
+    }
+
+    /// Immediate op on the operand bus (the vector-scalar pattern).
+    pub fn immediate(op: AluOp, imm: i16) -> ContextWord {
+        debug_assert!(op.uses_immediate(), "{op:?} takes no immediate");
+        debug_assert!(
+            (-128..=127).contains(&imm),
+            "context immediate field is 8 bits, got {imm}"
+        );
+        ContextWord {
+            op,
+            mux_a: MuxASel::OperandBusA,
+            mux_b: MuxBSel::OperandBusB,
+            imm,
+            reg_write: 0,
+            express_write: false,
+            acc_reset: false,
+            acc_accumulate: false,
+            dest: 0,
+        }
+    }
+
+    /// Constant-multiply-accumulate (CMUL + fused accumulate): the
+    /// building block of the §5.3 matrix-multiplication mapping.
+    /// `first` resets the accumulator.
+    pub fn cmula(imm: i16, first: bool) -> ContextWord {
+        let mut cw = ContextWord::immediate(AluOp::Cmul, imm);
+        cw.acc_accumulate = true;
+        cw.acc_reset = first;
+        cw
+    }
+
+    /// Multiply-accumulate step of a dot product; `first` resets the
+    /// accumulator.
+    pub fn mula(first: bool) -> ContextWord {
+        let mut cw = ContextWord::two_port(AluOp::Mula);
+        cw.acc_reset = first;
+        cw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_translation_word_decodes_to_add_ab() {
+        let cw = ContextWord::decode(0x0000_F400);
+        assert_eq!(cw.op, AluOp::Add);
+        assert_eq!(cw.mux_a, MuxASel::OperandBusA);
+        assert_eq!(cw.mux_b, MuxBSel::OperandBusB);
+        assert_eq!(cw.dest, 0);
+    }
+
+    #[test]
+    fn paper_scaling_word_decodes_to_cmul_5() {
+        let cw = ContextWord::decode(0x0000_9005);
+        assert_eq!(cw.op, AluOp::Cmul);
+        assert_eq!(cw.mux_a, MuxASel::OperandBusA);
+        assert_eq!(cw.imm, 5);
+    }
+
+    #[test]
+    fn encode_reproduces_paper_words() {
+        assert_eq!(ContextWord::two_port(AluOp::Add).encode(), 0x0000_F400);
+        assert_eq!(
+            ContextWord::immediate(AluOp::Cmul, 5).encode(),
+            0x0000_9005
+        );
+    }
+
+    #[test]
+    fn roundtrip_two_port_words() {
+        for op in [AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::And, AluOp::Mula] {
+            let mut cw = ContextWord::two_port(op);
+            cw.reg_write = 0b0101;
+            cw.express_write = true;
+            cw.dest = 3;
+            assert_eq!(ContextWord::decode(cw.encode()), cw);
+        }
+    }
+
+    #[test]
+    fn roundtrip_immediate_words() {
+        for imm in [-128i16, -1, 0, 1, 5, 127] {
+            let mut cw = ContextWord::immediate(AluOp::Cadd, imm);
+            cw.acc_reset = true;
+            assert_eq!(ContextWord::decode(cw.encode()), cw);
+        }
+    }
+
+    #[test]
+    fn negative_immediates_sign_extend() {
+        let raw = ContextWord::immediate(AluOp::Csub, -3).encode();
+        assert_eq!(ContextWord::decode(raw).imm, -3);
+    }
+
+    #[test]
+    fn mux_selects_roundtrip() {
+        for b in 0..12u8 {
+            assert_eq!(MuxASel::from_bits(b).bits(), b);
+            assert_eq!(MuxASel::from_bits_compact(b).bits_compact(), b);
+        }
+        for b in 0..8u8 {
+            assert_eq!(MuxBSel::from_bits(b).bits(), b);
+        }
+    }
+
+    #[test]
+    fn mula_helper_sets_acc_reset_on_first_step() {
+        assert!(ContextWord::mula(true).acc_reset);
+        assert!(!ContextWord::mula(false).acc_reset);
+    }
+}

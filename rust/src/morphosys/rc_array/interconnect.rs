@@ -1,0 +1,169 @@
+//! The three-level RC-array interconnect (paper Figure 2).
+//!
+//! 1. **Mesh** — nearest-neighbour connectivity in the 8×8 grid. Like the
+//!    real M1 the mesh wraps toroidally at the array edge.
+//! 2. **Intra-quadrant** — a cell can read any other cell in its row or
+//!    column *within its 4×4 quadrant*. Context words carry no source
+//!    index in our compact encoding, so the lane carries the quadrant
+//!    row/column *leader* (the cell at the quadrant-base row/column) — the
+//!    pattern all our mappings use.
+//! 3. **Express lanes** — inter-quadrant buses carrying one cell's output
+//!    per quadrant row/column to the adjacent quadrant. The value is the
+//!    express latch of the same row in the horizontally adjacent quadrant
+//!    (falling back to its output register when no cell latched the lane).
+//!
+//! The interconnect is purely combinational over a *snapshot* of the
+//! previous-step output registers, which models the real array: all cells
+//! read their neighbours' registered outputs, then latch simultaneously.
+
+use super::array::ARRAY_DIM;
+use super::context::{MuxASel, MuxBSel};
+
+/// Quadrant edge length (the RC array is 2×2 quadrants of 4×4 cells).
+pub const QUAD_DIM: usize = 4;
+
+/// A named interconnect source, unifying mux A and mux B selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Port {
+    North,
+    East,
+    South,
+    West,
+    RowQuad,
+    ColQuad,
+    Express,
+}
+
+/// Snapshot of array outputs + express latches for one execution step.
+pub struct Interconnect<'a> {
+    pub outs: &'a [[i16; ARRAY_DIM]; ARRAY_DIM],
+    pub express: &'a [[Option<i16>; ARRAY_DIM]; ARRAY_DIM],
+}
+
+impl<'a> Interconnect<'a> {
+    /// Resolve a mesh/lane port for the cell at `(row, col)`.
+    pub fn port(&self, row: usize, col: usize, port: Port) -> i16 {
+        let d = ARRAY_DIM;
+        match port {
+            Port::North => self.outs[(row + d - 1) % d][col],
+            Port::South => self.outs[(row + 1) % d][col],
+            Port::West => self.outs[row][(col + d - 1) % d],
+            Port::East => self.outs[row][(col + 1) % d],
+            // Quadrant row/column leader (quadrant-base index).
+            Port::RowQuad => self.outs[row][col / QUAD_DIM * QUAD_DIM],
+            Port::ColQuad => self.outs[row / QUAD_DIM * QUAD_DIM][col],
+            Port::Express => {
+                // Same row, horizontally adjacent quadrant; the lane
+                // carries that quadrant's row leader (express latch if
+                // driven, output register otherwise).
+                let adj_base = (col / QUAD_DIM ^ 1) * QUAD_DIM;
+                self.express[row][adj_base].unwrap_or(self.outs[row][adj_base])
+            }
+        }
+    }
+
+    /// Resolve a mux A select. Operand-bus and register selects are
+    /// resolved by the caller (they are not interconnect sources).
+    pub fn mux_a(&self, row: usize, col: usize, sel: MuxASel) -> Option<i16> {
+        let port = match sel {
+            MuxASel::North => Port::North,
+            MuxASel::East => Port::East,
+            MuxASel::South => Port::South,
+            MuxASel::West => Port::West,
+            MuxASel::RowQuad => Port::RowQuad,
+            MuxASel::ColQuad => Port::ColQuad,
+            MuxASel::Express => Port::Express,
+            MuxASel::OperandBusA | MuxASel::Reg(_) => return None,
+        };
+        Some(self.port(row, col, port))
+    }
+
+    /// Resolve a mux B select (mux B reaches three neighbours only).
+    pub fn mux_b(&self, row: usize, col: usize, sel: MuxBSel) -> Option<i16> {
+        let port = match sel {
+            MuxBSel::North => Port::North,
+            MuxBSel::East => Port::East,
+            MuxBSel::West => Port::West,
+            MuxBSel::OperandBusB | MuxBSel::Reg(_) => return None,
+        };
+        Some(self.port(row, col, port))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> [[i16; ARRAY_DIM]; ARRAY_DIM] {
+        let mut g = [[0i16; ARRAY_DIM]; ARRAY_DIM];
+        for (r, row) in g.iter_mut().enumerate() {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (r * ARRAY_DIM + c) as i16;
+            }
+        }
+        g
+    }
+
+    fn no_express() -> [[Option<i16>; ARRAY_DIM]; ARRAY_DIM] {
+        [[None; ARRAY_DIM]; ARRAY_DIM]
+    }
+
+    #[test]
+    fn mesh_neighbours() {
+        let outs = grid();
+        let xp = no_express();
+        let ic = Interconnect { outs: &outs, express: &xp };
+        assert_eq!(ic.port(1, 1, Port::North), outs[0][1]);
+        assert_eq!(ic.port(1, 1, Port::South), outs[2][1]);
+        assert_eq!(ic.port(1, 1, Port::West), outs[1][0]);
+        assert_eq!(ic.port(1, 1, Port::East), outs[1][2]);
+    }
+
+    #[test]
+    fn mesh_wraps_toroidally() {
+        let outs = grid();
+        let xp = no_express();
+        let ic = Interconnect { outs: &outs, express: &xp };
+        assert_eq!(ic.port(0, 0, Port::North), outs[7][0]);
+        assert_eq!(ic.port(0, 0, Port::West), outs[0][7]);
+        assert_eq!(ic.port(7, 7, Port::South), outs[0][7]);
+        assert_eq!(ic.port(7, 7, Port::East), outs[7][0]);
+    }
+
+    #[test]
+    fn quadrant_lanes_carry_leaders() {
+        let outs = grid();
+        let xp = no_express();
+        let ic = Interconnect { outs: &outs, express: &xp };
+        // Cell (2, 6) is in the right quadrant: row leader is column 4.
+        assert_eq!(ic.port(2, 6, Port::RowQuad), outs[2][4]);
+        // Cell (6, 2) is in the bottom quadrant: column leader is row 4.
+        assert_eq!(ic.port(6, 2, Port::ColQuad), outs[4][2]);
+    }
+
+    #[test]
+    fn express_lane_reads_adjacent_quadrant() {
+        let outs = grid();
+        let mut xp = no_express();
+        xp[3][4] = Some(-77); // right-quadrant row-3 leader drives the lane
+        let ic = Interconnect { outs: &outs, express: &xp };
+        // A left-quadrant cell in row 3 sees the latched value.
+        assert_eq!(ic.port(3, 1, Port::Express), -77);
+        // Without a latch it falls back to the leader's output register.
+        let xp2 = no_express();
+        let ic2 = Interconnect { outs: &outs, express: &xp2 };
+        assert_eq!(ic2.port(3, 1, Port::Express), outs[3][4]);
+    }
+
+    #[test]
+    fn operand_bus_selects_are_not_interconnect_sources() {
+        let outs = grid();
+        let xp = no_express();
+        let ic = Interconnect { outs: &outs, express: &xp };
+        assert_eq!(ic.mux_a(0, 0, MuxASel::OperandBusA), None);
+        assert_eq!(ic.mux_a(0, 0, MuxASel::Reg(2)), None);
+        assert_eq!(ic.mux_b(0, 0, MuxBSel::OperandBusB), None);
+        assert_eq!(ic.mux_a(1, 1, MuxASel::North), Some(outs[0][1]));
+        assert_eq!(ic.mux_b(1, 1, MuxBSel::East), Some(outs[1][2]));
+    }
+}

@@ -1,0 +1,19 @@
+//! The reconfigurable device: the 8×8 RC array.
+//!
+//! Each reconfigurable cell (paper Figure 3) has an ALU/multiplier, a
+//! 32-bit shift unit, two input multiplexers, a register file of four
+//! 16-bit registers, an output register, and a context register. All cells
+//! in a column (column-broadcast mode) or row (row-broadcast mode) share
+//! one context word, giving the array its SIMD character.
+
+pub mod alu;
+pub mod array;
+pub mod cell;
+pub mod context;
+pub mod interconnect;
+
+pub use alu::AluOp;
+pub use array::{BroadcastMode, RcArray, ARRAY_DIM};
+pub use cell::RcCell;
+pub use context::{ContextWord, MuxASel, MuxBSel};
+pub use interconnect::{Interconnect, Port};

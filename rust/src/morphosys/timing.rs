@@ -1,0 +1,129 @@
+//! Cycle-timing model of the M1 system — the single place every latency
+//! constant lives, so the calibration against the paper's Table 5 is
+//! auditable.
+//!
+//! ## Derivation from the paper's listings
+//!
+//! The paper reports M1 cycle counts that equal the final instruction
+//! index of its listings (Table 1 ends at instruction 96 → "96 cycles";
+//! Table 2 ends at 55 → "55 cycles"). The listings show long runs of
+//! NOPs after `ldfb` (instr. 2–32 of Table 1) — the TinyRISC waiting for
+//! the DMA bus — and a 3-slot gap after `ldctxt`. Solving the four
+//! published data points
+//!
+//! | routine          | paper cycles | structure |
+//! |------------------|-----|-------------------------------------------|
+//! | translation, n=64| 96  | 2×(ldui+ldfb₃₂) + ldui+ldctxt + 8×(ldli+dbcdc) + 8×wfbi + ldui+stfb |
+//! | scaling, n=64    | 55  | ldui+ldfb₃₂ + ldui+ldctxt + 8×sbcb + 8×wfbi + ldui+stfb |
+//! | translation, n=8 | 21  | 2×(ldui+ldfb₄) + ldui+ldctxt + ldli+dbcdc + wfbi + ldui+stfb |
+//! | scaling, n=8     | 14  | ldui+ldfb₄ + ldui+ldctxt + sbcb + wfbi + ldui+stfb |
+//!
+//! for the unknown latencies gives exactly one consistent model:
+//!
+//! * a frame-buffer DMA of `w` 32-bit words occupies the bus for `w`
+//!   cycles when the transfer is a full burst (`w ≥ 8`), and `w + 1`
+//!   cycles for short transfers (the one-cycle bus setup is hidden by
+//!   burst pipelining on long transfers but exposed on short ones);
+//! * a context-memory load of `w` context words costs `3 + w` cycles
+//!   (the context bus always pays its 3-cycle setup);
+//! * every other TinyRISC instruction (including the broadcast triggers
+//!   `dbcdc`/`sbcb` and the write-back `wfbi`) issues in a single cycle —
+//!   the RC array executes concurrently with the control processor.
+//!
+//! Check: translation-64 = 1+32 + 1+32 + 1+4 + 16 + 8 + 1+1 = 97 slots →
+//! 96 cycles ✓; scaling-64 = 1+32+1+4+8+8+1+1 = 56 → 55 ✓;
+//! translation-8 = 1+5+1+5+1+4+2+1+1+1 = 22 → 21 ✓;
+//! scaling-8 = 1+5+1+4+1+1+1+1 = 15 → 14 ✓.
+
+/// Words per DMA burst; transfers of at least this many 32-bit words hide
+/// the bus-setup cycle behind pipelining.
+pub const DMA_BURST_WORDS: usize = 8;
+
+/// Bus-setup penalty (cycles) paid by short (< [`DMA_BURST_WORDS`])
+/// frame-buffer DMA transfers.
+pub const DMA_SETUP_CYCLES: u64 = 1;
+
+/// Fixed setup latency (cycles) of the context-memory bus.
+pub const CTX_SETUP_CYCLES: u64 = 3;
+
+/// Total issue slots occupied by a frame-buffer DMA (`ldfb`/`stfb`) of
+/// `words` 32-bit words, including the issue slot itself.
+pub fn fb_dma_slots(words: usize) -> u64 {
+    let w = words.max(1) as u64;
+    if words >= DMA_BURST_WORDS {
+        w
+    } else {
+        w + DMA_SETUP_CYCLES
+    }
+}
+
+/// Total issue slots occupied by a context-memory load (`ldctxt`) of
+/// `words` context words, including the issue slot.
+pub fn ctx_dma_slots(words: usize) -> u64 {
+    CTX_SETUP_CYCLES + words.max(1) as u64
+}
+
+/// M1 system clock, Hz (the paper: "operational at a frequency of
+/// 100 MHz").
+pub const M1_CLOCK_HZ: u64 = 100_000_000;
+
+/// Convert a cycle count to microseconds at the M1 clock.
+pub fn cycles_to_us(cycles: u64) -> f64 {
+    cycles as f64 / (M1_CLOCK_HZ as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_dma_hides_setup() {
+        assert_eq!(fb_dma_slots(32), 32);
+        assert_eq!(fb_dma_slots(8), 8);
+    }
+
+    #[test]
+    fn short_dma_pays_setup() {
+        assert_eq!(fb_dma_slots(4), 5);
+        assert_eq!(fb_dma_slots(1), 2);
+        assert_eq!(fb_dma_slots(7), 8);
+    }
+
+    #[test]
+    fn zero_word_dma_still_occupies_issue_slot() {
+        assert_eq!(fb_dma_slots(0), 2); // clamped to 1 word + setup
+    }
+
+    #[test]
+    fn context_bus_always_pays_setup() {
+        assert_eq!(ctx_dma_slots(1), 4);
+        assert_eq!(ctx_dma_slots(8), 11);
+    }
+
+    #[test]
+    fn derived_routine_slot_budgets_match_paper() {
+        // The paper counts up to the *issue* of the final stfb; the
+        // store-back DMA overlaps whatever follows. So the reported cycle
+        // count is the slot sum of everything before the final store.
+        // translation, n = 64 → 96 cycles
+        let t64 = 1 + fb_dma_slots(32) + 1 + fb_dma_slots(32) + 1 + ctx_dma_slots(1)
+            + 16 + 8 + 1;
+        assert_eq!(t64, 96);
+        // scaling, n = 64 → 55 cycles
+        let s64 = 1 + fb_dma_slots(32) + 1 + ctx_dma_slots(1) + 8 + 8 + 1;
+        assert_eq!(s64, 55);
+        // translation, n = 8 → 21 cycles
+        let t8 = 1 + fb_dma_slots(4) + 1 + fb_dma_slots(4) + 1 + ctx_dma_slots(1)
+            + 2 + 1 + 1;
+        assert_eq!(t8, 21);
+        // scaling, n = 8 → 14 cycles
+        let s8 = 1 + fb_dma_slots(4) + 1 + ctx_dma_slots(1) + 1 + 1 + 1;
+        assert_eq!(s8, 14);
+    }
+
+    #[test]
+    fn microseconds_at_100mhz() {
+        assert!((cycles_to_us(96) - 0.96).abs() < 1e-12);
+        assert!((cycles_to_us(55) - 0.55).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,441 @@
+//! Text assembler / disassembler for TinyRISC — the format used by the
+//! mULATE-style traces and by `examples/mulate_trace.rs`.
+//!
+//! Syntax (one instruction per line, `;`/`#` comments, optional `label:`):
+//!
+//! ```text
+//! start:
+//!   ldui   r1, 0x1000          ; rd, imm16
+//!   ldfb   r1, 0, a, 32        ; rs, set, bank, words[, fb_addr]
+//!   ldctxt r3, col, 0, 0, 1    ; rs, block, plane, word, count
+//!   dbcdc  0, 0, 3, 0, 0x18, 0x18  ; plane, cw, col, set, addr_a, addr_b
+//!   sbcb   0, 0, 3, 0, a, 0x18 ; plane, cw, col, set, bank, addr
+//!   wfbi   3, 1, a, 0x18       ; col, set, bank, addr
+//!   bnez   r4, start
+//!   halt
+//! ```
+
+use std::collections::HashMap;
+
+use super::isa::{Instruction, Program, Reg};
+use crate::morphosys::context_memory::Block;
+use crate::morphosys::frame_buffer::{Bank, Set};
+
+/// Assembly error with line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err(line: usize, message: impl Into<String>) -> AsmError {
+    AsmError { line, message: message.into() }
+}
+
+fn parse_num(tok: &str, line: usize) -> Result<i64, AsmError> {
+    let t = tok.trim();
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t),
+    };
+    let v = if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else {
+        t.parse::<i64>()
+    }
+    .map_err(|_| err(line, format!("bad number `{tok}`")))?;
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_reg(tok: &str, line: usize) -> Result<Reg, AsmError> {
+    let t = tok.trim();
+    let n = t
+        .strip_prefix('r')
+        .or_else(|| t.strip_prefix('R'))
+        .ok_or_else(|| err(line, format!("expected register, got `{tok}`")))?;
+    let i: u8 = n.parse().map_err(|_| err(line, format!("bad register `{tok}`")))?;
+    if i > 15 {
+        return Err(err(line, format!("register out of range `{tok}`")));
+    }
+    Ok(Reg(i))
+}
+
+fn parse_set(tok: &str, line: usize) -> Result<Set, AsmError> {
+    match parse_num(tok, line)? {
+        0 => Ok(Set::Zero),
+        1 => Ok(Set::One),
+        _ => Err(err(line, format!("set must be 0 or 1, got `{tok}`"))),
+    }
+}
+
+fn parse_bank(tok: &str, line: usize) -> Result<Bank, AsmError> {
+    match tok.trim().to_ascii_lowercase().as_str() {
+        "a" | "0" => Ok(Bank::A),
+        "b" | "1" => Ok(Bank::B),
+        _ => Err(err(line, format!("bank must be a/b/0/1, got `{tok}`"))),
+    }
+}
+
+fn parse_block(tok: &str, line: usize) -> Result<Block, AsmError> {
+    match tok.trim().to_ascii_lowercase().as_str() {
+        "col" | "column" | "0" => Ok(Block::Column),
+        "row" | "1" => Ok(Block::Row),
+        _ => Err(err(line, format!("block must be col/row, got `{tok}`"))),
+    }
+}
+
+fn parse_usize(tok: &str, line: usize) -> Result<usize, AsmError> {
+    let v = parse_num(tok, line)?;
+    usize::try_from(v).map_err(|_| err(line, format!("expected unsigned, got `{tok}`")))
+}
+
+/// Assemble TinyRISC source text into a [`Program`].
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    // Pass 1: strip comments/labels, collect label addresses.
+    let mut labels: HashMap<String, usize> = HashMap::new();
+    let mut lines: Vec<(usize, String)> = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let lineno = lineno + 1;
+        let mut text = raw;
+        if let Some(i) = text.find([';', '#']) {
+            text = &text[..i];
+        }
+        let mut text = text.trim().to_string();
+        while let Some(i) = text.find(':') {
+            let label = text[..i].trim().to_string();
+            if label.is_empty() || label.contains(char::is_whitespace) {
+                return Err(err(lineno, format!("bad label `{label}`")));
+            }
+            if labels.insert(label.clone(), lines.len()).is_some() {
+                return Err(err(lineno, format!("duplicate label `{label}`")));
+            }
+            text = text[i + 1..].trim().to_string();
+        }
+        if !text.is_empty() {
+            lines.push((lineno, text));
+        }
+    }
+
+    let target = |tok: &str, line: usize| -> Result<usize, AsmError> {
+        if let Some(&t) = labels.get(tok.trim()) {
+            Ok(t)
+        } else {
+            parse_usize(tok, line)
+        }
+    };
+
+    // Pass 2: parse instructions.
+    let mut instructions = Vec::with_capacity(lines.len());
+    for (lineno, text) in &lines {
+        let lineno = *lineno;
+        let (mnemonic, rest) = match text.split_once(char::is_whitespace) {
+            Some((m, r)) => (m, r),
+            None => (text.as_str(), ""),
+        };
+        let ops: Vec<&str> = rest
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        let expect = |n: usize| -> Result<(), AsmError> {
+            if ops.len() == n {
+                Ok(())
+            } else {
+                Err(err(lineno, format!("`{mnemonic}` takes {n} operands, got {}", ops.len())))
+            }
+        };
+        let instr = match mnemonic.to_ascii_lowercase().as_str() {
+            "nop" => {
+                expect(0)?;
+                Instruction::NOP
+            }
+            "halt" => {
+                expect(0)?;
+                Instruction::Halt
+            }
+            "ldui" => {
+                expect(2)?;
+                Instruction::Ldui { rd: parse_reg(ops[0], lineno)?, imm: parse_num(ops[1], lineno)? as u16 }
+            }
+            "ldli" => {
+                expect(2)?;
+                Instruction::Ldli { rd: parse_reg(ops[0], lineno)?, imm: parse_num(ops[1], lineno)? as u16 }
+            }
+            "add" => {
+                expect(3)?;
+                Instruction::Add {
+                    rd: parse_reg(ops[0], lineno)?,
+                    rs: parse_reg(ops[1], lineno)?,
+                    rt: parse_reg(ops[2], lineno)?,
+                }
+            }
+            "sub" => {
+                expect(3)?;
+                Instruction::Sub {
+                    rd: parse_reg(ops[0], lineno)?,
+                    rs: parse_reg(ops[1], lineno)?,
+                    rt: parse_reg(ops[2], lineno)?,
+                }
+            }
+            "addi" => {
+                expect(3)?;
+                Instruction::Addi {
+                    rd: parse_reg(ops[0], lineno)?,
+                    rs: parse_reg(ops[1], lineno)?,
+                    imm: parse_num(ops[2], lineno)? as i16,
+                }
+            }
+            "ldfb" | "stfb" => {
+                if ops.len() != 4 && ops.len() != 5 {
+                    return Err(err(lineno, format!("`{mnemonic}` takes 4 or 5 operands")));
+                }
+                let rs = parse_reg(ops[0], lineno)?;
+                let set = parse_set(ops[1], lineno)?;
+                let bank = parse_bank(ops[2], lineno)?;
+                let words = parse_usize(ops[3], lineno)?;
+                let fb_addr = if ops.len() == 5 { parse_usize(ops[4], lineno)? } else { 0 };
+                if mnemonic.eq_ignore_ascii_case("ldfb") {
+                    Instruction::Ldfb { rs, set, bank, words, fb_addr }
+                } else {
+                    Instruction::Stfb { rs, set, bank, words, fb_addr }
+                }
+            }
+            "ldctxt" => {
+                expect(5)?;
+                Instruction::Ldctxt {
+                    rs: parse_reg(ops[0], lineno)?,
+                    block: parse_block(ops[1], lineno)?,
+                    plane: parse_usize(ops[2], lineno)?,
+                    word: parse_usize(ops[3], lineno)?,
+                    count: parse_usize(ops[4], lineno)?,
+                }
+            }
+            "dbcdc" | "dbcdr" => {
+                expect(6)?;
+                let plane = parse_usize(ops[0], lineno)?;
+                let cw = parse_usize(ops[1], lineno)?;
+                let idx = parse_usize(ops[2], lineno)?;
+                let set = parse_set(ops[3], lineno)?;
+                let addr_a = parse_usize(ops[4], lineno)?;
+                let addr_b = parse_usize(ops[5], lineno)?;
+                if mnemonic.eq_ignore_ascii_case("dbcdc") {
+                    Instruction::Dbcdc { plane, cw, col: idx, set, addr_a, addr_b }
+                } else {
+                    Instruction::Dbcdr { plane, cw, row: idx, set, addr_a, addr_b }
+                }
+            }
+            "sbcb" | "sbcbr" => {
+                expect(6)?;
+                let plane = parse_usize(ops[0], lineno)?;
+                let cw = parse_usize(ops[1], lineno)?;
+                let idx = parse_usize(ops[2], lineno)?;
+                let set = parse_set(ops[3], lineno)?;
+                let bank = parse_bank(ops[4], lineno)?;
+                let addr = parse_usize(ops[5], lineno)?;
+                if mnemonic.eq_ignore_ascii_case("sbcb") {
+                    Instruction::Sbcb { plane, cw, col: idx, set, bank, addr }
+                } else {
+                    Instruction::Sbcbr { plane, cw, row: idx, set, bank, addr }
+                }
+            }
+            "wfbi" | "wfbir" => {
+                expect(4)?;
+                let idx = parse_usize(ops[0], lineno)?;
+                let set = parse_set(ops[1], lineno)?;
+                let bank = parse_bank(ops[2], lineno)?;
+                let addr = parse_usize(ops[3], lineno)?;
+                if mnemonic.eq_ignore_ascii_case("wfbi") {
+                    Instruction::Wfbi { col: idx, set, bank, addr }
+                } else {
+                    Instruction::Wfbir { row: idx, set, bank, addr }
+                }
+            }
+            "jmp" => {
+                expect(1)?;
+                Instruction::Jmp { target: target(ops[0], lineno)? }
+            }
+            "bnez" => {
+                expect(2)?;
+                Instruction::Bnez { rs: parse_reg(ops[0], lineno)?, target: target(ops[1], lineno)? }
+            }
+            other => return Err(err(lineno, format!("unknown mnemonic `{other}`"))),
+        };
+        instructions.push(instr);
+    }
+    Ok(Program::new(instructions))
+}
+
+fn set_s(set: Set) -> &'static str {
+    match set {
+        Set::Zero => "0",
+        Set::One => "1",
+    }
+}
+
+fn bank_s(bank: Bank) -> &'static str {
+    match bank {
+        Bank::A => "a",
+        Bank::B => "b",
+    }
+}
+
+fn block_s(block: Block) -> &'static str {
+    match block {
+        Block::Column => "col",
+        Block::Row => "row",
+    }
+}
+
+/// Render one instruction in assembler syntax.
+pub fn disassemble(i: &Instruction) -> String {
+    match i {
+        Instruction::Ldui { rd, imm } => format!("ldui   r{}, {:#x}", rd.0, imm),
+        Instruction::Ldli { rd, imm } => format!("ldli   r{}, {:#x}", rd.0, imm),
+        Instruction::Add { rd, rs, rt } if *i == Instruction::NOP => {
+            let _ = (rd, rs, rt);
+            "nop".to_string()
+        }
+        Instruction::Add { rd, rs, rt } => format!("add    r{}, r{}, r{}", rd.0, rs.0, rt.0),
+        Instruction::Sub { rd, rs, rt } => format!("sub    r{}, r{}, r{}", rd.0, rs.0, rt.0),
+        Instruction::Addi { rd, rs, imm } => format!("addi   r{}, r{}, {}", rd.0, rs.0, imm),
+        Instruction::Ldfb { rs, set, bank, words, fb_addr } => {
+            format!("ldfb   r{}, {}, {}, {}, {:#x}", rs.0, set_s(*set), bank_s(*bank), words, fb_addr)
+        }
+        Instruction::Stfb { rs, set, bank, words, fb_addr } => {
+            format!("stfb   r{}, {}, {}, {}, {:#x}", rs.0, set_s(*set), bank_s(*bank), words, fb_addr)
+        }
+        Instruction::Ldctxt { rs, block, plane, word, count } => {
+            format!("ldctxt r{}, {}, {}, {}, {}", rs.0, block_s(*block), plane, word, count)
+        }
+        Instruction::Dbcdc { plane, cw, col, set, addr_a, addr_b } => {
+            format!("dbcdc  {}, {}, {}, {}, {:#x}, {:#x}", plane, cw, col, set_s(*set), addr_a, addr_b)
+        }
+        Instruction::Dbcdr { plane, cw, row, set, addr_a, addr_b } => {
+            format!("dbcdr  {}, {}, {}, {}, {:#x}, {:#x}", plane, cw, row, set_s(*set), addr_a, addr_b)
+        }
+        Instruction::Sbcb { plane, cw, col, set, bank, addr } => {
+            format!("sbcb   {}, {}, {}, {}, {}, {:#x}", plane, cw, col, set_s(*set), bank_s(*bank), addr)
+        }
+        Instruction::Sbcbr { plane, cw, row, set, bank, addr } => {
+            format!("sbcbr  {}, {}, {}, {}, {}, {:#x}", plane, cw, row, set_s(*set), bank_s(*bank), addr)
+        }
+        Instruction::Wfbi { col, set, bank, addr } => {
+            format!("wfbi   {}, {}, {}, {:#x}", col, set_s(*set), bank_s(*bank), addr)
+        }
+        Instruction::Wfbir { row, set, bank, addr } => {
+            format!("wfbir  {}, {}, {}, {:#x}", row, set_s(*set), bank_s(*bank), addr)
+        }
+        Instruction::Jmp { target } => format!("jmp    {}", target),
+        Instruction::Bnez { rs, target } => format!("bnez   r{}, {}", rs.0, target),
+        Instruction::Halt => "halt".to_string(),
+    }
+}
+
+/// Render a whole program.
+pub fn disassemble_program(p: &Program) -> String {
+    p.instructions
+        .iter()
+        .enumerate()
+        .map(|(pc, i)| format!("{pc:4}: {}", disassemble(i)))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_paper_style_listing() {
+        let src = "
+            ldui   r1, 0x1          ; vector U base
+            ldfb   r1, 0, a, 32
+            nop
+            ldctxt r3, col, 0, 0, 1
+            dbcdc  0, 0, 0, 0, 0x0, 0x0
+            wfbi   0, 1, a, 0x0
+            halt
+        ";
+        let p = assemble(src).unwrap();
+        assert_eq!(p.len(), 7);
+        assert_eq!(p.instructions[0], Instruction::Ldui { rd: Reg(1), imm: 1 });
+        assert_eq!(p.instructions[2], Instruction::NOP);
+        assert!(matches!(p.instructions[6], Instruction::Halt));
+    }
+
+    #[test]
+    fn labels_resolve_for_branches() {
+        let src = "
+            ldli r2, 3
+            loop:
+            addi r2, r2, -1
+            bnez r2, loop
+            halt
+        ";
+        let p = assemble(src).unwrap();
+        assert_eq!(p.instructions[2], Instruction::Bnez { rs: Reg(2), target: 1 });
+    }
+
+    #[test]
+    fn roundtrip_through_disassembler() {
+        let src = "
+            ldui   r1, 0x1000
+            ldli   r4, 0x40
+            add    r2, r1, r4
+            sub    r3, r2, r1
+            addi   r5, r3, -7
+            ldfb   r1, 0, a, 32, 0x0
+            stfb   r1, 1, b, 4, 0x10
+            ldctxt r3, row, 1, 2, 8
+            dbcdc  0, 0, 3, 0, 0x18, 0x18
+            dbcdr  0, 1, 4, 1, 0x20, 0x28
+            sbcb   0, 0, 5, 0, b, 0x28
+            sbcbr  1, 2, 6, 1, a, 0x30
+            wfbi   7, 1, a, 0x38
+            wfbir  2, 0, b, 0x40
+            jmp    0
+            bnez   r5, 3
+            nop
+            halt
+        ";
+        let p = assemble(src).unwrap();
+        let text = disassemble_program(&p);
+        // Strip the `pc:` prefixes and re-assemble.
+        let stripped: String = text
+            .lines()
+            .map(|l| l.split_once(": ").unwrap().1)
+            .collect::<Vec<_>>()
+            .join("\n");
+        let p2 = assemble(&stripped).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = assemble("nop\nfrobnicate r1").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.message.contains("frobnicate"));
+    }
+
+    #[test]
+    fn rejects_bad_operands() {
+        assert!(assemble("ldui r16, 0").is_err());
+        assert!(assemble("ldfb r1, 2, a, 4").is_err());
+        assert!(assemble("ldfb r1, 0, q, 4").is_err());
+        assert!(assemble("add r1, r2").is_err());
+        assert!(assemble("ldui r1, zork").is_err());
+    }
+
+    #[test]
+    fn duplicate_labels_rejected() {
+        assert!(assemble("x:\nnop\nx:\nnop").is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! TinyRISC architectural state: the scalar register file.
+
+use super::isa::Reg;
+
+/// Sixteen 32-bit registers; r0 is hardwired to zero.
+#[derive(Debug, Clone, Default)]
+pub struct RegFile {
+    regs: [u32; 16],
+}
+
+impl RegFile {
+    pub fn new() -> RegFile {
+        RegFile::default()
+    }
+
+    pub fn read(&self, r: Reg) -> u32 {
+        if r.index() == 0 {
+            0
+        } else {
+            self.regs[r.index()]
+        }
+    }
+
+    pub fn write(&mut self, r: Reg, value: u32) {
+        if r.index() != 0 {
+            self.regs[r.index()] = value;
+        }
+    }
+
+    /// `ldui`: load upper half, clearing the lower (the paper's listings
+    /// use `ldui r1, 0x1` to mean `r1 ← 0x10000`).
+    pub fn load_upper(&mut self, r: Reg, imm: u16) {
+        self.write(r, (imm as u32) << 16);
+    }
+
+    /// `ldli`: replace the lower half, preserving the upper.
+    pub fn load_lower(&mut self, r: Reg, imm: u16) {
+        let v = (self.read(r) & 0xFFFF_0000) | imm as u32;
+        self.write(r, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r0_is_hardwired_zero() {
+        let mut rf = RegFile::new();
+        rf.write(Reg(0), 123);
+        assert_eq!(rf.read(Reg(0)), 0);
+    }
+
+    #[test]
+    fn ldui_matches_paper_semantics() {
+        let mut rf = RegFile::new();
+        rf.load_upper(Reg(1), 0x1);
+        assert_eq!(rf.read(Reg(1)), 0x10000);
+        rf.load_upper(Reg(1), 0x4);
+        assert_eq!(rf.read(Reg(1)), 0x40000);
+    }
+
+    #[test]
+    fn ldli_preserves_upper_half() {
+        let mut rf = RegFile::new();
+        rf.load_upper(Reg(4), 0x2);
+        rf.load_lower(Reg(4), 0x40);
+        assert_eq!(rf.read(Reg(4)), 0x20040);
+    }
+}

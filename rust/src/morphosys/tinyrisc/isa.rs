@@ -1,0 +1,201 @@
+//! The TinyRISC instruction set (the subset exercised by the paper's
+//! listings, plus scalar/branch instructions for loop-driven workloads).
+
+use crate::morphosys::context_memory::Block;
+use crate::morphosys::frame_buffer::{Bank, Set};
+use crate::morphosys::rc_array::BroadcastMode;
+use crate::morphosys::timing;
+
+/// TinyRISC register index (r0 is hardwired to zero).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reg(pub u8);
+
+impl Reg {
+    pub const R0: Reg = Reg(0);
+
+    pub fn index(self) -> usize {
+        (self.0 & 0xF) as usize
+    }
+}
+
+/// One TinyRISC instruction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Instruction {
+    /// `ldui rd, imm` — load upper immediate: `rd ← imm << 16`.
+    Ldui { rd: Reg, imm: u16 },
+    /// `ldli rd, imm` — load lower immediate: `rd ← (rd & 0xFFFF0000) | imm`.
+    Ldli { rd: Reg, imm: u16 },
+    /// `add rd, rs, rt` (with rd=rs=rt=r0 this is the canonical NOP).
+    Add { rd: Reg, rs: Reg, rt: Reg },
+    /// `sub rd, rs, rt`.
+    Sub { rd: Reg, rs: Reg, rt: Reg },
+    /// `addi rd, rs, imm`.
+    Addi { rd: Reg, rs: Reg, imm: i16 },
+    /// `ldfb rs, set, bank, words[, fb_addr]` — DMA main→FB: `words`
+    /// 32-bit words (2 elements each) from main memory at address `rs`
+    /// into the frame buffer starting at element `fb_addr`.
+    Ldfb { rs: Reg, set: Set, bank: Bank, words: usize, fb_addr: usize },
+    /// `stfb rs, set, bank, words[, fb_addr]` — DMA FB→main.
+    Stfb { rs: Reg, set: Set, bank: Bank, words: usize, fb_addr: usize },
+    /// `ldctxt rs, block, plane, word, count` — DMA main→context memory.
+    Ldctxt { rs: Reg, block: Block, plane: usize, word: usize, count: usize },
+    /// `dbcdc plane, cw, col, set, addr_a, addr_b` — *double-bank column
+    /// broadcast*: trigger column `col` with context word `cw` of the
+    /// column block, operand bus A fed from `FB[set][A][addr_a..]`, bus B
+    /// from `FB[set][B][addr_b..]` (Table 1's workhorse).
+    Dbcdc { plane: usize, cw: usize, col: usize, set: Set, addr_a: usize, addr_b: usize },
+    /// `sbcb plane, cw, col, set, bank, addr` — *single-bank column
+    /// broadcast*: one operand bus only (Table 2's workhorse; the scalar
+    /// comes from the context-word immediate).
+    Sbcb { plane: usize, cw: usize, col: usize, set: Set, bank: Bank, addr: usize },
+    /// `dbcdr plane, cw, row, set, addr_a, addr_b` — row-mode double-bank
+    /// broadcast.
+    Dbcdr { plane: usize, cw: usize, row: usize, set: Set, addr_a: usize, addr_b: usize },
+    /// `sbcbr plane, cw, row, set, bank, addr` — row-mode single-bank
+    /// broadcast.
+    Sbcbr { plane: usize, cw: usize, row: usize, set: Set, bank: Bank, addr: usize },
+    /// `wfbi col, set, bank, addr` — write the eight output registers of
+    /// column `col` back to the frame buffer.
+    Wfbi { col: usize, set: Set, bank: Bank, addr: usize },
+    /// `wfbir row, set, bank, addr` — row variant of `wfbi`.
+    Wfbir { row: usize, set: Set, bank: Bank, addr: usize },
+    /// `jmp target` — unconditional branch to instruction index.
+    Jmp { target: usize },
+    /// `bnez rs, target` — branch if `rs != 0`.
+    Bnez { rs: Reg, target: usize },
+    /// `halt` — stop execution.
+    Halt,
+}
+
+impl Instruction {
+    /// Canonical NOP (`add r0, r0, r0`), as used throughout the paper's
+    /// listings.
+    pub const NOP: Instruction = Instruction::Add { rd: Reg::R0, rs: Reg::R0, rt: Reg::R0 };
+
+    /// Issue slots this instruction occupies (see [`timing`]): DMA
+    /// instructions hold the issue stage for the bus transfer; everything
+    /// else is single-cycle.
+    pub fn issue_slots(&self) -> u64 {
+        match self {
+            Instruction::Ldfb { words, .. } | Instruction::Stfb { words, .. } => {
+                timing::fb_dma_slots(*words)
+            }
+            Instruction::Ldctxt { count, .. } => timing::ctx_dma_slots(*count),
+            _ => 1,
+        }
+    }
+
+    /// Broadcast mode of a broadcast instruction, if any.
+    pub fn broadcast_mode(&self) -> Option<BroadcastMode> {
+        match self {
+            Instruction::Dbcdc { .. } | Instruction::Sbcb { .. } => Some(BroadcastMode::Column),
+            Instruction::Dbcdr { .. } | Instruction::Sbcbr { .. } => Some(BroadcastMode::Row),
+            _ => None,
+        }
+    }
+}
+
+/// A TinyRISC program: a flat instruction vector, index == PC.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Program {
+    pub instructions: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn new(instructions: Vec<Instruction>) -> Program {
+        Program { instructions }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instructions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instructions.is_empty()
+    }
+
+    /// Total issue slots the program occupies when executed straight-line
+    /// (no branches) — the static cost model used by
+    /// [`crate::mapping::plan`].
+    pub fn straight_line_slots(&self) -> u64 {
+        self.instructions.iter().map(Instruction::issue_slots).sum()
+    }
+
+    /// The paper's cycle-count convention: the cycle index at which the
+    /// final instruction of a straight-line routine **issues** (Table 1's
+    /// listing ends with its `stfb` at instruction index 96 and is
+    /// reported as "96 cycles" — the trailing store DMA is not counted).
+    pub fn paper_cycles(&self) -> u64 {
+        let last = self.instructions.last().map(Instruction::issue_slots).unwrap_or(0);
+        self.straight_line_slots() - last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nop_is_add_r0() {
+        assert_eq!(
+            Instruction::NOP,
+            Instruction::Add { rd: Reg::R0, rs: Reg::R0, rt: Reg::R0 }
+        );
+        assert_eq!(Instruction::NOP.issue_slots(), 1);
+    }
+
+    #[test]
+    fn dma_instructions_occupy_bus_slots() {
+        let ldfb = Instruction::Ldfb {
+            rs: Reg(1),
+            set: Set::Zero,
+            bank: Bank::A,
+            words: 32,
+            fb_addr: 0,
+        };
+        assert_eq!(ldfb.issue_slots(), 32);
+        let short = Instruction::Ldfb {
+            rs: Reg(1),
+            set: Set::Zero,
+            bank: Bank::A,
+            words: 4,
+            fb_addr: 0,
+        };
+        assert_eq!(short.issue_slots(), 5);
+        let ldctxt = Instruction::Ldctxt {
+            rs: Reg(3),
+            block: Block::Column,
+            plane: 0,
+            word: 0,
+            count: 1,
+        };
+        assert_eq!(ldctxt.issue_slots(), 4);
+    }
+
+    #[test]
+    fn broadcast_modes() {
+        let col = Instruction::Dbcdc { plane: 0, cw: 0, col: 0, set: Set::Zero, addr_a: 0, addr_b: 0 };
+        assert_eq!(col.broadcast_mode(), Some(BroadcastMode::Column));
+        let row = Instruction::Sbcbr { plane: 0, cw: 0, row: 2, set: Set::Zero, bank: Bank::A, addr: 0 };
+        assert_eq!(row.broadcast_mode(), Some(BroadcastMode::Row));
+        assert_eq!(Instruction::NOP.broadcast_mode(), None);
+    }
+
+    #[test]
+    fn straight_line_slot_accounting() {
+        let p = Program::new(vec![
+            Instruction::Ldui { rd: Reg(1), imm: 1 },
+            Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 },
+            Instruction::Halt,
+        ]);
+        assert_eq!(p.straight_line_slots(), 1 + 32 + 1);
+        // paper_cycles = issue index of the final instruction.
+        assert_eq!(p.paper_cycles(), 33);
+        // A program ending in a DMA does not count the trailing transfer.
+        let p2 = Program::new(vec![
+            Instruction::Ldui { rd: Reg(1), imm: 1 },
+            Instruction::Stfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 },
+        ]);
+        assert_eq!(p2.paper_cycles(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! TinyRISC — the M1's control processor.
+//!
+//! TinyRISC runs the scalar part of an application and steers the parallel
+//! part: it programs the DMA controller (frame-buffer and context-memory
+//! loads), triggers RC-array context broadcasts, and writes results back.
+//! One instruction issues per cycle; DMA instructions occupy the issue
+//! slot for the duration of the bus transfer (the NOP runs in the paper's
+//! listings — see [`super::timing`]).
+
+pub mod asm;
+pub mod cpu;
+pub mod isa;
+
+pub use asm::{assemble, disassemble};
+pub use cpu::RegFile;
+pub use isa::{Instruction, Program, Reg};

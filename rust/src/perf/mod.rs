@@ -1,0 +1,20 @@
+//! # Reproduction harness
+//!
+//! Regenerates every table and figure of the paper's evaluation:
+//!
+//! * Tables 1–2 — the emitted TinyRISC routines (with mULATE traces).
+//! * Tables 3–4 — the x86 baseline cycle analyses.
+//! * Table 5 — the headline comparison (cycles, speedup, µs,
+//!   elements/cycle, cycles/element across M1 / 80486 / 80386 / Pentium).
+//! * Figures 9–16 — the per-size cycle and cycles-per-element charts.
+//!
+//! Every row carries both the **measured** value (this crate's simulator
+//! and baseline models, actually executed) and the **paper** value, so
+//! deviations are visible rather than hidden (EXPERIMENTS.md §Deviations).
+
+pub mod experiments;
+pub mod paper;
+pub mod report;
+
+pub use experiments::{figure, table1_listing, table2_listing, table3, table4, table5, Row};
+pub use report::{render_figure, render_table, to_csv};

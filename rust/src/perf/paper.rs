@@ -1,0 +1,66 @@
+//! The paper's published numbers (Tables 3–5), kept verbatim as the
+//! comparison column of every reproduction.
+
+/// One published Table 5 entry: `(algorithm, system, n, cycles, speedup,
+/// total_us, elems_per_cycle, cycles_per_elem)`. `speedup` is vs the M1
+/// row of the same block (`None` for the M1 itself).
+pub struct PaperRow {
+    pub algorithm: &'static str,
+    pub system: &'static str,
+    pub n: usize,
+    pub cycles: u64,
+    pub speedup: Option<f64>,
+    pub total_us: f64,
+    pub elems_per_cycle: f64,
+    pub cycles_per_elem: f64,
+}
+
+/// Table 5, verbatim.
+pub const TABLE5: &[PaperRow] = &[
+    PaperRow { algorithm: "translation", system: "M1", n: 64, cycles: 96, speedup: None, total_us: 0.96, elems_per_cycle: 0.667, cycles_per_elem: 1.5 },
+    PaperRow { algorithm: "translation", system: "80486", n: 64, cycles: 769, speedup: Some(8.01), total_us: 7.69, elems_per_cycle: 0.083, cycles_per_elem: 12.0 },
+    PaperRow { algorithm: "translation", system: "80386", n: 64, cycles: 1723, speedup: Some(17.94), total_us: 43.075, elems_per_cycle: 0.037, cycles_per_elem: 26.9 },
+    PaperRow { algorithm: "scaling", system: "M1", n: 64, cycles: 55, speedup: None, total_us: 0.55, elems_per_cycle: 1.16, cycles_per_elem: 0.859 },
+    PaperRow { algorithm: "scaling", system: "80486", n: 64, cycles: 578, speedup: Some(10.51), total_us: 5.78, elems_per_cycle: 0.047, cycles_per_elem: 9.03 },
+    PaperRow { algorithm: "scaling", system: "80386", n: 64, cycles: 1348, speedup: Some(24.51), total_us: 33.7, elems_per_cycle: 0.11, cycles_per_elem: 21.2 },
+    PaperRow { algorithm: "rotation-I", system: "M1", n: 64, cycles: 256, speedup: None, total_us: 2.56, elems_per_cycle: 0.25, cycles_per_elem: 4.0 },
+    PaperRow { algorithm: "rotation-I", system: "Pentium", n: 64, cycles: 10151, speedup: Some(39.65), total_us: 76.32, elems_per_cycle: 0.006, cycles_per_elem: 158.6 },
+    PaperRow { algorithm: "rotation-I", system: "80486", n: 64, cycles: 27038, speedup: Some(105.62), total_us: 270.38, elems_per_cycle: 0.002, cycles_per_elem: 422.4 },
+    PaperRow { algorithm: "rotation-II", system: "M1", n: 16, cycles: 70, speedup: None, total_us: 0.7, elems_per_cycle: 0.228, cycles_per_elem: 4.375 },
+    PaperRow { algorithm: "rotation-II", system: "Pentium", n: 16, cycles: 1328, speedup: Some(18.97), total_us: 9.98, elems_per_cycle: 0.012, cycles_per_elem: 83.0 },
+    PaperRow { algorithm: "rotation-II", system: "80486", n: 16, cycles: 3354, speedup: Some(47.91), total_us: 33.54, elems_per_cycle: 0.0047, cycles_per_elem: 209.6 },
+    PaperRow { algorithm: "translation", system: "M1", n: 8, cycles: 21, speedup: None, total_us: 0.21, elems_per_cycle: 0.38, cycles_per_elem: 2.625 },
+    PaperRow { algorithm: "translation", system: "80486", n: 8, cycles: 90, speedup: Some(4.29), total_us: 0.9, elems_per_cycle: 0.088, cycles_per_elem: 11.36 },
+    PaperRow { algorithm: "translation", system: "80386", n: 8, cycles: 220, speedup: Some(10.48), total_us: 5.5, elems_per_cycle: 0.036, cycles_per_elem: 27.5 },
+    PaperRow { algorithm: "scaling", system: "M1", n: 8, cycles: 14, speedup: None, total_us: 0.14, elems_per_cycle: 0.57, cycles_per_elem: 1.75 },
+    PaperRow { algorithm: "scaling", system: "80486", n: 8, cycles: 74, speedup: Some(5.28), total_us: 0.74, elems_per_cycle: 0.108, cycles_per_elem: 9.25 },
+    PaperRow { algorithm: "scaling", system: "80386", n: 8, cycles: 172, speedup: Some(12.29), total_us: 4.3, elems_per_cycle: 0.46, cycles_per_elem: 21.7 },
+];
+
+/// Published cycle count, if the paper reports one for this cell.
+pub fn cycles(algorithm: &str, system: &str, n: usize) -> Option<u64> {
+    TABLE5
+        .iter()
+        .find(|r| r.algorithm == algorithm && r.system == system && r.n == n)
+        .map(|r| r.cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_finds_published_cells() {
+        assert_eq!(cycles("translation", "M1", 64), Some(96));
+        assert_eq!(cycles("scaling", "80386", 8), Some(172));
+        assert_eq!(cycles("rotation-I", "Pentium", 64), Some(10151));
+        assert_eq!(cycles("translation", "Pentium", 64), None);
+    }
+
+    #[test]
+    fn table5_has_all_six_blocks() {
+        let m1_rows = TABLE5.iter().filter(|r| r.system == "M1").count();
+        assert_eq!(m1_rows, 6);
+        assert_eq!(TABLE5.len(), 18);
+    }
+}

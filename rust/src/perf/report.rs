@@ -1,0 +1,127 @@
+//! Rendering: ASCII tables, ASCII bar charts (the figures), and CSV.
+
+use super::experiments::Row;
+
+/// Render comparison rows as an ASCII table with measured + paper columns.
+pub fn render_table(title: &str, blocks: &[Vec<Row>]) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(&format!(
+        "{:<14} {:<8} {:>4} {:>9} {:>9} {:>8} {:>10} {:>9} {:>10} {:>9}\n",
+        "algorithm", "system", "n", "cycles", "paper", "speedup", "total µs", "el/cyc", "cyc/el", "Δpaper%"
+    ));
+    out.push_str(&"-".repeat(100));
+    out.push('\n');
+    for block in blocks {
+        let m1_cycles = block.first().map(|r| r.cycles).unwrap_or(1);
+        for (i, row) in block.iter().enumerate() {
+            let speedup = if i == 0 {
+                "—".to_string()
+            } else {
+                format!("{:.2}", row.cycles as f64 / m1_cycles as f64)
+            };
+            let paper = row
+                .paper_cycles
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "—".to_string());
+            let delta = row
+                .paper_cycles
+                .map(|c| {
+                    format!("{:+.1}", 100.0 * (row.cycles as f64 - c as f64) / c as f64)
+                })
+                .unwrap_or_else(|| "—".to_string());
+            out.push_str(&format!(
+                "{:<14} {:<8} {:>4} {:>9} {:>9} {:>8} {:>10.3} {:>9.3} {:>10.3} {:>9}\n",
+                row.algorithm,
+                row.system,
+                row.n,
+                row.cycles,
+                paper,
+                speedup,
+                row.total_us(),
+                row.elems_per_cycle(),
+                row.cycles_per_elem(),
+                delta,
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render one figure as an ASCII bar chart.
+pub fn render_figure(title: &str, rows: &[Row], per_element: bool) -> String {
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let values: Vec<f64> = rows
+        .iter()
+        .map(|r| if per_element { r.cycles_per_elem() } else { r.cycles as f64 })
+        .collect();
+    let max = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-9);
+    for (row, v) in rows.iter().zip(&values) {
+        let width = ((v / max) * 50.0).round() as usize;
+        let bar: String = "█".repeat(width.max(1));
+        out.push_str(&format!("{:<8} {:>10.3} |{}\n", row.system, v, bar));
+    }
+    out
+}
+
+/// CSV serialization of comparison rows (one line per system).
+pub fn to_csv(blocks: &[Vec<Row>]) -> String {
+    let mut out = String::from(
+        "algorithm,system,n,cycles_measured,cycles_paper,total_us,elems_per_cycle,cycles_per_elem\n",
+    );
+    for row in blocks.iter().flatten() {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.4},{:.4},{:.4}\n",
+            row.algorithm,
+            row.system,
+            row.n,
+            row.cycles,
+            row.paper_cycles.map(|c| c.to_string()).unwrap_or_default(),
+            row.total_us(),
+            row.elems_per_cycle(),
+            row.cycles_per_elem(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::experiments::{figure, table5};
+
+    #[test]
+    fn table_render_includes_all_systems() {
+        let s = render_table("Table 5", &table5());
+        assert!(s.contains("M1"));
+        assert!(s.contains("80486"));
+        assert!(s.contains("80386"));
+        assert!(s.contains("Pentium"));
+        assert!(s.contains("rotation-I"));
+        // The calibrated cells show zero deviation.
+        assert!(s.contains("+0.0"));
+    }
+
+    #[test]
+    fn figure_render_has_bars() {
+        let (title, rows, per_elem) = figure(10);
+        let s = render_figure(&title, &rows, per_elem);
+        assert!(s.contains("Figure 10"));
+        assert!(s.contains('█'));
+        // Three systems, three bars.
+        assert_eq!(s.matches('|').count(), 3);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = to_csv(&table5());
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert!(lines[0].starts_with("algorithm,system"));
+        assert_eq!(lines.len(), 1 + 6 * 3);
+        assert!(lines[1].starts_with("translation,M1,64,96,96"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact discovery: map artifact names to `.hlo.txt` paths.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Registry of AOT artifacts on disk.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    names: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactRegistry {
+    /// Scan a directory for `<name>.hlo.txt` files.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut names = BTreeMap::new();
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                    names.insert(name.to_string(), path.clone());
+                }
+            }
+        }
+        if names.is_empty() {
+            bail!("no .hlo.txt artifacts in {} (run `make artifacts`)", dir.display());
+        }
+        Ok(ArtifactRegistry { dir, names })
+    }
+
+    /// Default location: `$MORPHO_ARTIFACTS`, else `./artifacts`, else
+    /// `<crate root>/artifacts` (so tests/examples work from any cwd).
+    pub fn discover() -> Result<ArtifactRegistry> {
+        if let Ok(dir) = std::env::var("MORPHO_ARTIFACTS") {
+            return ArtifactRegistry::open(dir);
+        }
+        let candidates =
+            [PathBuf::from("artifacts"), Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")];
+        for c in &candidates {
+            if c.is_dir() {
+                return ArtifactRegistry::open(c);
+            }
+        }
+        bail!("no artifacts directory found (run `make artifacts`)")
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.names.keys().map(String::as_str)
+    }
+
+    pub fn path(&self, name: &str) -> Result<&Path> {
+        self.names
+            .get(name)
+            .map(PathBuf::as_path)
+            .with_context(|| format!("unknown artifact `{name}` in {}", self.dir.display()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_rejects_missing_dir() {
+        assert!(ArtifactRegistry::open("/nonexistent/morpho").is_err());
+    }
+
+    #[test]
+    fn scans_hlo_files() {
+        let tmp = std::env::temp_dir().join(format!("morpho-art-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        std::fs::write(tmp.join("bar.hlo.txt"), "HloModule bar").unwrap();
+        std::fs::write(tmp.join("ignored.txt"), "").unwrap();
+        let reg = ArtifactRegistry::open(&tmp).unwrap();
+        let names: Vec<&str> = reg.names().collect();
+        assert_eq!(names, vec!["bar", "foo"]);
+        assert!(reg.contains("foo"));
+        assert!(!reg.contains("ignored"));
+        assert!(reg.path("foo").unwrap().ends_with("foo.hlo.txt"));
+        assert!(reg.path("baz").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

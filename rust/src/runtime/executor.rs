@@ -1,0 +1,118 @@
+//! Compile-and-execute of HLO-text artifacts on the PJRT CPU client, with
+//! an executable cache (each artifact compiles once per process).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactRegistry;
+
+/// The PJRT executor with a per-name executable cache.
+///
+/// `PjRtClient` is `Rc`-based (not `Send`), so an `Executor` lives on one
+/// thread; the coordinator gives its XLA backend a dedicated worker
+/// thread that owns the executor and feeds it through channels.
+pub struct Executor {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over a registry.
+    pub fn new(registry: ArtifactRegistry) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Executor { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create with the default artifact discovery.
+    pub fn discover() -> Result<Executor> {
+        Executor::new(ArtifactRegistry::discover()?)
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure an artifact is compiled, then run `f` on the cached
+    /// executable (executables are neither `Clone` nor `Send`, so access
+    /// stays inside the cache borrow).
+    fn with_executable<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        if !self.cache.borrow().contains_key(name) {
+            let path = self.registry.path(name)?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).with_context(|| format!("compile `{name}`"))?;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+        }
+        let cache = self.cache.borrow();
+        f(cache.get(name).expect("just inserted"))
+    }
+
+    /// Pre-compile a set of artifacts (warm-up before serving).
+    pub fn warm_up<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for name in names {
+            self.with_executable(name, |_| Ok(()))?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 vector inputs; returns the flattened
+    /// f32 outputs (the artifacts are lowered with `return_tuple=True`,
+    /// so the single result literal is a tuple which we unpack).
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        self.with_executable(name, |exe| {
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute `{name}`"))?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().map_err(Into::into))
+                .collect()
+        })
+    }
+
+    /// Execute with explicitly shaped inputs (`(data, dims)` pairs), for
+    /// matrix artifacts.
+    pub fn run_f32_shaped(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(v, dims)| xla::Literal::vec1(v).reshape(dims))
+            .collect::<std::result::Result<_, _>>()?;
+        self.with_executable(name, |exe| {
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute `{name}`"))?[0][0]
+                .to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().map_err(Into::into))
+                .collect()
+        })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

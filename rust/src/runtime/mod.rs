@@ -1,0 +1,12 @@
+//! # PJRT runtime — the request-path bridge to the AOT artifacts
+//!
+//! Loads the HLO-text artifacts `python/compile/aot.py` produced, compiles
+//! them once on the PJRT CPU client (`xla` crate), and executes them from
+//! the coordinator's hot path. Python never runs here — the artifacts are
+//! plain HLO, and after `make artifacts` the binary is self-contained.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::ArtifactRegistry;
+pub use executor::Executor;

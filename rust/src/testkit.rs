@@ -1,0 +1,137 @@
+//! Self-contained testing/benchmarking support: a deterministic PRNG and a
+//! tiny property-testing driver, used because this workspace builds fully
+//! offline (no `rand`/`proptest`/`criterion` available).
+
+/// xorshift64* — deterministic, seedable, good enough for test-case
+/// generation and synthetic workloads (NOT cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.below((hi - lo + 1) as u64) as i64)
+    }
+
+    pub fn i16(&mut self) -> i16 {
+        self.next_u64() as i16
+    }
+
+    /// A "small" i16 that never overflows 16-bit adds/muls in pairs —
+    /// useful when testing exact agreement between backends.
+    pub fn small_i16(&mut self) -> i16 {
+        self.range_i64(-100, 100) as i16
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        // Uniform in [0, 1).
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Vector of small i16 values.
+    pub fn small_vec(&mut self, len: usize) -> Vec<i16> {
+        (0..len).map(|_| self.small_i16()).collect()
+    }
+}
+
+/// Run a randomized property `cases` times with distinct deterministic
+/// seeds; panics (with the failing seed) on the first violation.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case + 1) ^ 0xDEAD_BEEF;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn range_is_inclusive_and_covers_endpoints() {
+        let mut rng = Rng::new(5);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = rng.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v));
+            saw_lo |= v == -2;
+            saw_hi |= v == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let v = rng.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fails", 10, |rng| assert!(rng.below(10) > 100));
+    }
+}

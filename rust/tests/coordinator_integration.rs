@@ -1,0 +1,227 @@
+//! End-to-end coordinator over the real backends, including the XLA
+//! (PJRT artifact) path. Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use morpho::coordinator::{
+    BackendChoice, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use morpho::graphics::{Transform, TransformPipeline};
+
+fn xla_coordinator(workers: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        backend: BackendChoice::Xla,
+        workers,
+        batcher: BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn xla_backend_serves_correct_transforms() {
+    let c = xla_coordinator(1);
+    let n = 500;
+    let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 60.0).collect();
+    let ys: Vec<f32> = (0..n).map(|i| (i % 37) as f32).collect();
+    let transforms = vec![
+        Transform::Rotate { theta: 0.8 },
+        Transform::Translate { tx: 5.0, ty: -2.0 },
+    ];
+    let resp = c.transform_blocking(xs.clone(), ys.clone(), transforms.clone()).unwrap();
+    assert_eq!(resp.timing.backend, BackendKind::Xla);
+
+    let pipe = TransformPipeline::new(transforms);
+    let mut nx = xs;
+    let mut ny = ys;
+    pipe.apply_native(&mut nx, &mut ny);
+    for i in 0..n {
+        assert!((resp.xs[i] - nx[i]).abs() < 1e-2, "x[{i}]: {} vs {}", resp.xs[i], nx[i]);
+        assert!((resp.ys[i] - ny[i]).abs() < 1e-2);
+    }
+    c.shutdown();
+}
+
+#[test]
+fn xla_backend_handles_concurrent_clients() {
+    let c = Arc::new(xla_coordinator(1));
+    let handles: Vec<_> = (0..6)
+        .map(|t| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                for i in 0..10u64 {
+                    let n = 64 + (t * 100 + i as usize * 7) % 1000;
+                    let xs: Vec<f32> = (0..n).map(|k| k as f32).collect();
+                    let ys = vec![1.0f32; n];
+                    let tx = (t % 2) as f32 * 3.0;
+                    let resp = c
+                        .transform_blocking(
+                            xs.clone(),
+                            ys,
+                            vec![Transform::Translate { tx, ty: 0.5 }],
+                        )
+                        .unwrap();
+                    for k in (0..n).step_by(97) {
+                        assert!((resp.xs[k] - (xs[k] + tx)).abs() < 1e-3);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = c.metrics();
+    assert_eq!(m.requests, 60);
+    assert_eq!(m.backend_errors, 0);
+}
+
+#[test]
+fn all_three_backends_agree() {
+    let n = 128;
+    // Integer coordinates + integer translation so the M1's 16-bit
+    // fixed-point path is exact (fractional inputs quantize by design).
+    let xs: Vec<f32> = (0..n).map(|i| i as f32 - 64.0).collect();
+    let ys: Vec<f32> = (0..n).map(|i| 32.0 - ((i as f32) * 0.5).floor() * 2.0).collect();
+    let transforms = vec![Transform::Translate { tx: 7.0, ty: -3.0 }];
+
+    let mut answers = Vec::new();
+    for choice in [BackendChoice::Native, BackendChoice::Xla, BackendChoice::M1Sim] {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: choice,
+            workers: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let resp = c.transform_blocking(xs.clone(), ys.clone(), transforms.clone()).unwrap();
+        answers.push((choice, resp));
+        c.shutdown();
+    }
+    let native = answers[0].1.clone();
+    for (choice, resp) in &answers[1..] {
+        for i in 0..n {
+            assert!(
+                (resp.xs[i] - native.xs[i]).abs() < 1e-3,
+                "{choice:?} x[{i}]: {} vs {}",
+                resp.xs[i],
+                native.xs[i]
+            );
+            assert!((resp.ys[i] - native.ys[i]).abs() < 1e-3);
+        }
+    }
+    // The M1 path must also have reported cycles.
+    assert!(answers[2].1.timing.simulated_cycles.unwrap() > 0);
+}
+
+#[test]
+fn backpressure_bounds_queue_growth() {
+    // A tiny queue with the (slower) simulator backend: submissions must
+    // block rather than grow unboundedly, and everything still completes.
+    let c = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::M1Sim,
+            queue_capacity: 4,
+            job_capacity: 4,
+            workers: 1,
+            batcher: BatcherConfig { max_wait: Duration::from_micros(100), ..Default::default() },
+        })
+        .unwrap(),
+    );
+    let receivers: Vec<_> = (0..40)
+        .map(|i| {
+            c.submit(
+                vec![i as f32; 64],
+                vec![0.0; 64],
+                vec![Transform::Translate { tx: 1.0, ty: 1.0 }],
+            )
+            .unwrap()
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.xs[0], i as f32 + 1.0);
+    }
+}
+
+#[test]
+fn batching_merges_same_transform_requests() {
+    // Submit many tiny same-transform requests quickly with a generous
+    // batching window: total jobs must be well below request count.
+    let c = Coordinator::start(CoordinatorConfig {
+        backend: BackendChoice::Native,
+        workers: 1,
+        batcher: BatcherConfig {
+            max_wait: Duration::from_millis(20),
+            flush_points: 4096,
+            max_tile: 4096,
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let receivers: Vec<_> = (0..100)
+        .map(|i| {
+            c.submit(
+                vec![i as f32; 8],
+                vec![0.0; 8],
+                vec![Transform::Scale { sx: 2.0, sy: 2.0 }],
+            )
+            .unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap();
+    }
+    let m = c.metrics();
+    assert_eq!(m.requests, 100);
+    assert!(
+        m.jobs <= 50,
+        "expected dynamic batching to merge requests: jobs={} requests={}",
+        m.jobs,
+        m.requests
+    );
+    assert!(m.mean_batch_points() >= 16.0);
+    c.shutdown();
+}
+
+#[test]
+fn dropped_receiver_does_not_wedge_the_coordinator() {
+    // A client that submits and walks away must not poison the worker:
+    // subsequent requests still complete.
+    let c = Coordinator::start(CoordinatorConfig {
+        backend: BackendChoice::Native,
+        workers: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    for i in 0..20 {
+        let rx = c
+            .submit(vec![i as f32; 32], vec![0.0; 32], vec![Transform::Scale { sx: 2.0, sy: 2.0 }])
+            .unwrap();
+        drop(rx); // client gone before the response
+    }
+    // A patient client still gets served.
+    let resp = c
+        .transform_blocking(vec![21.0], vec![1.0], vec![Transform::Scale { sx: 2.0, sy: 2.0 }])
+        .unwrap();
+    assert_eq!(resp.xs, vec![42.0]);
+    assert_eq!(c.metrics().requests, 21);
+    c.shutdown();
+}
+
+#[test]
+fn nonfinite_params_are_served_not_crashed() {
+    // NaN transforms are the client's prerogative; the service must not
+    // panic (native semantics propagate the NaN).
+    let c = Coordinator::start(CoordinatorConfig::default()).unwrap();
+    let resp = c
+        .transform_blocking(
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![Transform::Scale { sx: f32::NAN, sy: 1.0 }],
+        )
+        .unwrap();
+    assert!(resp.xs[0].is_nan());
+    assert_eq!(resp.ys[1], 4.0);
+    c.shutdown();
+}

@@ -1,0 +1,233 @@
+//! Integration: the PJRT runtime loads every AOT artifact, executes it,
+//! and agrees with the native rust reference path. Requires
+//! `make artifacts` (skipped gracefully otherwise is NOT acceptable here —
+//! the end-to-end path is the point, so these tests fail loudly).
+
+use morpho::graphics::{Mat3, TransformPipeline, Transform};
+use morpho::runtime::Executor;
+
+fn executor() -> Executor {
+    Executor::discover().expect("run `make artifacts` first")
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let exe = executor();
+    let names: Vec<String> = exe.registry().names().map(String::from).collect();
+    assert!(names.len() >= 9, "expected the full artifact set, got {names:?}");
+    exe.warm_up(names.iter().map(String::as_str)).unwrap();
+    assert_eq!(exe.cached(), names.len());
+}
+
+#[test]
+fn translate64_matches_native() {
+    let exe = executor();
+    let u: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let v: Vec<f32> = (0..64).map(|i| 1000.0 + 3.0 * i as f32).collect();
+    let out = exe.run_f32("translate64", &[&u, &v]).unwrap();
+    assert_eq!(out.len(), 1);
+    let expected: Vec<f32> = u.iter().zip(&v).map(|(a, b)| a + b).collect();
+    assert_eq!(out[0], expected);
+}
+
+#[test]
+fn scale64_matches_native() {
+    let exe = executor();
+    let u: Vec<f32> = (0..64).map(|i| i as f32 - 32.0).collect();
+    let out = exe.run_f32("scale64", &[&u, &[5.0f32]]).unwrap();
+    let expected: Vec<f32> = u.iter().map(|a| 5.0 * a).collect();
+    assert_eq!(out[0], expected);
+}
+
+#[test]
+fn affine64_matches_native_pipeline() {
+    let exe = executor();
+    let pipe = TransformPipeline::new(vec![
+        Transform::Rotate { theta: 0.37 },
+        Transform::Scale { sx: 1.5, sy: 0.75 },
+        Transform::Translate { tx: 12.0, ty: -8.0 },
+    ]);
+    let m = pipe.matrix();
+    let [a, b, c, d] = m.linear();
+    let (tx, ty) = m.translation();
+    let params = [a, b, c, d, tx, ty];
+
+    let xs: Vec<f32> = (0..64).map(|i| (i as f32) * 0.5 - 16.0).collect();
+    let ys: Vec<f32> = (0..64).map(|i| (i as f32) * -0.25 + 8.0).collect();
+    let out = exe.run_f32("affine64", &[&xs, &ys, &params]).unwrap();
+    assert_eq!(out.len(), 2);
+
+    let mut nx = xs.clone();
+    let mut ny = ys.clone();
+    pipe.apply_native(&mut nx, &mut ny);
+    for i in 0..64 {
+        assert!((out[0][i] - nx[i]).abs() < 1e-3, "x[{i}]: {} vs {}", out[0][i], nx[i]);
+        assert!((out[1][i] - ny[i]).abs() < 1e-3, "y[{i}]: {} vs {}", out[1][i], ny[i]);
+    }
+}
+
+#[test]
+fn affine4096_handles_bulk_tiles() {
+    let exe = executor();
+    let n = 4096;
+    let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+    let ys: Vec<f32> = (0..n).map(|i| -(i as f32) * 0.02).collect();
+    let params = [2.0f32, 0.0, 0.0, 2.0, 1.0, 1.0];
+    let out = exe.run_f32("affine4096", &[&xs, &ys, &params]).unwrap();
+    for i in (0..n).step_by(997) {
+        assert!((out[0][i] - (2.0 * xs[i] + 1.0)).abs() < 1e-3);
+        assert!((out[1][i] - (2.0 * ys[i] + 1.0)).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn pipeline3_matches_composed_native() {
+    let exe = executor();
+    let n = 1024;
+    let xs: Vec<f32> = (0..n).map(|i| (i % 101) as f32 - 50.0).collect();
+    let ys: Vec<f32> = (0..n).map(|i| (i % 73) as f32 - 36.0).collect();
+    let stages = [
+        Transform::Scale { sx: 2.0, sy: 2.0 },
+        Transform::Rotate { theta: std::f32::consts::FRAC_PI_4 },
+        Transform::Translate { tx: -3.0, ty: 9.0 },
+    ];
+    let ps: Vec<[f32; 6]> = stages
+        .iter()
+        .map(|t| {
+            let m = t.matrix();
+            let [a, b, c, d] = m.linear();
+            let (tx, ty) = m.translation();
+            [a, b, c, d, tx, ty]
+        })
+        .collect();
+    let out = exe
+        .run_f32("pipeline3_1024", &[&xs, &ys, &ps[0], &ps[1], &ps[2]])
+        .unwrap();
+
+    let pipe = TransformPipeline::new(stages.to_vec());
+    let mut nx = xs.clone();
+    let mut ny = ys.clone();
+    pipe.apply_native(&mut nx, &mut ny);
+    for i in (0..n).step_by(131) {
+        assert!((out[0][i] - nx[i]).abs() < 1e-2, "x[{i}]: {} vs {}", out[0][i], nx[i]);
+        assert!((out[1][i] - ny[i]).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn matmul8_matches_native() {
+    let exe = executor();
+    let a: Vec<f32> = (0..64).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+    let b: Vec<f32> = (0..64).map(|i| ((i * 5) % 11) as f32 - 5.0).collect();
+    let out = exe
+        .run_f32_shaped("matmul8", &[(&a, &[8, 8]), (&b, &[8, 8])])
+        .unwrap();
+    for i in 0..8 {
+        for j in 0..8 {
+            let expected: f32 = (0..8).map(|k| a[i * 8 + k] * b[k * 8 + j]).sum();
+            assert!((out[0][i * 8 + j] - expected).abs() < 1e-3, "C[{i}][{j}]");
+        }
+    }
+}
+
+#[test]
+fn rotation_via_matmul_artifact_matches_mat3() {
+    // Rotation as the paper does it (§5.3): a matrix product. Rotate the
+    // 8 corners of a square via matmul8 against Mat3 reference.
+    let exe = executor();
+    let theta = 0.61f32;
+    let (s, c) = theta.sin_cos();
+    // Rotation matrix embedded in an 8×8 identity-padded matrix.
+    let mut rot = vec![0f32; 64];
+    for i in 0..8 {
+        rot[i * 8 + i] = 1.0;
+    }
+    rot[0] = c;
+    rot[1] = -s;
+    rot[8] = s;
+    rot[9] = c;
+    // Points as columns: row 0 = xs, row 1 = ys.
+    let pts: [(f32, f32); 8] =
+        [(1.0, 1.0), (-1.0, 1.0), (-1.0, -1.0), (1.0, -1.0), (2.0, 0.0), (0.0, 2.0), (3.0, -1.0), (-2.0, 2.0)];
+    let mut b = vec![0f32; 64];
+    for (j, (x, y)) in pts.iter().enumerate() {
+        b[j] = *x;
+        b[8 + j] = *y;
+    }
+    let out = exe
+        .run_f32_shaped("matmul8", &[(&rot, &[8, 8]), (&b, &[8, 8])])
+        .unwrap();
+    for (j, (x, y)) in pts.iter().enumerate() {
+        let q = Mat3::rotate(theta).apply(morpho::graphics::Point2::new(*x, *y));
+        assert!((out[0][j] - q.x).abs() < 1e-4);
+        assert!((out[0][8 + j] - q.y).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn affine3d_matches_mat4_and_m1_mapping() {
+    // Cross-layer agreement: the AOT 3-D artifact (L1/L2), the Mat4
+    // native path (L3), and the M1 Point3 mapping (simulator) must agree
+    // on an integer-exact transform.
+    use morpho::graphics::three_d::Mat4;
+    use morpho::mapping::{runner::run_routine3_on, Point3TransformMapping};
+    use morpho::morphosys::M1System;
+
+    let exe = executor();
+    let n = 1024;
+    let xs: Vec<f32> = (0..n).map(|i| (i % 101) as f32 - 50.0).collect();
+    let ys: Vec<f32> = (0..n).map(|i| (i % 83) as f32 - 41.0).collect();
+    let zs: Vec<f32> = (0..n).map(|i| (i % 67) as f32 - 33.0).collect();
+    // Integer transform: swap axes + translate.
+    let m = Mat4 {
+        m: [
+            [0.0, -1.0, 0.0, 5.0],
+            [1.0, 0.0, 0.0, -3.0],
+            [0.0, 0.0, 1.0, 7.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+    let params = m.affine_params();
+    let out = exe.run_f32("affine3d_1024", &[&xs, &ys, &zs, &params]).unwrap();
+    assert_eq!(out.len(), 3);
+    for i in (0..n).step_by(37) {
+        let p = m.apply(morpho::graphics::Point3::new(xs[i], ys[i], zs[i]));
+        assert!((out[0][i] - p.x).abs() < 1e-3);
+        assert!((out[1][i] - p.y).abs() < 1e-3);
+        assert!((out[2][i] - p.z).abs() < 1e-3);
+    }
+
+    // M1 mapping on the first 64 points (Q0 integer matrix).
+    let mapping = Point3TransformMapping {
+        n: 64,
+        m: [0, -1, 0, 1, 0, 0, 0, 0, 1],
+        t: [5, -3, 7],
+        shift: 0,
+    };
+    let ix: Vec<i16> = xs[..64].iter().map(|v| *v as i16).collect();
+    let iy: Vec<i16> = ys[..64].iter().map(|v| *v as i16).collect();
+    let iz: Vec<i16> = zs[..64].iter().map(|v| *v as i16).collect();
+    let sim = run_routine3_on(&mut M1System::new(), &mapping.compile(), &ix, Some(&iy), Some(&iz));
+    let (sx, rest) = sim.result.split_at(64);
+    let (sy, sz) = rest.split_at(64);
+    for i in 0..64 {
+        assert_eq!(sx[i] as f32, out[0][i], "x[{i}]");
+        assert_eq!(sy[i] as f32, out[1][i], "y[{i}]");
+        assert_eq!(sz[i] as f32, out[2][i], "z[{i}]");
+    }
+}
+
+#[test]
+fn corrupt_artifact_fails_loudly_not_silently() {
+    use morpho::runtime::{ArtifactRegistry, Executor};
+    let tmp = std::env::temp_dir().join(format!("morpho-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "HloModule bad\nthis is not hlo").unwrap();
+    let exec = Executor::new(ArtifactRegistry::open(&tmp).unwrap()).unwrap();
+    let err = exec.run_f32("bad", &[&[1.0f32]]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "error should name the artifact: {msg}");
+    // Unknown artifacts are also a clean error.
+    assert!(exec.run_f32("nonexistent", &[]).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
