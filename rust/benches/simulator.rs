@@ -1,15 +1,62 @@
 //! Bench: simulator hot paths — RC-array broadcast throughput, full
 //! routine execution rate, x86 interpreter throughput. These are the
 //! numbers the §Perf optimization pass tracks.
+//!
+//! Besides the human-readable stdout report, the run writes
+//! `BENCH_simulator.json` (override the path with `BENCH_JSON`) so the
+//! perf trajectory can be tracked across PRs without scraping stdout.
 
 use morpho::baselines::routines as x86;
 use morpho::baselines::Cpu;
-use morpho::benchkit::{bench, section};
+use morpho::benchkit::{bench, section, Measurement};
 use morpho::mapping::{runner::run_routine_on, PointTransformMapping, VecVecMapping};
-use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, RcArray};
+use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, MuxASel, RcArray};
 use morpho::morphosys::{AluOp, M1System};
 
+/// One machine-readable result row.
+struct JsonRow {
+    bench: String,
+    mean_ns: f64,
+    iters: u64,
+    unit: &'static str,
+    throughput: f64,
+}
+
+fn row(m: &Measurement, unit: &'static str, throughput: f64) -> JsonRow {
+    JsonRow {
+        bench: m.name.clone(),
+        mean_ns: m.mean.as_secs_f64() * 1e9,
+        iters: m.iters,
+        unit,
+        throughput,
+    }
+}
+
+fn write_json(rows: &[JsonRow]) {
+    let path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_simulator.json".to_string());
+    let mut out = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"bench\": \"{}\", \"mean_ns\": {:.1}, \"iters\": {}, \"unit\": \"{}\", \"throughput\": {:.1}}}{}\n",
+            r.bench.replace('"', "'"),
+            r.mean_ns,
+            r.iters,
+            r.unit,
+            r.throughput,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn main() {
+    let mut rows = Vec::new();
+
     section("RC array broadcast (the innermost simulator loop)");
     let mut arr = RcArray::new();
     let cw = ContextWord::two_port(AluOp::Add);
@@ -20,10 +67,20 @@ fn main() {
             arr.broadcast(BroadcastMode::Column, col, &cw, &a, &b);
         }
     });
-    println!(
-        "  → {:.1} M cell-ops/s",
-        m.throughput(64.0) / 1e6
-    );
+    println!("  → {:.1} M cell-ops/s", m.throughput(64.0) / 1e6);
+    rows.push(row(&m, "cell_ops_per_s", m.throughput(64.0)));
+
+    // The general (interconnect) operand path, to track the non-fast-path
+    // cost separately from the dominant bus/bus case.
+    let mut west = ContextWord::two_port(AluOp::Add);
+    west.mux_a = MuxASel::West;
+    let m = bench("column broadcast (West-neighbour path)", || {
+        for col in 0..8 {
+            arr.broadcast(BroadcastMode::Column, col, &west, &a, &b);
+        }
+    });
+    println!("  → {:.1} M cell-ops/s", m.throughput(64.0) / 1e6);
+    rows.push(row(&m, "cell_ops_per_s", m.throughput(64.0)));
 
     section("full M1 routine simulation rate");
     let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
@@ -39,6 +96,7 @@ fn main() {
         1.0 / m.mean.as_secs_f64() / 1e3,
         m.throughput(64.0) / 1e6
     );
+    rows.push(row(&m, "routines_per_s", 1.0 / m.mean.as_secs_f64()));
 
     let pt = PointTransformMapping { n: 64, m: [0, -64, 64, 0], t: [3, -2], shift: 6 }.compile();
     let mut sys2 = M1System::new();
@@ -47,6 +105,7 @@ fn main() {
         std::hint::black_box(run_routine_on(&mut sys2, &pt, &u, Some(&v)));
     });
     println!("  → {:.1} M simulated-points/s", m.throughput(64.0) / 1e6);
+    rows.push(row(&m, "points_per_s", m.throughput(64.0)));
 
     section("x86 baseline interpreter");
     let ub: Vec<i16> = (0..64).collect();
@@ -56,9 +115,13 @@ fn main() {
             std::hint::black_box(x86::run_translation(cpu, &ub, &vb));
         });
         println!("  → {:.1} M interpreted-instr/s", m.throughput(9.0 * 64.0) / 1e6);
+        rows.push(row(&m, "instr_per_s", m.throughput(9.0 * 64.0)));
     }
     let m = bench("80486 matmul-8x8 listing", || {
         std::hint::black_box(x86::run_matmul(Cpu::I486, 8, &ub, &vb));
     });
     println!("  → {:.2}k matmuls/s", 1.0 / m.mean.as_secs_f64() / 1e3);
+    rows.push(row(&m, "matmuls_per_s", 1.0 / m.mean.as_secs_f64()));
+
+    write_json(&rows);
 }

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use super::artifacts::ArtifactRegistry;
+use super::pjrt as xla;
 
 /// The PJRT executor with a per-name executable cache.
 ///

@@ -7,6 +7,7 @@
 
 pub mod artifacts;
 pub mod executor;
+pub mod pjrt;
 
 pub use artifacts::ArtifactRegistry;
 pub use executor::Executor;

@@ -1,0 +1,105 @@
+//! PJRT bindings facade.
+//!
+//! With the `pjrt` cargo feature the executor compiles against the real
+//! external `xla` bindings crate (vendor it next to this workspace and add
+//! the dependency before enabling the feature). Without it — the offline
+//! default — this module supplies a type-compatible stub whose client
+//! constructor fails with a descriptive error, so `Executor::discover()`
+//! returns `Err(..)` and the coordinator's XLA backend falls back to the
+//! native path at worker startup instead of breaking the build.
+
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Error produced by every stub entry point.
+    #[derive(Debug)]
+    pub struct Error(&'static str);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str(self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    fn unavailable() -> Error {
+        Error("PJRT runtime unavailable: morpho was built without the `pjrt` feature")
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            Err(unavailable())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+            Err(unavailable())
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1(_values: &[f32]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+            Err(unavailable())
+        }
+
+        pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+            Err(unavailable())
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            Err(unavailable())
+        }
+    }
+}

@@ -20,6 +20,7 @@ fn xla_coordinator(workers: usize) -> Coordinator {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "asserts the XLA backend kind; without the (vendored-xla) `pjrt` feature workers fall back to native")]
 fn xla_backend_serves_correct_transforms() {
     let c = xla_coordinator(1);
     let n = 500;
