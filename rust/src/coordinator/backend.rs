@@ -91,19 +91,36 @@ impl XlaBackend {
         XlaBackend::new(Executor::discover()?)
     }
 
-    /// Tile choice (§Perf): the *largest* artifact tile that fits the
-    /// remaining points; for the tail, the smallest tile that covers it.
-    /// (The original smallest-≥ rule padded a 2 117-point job to 4 096 —
-    /// a 2× waste; greedy 1024+1024+64×2 chunks cut the animation
-    /// pipeline's XLA job latency ~40%.)
+    /// Tile choice (§Perf): see [`choose_tile`]. (The original smallest-≥
+    /// rule padded a 2 117-point job to 4 096 — a 2× waste; greedy
+    /// 1024+1024+64×2 chunks cut the animation pipeline's XLA job latency
+    /// ~40%.)
     fn tile_for(&self, n: usize) -> usize {
-        if let Some(&t) = self.tiles.iter().rev().find(|&&t| t <= n) {
-            // Prefer an exactly-covering smaller tile only when it wastes
-            // less than the big tile would process.
-            t
-        } else {
-            *self.tiles.first().unwrap()
+        choose_tile(&self.tiles, n)
+    }
+}
+
+/// Pick the artifact tile for `n` remaining points from `tiles` (sorted
+/// ascending, non-empty): greedily the *largest* tile that fits, unless a
+/// single covering tile finishes the job with less padding waste than the
+/// big tile would process — e.g. with tiles {64, 128}, 80 points run as
+/// one padded 128-tile call (48 wasted lanes) rather than two 64-tile
+/// calls. With no tile ≤ n, the smallest covering tile is the only
+/// choice.
+pub(crate) fn choose_tile(tiles: &[usize], n: usize) -> usize {
+    let biggest_fitting = tiles.iter().rev().find(|&&t| t <= n).copied();
+    let smallest_covering = tiles.iter().find(|&&t| t >= n).copied();
+    match (biggest_fitting, smallest_covering) {
+        (Some(fit), Some(cover)) => {
+            if cover - n < fit {
+                cover
+            } else {
+                fit
+            }
         }
+        (Some(fit), None) => fit,
+        (None, Some(cover)) => cover,
+        (None, None) => unreachable!("XlaBackend guarantees a non-empty tile list"),
     }
 }
 
@@ -232,6 +249,42 @@ impl Backend for M1SimBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The tile sequence `apply` would execute for an `n`-point job.
+    fn tile_plan(tiles: &[usize], mut n: usize) -> Vec<usize> {
+        let mut plan = Vec::new();
+        while n > 0 {
+            let t = choose_tile(tiles, n);
+            plan.push(t);
+            n -= t.min(n);
+        }
+        plan
+    }
+
+    #[test]
+    fn tile_plan_for_2117_points_is_greedy() {
+        // The §Perf doc's motivating case: 2 117 points over the standard
+        // {64, 1024, 4096} artifact set run as 1024+1024+64+64 — the
+        // 4096-covering tile would waste 1 979 padded lanes, more than a
+        // whole 1024 tile processes, so greedy wins at every step.
+        assert_eq!(tile_plan(&[64, 1024, 4096], 2117), vec![1024, 1024, 64, 64]);
+    }
+
+    #[test]
+    fn covering_tile_preferred_when_padding_waste_is_small() {
+        // 1 000 points with tiles {64, 1024}: one padded 1024 call (24
+        // wasted lanes) beats 15 × 64 + remainder.
+        assert_eq!(choose_tile(&[64, 1024], 1000), 1024);
+        assert_eq!(tile_plan(&[64, 1024], 1000), vec![1024]);
+        // 80 points with tiles {64, 128}: one 128 call (48 wasted lanes,
+        // less than the 64 the greedy tile would process) beats 64+64.
+        assert_eq!(tile_plan(&[64, 128], 80), vec![128]);
+        // Below the smallest tile, the only choice is the smallest tile.
+        assert_eq!(choose_tile(&[64, 1024], 5), 64);
+        // Exact fits stay exact.
+        assert_eq!(choose_tile(&[64, 1024], 1024), 1024);
+        assert_eq!(choose_tile(&[64, 1024], 64), 64);
+    }
 
     #[test]
     fn native_backend_applies_affine() {

@@ -2,7 +2,11 @@
 //! context words in main memory, run the TinyRISC program, read back the
 //! result.
 
-use crate::morphosys::{ExecutionReport, M1System};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::morphosys::{BroadcastSchedule, ExecutionReport, M1System, Program};
 
 use super::layout::{RESULT_ADDR, U_ADDR, V_ADDR, W_ADDR};
 use super::routines::MappedRoutine;
@@ -20,6 +24,36 @@ std::thread_local! {
     // stage all the memory they read, so chip-reset + reuse is sound.
     static SHARED_SYS: std::cell::RefCell<M1System> =
         std::cell::RefCell::new(M1System::new());
+
+    // Pre-decoded broadcast schedules, compiled once per distinct program
+    // and reused across run_routine calls (§Perf). Keyed by the program
+    // itself (exact structural equality), so a cache hit can never serve
+    // a stale schedule; `None` marks programs that don't compile
+    // (branches) and always take the interpreter.
+    static SCHEDULES: RefCell<HashMap<Program, Option<Arc<BroadcastSchedule>>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Bound on distinct cached programs per thread; the working set of any
+/// real workload (a handful of mapping shapes) is far below this.
+const SCHEDULE_CACHE_MAX: usize = 512;
+
+/// Look up (or compile and cache) the pre-decoded schedule of a program.
+pub fn schedule_for(program: &Program) -> Option<Arc<BroadcastSchedule>> {
+    SCHEDULES.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        // Probe before inserting: the hot path is a hit, and `entry`
+        // would clone the whole program as a key on every call.
+        if let Some(hit) = cache.get(program) {
+            return hit.clone();
+        }
+        if cache.len() > SCHEDULE_CACHE_MAX {
+            cache.clear(); // crude bound, same policy as the backend's routine cache
+        }
+        let compiled = BroadcastSchedule::compile(program).map(Arc::new);
+        cache.insert(program.clone(), compiled.clone());
+        compiled
+    })
 }
 
 /// Stage `u` (and optionally `v`) per the routine's input spec, stage the
@@ -75,7 +109,8 @@ pub fn run_routine3_on(
     for &(addr, word) in &routine.ctx_words {
         sys.mem.write_word(addr, word);
     }
-    let report = sys.run(&routine.program);
+    let schedule = schedule_for(&routine.program);
+    let report = sys.run_program(&routine.program, schedule.as_deref());
     let result = sys.mem.load_elements(RESULT_ADDR, routine.result_elems);
     RoutineOutput { result, report }
 }
@@ -269,6 +304,46 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn scheduled_path_is_bit_identical_to_the_interpreter() {
+        // `with_trace` forces the interpreter (schedules skip trace
+        // plumbing) with unchanged blocking-DMA accounting, so this pins
+        // the pre-decoded path against the reference executor across
+        // mapping shapes.
+        let mut rng = Rng::new(7);
+        let u64v = rng.small_vec(64);
+        let v64 = rng.small_vec(64);
+        let cases: Vec<(MappedRoutine, Vec<i16>, Option<Vec<i16>>)> = vec![
+            (VecVecMapping { n: 64, op: AluOp::Add }.compile(), u64v.clone(), Some(v64.clone())),
+            (VecVecMapping { n: 8, op: AluOp::Mul }.compile(), u64v[..8].to_vec(), Some(v64[..8].to_vec())),
+            (
+                VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 3 }.compile(),
+                u64v.clone(),
+                None,
+            ),
+            (
+                MatMulMapping { dim: 8, a: rng.small_vec(64), shift: 0 }.compile(),
+                u64v.clone(),
+                None,
+            ),
+            (
+                PointTransformMapping { n: 64, m: [0, -64, 64, 0], t: [3, -2], shift: 6 }.compile(),
+                u64v.clone(),
+                Some(v64.clone()),
+            ),
+        ];
+        for (routine, u, v) in &cases {
+            let fast = run_routine(routine, u, v.as_deref());
+            let mut interp_sys = crate::morphosys::M1System::new().with_trace();
+            let interp = run_routine_on(&mut interp_sys, routine, u, v.as_deref());
+            assert_eq!(fast.result, interp.result, "{}", routine.name);
+            assert_eq!(fast.report.cycles, interp.report.cycles, "{}", routine.name);
+            assert_eq!(fast.report.slots, interp.report.slots, "{}", routine.name);
+            assert_eq!(fast.report.executed, interp.report.executed, "{}", routine.name);
+            assert_eq!(fast.report.broadcasts, interp.report.broadcasts, "{}", routine.name);
+        }
     }
 
     #[test]

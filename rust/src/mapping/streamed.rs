@@ -223,6 +223,35 @@ mod tests {
     }
 
     #[test]
+    fn property_streamed_and_naive_agree_in_both_dma_modes() {
+        // The streamed schedule is a pure permutation of the naive one:
+        // for any input, any covered size and either DMA model it must
+        // produce identical results (and match the native reference).
+        check("streamed == naive across DMA modes", 8, |rng: &mut Rng| {
+            for n in [64usize, 128, 512] {
+                let u = rng.small_vec(n);
+                let v = rng.small_vec(n);
+                let want = expected(&u, &v);
+                let naive = TiledVecVecMapping { n, op: AluOp::Add, streamed: false }.compile();
+                let streamed = TiledVecVecMapping { n, op: AluOp::Add, streamed: true }.compile();
+                for async_dma in [false, true] {
+                    let mk = || {
+                        if async_dma {
+                            M1System::new().with_async_dma()
+                        } else {
+                            M1System::new()
+                        }
+                    };
+                    let a = run_routine_on(&mut mk(), &naive, &u, Some(&v));
+                    let b = run_routine_on(&mut mk(), &streamed, &u, Some(&v));
+                    assert_eq!(a.result, want, "naive n={n} async={async_dma}");
+                    assert_eq!(b.result, want, "streamed n={n} async={async_dma}");
+                }
+            }
+        });
+    }
+
+    #[test]
     #[should_panic(expected = "multiple of 64")]
     fn ragged_sizes_rejected() {
         TiledVecVecMapping { n: 100, op: AluOp::Add, streamed: false }.compile();

@@ -6,6 +6,8 @@
 //! the RC array executes from the current one ("configuration data is also
 //! loaded into context memory without interrupting RC array operation").
 
+use super::rc_array::ContextWord;
+
 /// Context words per plane.
 pub const PLANE_WORDS: usize = 16;
 
@@ -13,7 +15,7 @@ pub const PLANE_WORDS: usize = 16;
 pub const PLANES: usize = 2;
 
 /// Context block: which broadcast direction the words configure.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Block {
     Column,
     Row,
@@ -37,10 +39,17 @@ impl Block {
 }
 
 /// The context memory.
+///
+/// Words are decoded into [`ContextWord`]s **at write time** (DMA fills
+/// happen once per configuration load), so the broadcast hot path reads a
+/// pre-decoded word instead of re-decoding the raw 32 bits on every
+/// 8-cell step (§Perf).
 #[derive(Debug, Clone)]
 pub struct ContextMemory {
     // [block][plane][word]
     words: Vec<u32>,
+    /// Decode of `words`, kept in lockstep by every write path.
+    decoded: Vec<ContextWord>,
 }
 
 impl Default for ContextMemory {
@@ -51,12 +60,16 @@ impl Default for ContextMemory {
 
 impl ContextMemory {
     pub fn new() -> ContextMemory {
-        ContextMemory { words: vec![0; 2 * PLANES * PLANE_WORDS] }
+        ContextMemory {
+            words: vec![0; 2 * PLANES * PLANE_WORDS],
+            decoded: vec![ContextWord::decode(0); 2 * PLANES * PLANE_WORDS],
+        }
     }
 
     /// Zero all contents in place (no reallocation).
     pub fn clear(&mut self) {
         self.words.fill(0);
+        self.decoded.fill(ContextWord::decode(0));
     }
 
     fn idx(block: Block, plane: usize, word: usize) -> usize {
@@ -69,8 +82,15 @@ impl ContextMemory {
         self.words[Self::idx(block, plane, word)]
     }
 
+    /// Read the pre-decoded form of a context word (the broadcast path).
+    pub fn read_decoded(&self, block: Block, plane: usize, word: usize) -> ContextWord {
+        self.decoded[Self::idx(block, plane, word)]
+    }
+
     pub fn write(&mut self, block: Block, plane: usize, word: usize, value: u32) {
-        self.words[Self::idx(block, plane, word)] = value;
+        let i = Self::idx(block, plane, word);
+        self.words[i] = value;
+        self.decoded[i] = ContextWord::decode(value);
     }
 
     /// DMA fill of consecutive words within one plane.
@@ -78,6 +98,9 @@ impl ContextMemory {
         assert!(word + values.len() <= PLANE_WORDS, "context fill out of range");
         let base = Self::idx(block, plane, word);
         self.words[base..base + values.len()].copy_from_slice(values);
+        for (i, &v) in values.iter().enumerate() {
+            self.decoded[base + i] = ContextWord::decode(v);
+        }
     }
 }
 
@@ -112,6 +135,18 @@ mod tests {
     fn overflowing_fill_panics() {
         let mut cm = ContextMemory::new();
         cm.write_slice(Block::Column, 0, 10, &[0; 8]);
+    }
+
+    #[test]
+    fn decoded_cache_tracks_every_write_path() {
+        let mut cm = ContextMemory::new();
+        cm.write(Block::Column, 0, 2, 0x0000_F400);
+        assert_eq!(cm.read_decoded(Block::Column, 0, 2), ContextWord::decode(0x0000_F400));
+        cm.write_slice(Block::Row, 1, 0, &[0x0000_9005, 0x0000_F400]);
+        assert_eq!(cm.read_decoded(Block::Row, 1, 0), ContextWord::decode(0x0000_9005));
+        assert_eq!(cm.read_decoded(Block::Row, 1, 1), ContextWord::decode(0x0000_F400));
+        cm.clear();
+        assert_eq!(cm.read_decoded(Block::Row, 1, 0), ContextWord::decode(0));
     }
 
     #[test]

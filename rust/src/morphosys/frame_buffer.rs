@@ -17,7 +17,7 @@ use crate::morphosys::rc_array::ARRAY_DIM;
 pub const BANK_ELEMS: usize = 2048;
 
 /// Frame-buffer set select (double buffering).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Set {
     Zero,
     One,
@@ -41,7 +41,7 @@ impl Set {
 }
 
 /// Frame-buffer bank select (operand bus A / B).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Bank {
     A,
     B,

@@ -24,11 +24,13 @@ pub mod dma;
 pub mod frame_buffer;
 pub mod mulate;
 pub mod rc_array;
+pub mod schedule;
 pub mod system;
 pub mod timing;
 pub mod tinyrisc;
 
 pub use frame_buffer::{Bank, FrameBuffer, Set};
 pub use rc_array::{AluOp, ContextWord, RcArray};
+pub use schedule::BroadcastSchedule;
 pub use system::{ExecutionReport, M1System};
 pub use tinyrisc::{Instruction, Program, Reg};

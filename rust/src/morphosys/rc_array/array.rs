@@ -5,10 +5,24 @@
 //! element of the operand buses (bank A / bank B of the frame buffer). Row
 //! broadcast is symmetric. Cells latch simultaneously; interconnect ports
 //! observe the *previous* step's output registers.
+//!
+//! # Data layout (§Perf)
+//!
+//! Cell state is stored as **struct-of-arrays planes** (`out`, `regs`,
+//! `acc`, `express`) rather than a `Vec` of cell structs, so the
+//! broadcast hot loop touches only the planes it needs and the
+//! interconnect borrows the `out`/`express` planes in place. A broadcast
+//! is executed in two phases — *gather* (resolve all eight lanes' operands
+//! against the current planes) then *commit* (latch all eight lanes) — so
+//! neighbour reads observe previous-step values without materializing the
+//! 64-cell `outputs()`/express snapshots the old engine copied on every
+//! step. Operand sources are classified once per context word
+//! ([`OperandPlan`]), with a branch-free fast path for the dominant
+//! bus/bus and bus/immediate words.
 
-use super::cell::{CellInputs, RcCell};
-use super::context::{ContextWord, MuxASel, MuxBSel};
-use super::interconnect::Interconnect;
+use super::cell::{self, CellInputs, RcCell};
+use super::context::ContextWord;
+use super::interconnect::{Interconnect, OperandSource};
 
 /// Edge length of the RC array (64 cells as an 8×8 matrix).
 pub const ARRAY_DIM: usize = 8;
@@ -24,10 +38,27 @@ pub enum BroadcastMode {
     Row,
 }
 
-/// The RC array.
+/// Map a broadcast lane to its cell coordinates.
+#[inline]
+fn line_cell(mode: BroadcastMode, index: usize, lane: usize) -> (usize, usize) {
+    match mode {
+        BroadcastMode::Column => (lane, index),
+        BroadcastMode::Row => (index, lane),
+    }
+}
+
+/// The RC array, stored as parallel state planes (row-major 8×8).
 #[derive(Debug, Clone)]
 pub struct RcArray {
-    cells: Vec<RcCell>, // row-major 8×8
+    /// Output registers — what the interconnect and `wfbi` observe.
+    out: [[i16; ARRAY_DIM]; ARRAY_DIM],
+    /// Per-cell register files (four 16-bit registers each).
+    regs: [[[i16; 4]; ARRAY_DIM]; ARRAY_DIM],
+    /// 32-bit multiply-accumulate registers.
+    acc: [[i32; ARRAY_DIM]; ARRAY_DIM],
+    /// Express-lane latches (driven when a context word has
+    /// `express_write`).
+    express: [[Option<i16>; ARRAY_DIM]; ARRAY_DIM],
 }
 
 impl Default for RcArray {
@@ -38,41 +69,68 @@ impl Default for RcArray {
 
 impl RcArray {
     pub fn new() -> RcArray {
-        RcArray { cells: vec![RcCell::new(); ARRAY_DIM * ARRAY_DIM] }
+        RcArray {
+            out: [[0; ARRAY_DIM]; ARRAY_DIM],
+            regs: [[[0; 4]; ARRAY_DIM]; ARRAY_DIM],
+            acc: [[0; ARRAY_DIM]; ARRAY_DIM],
+            express: [[None; ARRAY_DIM]; ARRAY_DIM],
+        }
     }
 
-    pub fn cell(&self, row: usize, col: usize) -> &RcCell {
-        &self.cells[row * ARRAY_DIM + col]
+    /// Output register of one cell.
+    pub fn out(&self, row: usize, col: usize) -> i16 {
+        self.out[row][col]
     }
 
-    pub fn cell_mut(&mut self, row: usize, col: usize) -> &mut RcCell {
-        &mut self.cells[row * ARRAY_DIM + col]
+    /// Set one cell's output register (tests / state injection).
+    pub fn set_out(&mut self, row: usize, col: usize, value: i16) {
+        self.out[row][col] = value;
+    }
+
+    /// One register of one cell's register file.
+    pub fn reg(&self, row: usize, col: usize, r: usize) -> i16 {
+        self.regs[row][col][r & 3]
+    }
+
+    /// Set one register of one cell's register file.
+    pub fn set_reg(&mut self, row: usize, col: usize, r: usize, value: i16) {
+        self.regs[row][col][r & 3] = value;
+    }
+
+    /// One cell's accumulator.
+    pub fn acc(&self, row: usize, col: usize) -> i32 {
+        self.acc[row][col]
+    }
+
+    /// One cell's express latch.
+    pub fn express(&self, row: usize, col: usize) -> Option<i16> {
+        self.express[row][col]
+    }
+
+    /// Assemble the AoS view of one cell (debug/inspection; the planes are
+    /// the source of truth).
+    pub fn cell(&self, row: usize, col: usize) -> RcCell {
+        RcCell {
+            regs: self.regs[row][col],
+            out: self.out[row][col],
+            acc: self.acc[row][col],
+            express: self.express[row][col],
+        }
     }
 
     /// Snapshot all output registers.
     pub fn outputs(&self) -> [[i16; ARRAY_DIM]; ARRAY_DIM] {
-        let mut o = [[0i16; ARRAY_DIM]; ARRAY_DIM];
-        for r in 0..ARRAY_DIM {
-            for c in 0..ARRAY_DIM {
-                o[r][c] = self.cell(r, c).out;
-            }
-        }
-        o
-    }
-
-    fn express_latches(&self) -> [[Option<i16>; ARRAY_DIM]; ARRAY_DIM] {
-        let mut x = [[None; ARRAY_DIM]; ARRAY_DIM];
-        for r in 0..ARRAY_DIM {
-            for c in 0..ARRAY_DIM {
-                x[r][c] = self.cell(r, c).express;
-            }
-        }
-        x
+        self.out
     }
 
     /// Execute one broadcast step: the context word drives line `index`
     /// (a column in `Column` mode, a row in `Row` mode); `bus_a`/`bus_b`
     /// carry the eight operand-bus elements for that line.
+    ///
+    /// Two-phase (gather, then commit): every lane's operands resolve
+    /// against the pre-step planes before any lane latches, preserving the
+    /// previous-step neighbour visibility of the hardware without copying
+    /// the planes.
     pub fn broadcast(
         &mut self,
         mode: BroadcastMode,
@@ -82,26 +140,40 @@ impl RcArray {
         bus_b: &[i16; ARRAY_DIM],
     ) {
         assert!(index < ARRAY_DIM, "broadcast line {index} out of range");
-        let outs = self.outputs();
-        let express = self.express_latches();
-        for lane in 0..ARRAY_DIM {
-            let (row, col) = match mode {
-                BroadcastMode::Column => (lane, index),
-                BroadcastMode::Row => (index, lane),
-            };
-            let ic = Interconnect { outs: &outs, express: &express };
-            let cell = self.cell(row, col);
-            let a = match cw.mux_a {
-                MuxASel::OperandBusA => bus_a[lane],
-                MuxASel::Reg(r) => cell.regs[r as usize & 3],
-                sel => ic.mux_a(row, col, sel).expect("interconnect source"),
-            };
-            let b = match cw.mux_b {
-                MuxBSel::OperandBusB => bus_b[lane],
-                MuxBSel::Reg(r) => cell.regs[r as usize & 3],
-                sel => ic.mux_b(row, col, sel).expect("interconnect source"),
-            };
-            self.cell_mut(row, col).execute(cw, CellInputs { a, b });
+        let mut ins = [CellInputs::default(); ARRAY_DIM];
+        let plan = cw.operand_plan();
+        if plan.is_bus_bus() {
+            // Fast path: both operands stream straight off the buses.
+            for ((slot, &a), &b) in ins.iter_mut().zip(bus_a).zip(bus_b) {
+                *slot = CellInputs { a, b };
+            }
+        } else {
+            let ic = Interconnect { outs: &self.out, express: &self.express };
+            for (lane, slot) in ins.iter_mut().enumerate() {
+                let (row, col) = line_cell(mode, index, lane);
+                let a = match plan.a {
+                    OperandSource::Bus => bus_a[lane],
+                    OperandSource::Reg(r) => self.regs[row][col][r as usize],
+                    OperandSource::Port(p) => ic.port(row, col, p),
+                };
+                let b = match plan.b {
+                    OperandSource::Bus => bus_b[lane],
+                    OperandSource::Reg(r) => self.regs[row][col][r as usize],
+                    OperandSource::Port(p) => ic.port(row, col, p),
+                };
+                *slot = CellInputs { a, b };
+            }
+        }
+        for (lane, &inputs) in ins.iter().enumerate() {
+            let (row, col) = line_cell(mode, index, lane);
+            cell::execute_step(
+                cw,
+                inputs,
+                &mut self.out[row][col],
+                &mut self.regs[row][col],
+                &mut self.acc[row][col],
+                &mut self.express[row][col],
+            );
         }
     }
 
@@ -110,25 +182,22 @@ impl RcArray {
     pub fn column_outputs(&self, col: usize) -> [i16; ARRAY_DIM] {
         let mut o = [0i16; ARRAY_DIM];
         for (r, v) in o.iter_mut().enumerate() {
-            *v = self.cell(r, col).out;
+            *v = self.out[r][col];
         }
         o
     }
 
     /// Read the eight output registers of a row.
     pub fn row_outputs(&self, row: usize) -> [i16; ARRAY_DIM] {
-        let mut o = [0i16; ARRAY_DIM];
-        for (c, v) in o.iter_mut().enumerate() {
-            *v = self.cell(row, c).out;
-        }
-        o
+        self.out[row]
     }
 
     /// Reset every cell.
     pub fn reset(&mut self) {
-        for cell in &mut self.cells {
-            cell.reset();
-        }
+        self.out = [[0; ARRAY_DIM]; ARRAY_DIM];
+        self.regs = [[[0; 4]; ARRAY_DIM]; ARRAY_DIM];
+        self.acc = [[0; ARRAY_DIM]; ARRAY_DIM];
+        self.express = [[None; ARRAY_DIM]; ARRAY_DIM];
     }
 }
 
@@ -136,6 +205,7 @@ impl RcArray {
 mod tests {
     use super::*;
     use crate::morphosys::rc_array::alu::AluOp;
+    use crate::morphosys::rc_array::context::{MuxASel, MuxBSel};
 
     #[test]
     fn column_broadcast_adds_buses_elementwise() {
@@ -178,7 +248,7 @@ mod tests {
         for r in 0..8 {
             for c in 0..8 {
                 let i = c * 8 + r;
-                assert_eq!(arr.cell(r, c).out, u[i] + v[i], "cell ({r},{c})");
+                assert_eq!(arr.out(r, c), u[i] + v[i], "cell ({r},{c})");
             }
         }
     }
@@ -188,7 +258,7 @@ mod tests {
         let mut arr = RcArray::new();
         // Preload column 0 outputs with known values.
         for r in 0..ARRAY_DIM {
-            arr.cell_mut(r, 0).out = (r as i16 + 1) * 10;
+            arr.set_out(r, 0, (r as i16 + 1) * 10);
         }
         // Column 1 reads its West neighbour (column 0) through mux A.
         let mut cw = ContextWord::two_port(AluOp::PassA);
@@ -198,16 +268,46 @@ mod tests {
     }
 
     #[test]
+    fn in_line_neighbour_reads_are_pre_step_not_in_step() {
+        // All eight cells of a column shift from their North neighbour in
+        // the same step: every lane must observe the *previous* outputs,
+        // not a partially-updated plane (the gather/commit invariant).
+        let mut arr = RcArray::new();
+        for r in 0..ARRAY_DIM {
+            arr.set_out(r, 5, r as i16 + 1);
+        }
+        let mut cw = ContextWord::two_port(AluOp::PassA);
+        cw.mux_a = MuxASel::North;
+        arr.broadcast(BroadcastMode::Column, 5, &cw, &[0; 8], &[0; 8]);
+        // Toroidal shift down by one: row r now holds old row (r-1).
+        assert_eq!(arr.column_outputs(5), [8, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
     fn register_file_sources_feed_mux() {
         let mut arr = RcArray::new();
         for r in 0..ARRAY_DIM {
-            arr.cell_mut(r, 2).regs[1] = 7;
+            arr.set_reg(r, 2, 1, 7);
         }
         let mut cw = ContextWord::two_port(AluOp::Add);
         cw.mux_a = MuxASel::Reg(1);
         cw.mux_b = MuxBSel::Reg(1);
         arr.broadcast(BroadcastMode::Column, 2, &cw, &[0; 8], &[0; 8]);
         assert_eq!(arr.column_outputs(2), [14; 8]);
+    }
+
+    #[test]
+    fn cell_view_assembles_all_planes() {
+        let mut arr = RcArray::new();
+        let mut cw = ContextWord::cmula(3, true);
+        cw.reg_write = 0b0001;
+        cw.express_write = true;
+        arr.broadcast(BroadcastMode::Column, 4, &cw, &[2, 0, 0, 0, 0, 0, 0, 0], &[0; 8]);
+        let cell = arr.cell(0, 4);
+        assert_eq!(cell.out, 6);
+        assert_eq!(cell.acc, 6);
+        assert_eq!(cell.regs[0], 6);
+        assert_eq!(cell.express, Some(6));
     }
 
     #[test]

@@ -1,6 +1,12 @@
 //! A single reconfigurable cell (paper Figure 3): ALU/multiplier + shift
 //! unit, input muxes, a four-register file, an output register and the
 //! context register.
+//!
+//! Since the §Perf data-layout rework the array stores cell state as
+//! struct-of-arrays planes (see [`super::array::RcArray`]); the cell-step
+//! semantics live in [`execute_step`], which operates on one lane of each
+//! plane. [`RcCell`] remains as the single-cell view the unit tests pin
+//! the semantics with.
 
 use super::alu::{self, AluOp};
 use super::context::ContextWord;
@@ -13,7 +19,51 @@ pub struct CellInputs {
     pub b: i16,
 }
 
-/// One reconfigurable cell.
+/// Execute one context word against one cell's architectural state,
+/// passed as one lane of the array's state planes. Returns the value of
+/// the output register after the step.
+///
+/// Semantics preserved bit-for-bit from the original cell model:
+/// * `acc_reset` clears the accumulator before the ALU op;
+/// * `acc_accumulate` fuses `ACC += result` and latches the accumulator
+///   (the CMUL-accumulate of the §5.3 matmul);
+/// * NOP leaves the output register unchanged (the cell is idle), but the
+///   register-write mask and express latch still observe the ALU result;
+/// * the express latch is re-driven (or released) on every step.
+#[inline]
+pub fn execute_step(
+    cw: &ContextWord,
+    inputs: CellInputs,
+    out: &mut i16,
+    regs: &mut [i16; 4],
+    acc: &mut i32,
+    express: &mut Option<i16>,
+) -> i16 {
+    if cw.acc_reset {
+        *acc = 0;
+    }
+    let mut r = alu::eval(cw.op, inputs.a, inputs.b, cw.imm, *acc);
+    if cw.acc_accumulate {
+        // Fused accumulate: ACC += result, accumulator drives the
+        // output register (the CMUL-accumulate of the §5.3 matmul).
+        r.acc = acc.wrapping_add(r.out as i32);
+        r.out = r.acc as i16;
+    }
+    *acc = r.acc;
+    // NOP leaves the output register unchanged (the cell is idle).
+    if cw.op != AluOp::Nop {
+        *out = r.out;
+    }
+    for i in 0..4 {
+        if cw.reg_write & (1 << i) != 0 {
+            regs[i] = r.out;
+        }
+    }
+    *express = if cw.express_write { Some(r.out) } else { None };
+    *out
+}
+
+/// One reconfigurable cell (the AoS view; see [`execute_step`]).
 #[derive(Debug, Clone, Default)]
 pub struct RcCell {
     /// Register file: four 16-bit registers.
@@ -34,28 +84,7 @@ impl RcCell {
     /// Execute one context word with resolved inputs. Returns the value
     /// latched into the output register.
     pub fn execute(&mut self, cw: &ContextWord, inputs: CellInputs) -> i16 {
-        if cw.acc_reset {
-            self.acc = 0;
-        }
-        let mut r = alu::eval(cw.op, inputs.a, inputs.b, cw.imm, self.acc);
-        if cw.acc_accumulate {
-            // Fused accumulate: ACC += result, accumulator drives the
-            // output register (the CMUL-accumulate of the §5.3 matmul).
-            r.acc = self.acc.wrapping_add(r.out as i32);
-            r.out = r.acc as i16;
-        }
-        self.acc = r.acc;
-        // NOP leaves the output register unchanged (the cell is idle).
-        if cw.op != AluOp::Nop {
-            self.out = r.out;
-        }
-        for i in 0..4 {
-            if cw.reg_write & (1 << i) != 0 {
-                self.regs[i] = r.out;
-            }
-        }
-        self.express = if cw.express_write { Some(r.out) } else { None };
-        self.out
+        execute_step(cw, inputs, &mut self.out, &mut self.regs, &mut self.acc, &mut self.express)
     }
 
     /// Reset all architectural state.

@@ -228,6 +228,13 @@ impl ContextWord {
         raw
     }
 
+    /// Classify this word's operand sources once (hoisted out of the
+    /// per-lane broadcast loop — see
+    /// [`super::interconnect::OperandPlan`]).
+    pub fn operand_plan(&self) -> super::interconnect::OperandPlan {
+        super::interconnect::OperandPlan::of(self)
+    }
+
     /// Two-port op reading both operand buses (the vector-vector pattern).
     pub fn two_port(op: AluOp) -> ContextWord {
         ContextWord {

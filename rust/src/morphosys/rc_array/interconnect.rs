@@ -12,12 +12,15 @@
 //!    express latch of the same row in the horizontally adjacent quadrant
 //!    (falling back to its output register when no cell latched the lane).
 //!
-//! The interconnect is purely combinational over a *snapshot* of the
-//! previous-step output registers, which models the real array: all cells
-//! read their neighbours' registered outputs, then latch simultaneously.
+//! The interconnect is purely combinational over the previous-step output
+//! registers, which models the real array: all cells read their
+//! neighbours' registered outputs, then latch simultaneously. The
+//! executing array guarantees this by resolving every lane's operands
+//! before committing any lane (gather-then-commit), so the planes can be
+//! borrowed in place instead of copied per step.
 
 use super::array::ARRAY_DIM;
-use super::context::{MuxASel, MuxBSel};
+use super::context::{ContextWord, MuxASel, MuxBSel};
 
 /// Quadrant edge length (the RC array is 2×2 quadrants of 4×4 cells).
 pub const QUAD_DIM: usize = 4;
@@ -34,7 +37,65 @@ pub enum Port {
     Express,
 }
 
-/// Snapshot of array outputs + express latches for one execution step.
+/// One operand's resolved source class — the per-context-word
+/// classification hoisted out of the per-lane broadcast loop (§Perf).
+/// `Bus` is the operand data bus (bank A for mux A, bank B for mux B),
+/// `Reg` the cell-local register file, `Port` an interconnect source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandSource {
+    Bus,
+    Reg(u8),
+    Port(Port),
+}
+
+/// The operand-source plan of one context word: where each of the eight
+/// lanes of a broadcast reads its A and B inputs from. Classified once
+/// per broadcast step so the lane loop never re-matches the mux selects,
+/// with a branch-free fast path for the dominant bus/bus and
+/// bus/immediate words (both classify as `(Bus, Bus)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperandPlan {
+    pub a: OperandSource,
+    pub b: OperandSource,
+}
+
+impl OperandPlan {
+    /// Classify a context word's mux selects.
+    pub fn of(cw: &ContextWord) -> OperandPlan {
+        let a = match cw.mux_a {
+            MuxASel::OperandBusA => OperandSource::Bus,
+            MuxASel::Reg(r) => OperandSource::Reg(r & 3),
+            MuxASel::North => OperandSource::Port(Port::North),
+            MuxASel::East => OperandSource::Port(Port::East),
+            MuxASel::South => OperandSource::Port(Port::South),
+            MuxASel::West => OperandSource::Port(Port::West),
+            MuxASel::RowQuad => OperandSource::Port(Port::RowQuad),
+            MuxASel::ColQuad => OperandSource::Port(Port::ColQuad),
+            MuxASel::Express => OperandSource::Port(Port::Express),
+        };
+        let b = match cw.mux_b {
+            MuxBSel::OperandBusB => OperandSource::Bus,
+            MuxBSel::Reg(r) => OperandSource::Reg(r & 3),
+            MuxBSel::North => OperandSource::Port(Port::North),
+            MuxBSel::East => OperandSource::Port(Port::East),
+            MuxBSel::West => OperandSource::Port(Port::West),
+        };
+        OperandPlan { a, b }
+    }
+
+    /// The fast path: both operands read straight off the operand buses
+    /// (every two-port bus/bus word and every immediate-class word).
+    pub fn is_bus_bus(&self) -> bool {
+        self.a == OperandSource::Bus && self.b == OperandSource::Bus
+    }
+}
+
+/// View of the array's output/express planes for one execution step. All
+/// reads of a broadcast resolve against these planes *before* any lane
+/// commits, which models the real array: cells read their neighbours'
+/// registered (previous-step) outputs, then latch simultaneously. Since
+/// the planes live directly in `RcArray` this borrows them in place — no
+/// per-step snapshot copies.
 pub struct Interconnect<'a> {
     pub outs: &'a [[i16; ARRAY_DIM]; ARRAY_DIM],
     pub express: &'a [[Option<i16>; ARRAY_DIM]; ARRAY_DIM],
@@ -153,6 +214,23 @@ mod tests {
         let xp2 = no_express();
         let ic2 = Interconnect { outs: &outs, express: &xp2 };
         assert_eq!(ic2.port(3, 1, Port::Express), outs[3][4]);
+    }
+
+    #[test]
+    fn operand_plan_classifies_bus_reg_and_port_words() {
+        use crate::morphosys::rc_array::alu::AluOp;
+        let add = ContextWord::two_port(AluOp::Add);
+        assert!(OperandPlan::of(&add).is_bus_bus());
+        // Immediate-class words force mux B to the bus encoding → fast path.
+        let imm = ContextWord::immediate(AluOp::Cmul, 5);
+        assert!(OperandPlan::of(&imm).is_bus_bus());
+        let mut mixed = ContextWord::two_port(AluOp::Add);
+        mixed.mux_a = MuxASel::West;
+        mixed.mux_b = MuxBSel::Reg(2);
+        let plan = OperandPlan::of(&mixed);
+        assert_eq!(plan.a, OperandSource::Port(Port::West));
+        assert_eq!(plan.b, OperandSource::Reg(2));
+        assert!(!plan.is_bus_bus());
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub use alu::AluOp;
 pub use array::{BroadcastMode, RcArray, ARRAY_DIM};
 pub use cell::RcCell;
 pub use context::{ContextWord, MuxASel, MuxBSel};
-pub use interconnect::{Interconnect, Port};
+pub use interconnect::{Interconnect, OperandPlan, OperandSource, Port};

@@ -1,0 +1,228 @@
+//! Pre-decoded broadcast schedules (§Perf).
+//!
+//! Every mapping the compiler emits is a straight-line TinyRISC program:
+//! stage data, load context, fire a run of `dbcdc`/`sbcb`/`wfbi`
+//! instructions, store. Interpreting such a program per instruction pays
+//! fetch + dispatch + cycle-accounting on every step even though nothing
+//! about the control flow or the timing depends on runtime values.
+//!
+//! [`BroadcastSchedule::compile`] flattens a straight-line program once
+//! into a vector of pre-classified steps and **precomputes the entire
+//! cycle accounting** (issue slots, final-issue cycle, executed count,
+//! broadcast count) at compile time, using exactly the blocking-DMA issue
+//! model of [`M1System::run`]. Executing a schedule is then pure data
+//! movement and RC-array compute — no per-instruction dispatch, no
+//! accounting arithmetic, no trace plumbing.
+//!
+//! Schedules are compiled once per distinct program and reused across
+//! `run_routine` calls (see the thread-local cache in
+//! [`crate::mapping::runner`]). Programs with branches (`jmp`/`bnez`)
+//! don't compile — callers fall back to the interpreter — and the
+//! schedule path is only taken in blocking-DMA, non-tracing mode, where
+//! its accounting is bit-for-bit identical to the interpreter's.
+//!
+//! [`M1System::run`]: crate::morphosys::M1System::run
+
+use super::frame_buffer::{Bank, Set};
+use super::rc_array::BroadcastMode;
+use super::system::ExecutionReport;
+use super::tinyrisc::{Instruction, Program};
+
+/// One pre-decoded step of a schedule.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Step {
+    /// A scalar / DMA / context-load instruction, executed through the
+    /// ordinary effect path (these are rare and cheap; the hot steps are
+    /// the two below).
+    Plain(Instruction),
+    /// A broadcast trigger with its context-memory coordinates and
+    /// operand-bus sources fully resolved (the context block follows from
+    /// `mode`, exactly as in the interpreter).
+    Broadcast {
+        mode: BroadcastMode,
+        plane: usize,
+        cw: usize,
+        line: usize,
+        set: Set,
+        bus_a: Option<(Bank, usize)>,
+        bus_b: Option<(Bank, usize)>,
+    },
+    /// A `wfbi`/`wfbir` write-back of one line's output registers.
+    WriteBack { mode: BroadcastMode, line: usize, set: Set, bank: Bank, addr: usize },
+}
+
+/// A straight-line TinyRISC program compiled to a flat step vector with
+/// precomputed cycle accounting.
+#[derive(Debug, Clone)]
+pub struct BroadcastSchedule {
+    pub(crate) steps: Vec<Step>,
+    cycles: u64,
+    slots: u64,
+    executed: u64,
+    broadcasts: u64,
+}
+
+impl BroadcastSchedule {
+    /// Compile a program. Returns `None` when the program branches
+    /// (`jmp`/`bnez`) — those run through the interpreter. A trailing
+    /// `halt` (and anything after it) ends the schedule, mirroring the
+    /// interpreter.
+    pub fn compile(program: &Program) -> Option<BroadcastSchedule> {
+        let mut steps = Vec::with_capacity(program.len());
+        let mut slots = 0u64;
+        let mut executed = 0u64;
+        let mut broadcasts = 0u64;
+        let mut last_issue = 0u64;
+        for instr in &program.instructions {
+            // Blocking-DMA issue model: the instruction issues at the
+            // current slot count and occupies `issue_slots()` slots.
+            last_issue = slots;
+            slots += instr.issue_slots();
+            executed += 1;
+            match *instr {
+                Instruction::Jmp { .. } | Instruction::Bnez { .. } => return None,
+                Instruction::Halt => break,
+                Instruction::Dbcdc { plane, cw, col, set, addr_a, addr_b } => {
+                    broadcasts += 1;
+                    steps.push(Step::Broadcast {
+                        mode: BroadcastMode::Column,
+                        plane,
+                        cw,
+                        line: col,
+                        set,
+                        bus_a: Some((Bank::A, addr_a)),
+                        bus_b: Some((Bank::B, addr_b)),
+                    });
+                }
+                Instruction::Dbcdr { plane, cw, row, set, addr_a, addr_b } => {
+                    broadcasts += 1;
+                    steps.push(Step::Broadcast {
+                        mode: BroadcastMode::Row,
+                        plane,
+                        cw,
+                        line: row,
+                        set,
+                        bus_a: Some((Bank::A, addr_a)),
+                        bus_b: Some((Bank::B, addr_b)),
+                    });
+                }
+                Instruction::Sbcb { plane, cw, col, set, bank, addr } => {
+                    broadcasts += 1;
+                    steps.push(Step::Broadcast {
+                        mode: BroadcastMode::Column,
+                        plane,
+                        cw,
+                        line: col,
+                        set,
+                        bus_a: Some((bank, addr)),
+                        bus_b: None,
+                    });
+                }
+                Instruction::Sbcbr { plane, cw, row, set, bank, addr } => {
+                    broadcasts += 1;
+                    steps.push(Step::Broadcast {
+                        mode: BroadcastMode::Row,
+                        plane,
+                        cw,
+                        line: row,
+                        set,
+                        bus_a: Some((bank, addr)),
+                        bus_b: None,
+                    });
+                }
+                Instruction::Wfbi { col, set, bank, addr } => {
+                    steps.push(Step::WriteBack {
+                        mode: BroadcastMode::Column,
+                        line: col,
+                        set,
+                        bank,
+                        addr,
+                    });
+                }
+                Instruction::Wfbir { row, set, bank, addr } => {
+                    steps.push(Step::WriteBack { mode: BroadcastMode::Row, line: row, set, bank, addr });
+                }
+                plain => steps.push(Step::Plain(plain)),
+            }
+        }
+        Some(BroadcastSchedule { steps, cycles: last_issue, slots, executed, broadcasts })
+    }
+
+    /// The precomputed execution report (identical to what the
+    /// interpreter would account for this program in blocking-DMA mode).
+    pub fn report(&self) -> ExecutionReport {
+        ExecutionReport {
+            cycles: self.cycles,
+            slots: self.slots,
+            executed: self.executed,
+            broadcasts: self.broadcasts,
+        }
+    }
+
+    /// Number of pre-decoded steps.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morphosys::tinyrisc::Reg;
+
+    #[test]
+    fn branchy_programs_do_not_compile() {
+        let p = Program::new(vec![
+            Instruction::Ldli { rd: Reg(1), imm: 1 },
+            Instruction::Bnez { rs: Reg(1), target: 0 },
+        ]);
+        assert!(BroadcastSchedule::compile(&p).is_none());
+        let p = Program::new(vec![Instruction::Jmp { target: 0 }]);
+        assert!(BroadcastSchedule::compile(&p).is_none());
+    }
+
+    #[test]
+    fn accounting_matches_the_paper_convention() {
+        let p = Program::new(vec![
+            Instruction::Ldui { rd: Reg(1), imm: 1 },
+            Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 },
+            Instruction::Dbcdc { plane: 0, cw: 0, col: 0, set: Set::Zero, addr_a: 0, addr_b: 0 },
+            Instruction::Stfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 },
+        ]);
+        let s = BroadcastSchedule::compile(&p).unwrap();
+        let r = s.report();
+        // Issue slots: 1 + 32 + 1 + 32; the final stfb issues at cycle 34.
+        assert_eq!(r.slots, 66);
+        assert_eq!(r.cycles, 34);
+        assert_eq!(r.executed, 4);
+        assert_eq!(r.broadcasts, 1);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn halt_truncates_the_schedule() {
+        let p = Program::new(vec![
+            Instruction::Ldli { rd: Reg(1), imm: 1 },
+            Instruction::Halt,
+            Instruction::Ldli { rd: Reg(1), imm: 9 }, // dead
+        ]);
+        let s = BroadcastSchedule::compile(&p).unwrap();
+        assert_eq!(s.len(), 1);
+        let r = s.report();
+        assert_eq!(r.executed, 2);
+        assert_eq!(r.cycles, 1);
+        assert_eq!(r.slots, 2);
+    }
+
+    #[test]
+    fn empty_program_compiles_to_empty_schedule() {
+        let s = BroadcastSchedule::compile(&Program::default()).unwrap();
+        assert!(s.is_empty());
+        let r = s.report();
+        assert_eq!((r.cycles, r.slots, r.executed, r.broadcasts), (0, 0, 0, 0));
+    }
+}

@@ -12,6 +12,7 @@ use super::dma::{self, MainMemory};
 use super::frame_buffer::{Bank, FrameBuffer, Set};
 use super::mulate::{Trace, TraceEvent};
 use super::rc_array::{BroadcastMode, ContextWord, RcArray, ARRAY_DIM};
+use super::schedule::{BroadcastSchedule, Step};
 use super::tinyrisc::{Instruction, Program, RegFile};
 
 /// Hard cap on executed instructions, so runaway branch loops fail fast
@@ -124,9 +125,12 @@ impl M1System {
         self.array.reset();
     }
 
-    fn record(&mut self, cycle: u64, pc: usize, instr: &Instruction, effect: String) {
+    /// Record a trace event. The effect string is built **lazily** — with
+    /// tracing off (the common case) no formatting or allocation happens,
+    /// which used to dominate the interpreter loop (§Perf).
+    fn record(&mut self, cycle: u64, pc: usize, instr: &Instruction, effect: impl FnOnce() -> String) {
         if let Some(trace) = &mut self.trace {
-            trace.push(TraceEvent { cycle, pc, instr: instr.clone(), effect });
+            trace.push(TraceEvent { cycle, pc, instr: *instr, effect: effect() });
         }
     }
 
@@ -146,8 +150,7 @@ impl M1System {
             BroadcastMode::Column => Block::Column,
             BroadcastMode::Row => Block::Row,
         };
-        let raw = self.ctx.read(block, plane, cw_addr);
-        let cw = ContextWord::decode(raw);
+        let cw = self.ctx.read_decoded(block, plane, cw_addr);
         let zero = [0i16; ARRAY_DIM];
         let a = bus_a.map(|(bank, addr)| self.fb.operand_bus(set, bank, addr)).unwrap_or(zero);
         let b = bus_b.map(|(bank, addr)| self.fb.operand_bus(set, bank, addr)).unwrap_or(zero);
@@ -216,7 +219,7 @@ impl M1System {
         let mut dma = DmaState::default();
 
         while pc < program.len() {
-            let instr = program.instructions[pc].clone();
+            let instr = program.instructions[pc];
             let issue_cycle = if self.async_dma {
                 self.async_issue(&mut dma, &instr, slots)
             } else {
@@ -234,61 +237,56 @@ impl M1System {
             match &instr {
                 Instruction::Ldui { rd, imm } => {
                     self.regs.load_upper(*rd, *imm);
-                    self.record(issue_cycle, pc, &instr, format!("r{} <- {:#x}", rd.0, self.regs.read(*rd)));
+                    let v = self.regs.read(*rd);
+                    self.record(issue_cycle, pc, &instr, || format!("r{} <- {v:#x}", rd.0));
                 }
                 Instruction::Ldli { rd, imm } => {
                     self.regs.load_lower(*rd, *imm);
-                    self.record(issue_cycle, pc, &instr, format!("r{} <- {:#x}", rd.0, self.regs.read(*rd)));
+                    let v = self.regs.read(*rd);
+                    self.record(issue_cycle, pc, &instr, || format!("r{} <- {v:#x}", rd.0));
                 }
                 Instruction::Add { rd, rs, rt } => {
                     let v = self.regs.read(*rs).wrapping_add(self.regs.read(*rt));
                     self.regs.write(*rd, v);
-                    let effect = if instr == Instruction::NOP {
-                        "nop".to_string()
-                    } else {
-                        format!("r{} <- {:#x}", rd.0, v)
-                    };
-                    self.record(issue_cycle, pc, &instr, effect);
+                    let nop = instr == Instruction::NOP;
+                    self.record(issue_cycle, pc, &instr, || {
+                        if nop {
+                            "nop".to_string()
+                        } else {
+                            format!("r{} <- {v:#x}", rd.0)
+                        }
+                    });
                 }
                 Instruction::Sub { rd, rs, rt } => {
                     let v = self.regs.read(*rs).wrapping_sub(self.regs.read(*rt));
                     self.regs.write(*rd, v);
-                    self.record(issue_cycle, pc, &instr, format!("r{} <- {:#x}", rd.0, v));
+                    self.record(issue_cycle, pc, &instr, || format!("r{} <- {v:#x}", rd.0));
                 }
                 Instruction::Addi { rd, rs, imm } => {
                     let v = self.regs.read(*rs).wrapping_add(*imm as i32 as u32);
                     self.regs.write(*rd, v);
-                    self.record(issue_cycle, pc, &instr, format!("r{} <- {:#x}", rd.0, v));
+                    self.record(issue_cycle, pc, &instr, || format!("r{} <- {v:#x}", rd.0));
                 }
                 Instruction::Ldfb { rs, set, bank, words, fb_addr } => {
                     let mem_addr = self.regs.read(*rs) as usize;
                     dma::mem_to_fb(&self.mem, &mut self.fb, mem_addr, *set, *bank, *fb_addr, *words);
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("FB[{set:?}][{bank:?}][{fb_addr:#x}..] <- mem[{mem_addr:#x}..], {words} words"),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("FB[{set:?}][{bank:?}][{fb_addr:#x}..] <- mem[{mem_addr:#x}..], {words} words")
+                    });
                 }
                 Instruction::Stfb { rs, set, bank, words, fb_addr } => {
                     let mem_addr = self.regs.read(*rs) as usize;
                     dma::fb_to_mem(&self.fb, &mut self.mem, *set, *bank, *fb_addr, mem_addr, *words);
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("mem[{mem_addr:#x}..] <- FB[{set:?}][{bank:?}][{fb_addr:#x}..], {words} words"),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("mem[{mem_addr:#x}..] <- FB[{set:?}][{bank:?}][{fb_addr:#x}..], {words} words")
+                    });
                 }
                 Instruction::Ldctxt { rs, block, plane, word, count } => {
                     let mem_addr = self.regs.read(*rs) as usize;
                     dma::mem_to_ctx(&self.mem, &mut self.ctx, mem_addr, *block, *plane, *word, *count);
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("ctx[{block:?}][{plane}][{word}..+{count}] <- mem[{mem_addr:#x}..]"),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("ctx[{block:?}][{plane}][{word}..+{count}] <- mem[{mem_addr:#x}..]")
+                    });
                 }
                 Instruction::Dbcdc { plane, cw, col, set, addr_a, addr_b } => {
                     let word = self.broadcast(
@@ -301,12 +299,9 @@ impl M1System {
                         Some((Bank::B, *addr_b)),
                     );
                     broadcasts += 1;
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("col {col}: {:?} A[{addr_a:#x}] B[{addr_b:#x}]", word.op),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("col {col}: {:?} A[{addr_a:#x}] B[{addr_b:#x}]", word.op)
+                    });
                 }
                 Instruction::Dbcdr { plane, cw, row, set, addr_a, addr_b } => {
                     let word = self.broadcast(
@@ -319,12 +314,9 @@ impl M1System {
                         Some((Bank::B, *addr_b)),
                     );
                     broadcasts += 1;
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("row {row}: {:?} A[{addr_a:#x}] B[{addr_b:#x}]", word.op),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("row {row}: {:?} A[{addr_a:#x}] B[{addr_b:#x}]", word.op)
+                    });
                 }
                 Instruction::Sbcb { plane, cw, col, set, bank, addr } => {
                     let word = self.broadcast(
@@ -337,12 +329,9 @@ impl M1System {
                         None,
                     );
                     broadcasts += 1;
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("col {col}: {:?} {bank:?}[{addr:#x}]", word.op),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("col {col}: {:?} {bank:?}[{addr:#x}]", word.op)
+                    });
                 }
                 Instruction::Sbcbr { plane, cw, row, set, bank, addr } => {
                     let word = self.broadcast(
@@ -355,46 +344,37 @@ impl M1System {
                         None,
                     );
                     broadcasts += 1;
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("row {row}: {:?} {bank:?}[{addr:#x}]", word.op),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("row {row}: {:?} {bank:?}[{addr:#x}]", word.op)
+                    });
                 }
                 Instruction::Wfbi { col, set, bank, addr } => {
                     let outs = self.array.column_outputs(*col);
                     self.fb.write_slice(*set, *bank, *addr, &outs);
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("FB[{set:?}][{bank:?}][{addr:#x}..] <- col {col} outputs"),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("FB[{set:?}][{bank:?}][{addr:#x}..] <- col {col} outputs")
+                    });
                 }
                 Instruction::Wfbir { row, set, bank, addr } => {
                     let outs = self.array.row_outputs(*row);
                     self.fb.write_slice(*set, *bank, *addr, &outs);
-                    self.record(
-                        issue_cycle,
-                        pc,
-                        &instr,
-                        format!("FB[{set:?}][{bank:?}][{addr:#x}..] <- row {row} outputs"),
-                    );
+                    self.record(issue_cycle, pc, &instr, || {
+                        format!("FB[{set:?}][{bank:?}][{addr:#x}..] <- row {row} outputs")
+                    });
                 }
                 Instruction::Jmp { target } => {
                     next_pc = *target;
-                    self.record(issue_cycle, pc, &instr, format!("pc <- {target}"));
+                    self.record(issue_cycle, pc, &instr, || format!("pc <- {target}"));
                 }
                 Instruction::Bnez { rs, target } => {
                     let taken = self.regs.read(*rs) != 0;
                     if taken {
                         next_pc = *target;
                     }
-                    self.record(issue_cycle, pc, &instr, format!("taken={taken}"));
+                    self.record(issue_cycle, pc, &instr, || format!("taken={taken}"));
                 }
                 Instruction::Halt => {
-                    self.record(issue_cycle, pc, &instr, "halt".to_string());
+                    self.record(issue_cycle, pc, &instr, || "halt".to_string());
                     break;
                 }
             }
@@ -406,6 +386,81 @@ impl M1System {
             slots,
             executed,
             broadcasts,
+        }
+    }
+
+    /// Run a program, taking the pre-decoded fast path when a schedule is
+    /// supplied and this system is in plain blocking-DMA, non-tracing
+    /// mode (where the schedule's precomputed accounting is bit-for-bit
+    /// the interpreter's). Async-DMA and tracing systems fall back to the
+    /// interpreter, which models those modes.
+    pub fn run_program(
+        &mut self,
+        program: &Program,
+        schedule: Option<&BroadcastSchedule>,
+    ) -> ExecutionReport {
+        match schedule {
+            Some(s) if !self.async_dma && self.trace.is_none() => self.run_scheduled(s),
+            _ => self.run(program),
+        }
+    }
+
+    /// Execute a pre-decoded schedule: no per-instruction fetch/dispatch,
+    /// no cycle arithmetic, no trace plumbing — just the architectural
+    /// effects. The report comes precomputed from compile time.
+    fn run_scheduled(&mut self, schedule: &BroadcastSchedule) -> ExecutionReport {
+        for step in &schedule.steps {
+            match *step {
+                Step::Plain(instr) => self.exec_plain(&instr),
+                Step::Broadcast { mode, plane, cw, line, set, bus_a, bus_b } => {
+                    // Same effect path as the interpreter's broadcast
+                    // instructions — one implementation, two dispatchers.
+                    self.broadcast(mode, plane, cw, line, set, bus_a, bus_b);
+                }
+                Step::WriteBack { mode, line, set, bank, addr } => {
+                    let outs = match mode {
+                        BroadcastMode::Column => self.array.column_outputs(line),
+                        BroadcastMode::Row => self.array.row_outputs(line),
+                    };
+                    self.fb.write_slice(set, bank, addr, &outs);
+                }
+            }
+        }
+        schedule.report()
+    }
+
+    /// Architectural effect of a scalar/DMA instruction (the `Plain` steps
+    /// of a schedule; broadcasts, write-backs and control flow never
+    /// appear here).
+    fn exec_plain(&mut self, instr: &Instruction) {
+        match *instr {
+            Instruction::Ldui { rd, imm } => self.regs.load_upper(rd, imm),
+            Instruction::Ldli { rd, imm } => self.regs.load_lower(rd, imm),
+            Instruction::Add { rd, rs, rt } => {
+                let v = self.regs.read(rs).wrapping_add(self.regs.read(rt));
+                self.regs.write(rd, v);
+            }
+            Instruction::Sub { rd, rs, rt } => {
+                let v = self.regs.read(rs).wrapping_sub(self.regs.read(rt));
+                self.regs.write(rd, v);
+            }
+            Instruction::Addi { rd, rs, imm } => {
+                let v = self.regs.read(rs).wrapping_add(imm as i32 as u32);
+                self.regs.write(rd, v);
+            }
+            Instruction::Ldfb { rs, set, bank, words, fb_addr } => {
+                let mem_addr = self.regs.read(rs) as usize;
+                dma::mem_to_fb(&self.mem, &mut self.fb, mem_addr, set, bank, fb_addr, words);
+            }
+            Instruction::Stfb { rs, set, bank, words, fb_addr } => {
+                let mem_addr = self.regs.read(rs) as usize;
+                dma::fb_to_mem(&self.fb, &mut self.mem, set, bank, fb_addr, mem_addr, words);
+            }
+            Instruction::Ldctxt { rs, block, plane, word, count } => {
+                let mem_addr = self.regs.read(rs) as usize;
+                dma::mem_to_ctx(&self.mem, &mut self.ctx, mem_addr, block, plane, word, count);
+            }
+            _ => unreachable!("non-plain instruction {instr:?} in schedule"),
         }
     }
 }
@@ -548,6 +603,54 @@ mod tests {
         let asn = run_routine_on(&mut M1System::new().with_async_dma(), &routine, &u, Some(&v));
         assert_eq!(sync.result, asn.result, "functional results identical");
         assert!(asn.report.cycles <= sync.report.cycles);
+    }
+
+    #[test]
+    fn scheduled_execution_matches_interpreter_bit_for_bit() {
+        use crate::morphosys::schedule::BroadcastSchedule;
+        let src = "
+            ldui   r1, 0x0
+            ldli   r1, 0x100
+            ldfb   r1, 0, a, 4
+            ldui   r2, 0x0
+            ldli   r2, 0x200
+            ldfb   r2, 0, b, 4
+            ldli   r3, 0x300
+            ldctxt r3, col, 0, 0, 1
+            dbcdc  0, 0, 0, 0, 0x0, 0x0
+            wfbi   0, 1, a, 0x0
+            ldli   r5, 0x400
+            stfb   r5, 1, a, 4
+        ";
+        let p = assemble(src).unwrap();
+        let u: Vec<i16> = (1..=8).collect();
+        let v: Vec<i16> = (0..8).map(|i| 7 * i - 3).collect();
+
+        let mut interp = stage_vectors(&u, &v);
+        let ri = interp.run(&p);
+
+        let schedule = BroadcastSchedule::compile(&p).expect("straight-line program");
+        let mut sched = stage_vectors(&u, &v);
+        let rs = sched.run_program(&p, Some(&schedule));
+
+        assert_eq!((ri.cycles, ri.slots, ri.executed, ri.broadcasts), (rs.cycles, rs.slots, rs.executed, rs.broadcasts));
+        assert_eq!(interp.mem.load_elements(0x400, 8), sched.mem.load_elements(0x400, 8));
+        assert_eq!(interp.array.outputs(), sched.array.outputs());
+    }
+
+    #[test]
+    fn run_program_falls_back_for_async_or_tracing_systems() {
+        use crate::morphosys::schedule::BroadcastSchedule;
+        let p = assemble("ldli r1, 5\nldli r2, 6").unwrap();
+        let schedule = BroadcastSchedule::compile(&p).unwrap();
+        // Tracing system: the fallback interpreter records events.
+        let mut traced = M1System::new().with_trace();
+        traced.run_program(&p, Some(&schedule));
+        assert_eq!(traced.take_trace().unwrap().events.len(), 2);
+        // Async system: the interpreter's async accounting is used.
+        let mut asn = M1System::new().with_async_dma();
+        let r = asn.run_program(&p, Some(&schedule));
+        assert_eq!(r.executed, 2);
     }
 
     #[test]

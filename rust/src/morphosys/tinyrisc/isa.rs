@@ -7,7 +7,7 @@ use crate::morphosys::rc_array::BroadcastMode;
 use crate::morphosys::timing;
 
 /// TinyRISC register index (r0 is hardwired to zero).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Reg(pub u8);
 
 impl Reg {
@@ -18,8 +18,10 @@ impl Reg {
     }
 }
 
-/// One TinyRISC instruction.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One TinyRISC instruction. `Copy` (all fields are small scalars) so the
+/// interpreter fetch and the schedule pre-decode never heap-clone; `Hash`
+/// so compiled programs can key the pre-decoded-schedule cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Instruction {
     /// `ldui rd, imm` — load upper immediate: `rd ← imm << 16`.
     Ldui { rd: Reg, imm: u16 },
@@ -96,7 +98,7 @@ impl Instruction {
 }
 
 /// A TinyRISC program: a flat instruction vector, index == PC.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct Program {
     pub instructions: Vec<Instruction>,
 }
