@@ -9,6 +9,7 @@
 use morpho::baselines::routines as x86;
 use morpho::baselines::Cpu;
 use morpho::benchkit::{bench, section, Measurement};
+use morpho::coordinator::backend::{Backend, M1SimBackend};
 use morpho::mapping::{runner::run_routine_on, PointTransformMapping, VecVecMapping};
 use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, MuxASel, RcArray};
 use morpho::morphosys::{AluOp, M1System};
@@ -106,6 +107,36 @@ fn main() {
     });
     println!("  → {:.1} M simulated-points/s", m.throughput(64.0) / 1e6);
     rows.push(row(&m, "points_per_s", m.throughput(64.0)));
+
+    section("sharded tile pool (translation, 2117-point jobs)");
+    // The §Perf doc's motivating job size: 2 117 points = 34 M1 tiles.
+    // Same integer-translation transform and fresh inputs per iteration
+    // for both backends, so the delta is purely the shard fan-out.
+    let params = [1.0f32, 0.0, 0.0, 1.0, 7.0, -3.0];
+    let base_xs: Vec<f32> = (0..2117).map(|i| ((i % 4001) as f32) - 2000.0).collect();
+    let base_ys: Vec<f32> = (0..2117).map(|i| ((i % 1999) as f32) - 999.0).collect();
+    let mut xs = base_xs.clone();
+    let mut ys = base_ys.clone();
+    let mut serial = M1SimBackend::new();
+    let m_serial = bench("serial translation-2117 (shards=1)", || {
+        xs.copy_from_slice(&base_xs);
+        ys.copy_from_slice(&base_ys);
+        std::hint::black_box(serial.apply(&params, &mut xs, &mut ys).unwrap());
+    });
+    println!("  → {:.2} M simulated-points/s", m_serial.throughput(2117.0) / 1e6);
+    rows.push(row(&m_serial, "points_per_s", m_serial.throughput(2117.0)));
+    let mut pooled = M1SimBackend::with_shards(4);
+    let m_pooled = bench("pooled translation-2117 (shards=4)", || {
+        xs.copy_from_slice(&base_xs);
+        ys.copy_from_slice(&base_ys);
+        std::hint::black_box(pooled.apply(&params, &mut xs, &mut ys).unwrap());
+    });
+    println!(
+        "  → {:.2} M simulated-points/s ({:.2}× vs serial)",
+        m_pooled.throughput(2117.0) / 1e6,
+        m_serial.mean.as_secs_f64() / m_pooled.mean.as_secs_f64()
+    );
+    rows.push(row(&m_pooled, "points_per_s", m_pooled.throughput(2117.0)));
 
     section("x86 baseline interpreter");
     let ub: Vec<i16> = (0..64).collect();

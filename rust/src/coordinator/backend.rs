@@ -5,9 +5,9 @@
 use anyhow::Result;
 
 use crate::graphics::{FixedPointParams, Mat3};
-use crate::mapping::{runner::run_routine_on, PointTransformMapping};
-use crate::morphosys::M1System;
 use crate::runtime::Executor;
+
+use super::pool::{RoutineSpec, TilePool, TileRequest};
 
 /// Which backend served a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -153,30 +153,33 @@ impl Backend for XlaBackend {
 /// cycle-accurate simulator 64 points at a time, and reports simulated
 /// cycles. Falls back to the native path (with a `None` cycle count) when
 /// the transform or coordinates exceed the 16-bit datapath.
+///
+/// Execution targets the sharded [`TilePool`]: with the default
+/// `shards = 1` the tile plan runs inline on the caller thread (the
+/// serial mode, bit-for-bit the pre-pool behaviour); with
+/// [`M1SimBackend::with_shards`] the independent 64-point tiles fan out
+/// across pool shards, each owning its own simulator and routine cache.
+/// Outputs and aggregate cycle counts are identical across shard counts
+/// (see the pool's determinism contract; pinned by `tests/conformance.rs`).
 pub struct M1SimBackend {
-    sys: M1System,
+    pool: TilePool,
     /// Fixed-point shift for the 2×2 matrix (Q6 default).
     pub shift: u8,
-    /// Compiled-routine cache keyed by (tile, m, t, shift) — transforms
-    /// repeat across the tiles of a frame, so recompiling the TinyRISC
-    /// program per 64-point tile dominated the backend (§Perf).
-    cache: std::collections::HashMap<(usize, [i16; 4], [i16; 2], u8), crate::mapping::MappedRoutine>,
 }
 
 impl M1SimBackend {
+    /// Serial backend (`shards = 1`).
     pub fn new() -> M1SimBackend {
-        M1SimBackend { sys: M1System::new(), shift: 6, cache: std::collections::HashMap::new() }
+        M1SimBackend::with_shards(1)
     }
 
-    fn routine(&mut self, tile: usize, fp: &FixedPointParams) -> &crate::mapping::MappedRoutine {
-        if self.cache.len() > 512 {
-            self.cache.clear(); // crude bound; transforms rarely exceed this
-        }
-        self.cache
-            .entry((tile, fp.m, fp.t, fp.shift))
-            .or_insert_with(|| {
-                PointTransformMapping { n: tile, m: fp.m, t: fp.t, shift: fp.shift }.compile()
-            })
+    /// Backend over a pool with `shards` execution shards.
+    pub fn with_shards(shards: usize) -> M1SimBackend {
+        M1SimBackend { pool: TilePool::new(shards), shift: 6 }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
     }
 
     fn quantizable(params: &[f32; 6], shift: u8) -> Option<FixedPointParams> {
@@ -199,6 +202,9 @@ impl Backend for M1SimBackend {
 
     fn apply(&mut self, params: &[f32; 6], xs: &mut [f32], ys: &mut [f32]) -> Result<Option<f64>> {
         let n = xs.len();
+        if n == 0 {
+            return Ok(None);
+        }
         let fp = match Self::quantizable(params, self.shift) {
             Some(fp) => fp,
             None => {
@@ -215,27 +221,37 @@ impl Backend for M1SimBackend {
             return Ok(None);
         }
 
-        let mut cycles = 0u64;
+        // Build the tile plan: 64-point tiles, the last one padded to a
+        // whole column broadcast (multiple of 8).
+        let mut tiles = Vec::with_capacity(n.div_ceil(64));
         let mut done = 0usize;
-        let mut ix = [0i16; 64];
-        let mut iy = [0i16; 64];
         while done < n {
             let len = (n - done).min(64);
-            // Pad to the next multiple of 8 (a whole column broadcast).
             let tile = len.div_ceil(8) * 8;
-            ix[..tile].fill(0);
-            iy[..tile].fill(0);
+            let mut ix = vec![0i16; tile];
+            let mut iy = vec![0i16; tile];
             for i in 0..len {
                 ix[i] = xs[done + i].round() as i16;
                 iy[i] = ys[done + i].round() as i16;
             }
-            self.sys.reset_chip();
-            // Split borrows: clone the cached routine handle is avoided by
-            // taking it out of `self` via pointer equality on the cache.
-            let routine = self.routine(tile, &fp).clone();
-            let out = run_routine_on(&mut self.sys, &routine, &ix[..tile], Some(&iy[..tile]));
-            cycles += out.report.cycles;
-            let (ox, oy) = out.result.split_at(tile);
+            tiles.push(TileRequest {
+                spec: RoutineSpec::PointTransform { n: tile, m: fp.m, t: fp.t, shift: fp.shift },
+                u: ix,
+                v: Some(iy),
+            });
+            done += len;
+        }
+
+        // Fan the plan out across the pool; outcomes come back in tile
+        // order and cycles aggregate as the order-independent sum.
+        let outcomes = self.pool.run(tiles);
+        let mut cycles = 0u64;
+        done = 0;
+        for outcome in &outcomes {
+            let len = (n - done).min(64);
+            let tile = len.div_ceil(8) * 8;
+            cycles += outcome.report.cycles;
+            let (ox, oy) = outcome.result.split_at(tile);
             for i in 0..len {
                 xs[done + i] = ox[i] as f32;
                 ys[done + i] = oy[i] as f32;
@@ -340,6 +356,23 @@ mod tests {
         let cycles = m1.apply(&params, &mut xs, &mut ys).unwrap();
         assert_eq!(cycles, None);
         assert_eq!(xs, vec![100.0, 200.0]);
+    }
+
+    #[test]
+    fn sharded_backend_is_bit_identical_to_serial() {
+        let params = [1.0, 0.0, 0.0, 1.0, 7.0, -3.0];
+        let base_x: Vec<f32> = (0..500).map(|i| (i as f32) - 250.0).collect();
+        let base_y: Vec<f32> = (0..500).map(|i| (i % 97) as f32).collect();
+        let mut serial = M1SimBackend::new();
+        let (mut sx, mut sy) = (base_x.clone(), base_y.clone());
+        let sc = serial.apply(&params, &mut sx, &mut sy).unwrap();
+        let mut pooled = M1SimBackend::with_shards(4);
+        assert_eq!(pooled.shards(), 4);
+        let (mut px, mut py) = (base_x, base_y);
+        let pc = pooled.apply(&params, &mut px, &mut py).unwrap();
+        assert_eq!(sx, px);
+        assert_eq!(sy, py);
+        assert_eq!(sc.unwrap().to_bits(), pc.unwrap().to_bits(), "aggregate cycles differ");
     }
 
     #[test]

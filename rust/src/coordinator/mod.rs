@@ -20,11 +20,15 @@
 //! Backends: [`backend::NativeBackend`] (plain rust), [`backend::XlaBackend`]
 //! (the AOT artifacts via PJRT) and [`backend::M1SimBackend`] (the
 //! cycle-accurate MorphoSys simulator running the paper's mappings, which
-//! additionally reports simulated M1 cycles).
+//! additionally reports simulated M1 cycles). The M1 backend executes its
+//! 64-point tile plan on the sharded [`pool::TilePool`] — serial with
+//! `shards = 1`, fanned out across per-shard simulators otherwise, with
+//! bit-identical outputs and cycle totals either way.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod server;
@@ -32,6 +36,7 @@ pub mod server;
 pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use pool::{RoutineSpec, TileOutcome, TilePool, TileRequest};
 pub use queue::BoundedQueue;
 pub use request::{TransformRequest, TransformResponse};
 pub use server::{BackendChoice, Coordinator, CoordinatorConfig};

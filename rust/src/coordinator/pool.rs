@@ -1,0 +1,402 @@
+//! # Sharded tile-execution pool (§Perf)
+//!
+//! The M1 mappings decompose every workload into independent 64-point
+//! tiles (one full 8×8 RC-array configuration); the serial `M1SimBackend`
+//! ran them one after another on a single simulator instance. This module
+//! parallelizes that tile plan across **shards**: worker threads that each
+//! own a private [`M1System`] and a private compiled-routine cache (plus,
+//! implicitly, the per-thread [`BroadcastSchedule`] cache in
+//! [`crate::mapping::runner`], which is thread-local).
+//!
+//! ## Design
+//!
+//! ```text
+//!  caller ── run(tiles) ──► TaskSet { tiles, next: AtomicUsize }
+//!                               │ (chunked self-balancing dispatch:
+//!                               │  each shard repeatedly claims the next
+//!                               │  chunk of tile indices until drained)
+//!               shard 0 ─ M1System + routine cache ─┐
+//!               shard 1 ─ M1System + routine cache ─┼─► (index, outcome)
+//!               …                                   │    per tile
+//!  caller ◄── results spliced back into tile order ─┘
+//! ```
+//!
+//! Dispatch is *chunked work claiming*: tiles live in one shared,
+//! immutable `TaskSet`, and shards claim the next chunk of indices from an
+//! atomic cursor. Like work stealing this self-balances (a slow shard
+//! simply claims fewer chunks) without per-tile channel traffic or a
+//! per-shard deque.
+//!
+//! ## Determinism contract
+//!
+//! Pooled execution is **bit-for-bit identical** to serial execution,
+//! independent of shard count and interleaving:
+//!
+//! * every tile runs on a freshly `reset_chip`-ed system, so a tile's
+//!   result depends only on its own inputs — never on which shard ran it
+//!   or what ran before;
+//! * results are spliced back by tile index, so output order equals the
+//!   serial order;
+//! * cycle accounting is aggregated as the sum of per-tile cycle counts
+//!   (u64 addition — order-independent), which equals the serial backend's
+//!   running total exactly.
+//!
+//! The randomized conformance suite (`tests/conformance.rs`) pins all
+//! three properties across shard counts {1, 2, 4, 8}.
+//!
+//! ## Choosing a shard count
+//!
+//! A tile simulates in ~10 µs, so sharding pays off once a request carries
+//! several tiles (n ≳ 256). `shards = 1` is the serial mode (tiles run
+//! inline on the caller thread — no worker threads, no channels, identical
+//! to the pre-pool backend). For throughput serving, `shards ≈ physical
+//! cores / coordinator workers` is the right starting point; beyond the
+//! tile count of a typical request the extra shards just idle.
+//!
+//! [`BroadcastSchedule`]: crate::morphosys::BroadcastSchedule
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::mapping::{runner::run_routine_on, MappedRoutine, PointTransformMapping, VecVecMapping};
+use crate::morphosys::{AluOp, ExecutionReport, M1System};
+
+/// Compact, hashable description of the routine a tile runs. Shards
+/// compile specs on demand and cache the result, so a transform repeated
+/// across the tiles of a frame compiles once per shard, not once per tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutineSpec {
+    /// §5.2/§5.3 point transform: `n` points through fixed-point matrix
+    /// `m` (Q`shift`) plus translation `t`.
+    PointTransform { n: usize, m: [i16; 4], t: [i16; 2], shift: u8 },
+    /// §5.1 element-wise vector-vector op on one tile.
+    VecVec { n: usize, op: AluOp },
+}
+
+impl RoutineSpec {
+    fn compile(&self) -> MappedRoutine {
+        match *self {
+            RoutineSpec::PointTransform { n, m, t, shift } => {
+                PointTransformMapping { n, m, t, shift }.compile()
+            }
+            RoutineSpec::VecVec { n, op } => VecVecMapping { n, op }.compile(),
+        }
+    }
+}
+
+/// One tile of work: the routine to run and its staged input vectors.
+#[derive(Debug, Clone)]
+pub struct TileRequest {
+    pub spec: RoutineSpec,
+    pub u: Vec<i16>,
+    pub v: Option<Vec<i16>>,
+}
+
+/// One tile's outcome: the result vector read back from main memory and
+/// the simulator's execution report.
+#[derive(Debug, Clone)]
+pub struct TileOutcome {
+    pub result: Vec<i16>,
+    pub report: ExecutionReport,
+}
+
+/// Bound on distinct cached routines per shard (same crude policy as the
+/// schedule cache in [`crate::mapping::runner`]).
+const ROUTINE_CACHE_MAX: usize = 512;
+
+/// Per-shard execution state: a private simulator plus a private
+/// compiled-routine cache. Never shared between threads.
+struct Shard {
+    sys: M1System,
+    routines: HashMap<RoutineSpec, MappedRoutine>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard { sys: M1System::new(), routines: HashMap::new() }
+    }
+
+    fn run_tile(&mut self, tile: &TileRequest) -> TileOutcome {
+        if self.routines.len() > ROUTINE_CACHE_MAX {
+            self.routines.clear();
+        }
+        let routine =
+            self.routines.entry(tile.spec).or_insert_with(|| tile.spec.compile());
+        self.sys.reset_chip();
+        let out = run_routine_on(&mut self.sys, routine, &tile.u, tile.v.as_deref());
+        TileOutcome { result: out.result, report: out.report }
+    }
+}
+
+/// One `run` call's worth of work, shared read-only across shards; `next`
+/// is the chunk-claim cursor.
+struct TaskSet {
+    tiles: Vec<TileRequest>,
+    next: AtomicUsize,
+    chunk: usize,
+}
+
+/// A batch handed to every shard: the shared task set plus the reply
+/// channel results come back on, tagged with their tile index.
+struct Batch {
+    tasks: Arc<TaskSet>,
+    reply: mpsc::Sender<(usize, TileOutcome)>,
+}
+
+enum Exec {
+    /// `shards == 1`: tiles run inline on the caller thread.
+    Inline(Box<Shard>),
+    /// `shards > 1`: persistent worker threads fed through per-shard
+    /// channels.
+    Threads { feeds: Vec<mpsc::Sender<Batch>>, handles: Vec<JoinHandle<()>> },
+}
+
+/// The sharded tile-execution pool. See the module docs for the design
+/// and the determinism contract.
+pub struct TilePool {
+    shards: usize,
+    exec: Exec,
+}
+
+impl TilePool {
+    /// Build a pool with `shards` execution shards (`0` is treated as
+    /// `1`). `shards == 1` spawns no threads.
+    pub fn new(shards: usize) -> TilePool {
+        let shards = shards.max(1);
+        if shards == 1 {
+            return TilePool { shards, exec: Exec::Inline(Box::new(Shard::new())) };
+        }
+        let mut feeds = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::channel::<Batch>();
+            feeds.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("m1-shard-{s}"))
+                .spawn(move || {
+                    let mut shard = Shard::new();
+                    while let Ok(batch) = rx.recv() {
+                        drain_batch(&mut shard, &batch);
+                    }
+                })
+                .expect("spawn tile-pool shard");
+            handles.push(handle);
+        }
+        TilePool { shards, exec: Exec::Threads { feeds, handles } }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Execute a tile plan. Outcomes are returned in tile order; see the
+    /// module docs for the determinism contract.
+    pub fn run(&mut self, tiles: Vec<TileRequest>) -> Vec<TileOutcome> {
+        match &mut self.exec {
+            Exec::Inline(shard) => tiles.iter().map(|t| shard.run_tile(t)).collect(),
+            Exec::Threads { feeds, .. } => {
+                let n = tiles.len();
+                if n == 0 {
+                    return Vec::new();
+                }
+                // Chunks small enough that every shard claims several
+                // (self-balancing), large enough to amortize the claim.
+                let chunk = (n / (feeds.len() * 4)).max(1);
+                let tasks = Arc::new(TaskSet { tiles, next: AtomicUsize::new(0), chunk });
+                let (tx, rx) = mpsc::channel();
+                for feed in feeds.iter() {
+                    // A send only fails if a shard died; the recv below
+                    // surfaces that as a panic with context.
+                    let _ = feed.send(Batch { tasks: tasks.clone(), reply: tx.clone() });
+                }
+                drop(tx);
+                let mut out: Vec<Option<TileOutcome>> = Vec::with_capacity(n);
+                out.resize_with(n, || None);
+                for _ in 0..n {
+                    let (i, outcome) =
+                        rx.recv().expect("tile-pool shard died mid-batch");
+                    out[i] = Some(outcome);
+                }
+                out.into_iter()
+                    .map(|o| o.expect("every tile completes exactly once"))
+                    .collect()
+            }
+        }
+    }
+
+    /// Convenience for the §5.1 multi-tile workloads: run an element-wise
+    /// vector-vector op (`n` a multiple of 64) as independent 64-point
+    /// tiles across the pool. Returns the spliced result and the summed
+    /// cycle count — the pool-targeted counterpart of the monolithic
+    /// [`crate::mapping::TiledVecVecMapping`] program, with identical
+    /// results (pinned by the `streamed` tests).
+    pub fn run_vecvec(&mut self, op: AluOp, u: &[i16], v: &[i16]) -> (Vec<i16>, u64) {
+        assert_eq!(u.len(), v.len(), "operand length mismatch");
+        assert!(
+            !u.is_empty() && u.len() % 64 == 0,
+            "pooled vecvec needs a multiple of 64 elements"
+        );
+        let tiles: Vec<TileRequest> = u
+            .chunks(64)
+            .zip(v.chunks(64))
+            .map(|(uc, vc)| TileRequest {
+                spec: RoutineSpec::VecVec { n: 64, op },
+                u: uc.to_vec(),
+                v: Some(vc.to_vec()),
+            })
+            .collect();
+        let mut result = Vec::with_capacity(u.len());
+        let mut cycles = 0u64;
+        for outcome in self.run(tiles) {
+            cycles += outcome.report.cycles;
+            result.extend_from_slice(&outcome.result);
+        }
+        (result, cycles)
+    }
+}
+
+impl Drop for TilePool {
+    fn drop(&mut self) {
+        if let Exec::Threads { feeds, handles } = &mut self.exec {
+            feeds.clear(); // closing the feeds ends every shard's recv loop
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Shard side of a batch: claim chunks of tile indices until the cursor
+/// passes the end, running each tile and replying with its index.
+fn drain_batch(shard: &mut Shard, batch: &Batch) {
+    let tasks = &batch.tasks;
+    loop {
+        let start = tasks.next.fetch_add(tasks.chunk, Ordering::Relaxed);
+        if start >= tasks.tiles.len() {
+            return;
+        }
+        let end = (start + tasks.chunk).min(tasks.tiles.len());
+        for i in start..end {
+            let outcome = shard.run_tile(&tasks.tiles[i]);
+            if batch.reply.send((i, outcome)).is_err() {
+                return; // caller went away mid-batch
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add_tiles(n_tiles: usize) -> (Vec<TileRequest>, Vec<i16>) {
+        let mut tiles = Vec::new();
+        let mut expected = Vec::new();
+        for t in 0..n_tiles {
+            let u: Vec<i16> = (0..64).map(|i| (t * 64 + i) as i16).collect();
+            let v: Vec<i16> = (0..64).map(|i| 1000 - (t as i16) - (i as i16)).collect();
+            expected.extend(u.iter().zip(&v).map(|(a, b)| a + b));
+            tiles.push(TileRequest {
+                spec: RoutineSpec::VecVec { n: 64, op: AluOp::Add },
+                u,
+                v: Some(v),
+            });
+        }
+        (tiles, expected)
+    }
+
+    fn splice(outcomes: &[TileOutcome]) -> Vec<i16> {
+        outcomes.iter().flat_map(|o| o.result.iter().copied()).collect()
+    }
+
+    #[test]
+    fn inline_pool_runs_tiles_in_order() {
+        let mut pool = TilePool::new(1);
+        assert_eq!(pool.shards(), 1);
+        let (tiles, expected) = add_tiles(5);
+        let out = pool.run(tiles);
+        assert_eq!(splice(&out), expected);
+        assert!(out.iter().all(|o| o.report.cycles == 96), "translation-64 is 96 cycles");
+    }
+
+    #[test]
+    fn threaded_pool_matches_inline_bit_for_bit() {
+        let (tiles, _) = add_tiles(13);
+        let mut serial = TilePool::new(1);
+        let baseline = serial.run(tiles.clone());
+        for shards in [2usize, 4, 8] {
+            let mut pool = TilePool::new(shards);
+            let out = pool.run(tiles.clone());
+            assert_eq!(splice(&out), splice(&baseline), "shards={shards}");
+            for (a, b) in out.iter().zip(&baseline) {
+                assert_eq!(a.report.cycles, b.report.cycles);
+                assert_eq!(a.report.slots, b.report.slots);
+                assert_eq!(a.report.broadcasts, b.report.broadcasts);
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_tiles_is_fine() {
+        let (tiles, expected) = add_tiles(2);
+        let mut pool = TilePool::new(8);
+        assert_eq!(splice(&pool.run(tiles)), expected);
+        // And an empty plan returns an empty result without deadlock.
+        assert!(pool.run(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let mut pool = TilePool::new(3);
+        for round in 0..4 {
+            let (tiles, expected) = add_tiles(round + 1);
+            assert_eq!(splice(&pool.run(tiles)), expected, "round {round}");
+        }
+    }
+
+    #[test]
+    fn run_vecvec_matches_native_reference() {
+        let n = 320;
+        let u: Vec<i16> = (0..n as i16).collect();
+        let v: Vec<i16> = (0..n as i16).map(|i| 3 * i - 7).collect();
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a.wrapping_add(*b)).collect();
+        let mut serial = TilePool::new(1);
+        let (r1, c1) = serial.run_vecvec(AluOp::Add, &u, &v);
+        let mut pooled = TilePool::new(4);
+        let (r4, c4) = pooled.run_vecvec(AluOp::Add, &u, &v);
+        assert_eq!(r1, expected);
+        assert_eq!(r4, expected);
+        assert_eq!(c1, c4, "cycle aggregation must not depend on shard count");
+        assert_eq!(c1, (n as u64 / 64) * 96);
+    }
+
+    #[test]
+    fn mixed_specs_in_one_batch() {
+        // Point-transform and vecvec tiles interleaved: per-shard routine
+        // caches must key correctly on the spec.
+        let xs: Vec<i16> = (0..64).collect();
+        let ys: Vec<i16> = (0..64).map(|i| i - 32).collect();
+        let tiles = vec![
+            TileRequest {
+                spec: RoutineSpec::PointTransform { n: 64, m: [1, 0, 0, 1], t: [5, -3], shift: 0 },
+                u: xs.clone(),
+                v: Some(ys.clone()),
+            },
+            TileRequest {
+                spec: RoutineSpec::VecVec { n: 64, op: AluOp::Sub },
+                u: xs.clone(),
+                v: Some(ys.clone()),
+            },
+        ];
+        let mut pool = TilePool::new(2);
+        let out = pool.run(tiles);
+        let (xp, yp) = out[0].result.split_at(64);
+        for i in 0..64 {
+            assert_eq!(xp[i], xs[i] + 5);
+            assert_eq!(yp[i], ys[i] - 3);
+            assert_eq!(out[1].result[i], xs[i] - ys[i]);
+        }
+    }
+}

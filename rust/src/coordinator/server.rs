@@ -34,6 +34,14 @@ pub struct CoordinatorConfig {
     /// In-flight job queue capacity.
     pub job_capacity: usize,
     pub workers: usize,
+    /// Tile-pool shards per `M1Sim` worker (each worker owns its own
+    /// pool). `1` is the serial mode; with more shards a worker fans a
+    /// job's independent 64-point tiles across per-shard simulators —
+    /// results are bit-identical either way, so this is purely a
+    /// throughput knob. Total simulator threads ≈ `workers × m1_shards`;
+    /// scale shards (which parallelize within a job) before workers
+    /// (which parallelize across jobs). Ignored by other backends.
+    pub m1_shards: usize,
     pub batcher: BatcherConfig,
 }
 
@@ -44,6 +52,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 1024,
             job_capacity: 256,
             workers: 2,
+            m1_shards: 1,
             batcher: BatcherConfig::default(),
         }
     }
@@ -84,13 +93,14 @@ impl Coordinator {
             let job_q = job_q.clone();
             let metrics = metrics.clone();
             let choice = config.backend;
+            let m1_shards = config.m1_shards;
             threads.push(std::thread::Builder::new().name(format!("morpho-worker-{w}")).spawn(
                 move || {
                     // Backend construction happens on the worker thread
                     // (XLA executors are not Send).
                     let mut backend: Box<dyn Backend> = match choice {
                         BackendChoice::Native => Box::new(NativeBackend),
-                        BackendChoice::M1Sim => Box::new(M1SimBackend::new()),
+                        BackendChoice::M1Sim => Box::new(M1SimBackend::with_shards(m1_shards)),
                         BackendChoice::Xla => match XlaBackend::discover() {
                             Ok(b) => Box::new(b),
                             Err(e) => {
@@ -313,6 +323,34 @@ mod tests {
         let m = c.metrics();
         assert!(m.simulated_cycles > 0);
         c.shutdown();
+    }
+
+    #[test]
+    fn sharded_m1sim_coordinator_matches_serial_responses() {
+        let run = |shards: usize| {
+            let c = Coordinator::start(CoordinatorConfig {
+                backend: BackendChoice::M1Sim,
+                workers: 1,
+                m1_shards: shards,
+                batcher: BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap();
+            let n = 1000;
+            let xs: Vec<f32> = (0..n).map(|i| (i as f32) - 500.0).collect();
+            let ys: Vec<f32> = (0..n).map(|i| (i % 61) as f32).collect();
+            let resp = c
+                .transform_blocking(xs, ys, vec![Transform::Translate { tx: 3.0, ty: 4.0 }])
+                .unwrap();
+            c.shutdown();
+            resp
+        };
+        let serial = run(1);
+        let pooled = run(4);
+        assert_eq!(serial.xs, pooled.xs);
+        assert_eq!(serial.ys, pooled.ys);
+        assert_eq!(serial.timing.simulated_cycles, pooled.timing.simulated_cycles);
+        assert_eq!(pooled.timing.backend, BackendKind::M1Sim);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! repro csv <dir>           write tables 3–5 and figures 9–16 as CSV
 //! repro trace <translation|scaling> [n]   mULATE-style execution trace
 //! repro artifacts           list AOT artifacts and PJRT platform
-//! repro serve [requests]    quick coordinator smoke run (XLA backend)
+//! repro serve [requests] [backend] [shards]
+//!                           quick coordinator smoke run; backend is
+//!                           native|xla|m1sim (default xla), shards sizes
+//!                           the m1sim worker's tile pool (default 1)
 //! ```
 
 use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
@@ -21,7 +24,8 @@ use morpho::perf::{
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <all | table N | figure N | csv DIR | trace ALG [n] | artifacts | serve [N]>"
+        "usage: repro <all | table N | figure N | csv DIR | trace ALG [n] | artifacts | \
+         serve [N] [native|xla|m1sim] [shards]>"
     );
     std::process::exit(2)
 }
@@ -102,10 +106,11 @@ fn artifacts() {
     }
 }
 
-fn serve(requests: usize) {
+fn serve(requests: usize, backend: BackendChoice, m1_shards: usize) {
     let c = Coordinator::start(CoordinatorConfig {
-        backend: BackendChoice::Xla,
+        backend,
         workers: 1,
+        m1_shards,
         ..Default::default()
     })
     .expect("start coordinator");
@@ -174,8 +179,24 @@ fn main() {
         }
         Some("artifacts") => artifacts(),
         Some("serve") => {
-            let n = it.next().and_then(|s| s.parse().ok()).unwrap_or(100);
-            serve(n);
+            // Strictly positional: a malformed count/shards errors out
+            // instead of silently shifting the arguments.
+            let n = match it.next() {
+                None => 100,
+                Some(s) => s.parse().unwrap_or_else(|_| usage()),
+            };
+            let backend = match it.next() {
+                None => BackendChoice::Xla,
+                Some("native") => BackendChoice::Native,
+                Some("xla") => BackendChoice::Xla,
+                Some("m1sim") => BackendChoice::M1Sim,
+                Some(_) => usage(),
+            };
+            let shards = match it.next() {
+                None => 1,
+                Some(s) => s.parse().unwrap_or_else(|_| usage()),
+            };
+            serve(n, backend, shards);
         }
         _ => usage(),
     }

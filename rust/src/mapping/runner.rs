@@ -29,7 +29,9 @@ std::thread_local! {
     // and reused across run_routine calls (§Perf). Keyed by the program
     // itself (exact structural equality), so a cache hit can never serve
     // a stale schedule; `None` marks programs that don't compile
-    // (branches) and always take the interpreter.
+    // (branches) and always take the interpreter. Being thread-local,
+    // every shard of the tile pool (`coordinator::pool`) automatically
+    // gets a private instance — no cross-shard locking on the hot path.
     static SCHEDULES: RefCell<HashMap<Program, Option<Arc<BroadcastSchedule>>>> =
         RefCell::new(HashMap::new());
 }

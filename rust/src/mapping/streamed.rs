@@ -11,6 +11,13 @@
 //! t's broadcasts — measurable only under the async-DMA system mode
 //! (`M1System::with_async_dma`), which is exactly the hardware the quote
 //! describes. The ablation bench quantifies the claim.
+//!
+//! Both schedules run every tile on **one** simulator instance. The third
+//! way to scale multi-tile workloads is across simulators: the sharded
+//! tile pool ([`crate::coordinator::pool::TilePool::run_vecvec`]) runs
+//! the same 64-point tiles on per-shard systems in parallel, with results
+//! pinned bit-for-bit against these monolithic schedules by the tests
+//! below.
 
 use crate::morphosys::context_memory::Block;
 use crate::morphosys::frame_buffer::{Bank, Set};
@@ -247,6 +254,30 @@ mod tests {
                     assert_eq!(a.result, want, "naive n={n} async={async_dma}");
                     assert_eq!(b.result, want, "streamed n={n} async={async_dma}");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_tiles_match_monolithic_schedules_across_shard_counts() {
+        // The pool-targeted runner decomposes the same workload into
+        // independent 64-point tiles; for any shard count its spliced
+        // result must equal both monolithic schedules (and native).
+        use crate::coordinator::pool::TilePool;
+        check("pooled == tiled == native", 6, |rng: &mut Rng| {
+            let n = 64 * rng.range_i64(1, 6) as usize;
+            let u = rng.small_vec(n);
+            let v = rng.small_vec(n);
+            let want = expected(&u, &v);
+            let naive = TiledVecVecMapping { n, op: AluOp::Add, streamed: false }.compile();
+            let mono = run_routine_on(&mut M1System::new(), &naive, &u, Some(&v));
+            assert_eq!(mono.result, want);
+            let mut baseline_cycles = None;
+            for shards in [1usize, 2, 4] {
+                let mut pool = TilePool::new(shards);
+                let (result, cycles) = pool.run_vecvec(AluOp::Add, &u, &v);
+                assert_eq!(result, want, "shards={shards} n={n}");
+                assert_eq!(*baseline_cycles.get_or_insert(cycles), cycles, "shards={shards}");
             }
         });
     }

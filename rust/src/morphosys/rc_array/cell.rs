@@ -64,7 +64,7 @@ pub fn execute_step(
 }
 
 /// One reconfigurable cell (the AoS view; see [`execute_step`]).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RcCell {
     /// Register file: four 16-bit registers.
     pub regs: [i16; 4],

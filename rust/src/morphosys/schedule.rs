@@ -23,8 +23,9 @@
 //!
 //! [`M1System::run`]: crate::morphosys::M1System::run
 
-use super::frame_buffer::{Bank, Set};
-use super::rc_array::BroadcastMode;
+use super::context_memory::{PLANES, PLANE_WORDS};
+use super::frame_buffer::{Bank, Set, BANK_ELEMS};
+use super::rc_array::{BroadcastMode, ARRAY_DIM};
 use super::system::ExecutionReport;
 use super::tinyrisc::{Instruction, Program};
 
@@ -55,7 +56,17 @@ pub(crate) enum Step {
 /// precomputed cycle accounting.
 #[derive(Debug, Clone)]
 pub struct BroadcastSchedule {
-    pub(crate) steps: Vec<Step>,
+    /// Private (even crate-wide): `steps` together with `validated` carry
+    /// the safety proof for the executor's unchecked plane reads, so only
+    /// `compile` may establish them.
+    steps: Vec<Step>,
+    /// Every broadcast step's static coordinates were proven in range at
+    /// compile time (context plane/word, broadcast line, and — the hot
+    /// part — `bus addr + ARRAY_DIM <= BANK_ELEMS` for both operand
+    /// buses), so the executor may use unchecked frame-buffer plane reads
+    /// (§Perf). An out-of-range program compiles unvalidated and runs
+    /// through the checked path, panicking exactly like the interpreter.
+    validated: bool,
     cycles: u64,
     slots: u64,
     executed: u64,
@@ -73,6 +84,14 @@ impl BroadcastSchedule {
         let mut executed = 0u64;
         let mut broadcasts = 0u64;
         let mut last_issue = 0u64;
+        let mut validated = true;
+        let bus_ok = |bus: Option<(Bank, usize)>| match bus {
+            Some((_, addr)) => addr + ARRAY_DIM <= BANK_ELEMS,
+            None => true,
+        };
+        let coords_ok = |plane: usize, cw: usize, line: usize| {
+            plane < PLANES && cw < PLANE_WORDS && line < ARRAY_DIM
+        };
         for instr in &program.instructions {
             // Blocking-DMA issue model: the instruction issues at the
             // current slot count and occupies `issue_slots()` slots.
@@ -144,8 +163,33 @@ impl BroadcastSchedule {
                 }
                 plain => steps.push(Step::Plain(plain)),
             }
+            // Validate the step just pushed: every broadcast whose static
+            // coordinates are provably in range may take the unchecked
+            // plane-read path at execution time.
+            if let Some(Step::Broadcast { plane, cw, line, bus_a, bus_b, .. }) = steps.last() {
+                validated &=
+                    coords_ok(*plane, *cw, *line) && bus_ok(*bus_a) && bus_ok(*bus_b);
+            }
         }
-        Some(BroadcastSchedule { steps, cycles: last_issue, slots, executed, broadcasts })
+        Some(BroadcastSchedule {
+            steps,
+            validated,
+            cycles: last_issue,
+            slots,
+            executed,
+            broadcasts,
+        })
+    }
+
+    /// Whether every broadcast step passed compile-time bounds validation
+    /// (the precondition for the executor's unchecked plane reads).
+    pub fn is_validated(&self) -> bool {
+        self.validated
+    }
+
+    /// The pre-decoded steps, read-only (the executor's iteration path).
+    pub(crate) fn steps(&self) -> &[Step] {
+        &self.steps
     }
 
     /// The precomputed execution report (identical to what the
@@ -216,6 +260,41 @@ mod tests {
         assert_eq!(r.executed, 2);
         assert_eq!(r.cycles, 1);
         assert_eq!(r.slots, 2);
+    }
+
+    #[test]
+    fn in_range_broadcasts_validate_for_unchecked_reads() {
+        let p = Program::new(vec![
+            Instruction::Dbcdc { plane: 1, cw: 15, col: 7, set: Set::One, addr_a: BANK_ELEMS - ARRAY_DIM, addr_b: 0 },
+            Instruction::Sbcbr { plane: 0, cw: 0, row: 0, set: Set::Zero, bank: Bank::B, addr: 64 },
+            Instruction::Wfbi { col: 3, set: Set::One, bank: Bank::A, addr: 0 },
+        ]);
+        assert!(BroadcastSchedule::compile(&p).unwrap().is_validated());
+    }
+
+    #[test]
+    fn out_of_range_bus_addresses_fall_back_to_checked_execution() {
+        // One element past the last whole operand-bus window: the
+        // schedule still compiles (and must panic at run time exactly
+        // like the interpreter), but the unchecked path is off.
+        let p = Program::new(vec![Instruction::Dbcdc {
+            plane: 0,
+            cw: 0,
+            col: 0,
+            set: Set::Zero,
+            addr_a: BANK_ELEMS - ARRAY_DIM + 1,
+            addr_b: 0,
+        }]);
+        assert!(!BroadcastSchedule::compile(&p).unwrap().is_validated());
+        let p = Program::new(vec![Instruction::Sbcb {
+            plane: 2, // out-of-range context plane
+            cw: 0,
+            col: 0,
+            set: Set::Zero,
+            bank: Bank::A,
+            addr: 0,
+        }]);
+        assert!(!BroadcastSchedule::compile(&p).unwrap().is_validated());
     }
 
     #[test]

@@ -146,14 +146,41 @@ impl M1System {
         bus_a: Option<(Bank, usize)>,
         bus_b: Option<(Bank, usize)>,
     ) -> ContextWord {
+        self.broadcast_impl(mode, plane, cw_addr, line, set, bus_a, bus_b, false)
+    }
+
+    /// Broadcast with an optional unchecked operand-bus path. `validated`
+    /// may only be true when every bus address was proven in range at
+    /// schedule-compile time (see [`BroadcastSchedule`]); the interpreter
+    /// always passes false and keeps the checked reads.
+    #[allow(clippy::too_many_arguments)]
+    fn broadcast_impl(
+        &mut self,
+        mode: BroadcastMode,
+        plane: usize,
+        cw_addr: usize,
+        line: usize,
+        set: Set,
+        bus_a: Option<(Bank, usize)>,
+        bus_b: Option<(Bank, usize)>,
+        validated: bool,
+    ) -> ContextWord {
         let block = match mode {
             BroadcastMode::Column => Block::Column,
             BroadcastMode::Row => Block::Row,
         };
         let cw = self.ctx.read_decoded(block, plane, cw_addr);
         let zero = [0i16; ARRAY_DIM];
-        let a = bus_a.map(|(bank, addr)| self.fb.operand_bus(set, bank, addr)).unwrap_or(zero);
-        let b = bus_b.map(|(bank, addr)| self.fb.operand_bus(set, bank, addr)).unwrap_or(zero);
+        let a = match bus_a {
+            Some((bank, addr)) if validated => self.fb.operand_bus_validated(set, bank, addr),
+            Some((bank, addr)) => self.fb.operand_bus(set, bank, addr),
+            None => zero,
+        };
+        let b = match bus_b {
+            Some((bank, addr)) if validated => self.fb.operand_bus_validated(set, bank, addr),
+            Some((bank, addr)) => self.fb.operand_bus(set, bank, addr),
+            None => zero,
+        };
         self.array.broadcast(mode, line, &cw, &a, &b);
         cw
     }
@@ -409,13 +436,17 @@ impl M1System {
     /// no cycle arithmetic, no trace plumbing — just the architectural
     /// effects. The report comes precomputed from compile time.
     fn run_scheduled(&mut self, schedule: &BroadcastSchedule) -> ExecutionReport {
-        for step in &schedule.steps {
+        // Compile-time validation of every broadcast's static coordinates
+        // unlocks unchecked frame-buffer plane reads (§Perf); unvalidated
+        // schedules keep the interpreter's checked reads (and panics).
+        let validated = schedule.is_validated();
+        for step in schedule.steps() {
             match *step {
                 Step::Plain(instr) => self.exec_plain(&instr),
                 Step::Broadcast { mode, plane, cw, line, set, bus_a, bus_b } => {
                     // Same effect path as the interpreter's broadcast
                     // instructions — one implementation, two dispatchers.
-                    self.broadcast(mode, plane, cw, line, set, bus_a, bus_b);
+                    self.broadcast_impl(mode, plane, cw, line, set, bus_a, bus_b, validated);
                 }
                 Step::WriteBack { mode, line, set, bank, addr } => {
                     let outs = match mode {
@@ -651,6 +682,54 @@ mod tests {
         let mut asn = M1System::new().with_async_dma();
         let r = asn.run_program(&p, Some(&schedule));
         assert_eq!(r.executed, 2);
+    }
+
+    #[test]
+    fn reset_chip_dirty_range_tracking_equals_full_zeroing() {
+        // Interleave routines that touch disjoint frame-buffer ranges —
+        // the §5.1 mapping (banks A/B of both sets at 0..64), the
+        // streamed tiled mapping (ping-pongs sets, results at 512..), and
+        // direct writes at the top of a bank — and assert that after
+        // every reset_chip the chip state is indistinguishable from a
+        // fresh system's (the dirty-span clear must equal a full 16 KiB
+        // zeroing).
+        use crate::mapping::{runner::run_routine_on, TiledVecVecMapping, VecVecMapping};
+        use crate::morphosys::frame_buffer::BANK_ELEMS;
+
+        let assert_chip_fresh = |sys: &M1System| {
+            let fresh = M1System::new();
+            for set in [Set::Zero, Set::One] {
+                for bank in [Bank::A, Bank::B] {
+                    assert_eq!(
+                        sys.fb.read_slice(set, bank, 0, BANK_ELEMS),
+                        fresh.fb.read_slice(set, bank, 0, BANK_ELEMS),
+                        "FB {set:?}/{bank:?} residue after reset_chip"
+                    );
+                }
+            }
+            assert_eq!(sys.array.outputs(), fresh.array.outputs());
+        };
+
+        let mut sys = M1System::new();
+        let u: Vec<i16> = (0..64).map(|i| i - 11).collect();
+        let v: Vec<i16> = (0..64).map(|i| 2 * i + 1).collect();
+        run_routine_on(&mut sys, &VecVecMapping { n: 64, op: crate::morphosys::AluOp::Add }.compile(), &u, Some(&v));
+        sys.reset_chip();
+        assert_chip_fresh(&sys);
+
+        let n = 128;
+        let tu: Vec<i16> = (0..n as i16).collect();
+        let tv = vec![7i16; n];
+        let tiled = TiledVecVecMapping { n, op: crate::morphosys::AluOp::Add, streamed: true }.compile();
+        run_routine_on(&mut sys, &tiled, &tu, Some(&tv));
+        sys.fb.write(Set::One, Bank::B, BANK_ELEMS - 1, 99);
+        sys.reset_chip();
+        assert_chip_fresh(&sys);
+
+        // A routine after the reset computes from clean state.
+        let out = run_routine_on(&mut sys, &VecVecMapping { n: 8, op: crate::morphosys::AluOp::Add }.compile(), &u[..8], Some(&v[..8]));
+        let expected: Vec<i16> = u[..8].iter().zip(&v[..8]).map(|(a, b)| a + b).collect();
+        assert_eq!(out.result, expected);
     }
 
     #[test]

@@ -1,0 +1,407 @@
+//! Randomized differential conformance suite.
+//!
+//! Three executors must agree **bit-for-bit** on every workload this file
+//! can generate:
+//!
+//! 1. the TinyRISC **interpreter** (`M1System::run`) — the reference;
+//! 2. the pre-decoded **scheduled path** (`run_program` with a compiled
+//!    `BroadcastSchedule`), including its unchecked validated plane reads;
+//! 3. **pooled** execution (`M1SimBackend::with_shards`) against the
+//!    serial backend, across shard counts.
+//!
+//! Agreement is checked on cell planes (all 64 cells' registers, output,
+//! accumulator and express latch), the full frame buffer, context memory,
+//! the main-memory window programs write to, and cycle accounting.
+//!
+//! Every case derives from a deterministic seed. CI runs a fixed seed
+//! matrix by exporting `CONFORMANCE_SEED`, which perturbs the base seed
+//! so each matrix entry explores a disjoint case set; failures print the
+//! exact per-case seed to reproduce locally.
+
+use morpho::coordinator::backend::{apply_native, Backend, M1SimBackend};
+use morpho::morphosys::context_memory::Block;
+use morpho::morphosys::frame_buffer::BANK_ELEMS;
+use morpho::morphosys::rc_array::ARRAY_DIM;
+use morpho::morphosys::{Bank, BroadcastSchedule, Instruction, M1System, Program, Reg, Set};
+use morpho::testkit::Rng;
+
+/// Words of main memory the generator stages into and programs may write;
+/// the differential check compares this whole window.
+const MEM_WINDOW: usize = 0x2000;
+
+/// Base seed, perturbed by the `CONFORMANCE_SEED` env var (the CI seed
+/// matrix).
+fn seed_base() -> u64 {
+    std::env::var("CONFORMANCE_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .map(|s| 0x5EED_0000_0000_0000 ^ (s.wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+        .unwrap_or(0x5EED_C0FF_EE00_0001)
+}
+
+/// Run `cases` seeded cases, printing the reproducing seed on failure.
+fn for_each_case(name: &str, cases: u64, mut case: impl FnMut(&mut Rng)) {
+    let base = seed_base();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0xA24B_AED4_963E_E407));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| case(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("conformance `{name}` failed on case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_set(rng: &mut Rng) -> Set {
+    Set::from_index(rng.below(2) as usize)
+}
+
+fn rand_bank(rng: &mut Rng) -> Bank {
+    Bank::from_index(rng.below(2) as usize)
+}
+
+/// Mostly-low frame-buffer address with a valid 8-element bus window;
+/// occasionally the exact top of the bank to exercise the validated-read
+/// boundary.
+fn rand_bus_addr(rng: &mut Rng) -> usize {
+    match rng.below(10) {
+        0 => BANK_ELEMS - ARRAY_DIM,
+        1..=2 => rng.below((BANK_ELEMS - ARRAY_DIM + 1) as u64) as usize,
+        _ => rng.below(256) as usize,
+    }
+}
+
+/// Emit `ldui`/`ldli` loading `addr` (within the memory window) into `rd`.
+fn emit_load_addr(prog: &mut Vec<Instruction>, rd: Reg, addr: usize) {
+    prog.push(Instruction::Ldui { rd, imm: (addr >> 16) as u16 });
+    prog.push(Instruction::Ldli { rd, imm: (addr & 0xFFFF) as u16 });
+}
+
+/// Data staged identically into both systems' main memories before a run.
+struct Staging {
+    elements: Vec<(usize, Vec<i16>)>,
+}
+
+impl Staging {
+    fn random(rng: &mut Rng) -> Staging {
+        // A few blocks of random elements: vector data for DMA fills plus
+        // raw words that become (arbitrary) context words via ldctxt.
+        let mut elements = Vec::new();
+        for _ in 0..rng.range_i64(2, 5) {
+            let addr = rng.below((MEM_WINDOW / 2) as u64) as usize;
+            let len = rng.range_i64(8, 128) as usize;
+            let data: Vec<i16> = (0..len).map(|_| rng.i16()).collect();
+            elements.push((addr, data));
+        }
+        Staging { elements }
+    }
+
+    fn apply(&self, sys: &mut M1System) {
+        for (addr, data) in &self.elements {
+            sys.mem.store_elements(*addr, data);
+        }
+    }
+}
+
+/// Generate a random straight-line TinyRISC program whose every access is
+/// in range (the interpreter panics on out-of-range accesses, so a valid
+/// generator is part of the differential contract).
+fn random_program(rng: &mut Rng) -> Program {
+    let mut prog = Vec::new();
+    let ops = rng.range_i64(6, 40);
+    for _ in 0..ops {
+        let r = Reg(rng.range_i64(1, 7) as u8);
+        match rng.below(12) {
+            // DMA fill: main memory → frame buffer.
+            0..=1 => {
+                let words = rng.range_i64(1, 32) as usize;
+                let fb_addr = rng.below((BANK_ELEMS - 2 * words + 1) as u64) as usize;
+                let mem_addr = rng.below((MEM_WINDOW - words) as u64) as usize;
+                emit_load_addr(&mut prog, r, mem_addr);
+                prog.push(Instruction::Ldfb {
+                    rs: r,
+                    set: rand_set(rng),
+                    bank: rand_bank(rng),
+                    words,
+                    fb_addr,
+                });
+            }
+            // DMA drain: frame buffer → main memory.
+            2 => {
+                let words = rng.range_i64(1, 32) as usize;
+                let fb_addr = rng.below((BANK_ELEMS - 2 * words + 1) as u64) as usize;
+                let mem_addr = rng.below((MEM_WINDOW - words) as u64) as usize;
+                emit_load_addr(&mut prog, r, mem_addr);
+                prog.push(Instruction::Stfb {
+                    rs: r,
+                    set: rand_set(rng),
+                    bank: rand_bank(rng),
+                    words,
+                    fb_addr,
+                });
+            }
+            // Context load: arbitrary staged words decode to arbitrary
+            // context words — the broadcast semantics space.
+            3..=4 => {
+                let count = rng.range_i64(1, 8) as usize;
+                let word = rng.below((16 - count + 1) as u64) as usize;
+                let mem_addr = rng.below((MEM_WINDOW - count) as u64) as usize;
+                emit_load_addr(&mut prog, r, mem_addr);
+                prog.push(Instruction::Ldctxt {
+                    rs: r,
+                    block: if rng.bool() { Block::Column } else { Block::Row },
+                    plane: rng.below(2) as usize,
+                    word,
+                    count,
+                });
+            }
+            // Broadcasts: the hot differential surface (validated
+            // unchecked plane reads vs the interpreter's checked reads).
+            5..=8 => {
+                let plane = rng.below(2) as usize;
+                let cw = rng.below(16) as usize;
+                let line = rng.below(8) as usize;
+                let set = rand_set(rng);
+                match rng.below(4) {
+                    0 => prog.push(Instruction::Dbcdc {
+                        plane,
+                        cw,
+                        col: line,
+                        set,
+                        addr_a: rand_bus_addr(rng),
+                        addr_b: rand_bus_addr(rng),
+                    }),
+                    1 => prog.push(Instruction::Dbcdr {
+                        plane,
+                        cw,
+                        row: line,
+                        set,
+                        addr_a: rand_bus_addr(rng),
+                        addr_b: rand_bus_addr(rng),
+                    }),
+                    2 => prog.push(Instruction::Sbcb {
+                        plane,
+                        cw,
+                        col: line,
+                        set,
+                        bank: rand_bank(rng),
+                        addr: rand_bus_addr(rng),
+                    }),
+                    _ => prog.push(Instruction::Sbcbr {
+                        plane,
+                        cw,
+                        row: line,
+                        set,
+                        bank: rand_bank(rng),
+                        addr: rand_bus_addr(rng),
+                    }),
+                }
+            }
+            // Write-backs of line outputs.
+            9 => {
+                let line = rng.below(8) as usize;
+                let set = rand_set(rng);
+                let bank = rand_bank(rng);
+                let addr = rng.below((BANK_ELEMS - ARRAY_DIM + 1) as u64) as usize;
+                if rng.bool() {
+                    prog.push(Instruction::Wfbi { col: line, set, bank, addr });
+                } else {
+                    prog.push(Instruction::Wfbir { row: line, set, bank, addr });
+                }
+            }
+            // Scalar ops.
+            10 => {
+                let rs = Reg(rng.below(8) as u8);
+                let rt = Reg(rng.below(8) as u8);
+                match rng.below(3) {
+                    0 => prog.push(Instruction::Add { rd: r, rs, rt }),
+                    1 => prog.push(Instruction::Sub { rd: r, rs, rt }),
+                    _ => prog.push(Instruction::Addi {
+                        rd: r,
+                        rs,
+                        imm: rng.range_i64(-100, 100) as i16,
+                    }),
+                }
+            }
+            // Rare early halt (anything after is dead in both executors).
+            _ => {
+                if rng.below(8) == 0 {
+                    prog.push(Instruction::Halt);
+                    break;
+                }
+                prog.push(Instruction::NOP);
+            }
+        }
+    }
+    Program::new(prog)
+}
+
+/// Assert two systems are architecturally identical after a run.
+fn assert_systems_identical(a: &M1System, b: &M1System, what: &str) {
+    for row in 0..ARRAY_DIM {
+        for col in 0..ARRAY_DIM {
+            assert_eq!(a.array.cell(row, col), b.array.cell(row, col), "{what}: cell ({row},{col})");
+        }
+    }
+    for set in [Set::Zero, Set::One] {
+        for bank in [Bank::A, Bank::B] {
+            assert_eq!(
+                a.fb.read_slice(set, bank, 0, BANK_ELEMS),
+                b.fb.read_slice(set, bank, 0, BANK_ELEMS),
+                "{what}: FB {set:?}/{bank:?}"
+            );
+        }
+    }
+    for block in [Block::Column, Block::Row] {
+        for plane in 0..2 {
+            for word in 0..16 {
+                assert_eq!(
+                    a.ctx.read(block, plane, word),
+                    b.ctx.read(block, plane, word),
+                    "{what}: ctx {block:?}/{plane}/{word}"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        a.mem.load_elements(0, 2 * MEM_WINDOW),
+        b.mem.load_elements(0, 2 * MEM_WINDOW),
+        "{what}: main-memory window"
+    );
+}
+
+#[test]
+fn random_programs_scheduled_path_is_bit_identical_to_interpreter() {
+    for_each_case("scheduled == interpreter", 220, |rng| {
+        let staging = Staging::random(rng);
+        let program = random_program(rng);
+        let schedule = BroadcastSchedule::compile(&program)
+            .expect("straight-line programs always compile");
+
+        let mut interp = M1System::new();
+        staging.apply(&mut interp);
+        let ri = interp.run(&program);
+
+        let mut sched = M1System::new();
+        staging.apply(&mut sched);
+        let rs = sched.run_program(&program, Some(&schedule));
+
+        assert_eq!(ri.cycles, rs.cycles, "cycles");
+        assert_eq!(ri.slots, rs.slots, "slots");
+        assert_eq!(ri.executed, rs.executed, "executed");
+        assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts");
+        assert_systems_identical(&interp, &sched, "post-run state");
+    });
+}
+
+#[test]
+fn most_generated_schedules_take_the_validated_fast_path() {
+    // The generator only emits in-range addresses, so every schedule must
+    // validate — i.e. the unchecked-read path is what the differential
+    // test above actually exercises.
+    for_each_case("schedules validate", 50, |rng| {
+        let program = random_program(rng);
+        assert!(BroadcastSchedule::compile(&program).unwrap().is_validated());
+    });
+}
+
+/// Deterministic, exactly-quantizable affine params: matrix entries are
+/// multiples of 2⁻⁶ within the Q6 i8 range, translations small integers.
+fn random_quantizable_params(rng: &mut Rng) -> [f32; 6] {
+    let q = |rng: &mut Rng| rng.range_i64(-127, 127) as f32 / 64.0;
+    [
+        q(rng),
+        q(rng),
+        q(rng),
+        q(rng),
+        rng.range_i64(-100, 100) as f32,
+        rng.range_i64(-100, 100) as f32,
+    ]
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn pooled_backend_matches_serial_across_shard_counts_and_sizes() {
+    // The acceptance grid: shard counts {1, 2, 4, 8} × n ∈ {64, 500,
+    // 2117, 4096}, byte-identical outputs and identical aggregate cycles.
+    let params = [0.5, -0.25, 0.25, 0.5, 7.0, -3.0];
+    for &n in &[64usize, 500, 2117, 4096] {
+        let mut rng = Rng::new(0xBA5E ^ n as u64);
+        let base_x: Vec<f32> = (0..n).map(|_| rng.range_i64(-2000, 2000) as f32).collect();
+        let base_y: Vec<f32> = (0..n).map(|_| rng.range_i64(-2000, 2000) as f32).collect();
+
+        let mut serial = M1SimBackend::new();
+        let (mut sx, mut sy) = (base_x.clone(), base_y.clone());
+        let sc = serial.apply(&params, &mut sx, &mut sy).unwrap().unwrap();
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut pooled = M1SimBackend::with_shards(shards);
+            let (mut px, mut py) = (base_x.clone(), base_y.clone());
+            let pc = pooled.apply(&params, &mut px, &mut py).unwrap().unwrap();
+            assert_bits_equal(&sx, &px, &format!("xs n={n} shards={shards}"));
+            assert_bits_equal(&sy, &py, &format!("ys n={n} shards={shards}"));
+            assert_eq!(
+                sc.to_bits(),
+                pc.to_bits(),
+                "aggregate cycles n={n} shards={shards}: {sc} vs {pc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_backend_randomized_conformance_against_serial() {
+    // Random quantizable transforms over random coordinate sets: serial
+    // and pooled execution agree bit-for-bit, including the padded tail
+    // tile of non-multiple-of-64 sizes.
+    let mut serial = M1SimBackend::new();
+    let mut pooled = M1SimBackend::with_shards(4);
+    for_each_case("pooled == serial", 200, |rng| {
+        let n = rng.range_i64(1, 300) as usize;
+        let params = random_quantizable_params(rng);
+        let base_x: Vec<f32> = (0..n).map(|_| rng.range_i64(-4000, 4000) as f32).collect();
+        let base_y: Vec<f32> = (0..n).map(|_| rng.range_i64(-4000, 4000) as f32).collect();
+        let (mut sx, mut sy) = (base_x.clone(), base_y.clone());
+        let sc = serial.apply(&params, &mut sx, &mut sy).unwrap();
+        let (mut px, mut py) = (base_x, base_y);
+        let pc = pooled.apply(&params, &mut px, &mut py).unwrap();
+        assert_bits_equal(&sx, &px, "xs");
+        assert_bits_equal(&sy, &py, "ys");
+        match (sc, pc) {
+            (Some(s), Some(p)) => assert_eq!(s.to_bits(), p.to_bits(), "cycles"),
+            (s, p) => assert_eq!(s.is_none(), p.is_none(), "fallback disagreement"),
+        }
+    });
+}
+
+#[test]
+fn unquantizable_fallback_is_identical_across_shard_counts() {
+    // Scale 100× exceeds the Q6 i8 range, and coordinates past the
+    // headroom limit force the native path too; both fallbacks must
+    // behave identically for every shard count (native result, no
+    // simulated cycles).
+    for (params, xs) in [
+        ([100.0f32, 0.0, 0.0, 100.0, 0.0, 0.0], vec![1.0f32, 2.0, 3.0]),
+        ([1.0, 0.0, 0.0, 1.0, 1.0, 1.0], vec![9000.0f32, 1.0]),
+    ] {
+        let ys = vec![1.0f32; xs.len()];
+        let mut want_x = xs.clone();
+        let mut want_y = ys.clone();
+        apply_native(&params, &mut want_x, &mut want_y);
+        for shards in [1usize, 2, 4, 8] {
+            let mut backend = M1SimBackend::with_shards(shards);
+            let (mut px, mut py) = (xs.clone(), ys.clone());
+            let cycles = backend.apply(&params, &mut px, &mut py).unwrap();
+            assert_eq!(cycles, None, "shards={shards}");
+            assert_bits_equal(&want_x, &px, "fallback xs");
+            assert_bits_equal(&want_y, &py, "fallback ys");
+        }
+    }
+}

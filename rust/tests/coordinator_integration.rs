@@ -125,6 +125,9 @@ fn backpressure_bounds_queue_growth() {
             queue_capacity: 4,
             job_capacity: 4,
             workers: 1,
+            // Sharded tile pool under backpressure: same responses, the
+            // worker just fans tiles across two simulators.
+            m1_shards: 2,
             batcher: BatcherConfig { max_wait: Duration::from_micros(100), ..Default::default() },
         })
         .unwrap(),
