@@ -10,9 +10,12 @@ use morpho::baselines::routines as x86;
 use morpho::baselines::Cpu;
 use morpho::benchkit::{bench, section, Measurement};
 use morpho::coordinator::backend::{Backend, M1SimBackend};
-use morpho::mapping::{runner::run_routine_on, PointTransformMapping, VecVecMapping};
+use morpho::mapping::{
+    runner::{run_routine3_with, run_routine_on},
+    PointTransformMapping, VecVecMapping,
+};
 use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, MuxASel, RcArray};
-use morpho::morphosys::{AluOp, M1System};
+use morpho::morphosys::{AluOp, BroadcastSchedule, M1System};
 
 /// One machine-readable result row.
 struct JsonRow {
@@ -49,9 +52,16 @@ fn write_json(rows: &[JsonRow]) {
         ));
     }
     out.push_str("]\n");
-    match std::fs::write(&path, out) {
+    // Atomic emission: write a sibling temp file, then rename over the
+    // target, so a reader (CI artifact collection, cross-PR trajectory
+    // tooling) never observes a half-written JSON.
+    let tmp = format!("{path}.tmp");
+    match std::fs::write(&tmp, out).and_then(|()| std::fs::rename(&tmp, &path)) {
         Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            eprintln!("\nfailed to write {path}: {e}");
+        }
     }
 }
 
@@ -137,6 +147,66 @@ fn main() {
         m_serial.mean.as_secs_f64() / m_pooled.mean.as_secs_f64()
     );
     rows.push(row(&m_pooled, "points_per_s", m_pooled.throughput(2117.0)));
+
+    section("fused tile-kernel tier (vecvec translation, 2117-point tile plan)");
+    // 2 117 elements decompose into 33 full 64-point vector-vector tiles
+    // plus one 8-point tail tile (5 live elements, zero-padded) — the
+    // same whole-tile planning the coordinator makes. Both rows run the
+    // identical tile plan on one reused system; the only difference is
+    // the schedule tier: `compile` fuses the broadcast/write-back runs
+    // into SIMD lane-kernel loops, `compile_unfused` pins the PR 2
+    // step-per-instruction scheduled path.
+    let full = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+    let tail = VecVecMapping { n: 8, op: AluOp::Add }.compile();
+    let full_fused = BroadcastSchedule::compile(&full.program).unwrap();
+    let full_sched = BroadcastSchedule::compile_unfused(&full.program).unwrap();
+    let tail_fused = BroadcastSchedule::compile(&tail.program).unwrap();
+    let tail_sched = BroadcastSchedule::compile_unfused(&tail.program).unwrap();
+    assert!(full_fused.fused_runs() > 0, "translation tile must fuse");
+    assert_eq!(full_sched.fused_runs(), 0, "baseline must stay unfused");
+    let tu: Vec<i16> = (0..2117).map(|i| (i % 251) as i16 - 125).collect();
+    let tv: Vec<i16> = (0..2117).map(|i| (i % 83) as i16 - 41).collect();
+    let mut tail_u = [0i16; 8];
+    let mut tail_v = [0i16; 8];
+    tail_u[..5].copy_from_slice(&tu[2112..]);
+    tail_v[..5].copy_from_slice(&tv[2112..]);
+    let mut sys3 = M1System::new();
+    let run_plan = |sys: &mut M1System, full_s: &BroadcastSchedule, tail_s: &BroadcastSchedule| {
+        for t in 0..33 {
+            sys.reset_chip();
+            std::hint::black_box(run_routine3_with(
+                sys,
+                &full,
+                &tu[t * 64..(t + 1) * 64],
+                Some(&tv[t * 64..(t + 1) * 64]),
+                None,
+                Some(full_s),
+            ));
+        }
+        sys.reset_chip();
+        std::hint::black_box(run_routine3_with(
+            sys,
+            &tail,
+            &tail_u,
+            Some(&tail_v),
+            None,
+            Some(tail_s),
+        ));
+    };
+    let m_sched = bench("scheduled translation-2117 (shards=1)", || {
+        run_plan(&mut sys3, &full_sched, &tail_sched)
+    });
+    println!("  → {:.2} M simulated-points/s", m_sched.throughput(2117.0) / 1e6);
+    rows.push(row(&m_sched, "points_per_s", m_sched.throughput(2117.0)));
+    let m_fused = bench("fused translation-2117 (shards=1)", || {
+        run_plan(&mut sys3, &full_fused, &tail_fused)
+    });
+    println!(
+        "  → {:.2} M simulated-points/s ({:.2}× vs scheduled)",
+        m_fused.throughput(2117.0) / 1e6,
+        m_sched.mean.as_secs_f64() / m_fused.mean.as_secs_f64()
+    );
+    rows.push(row(&m_fused, "points_per_s", m_fused.throughput(2117.0)));
 
     section("x86 baseline interpreter");
     let ub: Vec<i16> = (0..64).collect();

@@ -158,9 +158,11 @@ impl Backend for XlaBackend {
 /// `shards = 1` the tile plan runs inline on the caller thread (the
 /// serial mode, bit-for-bit the pre-pool behaviour); with
 /// [`M1SimBackend::with_shards`] the independent 64-point tiles fan out
-/// across pool shards, each owning its own simulator and routine cache.
-/// Outputs and aggregate cycle counts are identical across shard counts
-/// (see the pool's determinism contract; pinned by `tests/conformance.rs`).
+/// across pool shards, each owning its own simulator while sharing one
+/// pool-wide compiled-routine cache and the process-wide schedule cache
+/// (one compile per distinct program, not per shard — §Perf). Outputs
+/// and aggregate cycle counts are identical across shard counts (see the
+/// pool's determinism contract; pinned by `tests/conformance.rs`).
 pub struct M1SimBackend {
     pool: TilePool,
     /// Fixed-point shift for the 2×2 matrix (Q6 default).

@@ -8,6 +8,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::mapping::streamed::TILE as M1_TILE;
+
 use super::backend::BackendKind;
 use super::request::{PendingRequest, RequestTiming, TransformResponse};
 
@@ -18,7 +20,11 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Flush the window once this many points are pending.
     pub flush_points: usize,
-    /// Largest tile a single backend job may carry (points).
+    /// Largest tile a single backend job may carry (points). A value
+    /// that is not a multiple of the M1 tile size (64) is rounded **down**
+    /// to whole tiles by [`Batcher::new`] (with a minimum of one tile),
+    /// so backend jobs never carry a ragged tail the simulator would pad
+    /// on every job instead of only on the final one.
     pub max_tile: usize,
 }
 
@@ -134,8 +140,13 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(config: BatcherConfig) -> Batcher {
+    pub fn new(mut config: BatcherConfig) -> Batcher {
         assert!(config.max_tile > 0);
+        // Round a non-multiple `max_tile` down to whole 64-point M1 tiles
+        // (minimum one tile): a 100-point job bound would make *every*
+        // backend job end in a padded 36-lane tail tile, where a 64-point
+        // bound pads at most the final job of a request.
+        config.max_tile = (config.max_tile / M1_TILE).max(1) * M1_TILE;
         Batcher { config }
     }
 
@@ -284,6 +295,33 @@ mod tests {
         let resp = rx.try_recv().expect("response after all parts scattered");
         assert_eq!(resp.id, 7);
         assert_eq!(resp.xs, expected_xs);
+    }
+
+    #[test]
+    fn non_multiple_max_tile_rounds_down_to_whole_tiles() {
+        // 100 points/job would give every backend job a ragged 36-lane
+        // tail tile; the batcher normalizes to whole 64-point tiles.
+        let b = Batcher::new(BatcherConfig { max_tile: 100, ..Default::default() });
+        assert_eq!(b.config.max_tile, 64);
+        // Below one tile: clamp up to the minimum of one whole tile.
+        let b = Batcher::new(BatcherConfig { max_tile: 8, ..Default::default() });
+        assert_eq!(b.config.max_tile, 64);
+        // Multiples pass through untouched.
+        let b = Batcher::new(BatcherConfig { max_tile: 4096, ..Default::default() });
+        assert_eq!(b.config.max_tile, 4096);
+        // And the plan respects the rounded bound: a 150-point request
+        // under a nominal 100-point bound cuts at 64, not 100.
+        let b = Batcher::new(BatcherConfig { max_tile: 100, ..Default::default() });
+        let (p, rx) = pending(9, 150, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
+        let expected_xs = p.req.xs.clone();
+        let jobs = b.plan(vec![p], Instant::now());
+        let sizes: Vec<usize> = jobs.iter().map(|j| j.points()).collect();
+        assert_eq!(sizes, vec![64, 64, 22]);
+        for j in jobs {
+            drain(j);
+        }
+        let resp = rx.try_recv().expect("response after all parts scattered");
+        assert_eq!(resp.xs, expected_xs, "reassembly unaffected by rounding");
     }
 
     #[test]

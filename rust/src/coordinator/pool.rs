@@ -4,9 +4,13 @@
 //! tiles (one full 8×8 RC-array configuration); the serial `M1SimBackend`
 //! ran them one after another on a single simulator instance. This module
 //! parallelizes that tile plan across **shards**: worker threads that each
-//! own a private [`M1System`] and a private compiled-routine cache (plus,
-//! implicitly, the per-thread [`BroadcastSchedule`] cache in
-//! [`crate::mapping::runner`], which is thread-local).
+//! own a private [`M1System`]. Compiled artifacts are **shared across
+//! shards** (§Perf, fused tile-kernel tier): one pool-wide
+//! compiled-routine cache ([`SharedRoutines`]) and one process-wide
+//! [`BroadcastSchedule`] cache (in [`crate::mapping::runner`]), each
+//! fronted by a thread-private read cache — so an N-shard pool compiles
+//! every distinct program once, and the steady-state hot path stays
+//! lock-free.
 //!
 //! ## Design
 //!
@@ -15,10 +19,10 @@
 //!                               │ (chunked self-balancing dispatch:
 //!                               │  each shard repeatedly claims the next
 //!                               │  chunk of tile indices until drained)
-//!               shard 0 ─ M1System + routine cache ─┐
-//!               shard 1 ─ M1System + routine cache ─┼─► (index, outcome)
-//!               …                                   │    per tile
-//!  caller ◄── results spliced back into tile order ─┘
+//!               shard 0 ─ M1System ──┐    ┌─ shared routine cache
+//!               shard 1 ─ M1System ──┼────┤  (one compile per spec)
+//!               …                    │    └─ shared schedule cache
+//!  caller ◄── results spliced ───────┴─► (index, outcome) per tile
 //! ```
 //!
 //! Dispatch is *chunked work claiming*: tiles live in one shared,
@@ -57,7 +61,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::mapping::{runner::run_routine_on, MappedRoutine, PointTransformMapping, VecVecMapping};
@@ -102,30 +106,57 @@ pub struct TileOutcome {
     pub report: ExecutionReport,
 }
 
-/// Bound on distinct cached routines per shard (same crude policy as the
+/// Bound on distinct cached routines per tier (same crude policy as the
 /// schedule cache in [`crate::mapping::runner`]).
 const ROUTINE_CACHE_MAX: usize = 512;
 
-/// Per-shard execution state: a private simulator plus a private
-/// compiled-routine cache. Never shared between threads.
+/// Cross-shard compiled-routine cache (§Perf, fused tile-kernel tier):
+/// one mutex-guarded map shared by every shard of a pool, so a spec
+/// compiles once per pool instead of once per shard. Shards keep a
+/// thread-private read cache in front of it, so the steady state (every
+/// tile after a shard's first sighting of a spec) takes no lock.
+/// Determinism is unaffected: a compiled routine is a pure function of
+/// its spec, so which shard compiles it first cannot change any result.
+type SharedRoutines = Arc<Mutex<HashMap<RoutineSpec, Arc<MappedRoutine>>>>;
+
+/// Per-shard execution state: a private simulator plus the private fast
+/// path over the pool-shared routine cache. Never shared between threads.
 struct Shard {
     sys: M1System,
-    routines: HashMap<RoutineSpec, MappedRoutine>,
+    /// Thread-private hits over `shared` (no locking once warm).
+    routines: HashMap<RoutineSpec, Arc<MappedRoutine>>,
+    shared: SharedRoutines,
 }
 
 impl Shard {
-    fn new() -> Shard {
-        Shard { sys: M1System::new(), routines: HashMap::new() }
+    fn new(shared: SharedRoutines) -> Shard {
+        Shard { sys: M1System::new(), routines: HashMap::new(), shared }
     }
 
-    fn run_tile(&mut self, tile: &TileRequest) -> TileOutcome {
+    /// Compiled routine for a spec: local probe, then the shared map
+    /// (compiling under its lock exactly once per pool).
+    fn routine_for(&mut self, spec: RoutineSpec) -> Arc<MappedRoutine> {
+        if let Some(hit) = self.routines.get(&spec) {
+            return hit.clone();
+        }
         if self.routines.len() > ROUTINE_CACHE_MAX {
             self.routines.clear();
         }
-        let routine =
-            self.routines.entry(tile.spec).or_insert_with(|| tile.spec.compile());
+        let routine = {
+            let mut shared = self.shared.lock().unwrap();
+            if shared.len() > ROUTINE_CACHE_MAX {
+                shared.clear();
+            }
+            shared.entry(spec).or_insert_with(|| Arc::new(spec.compile())).clone()
+        };
+        self.routines.insert(spec, routine.clone());
+        routine
+    }
+
+    fn run_tile(&mut self, tile: &TileRequest) -> TileOutcome {
+        let routine = self.routine_for(tile.spec);
         self.sys.reset_chip();
-        let out = run_routine_on(&mut self.sys, routine, &tile.u, tile.v.as_deref());
+        let out = run_routine_on(&mut self.sys, &routine, &tile.u, tile.v.as_deref());
         TileOutcome { result: out.result, report: out.report }
     }
 }
@@ -158,6 +189,9 @@ enum Exec {
 pub struct TilePool {
     shards: usize,
     exec: Exec,
+    /// The cross-shard routine cache every shard of this pool fills and
+    /// reads (see [`SharedRoutines`]).
+    routines: SharedRoutines,
 }
 
 impl TilePool {
@@ -165,18 +199,24 @@ impl TilePool {
     /// `1`). `shards == 1` spawns no threads.
     pub fn new(shards: usize) -> TilePool {
         let shards = shards.max(1);
+        let routines: SharedRoutines = Arc::new(Mutex::new(HashMap::new()));
         if shards == 1 {
-            return TilePool { shards, exec: Exec::Inline(Box::new(Shard::new())) };
+            return TilePool {
+                shards,
+                exec: Exec::Inline(Box::new(Shard::new(routines.clone()))),
+                routines,
+            };
         }
         let mut feeds = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for s in 0..shards {
             let (tx, rx) = mpsc::channel::<Batch>();
             feeds.push(tx);
+            let shared = routines.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("m1-shard-{s}"))
                 .spawn(move || {
-                    let mut shard = Shard::new();
+                    let mut shard = Shard::new(shared);
                     while let Ok(batch) = rx.recv() {
                         drain_batch(&mut shard, &batch);
                     }
@@ -184,11 +224,17 @@ impl TilePool {
                 .expect("spawn tile-pool shard");
             handles.push(handle);
         }
-        TilePool { shards, exec: Exec::Threads { feeds, handles } }
+        TilePool { shards, exec: Exec::Threads { feeds, handles }, routines }
     }
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Number of distinct routine specs compiled into the cross-shard
+    /// cache so far (each compiled exactly once per pool).
+    pub fn cached_routines(&self) -> usize {
+        self.routines.lock().unwrap().len()
     }
 
     /// Execute a tile plan. Outcomes are returned in tile order; see the
@@ -373,9 +419,30 @@ mod tests {
     }
 
     #[test]
+    fn routine_cache_is_shared_across_shards() {
+        // 32 tiles of one spec across 4 shards: every shard touches the
+        // spec, yet the pool-wide cache holds exactly one compile.
+        let (tiles, expected) = add_tiles(32);
+        let mut pool = TilePool::new(4);
+        assert_eq!(pool.cached_routines(), 0);
+        let out = pool.run(tiles);
+        assert_eq!(splice(&out), expected);
+        assert_eq!(pool.cached_routines(), 1);
+        // A second spec adds exactly one more entry.
+        let xs: Vec<i16> = (0..64).collect();
+        pool.run(vec![TileRequest {
+            spec: RoutineSpec::VecVec { n: 64, op: AluOp::Sub },
+            u: xs.clone(),
+            v: Some(xs),
+        }]);
+        assert_eq!(pool.cached_routines(), 2);
+    }
+
+    #[test]
     fn mixed_specs_in_one_batch() {
-        // Point-transform and vecvec tiles interleaved: per-shard routine
-        // caches must key correctly on the spec.
+        // Point-transform and vecvec tiles interleaved: the shared
+        // routine cache (and each shard's read cache over it) must key
+        // correctly on the spec.
         let xs: Vec<i16> = (0..64).collect();
         let ys: Vec<i16> = (0..64).map(|i| i - 32).collect();
         let tiles = vec![

@@ -4,7 +4,7 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::morphosys::{BroadcastSchedule, ExecutionReport, M1System, Program};
 
@@ -25,22 +25,33 @@ std::thread_local! {
     static SHARED_SYS: std::cell::RefCell<M1System> =
         std::cell::RefCell::new(M1System::new());
 
-    // Pre-decoded broadcast schedules, compiled once per distinct program
-    // and reused across run_routine calls (§Perf). Keyed by the program
-    // itself (exact structural equality), so a cache hit can never serve
-    // a stale schedule; `None` marks programs that don't compile
-    // (branches) and always take the interpreter. Being thread-local,
-    // every shard of the tile pool (`coordinator::pool`) automatically
-    // gets a private instance — no cross-shard locking on the hot path.
-    static SCHEDULES: RefCell<HashMap<Program, Option<Arc<BroadcastSchedule>>>> =
+    // Per-thread fast path over [`GLOBAL_SCHEDULES`]: a hit costs one
+    // HashMap probe and no locking, so the tile pool's shards stay
+    // lock-free on the hot path. Keys are `Arc<Program>`s shared with the
+    // global map, so the two tiers hold one allocation per program.
+    static SCHEDULES: RefCell<HashMap<Arc<Program>, Option<Arc<BroadcastSchedule>>>> =
         RefCell::new(HashMap::new());
 }
 
-/// Bound on distinct cached programs per thread; the working set of any
+/// Cross-shard schedule cache (§Perf, fused tile-kernel tier): one
+/// process-wide map consulted on thread-local miss, so an N-shard
+/// [`crate::coordinator::pool::TilePool`] compiles each distinct program
+/// **once** instead of once per shard. Keyed by the program itself (exact
+/// structural equality, behind an `Arc`), so a hit can never serve a
+/// stale schedule; `None` marks programs that don't compile (branches)
+/// and always take the interpreter. Determinism is unaffected: a
+/// schedule is a pure function of its program, so which shard compiles
+/// it first cannot change any result.
+static GLOBAL_SCHEDULES: OnceLock<
+    Mutex<HashMap<Arc<Program>, Option<Arc<BroadcastSchedule>>>>,
+> = OnceLock::new();
+
+/// Bound on distinct cached programs per tier; the working set of any
 /// real workload (a handful of mapping shapes) is far below this.
 const SCHEDULE_CACHE_MAX: usize = 512;
 
-/// Look up (or compile and cache) the pre-decoded schedule of a program.
+/// Look up (or compile and cache) the pre-decoded schedule of a program:
+/// thread-local probe first, then the shared cross-shard map.
 pub fn schedule_for(program: &Program) -> Option<Arc<BroadcastSchedule>> {
     SCHEDULES.with(|cache| {
         let mut cache = cache.borrow_mut();
@@ -50,12 +61,32 @@ pub fn schedule_for(program: &Program) -> Option<Arc<BroadcastSchedule>> {
             return hit.clone();
         }
         if cache.len() > SCHEDULE_CACHE_MAX {
-            cache.clear(); // crude bound, same policy as the backend's routine cache
+            cache.clear(); // crude bound, same policy as the routine cache
         }
-        let compiled = BroadcastSchedule::compile(program).map(Arc::new);
-        cache.insert(program.clone(), compiled.clone());
+        let (key, compiled) = shared_schedule_for(program);
+        cache.insert(key, compiled.clone());
         compiled
     })
+}
+
+/// Consult (or fill) the cross-shard cache, returning the shared key so
+/// the thread-local tier can insert without cloning the program again.
+/// Compilation happens under the lock — it is a fast linear scan, and
+/// holding the lock guarantees each program compiles exactly once per
+/// process.
+fn shared_schedule_for(program: &Program) -> (Arc<Program>, Option<Arc<BroadcastSchedule>>) {
+    let global = GLOBAL_SCHEDULES.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = global.lock().unwrap();
+    if let Some((key, hit)) = map.get_key_value(program) {
+        return (key.clone(), hit.clone());
+    }
+    if map.len() > SCHEDULE_CACHE_MAX {
+        map.clear();
+    }
+    let key = Arc::new(program.clone());
+    let compiled = BroadcastSchedule::compile(program).map(Arc::new);
+    map.insert(key.clone(), compiled.clone());
+    (key, compiled)
 }
 
 /// Stage `u` (and optionally `v`) per the routine's input spec, stage the
@@ -80,13 +111,29 @@ pub fn run_routine_on(
 }
 
 /// Three-stream variant for the 3-D mappings (`w` = z coordinates at
-/// [`W_ADDR`]).
+/// [`W_ADDR`]), taking the schedule from the shared cache.
 pub fn run_routine3_on(
     sys: &mut M1System,
     routine: &MappedRoutine,
     u: &[i16],
     v: Option<&[i16]>,
     w: Option<&[i16]>,
+) -> RoutineOutput {
+    let schedule = schedule_for(&routine.program);
+    run_routine3_with(sys, routine, u, v, w, schedule.as_deref())
+}
+
+/// As [`run_routine3_on`] but with an **explicit** (possibly differently
+/// compiled) schedule, bypassing the caches — the simulator bench uses
+/// this to pin the unfused scheduled baseline against the fused tier on
+/// identical workloads.
+pub fn run_routine3_with(
+    sys: &mut M1System,
+    routine: &MappedRoutine,
+    u: &[i16],
+    v: Option<&[i16]>,
+    w: Option<&[i16]>,
+    schedule: Option<&BroadcastSchedule>,
 ) -> RoutineOutput {
     assert_eq!(u.len(), routine.u_elems, "{}: U length", routine.name);
     sys.mem.store_elements(U_ADDR, u);
@@ -111,8 +158,7 @@ pub fn run_routine3_on(
     for &(addr, word) in &routine.ctx_words {
         sys.mem.write_word(addr, word);
     }
-    let schedule = schedule_for(&routine.program);
-    let report = sys.run_program(&routine.program, schedule.as_deref());
+    let report = sys.run_program(&routine.program, schedule);
     let result = sys.mem.load_elements(RESULT_ADDR, routine.result_elems);
     RoutineOutput { result, report }
 }
@@ -353,5 +399,65 @@ mod tests {
     fn missing_v_input_panics() {
         let routine = VecVecMapping { n: 8, op: AluOp::Add }.compile();
         run_routine(&routine, &[0; 8], None);
+    }
+
+    #[test]
+    fn schedule_cache_is_shared_across_threads() {
+        // The cross-shard promise: every thread (= pool shard) gets the
+        // one process-wide compile of a program, not a private copy. The
+        // program is unique to this test (the 0x7E57 marker immediate),
+        // and the lib test binary's distinct-program population stays far
+        // below SCHEDULE_CACHE_MAX, so the global map is never cleared
+        // under this assertion.
+        use crate::morphosys::{Instruction, Reg};
+        let program = Program::new(vec![
+            Instruction::Ldli { rd: Reg(7), imm: 0x7E57 },
+            Instruction::Ldui { rd: Reg(7), imm: 0x7E57 },
+        ]);
+        let here = schedule_for(&program).expect("straight-line program");
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let program = program.clone();
+                std::thread::spawn(move || schedule_for(&program).expect("straight-line program"))
+            })
+            .collect();
+        for h in handles {
+            let theirs = h.join().unwrap();
+            assert!(
+                Arc::ptr_eq(&here, &theirs),
+                "threads must share the single cross-shard compile"
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_unfused_schedule_matches_the_fused_cache_path() {
+        // `run_routine` rides the shared cache (fused schedules);
+        // `run_routine3_with` pins the same workload to an explicitly
+        // unfused schedule. Results and reports must be bit-identical.
+        use crate::morphosys::BroadcastSchedule;
+        let u: Vec<i16> = (0..64).map(|i| 3 * i - 70).collect();
+        let v: Vec<i16> = (0..64).map(|i| -5 * i + 9).collect();
+        for routine in [
+            VecVecMapping { n: 64, op: AluOp::Add }.compile(),
+            PointTransformMapping { n: 64, m: [0, -64, 64, 0], t: [3, -2], shift: 6 }.compile(),
+        ] {
+            let fused = run_routine(&routine, &u, Some(&v));
+            let unfused = BroadcastSchedule::compile_unfused(&routine.program).unwrap();
+            assert_eq!(unfused.fused_runs(), 0);
+            let out = run_routine3_with(
+                &mut crate::morphosys::M1System::new(),
+                &routine,
+                &u,
+                Some(&v),
+                None,
+                Some(&unfused),
+            );
+            assert_eq!(fused.result, out.result, "{}", routine.name);
+            assert_eq!(fused.report.cycles, out.report.cycles, "{}", routine.name);
+            assert_eq!(fused.report.slots, out.report.slots, "{}", routine.name);
+            assert_eq!(fused.report.executed, out.report.executed, "{}", routine.name);
+            assert_eq!(fused.report.broadcasts, out.report.broadcasts, "{}", routine.name);
+        }
     }
 }

@@ -93,6 +93,164 @@ pub struct AluResult {
     pub acc: i32,
 }
 
+/// Number of lanes an 8-wide kernel commits at once (one broadcast line).
+pub const LANES: usize = 8;
+
+/// Eight-lane form of [`eval`]: evaluate one ALU operation across all
+/// eight lanes of a broadcast at once (§Perf, fused tile-kernel tier).
+///
+/// Each op is written as a fixed-trip-count loop over `[i16; 8]` /
+/// `[i32; 8]` lanes with no cross-lane dependencies, the shape LLVM
+/// autovectorizes; the dominant `Add`/`Mul`/`Cmul` ops additionally take
+/// an explicit SSE2 path on x86_64 (behind the `sse2-kernels` feature).
+/// Results are bit-for-bit identical to eight scalar [`eval`] calls,
+/// pinned by the `eval8_matches_scalar_eval_for_every_op` test below and
+/// by the fused differential conformance suite.
+pub fn eval8(
+    op: AluOp,
+    a: &[i16; LANES],
+    b: &[i16; LANES],
+    imm: i16,
+    acc: &[i32; LANES],
+) -> ([i16; LANES], [i32; LANES]) {
+    let mut out = [0i16; LANES];
+    let mut acc_out = *acc;
+    match op {
+        AluOp::Nop => {}
+        AluOp::PassA => out = *a,
+        AluOp::PassB => out = *b,
+        AluOp::Sub => {
+            for i in 0..LANES {
+                out[i] = a[i].wrapping_sub(b[i]);
+            }
+        }
+        AluOp::Mul => out = mul8(a, b),
+        AluOp::And => {
+            for i in 0..LANES {
+                out[i] = a[i] & b[i];
+            }
+        }
+        AluOp::Or => {
+            for i in 0..LANES {
+                out[i] = a[i] | b[i];
+            }
+        }
+        AluOp::Xor => {
+            for i in 0..LANES {
+                out[i] = a[i] ^ b[i];
+            }
+        }
+        AluOp::NotA => {
+            for i in 0..LANES {
+                out[i] = !a[i];
+            }
+        }
+        AluOp::Cmul => out = mul8(a, &[imm; LANES]),
+        AluOp::Cadd => {
+            for i in 0..LANES {
+                out[i] = a[i].wrapping_add(imm);
+            }
+        }
+        AluOp::Csub => {
+            for i in 0..LANES {
+                out[i] = a[i].wrapping_sub(imm);
+            }
+        }
+        AluOp::Mula => {
+            for i in 0..LANES {
+                acc_out[i] = acc[i].wrapping_add((a[i] as i32).wrapping_mul(b[i] as i32));
+                out[i] = acc_out[i] as i16;
+            }
+        }
+        AluOp::Shl => {
+            let sh = imm as u32 & 0x1F;
+            for i in 0..LANES {
+                out[i] = ((a[i] as i32) << sh) as i16;
+            }
+        }
+        AluOp::Shr => {
+            let sh = imm as u32 & 0x1F;
+            for i in 0..LANES {
+                out[i] = ((a[i] as i32) >> sh) as i16;
+            }
+        }
+        AluOp::Add => out = add8(a, b),
+    }
+    (out, acc_out)
+}
+
+/// Lane-wise wrapping 16-bit add (SSE2 `paddw` on x86_64).
+#[inline]
+fn add8(a: &[i16; LANES], b: &[i16; LANES]) -> [i16; LANES] {
+    #[cfg(all(target_arch = "x86_64", feature = "sse2-kernels"))]
+    {
+        sse2::add8(a, b)
+    }
+    #[cfg(not(all(target_arch = "x86_64", feature = "sse2-kernels")))]
+    {
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            out[i] = a[i].wrapping_add(b[i]);
+        }
+        out
+    }
+}
+
+/// Lane-wise low-16-bit signed multiply (SSE2 `pmullw` on x86_64) — the
+/// shared kernel of `Mul` (lane × lane) and `Cmul` (lane × splat imm):
+/// both keep the low 16 bits of the 32-bit signed product.
+#[inline]
+fn mul8(a: &[i16; LANES], b: &[i16; LANES]) -> [i16; LANES] {
+    #[cfg(all(target_arch = "x86_64", feature = "sse2-kernels"))]
+    {
+        sse2::mul8(a, b)
+    }
+    #[cfg(not(all(target_arch = "x86_64", feature = "sse2-kernels")))]
+    {
+        let mut out = [0i16; LANES];
+        for i in 0..LANES {
+            out[i] = ((a[i] as i32).wrapping_mul(b[i] as i32)) as i16;
+        }
+        out
+    }
+}
+
+/// Explicit SSE2 kernels for the dominant fused ops. SSE2 is part of the
+/// x86_64 baseline, so no runtime feature detection is needed; the
+/// intrinsics' wrapping 16-bit semantics (`paddw`, `pmullw`) match the
+/// scalar [`eval`] reference exactly.
+#[cfg(all(target_arch = "x86_64", feature = "sse2-kernels"))]
+mod sse2 {
+    use super::LANES;
+    use core::arch::x86_64::*;
+
+    #[inline]
+    pub(super) fn add8(a: &[i16; LANES], b: &[i16; LANES]) -> [i16; LANES] {
+        // SAFETY: SSE2 is unconditionally available on x86_64 and the
+        // unaligned load/store intrinsics accept any address; the arrays
+        // are exactly one 128-bit vector wide.
+        unsafe {
+            let va = _mm_loadu_si128(a.as_ptr().cast());
+            let vb = _mm_loadu_si128(b.as_ptr().cast());
+            let mut out = [0i16; LANES];
+            _mm_storeu_si128(out.as_mut_ptr().cast(), _mm_add_epi16(va, vb));
+            out
+        }
+    }
+
+    #[inline]
+    pub(super) fn mul8(a: &[i16; LANES], b: &[i16; LANES]) -> [i16; LANES] {
+        // SAFETY: as in `add8`.
+        unsafe {
+            let va = _mm_loadu_si128(a.as_ptr().cast());
+            let vb = _mm_loadu_si128(b.as_ptr().cast());
+            let mut out = [0i16; LANES];
+            _mm_storeu_si128(out.as_mut_ptr().cast(), _mm_mullo_epi16(va, vb));
+            out
+        }
+    }
+}
+
 /// Evaluate one ALU operation. `a`/`b` are the mux outputs, `imm` the
 /// context-word immediate, `acc` the current accumulator.
 pub fn eval(op: AluOp, a: i16, b: i16, imm: i16, acc: i32) -> AluResult {
@@ -195,5 +353,47 @@ mod tests {
         // 200 * 200 = 40_000 overflows i16 but not the 32-bit accumulator.
         let r = eval(AluOp::Mula, 200, 200, 0, 0);
         assert_eq!(r.acc, 40_000);
+    }
+
+    #[test]
+    fn eval8_matches_scalar_eval_for_every_op() {
+        // The 8-wide lane kernels (including the SSE2 paths for
+        // Add/Mul/Cmul) must be bit-identical to eight scalar evals, for
+        // every op, across wraparound-heavy operands and live accumulator
+        // state.
+        use crate::testkit::Rng;
+        let mut rng = Rng::new(0xE8A1);
+        for _ in 0..200 {
+            let op = AluOp::from_bits(rng.below(16) as u8);
+            let mut a = [0i16; LANES];
+            let mut b = [0i16; LANES];
+            let mut acc = [0i32; LANES];
+            for l in 0..LANES {
+                a[l] = rng.i16();
+                b[l] = rng.i16();
+                acc[l] = ((rng.i16() as i32) << 13) ^ rng.i16() as i32;
+            }
+            let imm = rng.range_i64(-128, 127) as i16;
+            let (out, acc_out) = eval8(op, &a, &b, imm, &acc);
+            for l in 0..LANES {
+                let r = eval(op, a[l], b[l], imm, acc[l]);
+                assert_eq!(out[l], r.out, "{op:?} out lane {l}");
+                assert_eq!(acc_out[l], r.acc, "{op:?} acc lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval8_wraparound_edges_match_scalar() {
+        let a = [i16::MAX, i16::MIN, -1, 0, 1, 300, -300, 0x7F00];
+        let b = [1, -1, i16::MIN, i16::MAX, 300, 300, 300, 0x100];
+        for op in [AluOp::Add, AluOp::Mul, AluOp::Cmul, AluOp::Mula] {
+            let acc = [i32::MAX, i32::MIN, 0, -1, 1, 1 << 20, -(1 << 20), 7];
+            let (out, acc_out) = eval8(op, &a, &b, -128, &acc);
+            for l in 0..LANES {
+                let r = eval(op, a[l], b[l], -128, acc[l]);
+                assert_eq!((out[l], acc_out[l]), (r.out, r.acc), "{op:?} lane {l}");
+            }
+        }
     }
 }

@@ -177,6 +177,103 @@ impl RcArray {
         }
     }
 
+    /// Commit all eight lanes of a **bus/bus** broadcast with straight-line
+    /// 8-wide lane code (§Perf, fused tile-kernel tier): gather the line's
+    /// `out`/`acc` lanes, run the [`alu::eval8`] kernel once, apply the
+    /// accumulate/NOP/reg-write/express commit rules across whole lanes,
+    /// and scatter back. Bit-for-bit identical to [`RcArray::broadcast`]
+    /// for any context word whose operand plan is bus/bus (the only plans
+    /// the fused executor routes here — no interconnect or register
+    /// sources, so lanes are fully independent); pinned by the
+    /// `broadcast_lanes_is_bit_identical_to_broadcast` test and the fused
+    /// conformance sweep.
+    pub(crate) fn broadcast_lanes(
+        &mut self,
+        mode: BroadcastMode,
+        index: usize,
+        cw: &ContextWord,
+        bus_a: &[i16; ARRAY_DIM],
+        bus_b: &[i16; ARRAY_DIM],
+    ) {
+        assert!(index < ARRAY_DIM, "broadcast line {index} out of range");
+        debug_assert!(
+            cw.operand_plan().is_bus_bus(),
+            "broadcast_lanes requires a bus/bus operand plan"
+        );
+        use super::alu::{self, AluOp};
+        // Gather the only planes the ALU reads: previous outputs (kept for
+        // the NOP rule) and accumulators.
+        let (prev_out, mut acc): ([i16; ARRAY_DIM], [i32; ARRAY_DIM]) = match mode {
+            BroadcastMode::Row => (self.out[index], self.acc[index]),
+            BroadcastMode::Column => {
+                let mut o = [0i16; ARRAY_DIM];
+                let mut c = [0i32; ARRAY_DIM];
+                for l in 0..ARRAY_DIM {
+                    o[l] = self.out[l][index];
+                    c[l] = self.acc[l][index];
+                }
+                (o, c)
+            }
+        };
+        if cw.acc_reset {
+            acc = [0; ARRAY_DIM];
+        }
+        let (mut res, mut new_acc) = alu::eval8(cw.op, bus_a, bus_b, cw.imm, &acc);
+        if cw.acc_accumulate {
+            // Fused accumulate, exactly as in `cell::execute_step`: the
+            // pre-eval (post-reset) accumulator plus the ALU result drives
+            // both the accumulator and the output.
+            for l in 0..ARRAY_DIM {
+                new_acc[l] = acc[l].wrapping_add(res[l] as i32);
+                res[l] = new_acc[l] as i16;
+            }
+        }
+        // NOP leaves the output register unchanged; the register-write
+        // mask and express latch still observe the ALU result.
+        let out = if cw.op == AluOp::Nop { prev_out } else { res };
+        match mode {
+            BroadcastMode::Row => {
+                self.out[index] = out;
+                self.acc[index] = new_acc;
+            }
+            BroadcastMode::Column => {
+                for l in 0..ARRAY_DIM {
+                    self.out[l][index] = out[l];
+                    self.acc[l][index] = new_acc[l];
+                }
+            }
+        }
+        if cw.reg_write != 0 {
+            for r in 0..4 {
+                if cw.reg_write & (1 << r) != 0 {
+                    match mode {
+                        BroadcastMode::Row => {
+                            for l in 0..ARRAY_DIM {
+                                self.regs[index][l][r] = res[l];
+                            }
+                        }
+                        BroadcastMode::Column => {
+                            for l in 0..ARRAY_DIM {
+                                self.regs[l][index][r] = res[l];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // The express latch is re-driven (or released) on every step.
+        let xp: [Option<i16>; ARRAY_DIM] =
+            if cw.express_write { res.map(Some) } else { [None; ARRAY_DIM] };
+        match mode {
+            BroadcastMode::Row => self.express[index] = xp,
+            BroadcastMode::Column => {
+                for l in 0..ARRAY_DIM {
+                    self.express[l][index] = xp[l];
+                }
+            }
+        }
+    }
+
     /// Read the eight output registers of a column (what `wfbi` writes
     /// back to the frame buffer).
     pub fn column_outputs(&self, col: usize) -> [i16; ARRAY_DIM] {
@@ -308,6 +405,60 @@ mod tests {
         assert_eq!(cell.acc, 6);
         assert_eq!(cell.regs[0], 6);
         assert_eq!(cell.express, Some(6));
+    }
+
+    #[test]
+    fn broadcast_lanes_is_bit_identical_to_broadcast() {
+        // The fused 8-wide commit vs the reference per-lane path, across
+        // every ALU op, both broadcast modes, random flags (acc reset /
+        // accumulate, reg-write masks, express) and live pre-existing
+        // array state.
+        use crate::testkit::Rng;
+        let mut rng = Rng::new(0xFA57);
+        for case in 0..300 {
+            let op = AluOp::from_bits(rng.below(16) as u8);
+            let mut cw = if op.uses_immediate() {
+                ContextWord::immediate(op, rng.range_i64(-128, 127) as i16)
+            } else {
+                ContextWord::two_port(op)
+            };
+            cw.reg_write = rng.below(16) as u8;
+            cw.express_write = rng.below(2) == 0;
+            cw.acc_reset = rng.below(2) == 0;
+            cw.acc_accumulate = rng.below(4) == 0;
+            let mode = if rng.below(2) == 0 { BroadcastMode::Column } else { BroadcastMode::Row };
+            let index = rng.below(8) as usize;
+            let mut a = [0i16; ARRAY_DIM];
+            let mut b = [0i16; ARRAY_DIM];
+            for l in 0..ARRAY_DIM {
+                a[l] = rng.i16();
+                b[l] = rng.i16();
+            }
+            // Random pre-existing state in both arrays.
+            let mut reference = RcArray::new();
+            for r in 0..ARRAY_DIM {
+                for c in 0..ARRAY_DIM {
+                    reference.set_out(r, c, rng.i16());
+                    reference.acc[r][c] = rng.i16() as i32 * 17;
+                    reference.set_reg(r, c, (r + c) & 3, rng.i16());
+                    if rng.below(3) == 0 {
+                        reference.express[r][c] = Some(rng.i16());
+                    }
+                }
+            }
+            let mut fused = reference.clone();
+            reference.broadcast(mode, index, &cw, &a, &b);
+            fused.broadcast_lanes(mode, index, &cw, &a, &b);
+            for r in 0..ARRAY_DIM {
+                for c in 0..ARRAY_DIM {
+                    assert_eq!(
+                        reference.cell(r, c),
+                        fused.cell(r, c),
+                        "case {case}: {op:?} {mode:?} line {index}, cell ({r},{c})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -50,6 +50,58 @@ pub(crate) enum Step {
     },
     /// A `wfbi`/`wfbir` write-back of one line's output registers.
     WriteBack { mode: BroadcastMode, line: usize, set: Set, bank: Bank, addr: usize },
+    /// A fused run of broadcasts or write-backs (§Perf, fused tile-kernel
+    /// tier) — see [`FusedRun`] and the compile-time fusion pass.
+    FusedRun(FusedRun),
+}
+
+/// A compile-time-fused run of hot steps, executed as one tight loop with
+/// no per-step dispatch and no per-broadcast context-word/operand-plan
+/// re-resolution (§Perf).
+///
+/// Fusion criteria (checked statically by [`fuse_steps`]):
+///
+/// * **Broadcasts** — ≥ 2 consecutive broadcast steps sharing one context
+///   word (same `mode`/`plane`/`cw`/`set`), lines ascending by one and
+///   every operand-bus address advancing by exactly [`ARRAY_DIM`] on the
+///   same bank — the shape every `VecVecMapping`, `VecScalarMapping` and
+///   `TiledVecVecMapping` tile emits. Register-only scalar steps
+///   interleaved with the run (the paper's `ldli r4` bank-address
+///   formation) are hoisted ahead of it: they touch only the TinyRISC
+///   register file, which no broadcast or write-back reads or writes, so
+///   the reordering is architecturally exact.
+/// * **Write-backs** — ≥ 2 consecutive write-backs of ascending lines to
+///   one contiguous frame-buffer span (same `mode`/`set`/`bank`, address
+///   advancing by [`ARRAY_DIM`]), committed as a single slice write.
+///
+/// Every fused step is additionally proven in range at compile time
+/// (context coordinates, lines, and full bus/write-back windows), so a
+/// fused run can never panic mid-run; programs that fail any criterion
+/// keep their steps unfused and execute exactly as before.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum FusedRun {
+    /// `count` broadcasts driving lines `line0 ..`, operand buses walking
+    /// `base + i·ARRAY_DIM` from the given base addresses.
+    Broadcasts {
+        mode: BroadcastMode,
+        plane: usize,
+        cw: usize,
+        line0: usize,
+        set: Set,
+        bus_a: Option<(Bank, usize)>,
+        bus_b: Option<(Bank, usize)>,
+        count: usize,
+    },
+    /// `count` write-backs of lines `line0 ..` to the contiguous span
+    /// `addr0 .. addr0 + count·ARRAY_DIM`.
+    WriteBacks {
+        mode: BroadcastMode,
+        line0: usize,
+        set: Set,
+        bank: Bank,
+        addr0: usize,
+        count: usize,
+    },
 }
 
 /// A straight-line TinyRISC program compiled to a flat step vector with
@@ -77,8 +129,22 @@ impl BroadcastSchedule {
     /// Compile a program. Returns `None` when the program branches
     /// (`jmp`/`bnez`) — those run through the interpreter. A trailing
     /// `halt` (and anything after it) ends the schedule, mirroring the
-    /// interpreter.
+    /// interpreter. Eligible broadcast/write-back runs are collapsed into
+    /// [`FusedRun`] steps (§Perf — see the fusion criteria there).
     pub fn compile(program: &Program) -> Option<BroadcastSchedule> {
+        Self::compile_with(program, true)
+    }
+
+    /// As [`BroadcastSchedule::compile`] but with the fusion pass
+    /// disabled: one step per instruction, exactly the pre-fusion
+    /// scheduled path. The bench baseline and the fusion-refusal
+    /// conformance tests use this to pin the two tiers against each
+    /// other.
+    pub fn compile_unfused(program: &Program) -> Option<BroadcastSchedule> {
+        Self::compile_with(program, false)
+    }
+
+    fn compile_with(program: &Program, fuse: bool) -> Option<BroadcastSchedule> {
         let mut steps = Vec::with_capacity(program.len());
         let mut slots = 0u64;
         let mut executed = 0u64;
@@ -171,6 +237,7 @@ impl BroadcastSchedule {
                     coords_ok(*plane, *cw, *line) && bus_ok(*bus_a) && bus_ok(*bus_b);
             }
         }
+        let steps = if fuse { fuse_steps(steps) } else { steps };
         Some(BroadcastSchedule {
             steps,
             validated,
@@ -185,6 +252,12 @@ impl BroadcastSchedule {
     /// (the precondition for the executor's unchecked plane reads).
     pub fn is_validated(&self) -> bool {
         self.validated
+    }
+
+    /// Number of [`FusedRun`] steps the fusion pass produced (0 for
+    /// unfusable programs and [`BroadcastSchedule::compile_unfused`]).
+    pub fn fused_runs(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::FusedRun(_))).count()
     }
 
     /// The pre-decoded steps, read-only (the executor's iteration path).
@@ -211,6 +284,156 @@ impl BroadcastSchedule {
     pub fn is_empty(&self) -> bool {
         self.steps.is_empty()
     }
+}
+
+/// Is this plain step a pure TinyRISC-register operation (reads and
+/// writes the scalar register file only)? Broadcasts and write-backs
+/// never touch the register file, so these commute with them exactly —
+/// which is what lets [`fuse_steps`] hoist interleaved address-formation
+/// steps (the paper's `ldli r4`) ahead of a fused run.
+fn register_only(instr: &Instruction) -> bool {
+    matches!(
+        instr,
+        Instruction::Ldui { .. }
+            | Instruction::Ldli { .. }
+            | Instruction::Add { .. }
+            | Instruction::Sub { .. }
+            | Instruction::Addi { .. }
+    )
+}
+
+/// Does `cand` continue the operand-bus pattern anchored at `base`, `count`
+/// windows in: same bank (or both absent), address advanced by exactly
+/// `count · ARRAY_DIM`?
+fn bus_advances(
+    base: Option<(Bank, usize)>,
+    cand: Option<(Bank, usize)>,
+    count: usize,
+) -> bool {
+    match (base, cand) {
+        (None, None) => true,
+        (Some((bank0, a0)), Some((bank, a))) => bank == bank0 && a == a0 + count * ARRAY_DIM,
+        _ => false,
+    }
+}
+
+/// The compile-time fusion pass: collapse eligible broadcast and
+/// write-back runs into [`FusedRun`] steps (see the criteria on
+/// [`FusedRun`]). Pure step-vector rewrite — the precomputed cycle
+/// accounting is untouched (it was derived from the instruction stream
+/// before fusion), and programs with no eligible run come back unchanged.
+fn fuse_steps(steps: Vec<Step>) -> Vec<Step> {
+    let bus_in_range = |bus: Option<(Bank, usize)>| match bus {
+        Some((_, addr)) => addr + ARRAY_DIM <= BANK_ELEMS,
+        None => true,
+    };
+    let mut out = Vec::with_capacity(steps.len());
+    let mut i = 0;
+    while i < steps.len() {
+        if let Step::Broadcast { mode, plane, cw, line: line0, set, bus_a, bus_b } = steps[i] {
+            // Anchor must be fully in range so a fused run can never
+            // panic mid-loop; out-of-range steps stay unfused and keep
+            // the interpreter's checked reads (and panics).
+            if plane < PLANES
+                && cw < PLANE_WORDS
+                && line0 < ARRAY_DIM
+                && bus_in_range(bus_a)
+                && bus_in_range(bus_b)
+            {
+                let mut hoisted: Vec<Step> = Vec::new();
+                let mut pending: Vec<Step> = Vec::new();
+                let mut count = 1usize;
+                let mut next_i = i + 1;
+                for j in i + 1..steps.len() {
+                    match steps[j] {
+                        Step::Plain(instr) if register_only(&instr) => pending.push(steps[j]),
+                        Step::Broadcast {
+                            mode: m2,
+                            plane: p2,
+                            cw: c2,
+                            line: l2,
+                            set: s2,
+                            bus_a: a2,
+                            bus_b: b2,
+                        } if m2 == mode
+                            && p2 == plane
+                            && c2 == cw
+                            && s2 == set
+                            && l2 == line0 + count
+                            && l2 < ARRAY_DIM
+                            && bus_advances(bus_a, a2, count)
+                            && bus_advances(bus_b, b2, count)
+                            && bus_in_range(a2)
+                            && bus_in_range(b2) =>
+                        {
+                            hoisted.append(&mut pending);
+                            count += 1;
+                            next_i = j + 1;
+                        }
+                        _ => break,
+                    }
+                }
+                if count >= 2 {
+                    out.extend(hoisted);
+                    out.push(Step::FusedRun(FusedRun::Broadcasts {
+                        mode,
+                        plane,
+                        cw,
+                        line0,
+                        set,
+                        bus_a,
+                        bus_b,
+                        count,
+                    }));
+                    i = next_i;
+                    continue;
+                }
+            }
+        }
+        if let Step::WriteBack { mode, line: line0, set, bank, addr: addr0 } = steps[i] {
+            if line0 < ARRAY_DIM && addr0 + ARRAY_DIM <= BANK_ELEMS {
+                let mut hoisted: Vec<Step> = Vec::new();
+                let mut pending: Vec<Step> = Vec::new();
+                let mut count = 1usize;
+                let mut next_i = i + 1;
+                for j in i + 1..steps.len() {
+                    match steps[j] {
+                        Step::Plain(instr) if register_only(&instr) => pending.push(steps[j]),
+                        Step::WriteBack { mode: m2, line: l2, set: s2, bank: bk2, addr: a2 }
+                            if m2 == mode
+                                && s2 == set
+                                && bk2 == bank
+                                && l2 == line0 + count
+                                && l2 < ARRAY_DIM
+                                && a2 == addr0 + count * ARRAY_DIM
+                                && a2 + ARRAY_DIM <= BANK_ELEMS =>
+                        {
+                            hoisted.append(&mut pending);
+                            count += 1;
+                            next_i = j + 1;
+                        }
+                        _ => break,
+                    }
+                }
+                if count >= 2 {
+                    out.extend(hoisted);
+                    out.push(Step::FusedRun(FusedRun::WriteBacks {
+                        mode,
+                        line0,
+                        set,
+                        bank,
+                        addr0,
+                        count,
+                    }));
+                    i = next_i;
+                    continue;
+                }
+            }
+        }
+        out.push(steps[i]);
+        i += 1;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -295,6 +518,120 @@ mod tests {
             addr: 0,
         }]);
         assert!(!BroadcastSchedule::compile(&p).unwrap().is_validated());
+    }
+
+    #[test]
+    fn translation_and_scaling_shapes_fuse_their_runs() {
+        use crate::mapping::{VecScalarMapping, VecVecMapping};
+        use crate::morphosys::AluOp;
+        // Translation: the 8 `ldli r4` + `dbcdc` pairs collapse into 8
+        // hoisted register steps plus one fused broadcast run; the 8
+        // `wfbi`s into one fused write-back run.
+        let translation = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let fused = BroadcastSchedule::compile(&translation.program).unwrap();
+        let unfused = BroadcastSchedule::compile_unfused(&translation.program).unwrap();
+        assert_eq!(fused.fused_runs(), 2);
+        assert_eq!(unfused.fused_runs(), 0);
+        assert!(fused.len() < unfused.len(), "{} !< {}", fused.len(), unfused.len());
+        // Fusion is a pure step rewrite: the precomputed accounting is
+        // identical between the tiers.
+        let (rf, ru) = (fused.report(), unfused.report());
+        assert_eq!(
+            (rf.cycles, rf.slots, rf.executed, rf.broadcasts),
+            (ru.cycles, ru.slots, ru.executed, ru.broadcasts)
+        );
+        // Scaling: one fused sbcb run + one fused write-back run.
+        let scaling = VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile();
+        assert_eq!(BroadcastSchedule::compile(&scaling.program).unwrap().fused_runs(), 2);
+    }
+
+    #[test]
+    fn tiled_vecvec_fuses_every_tile() {
+        use crate::mapping::TiledVecVecMapping;
+        use crate::morphosys::AluOp;
+        for streamed in [false, true] {
+            let m = TiledVecVecMapping { n: 256, op: AluOp::Add, streamed }.compile();
+            let s = BroadcastSchedule::compile(&m.program).unwrap();
+            // One broadcast run and one write-back run per 64-point tile.
+            assert_eq!(s.fused_runs(), 2 * 4, "streamed={streamed}");
+        }
+    }
+
+    #[test]
+    fn non_contiguous_or_mixed_runs_refuse_fusion() {
+        let dbcdc = |cw: usize, col: usize, addr: usize| Instruction::Dbcdc {
+            plane: 0,
+            cw,
+            col,
+            set: Set::Zero,
+            addr_a: addr,
+            addr_b: addr,
+        };
+        let fused_runs = |instrs: Vec<Instruction>| {
+            BroadcastSchedule::compile(&Program::new(instrs)).unwrap().fused_runs()
+        };
+        // Bus addresses striding 16 instead of 8: not one contiguous span.
+        assert_eq!(fused_runs(vec![dbcdc(0, 0, 0), dbcdc(0, 1, 16)]), 0);
+        // Mixed context words.
+        assert_eq!(fused_runs(vec![dbcdc(0, 0, 0), dbcdc(1, 1, 8)]), 0);
+        // Non-ascending lines.
+        assert_eq!(fused_runs(vec![dbcdc(0, 1, 0), dbcdc(0, 0, 8)]), 0);
+        // A DMA step (not register-only) between the broadcasts pins them
+        // apart — it reads the frame buffer the run writes through.
+        assert_eq!(
+            fused_runs(vec![
+                dbcdc(0, 0, 0),
+                Instruction::Stfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 4, fb_addr: 0 },
+                dbcdc(0, 1, 8),
+            ]),
+            0
+        );
+        // Write-backs with an address gap.
+        assert_eq!(
+            fused_runs(vec![
+                Instruction::Wfbi { col: 0, set: Set::One, bank: Bank::A, addr: 0 },
+                Instruction::Wfbi { col: 1, set: Set::One, bank: Bank::A, addr: 24 },
+            ]),
+            0
+        );
+        // An out-of-range continuation closes the run at the boundary.
+        assert_eq!(
+            fused_runs(vec![
+                dbcdc(0, 0, BANK_ELEMS - ARRAY_DIM),
+                dbcdc(0, 1, BANK_ELEMS),
+            ]),
+            0
+        );
+        // Positive control: the same shapes with contiguous addresses fuse.
+        assert_eq!(fused_runs(vec![dbcdc(0, 0, 0), dbcdc(0, 1, 8)]), 1);
+        assert_eq!(
+            fused_runs(vec![
+                Instruction::Wfbi { col: 0, set: Set::One, bank: Bank::A, addr: 0 },
+                Instruction::Wfbi { col: 1, set: Set::One, bank: Bank::A, addr: 8 },
+            ]),
+            1
+        );
+    }
+
+    #[test]
+    fn interleaved_register_steps_hoist_ahead_of_a_fused_run() {
+        // The paper's Table 1 pattern: `ldli r4` between every `dbcdc`.
+        let mut instrs = Vec::new();
+        for c in 0..4usize {
+            instrs.push(Instruction::Ldli { rd: Reg(4), imm: (8 * c) as u16 });
+            instrs.push(Instruction::Dbcdc {
+                plane: 0,
+                cw: 0,
+                col: c,
+                set: Set::Zero,
+                addr_a: 8 * c,
+                addr_b: 8 * c,
+            });
+        }
+        let s = BroadcastSchedule::compile(&Program::new(instrs)).unwrap();
+        assert_eq!(s.fused_runs(), 1);
+        // 4 hoisted ldli steps + 1 fused run.
+        assert_eq!(s.len(), 5);
     }
 
     #[test]

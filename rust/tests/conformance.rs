@@ -22,7 +22,9 @@ use morpho::coordinator::backend::{apply_native, Backend, M1SimBackend};
 use morpho::morphosys::context_memory::Block;
 use morpho::morphosys::frame_buffer::BANK_ELEMS;
 use morpho::morphosys::rc_array::ARRAY_DIM;
-use morpho::morphosys::{Bank, BroadcastSchedule, Instruction, M1System, Program, Reg, Set};
+use morpho::morphosys::{
+    AluOp, Bank, BroadcastSchedule, ContextWord, Instruction, M1System, Program, Reg, Set,
+};
 use morpho::testkit::Rng;
 
 /// Words of main memory the generator stages into and programs may write;
@@ -293,6 +295,232 @@ fn random_programs_scheduled_path_is_bit_identical_to_interpreter() {
         assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts");
         assert_systems_identical(&interp, &sched, "post-run state");
     });
+}
+
+/// Build the canonical fusable tile program: stage `u`/`v` at 0x100/0x200
+/// and a raw context word at 0x300, DMA both banks, load the word, fire
+/// `sweeps` full 8-column contiguous double-bank broadcast runs, write all
+/// 8 columns back contiguously, and store the result window to 0x400.
+/// Every broadcast/write-back run in it is fusion-eligible by
+/// construction.
+fn fusable_tile_program(sweeps: usize) -> Program {
+    let mut prog = Vec::new();
+    emit_load_addr(&mut prog, Reg(1), 0x100);
+    prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 });
+    emit_load_addr(&mut prog, Reg(2), 0x200);
+    prog.push(Instruction::Ldfb { rs: Reg(2), set: Set::Zero, bank: Bank::B, words: 32, fb_addr: 0 });
+    emit_load_addr(&mut prog, Reg(3), 0x300);
+    prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
+    for _ in 0..sweeps {
+        for c in 0..ARRAY_DIM {
+            // The paper's interleaved bank-address formation step — the
+            // fusion pass must hoist these, not refuse the run.
+            prog.push(Instruction::Ldli { rd: Reg(4), imm: (c * ARRAY_DIM) as u16 });
+            prog.push(Instruction::Dbcdc {
+                plane: 0,
+                cw: 0,
+                col: c,
+                set: Set::Zero,
+                addr_a: c * ARRAY_DIM,
+                addr_b: c * ARRAY_DIM,
+            });
+        }
+    }
+    for c in 0..ARRAY_DIM {
+        prog.push(Instruction::Wfbi {
+            col: c,
+            set: Set::One,
+            bank: Bank::A,
+            addr: c * ARRAY_DIM,
+        });
+    }
+    emit_load_addr(&mut prog, Reg(5), 0x400);
+    prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::A, words: 32, fb_addr: 0 });
+    Program::new(prog)
+}
+
+/// Run one program on three fresh, identically staged systems — the
+/// interpreter, the unfused scheduled path, and the fused path — and
+/// assert all three agree bit-for-bit on reports and architectural state.
+fn assert_three_way_identical(program: &Program, stage: impl Fn(&mut M1System), what: &str) {
+    let fused = BroadcastSchedule::compile(program).expect("straight-line program");
+    let unfused = BroadcastSchedule::compile_unfused(program).expect("straight-line program");
+    let mut interp = M1System::new();
+    stage(&mut interp);
+    let ri = interp.run(program);
+    for (name, schedule) in [("fused", &fused), ("unfused", &unfused)] {
+        let mut sys = M1System::new();
+        stage(&mut sys);
+        let rs = sys.run_program(program, Some(schedule));
+        assert_eq!(ri.cycles, rs.cycles, "{what}: {name} cycles");
+        assert_eq!(ri.slots, rs.slots, "{what}: {name} slots");
+        assert_eq!(ri.executed, rs.executed, "{what}: {name} executed");
+        assert_eq!(ri.broadcasts, rs.broadcasts, "{what}: {name} broadcasts");
+        assert_systems_identical(&interp, &sys, &format!("{what}: {name} state"));
+    }
+}
+
+#[test]
+fn fused_runs_match_interpreter_for_every_alu_op() {
+    // The per-AluOp fused sweep: all 16 ops through the SIMD lane
+    // kernels, random operands and context-word flags, two consecutive
+    // full-array broadcast runs so `Mula` (and `acc_accumulate`)
+    // accumulator state carries from one fused run into the next.
+    for op_bits in 0..16u8 {
+        let op = AluOp::from_bits(op_bits);
+        for_each_case(&format!("fused {op:?}"), 12, |rng| {
+            let mut cw = if op.uses_immediate() {
+                ContextWord::immediate(op, rng.range_i64(-128, 127) as i16)
+            } else {
+                ContextWord::two_port(op)
+            };
+            cw.reg_write = rng.below(16) as u8;
+            cw.express_write = rng.bool();
+            // acc_reset=false half the time keeps accumulator state live
+            // across the two fused sweeps.
+            cw.acc_reset = rng.bool();
+            cw.acc_accumulate = rng.below(4) == 0;
+            let program = fusable_tile_program(2);
+            let schedule = BroadcastSchedule::compile(&program).unwrap();
+            assert!(
+                schedule.fused_runs() >= 3,
+                "{op:?}: expected 2 fused broadcast runs + 1 fused write-back run, got {}",
+                schedule.fused_runs()
+            );
+            let u: Vec<i16> = (0..64).map(|_| rng.i16()).collect();
+            let v: Vec<i16> = (0..64).map(|_| rng.i16()).collect();
+            let raw = cw.encode();
+            assert_three_way_identical(
+                &program,
+                |sys| {
+                    sys.mem.store_elements(0x100, &u);
+                    sys.mem.store_elements(0x200, &v);
+                    sys.mem.write_word(0x300, raw);
+                },
+                &format!("{op:?} (cw {raw:#010x})"),
+            );
+        });
+    }
+}
+
+#[test]
+fn mula_accumulator_carries_across_consecutive_fused_runs() {
+    // Directed (non-random) pin of the carry: two fused Mula sweeps
+    // without acc_reset — the second run's outputs are acc after TWO
+    // accumulations, i.e. 2·u[i]·v[i] in every cell.
+    let program = fusable_tile_program(2);
+    let u: Vec<i16> = (0..64).map(|i| (i as i16) - 31).collect();
+    let v: Vec<i16> = (0..64).map(|i| 3 * (i as i16) - 90).collect();
+    let cw = ContextWord::two_port(AluOp::Mula);
+    let raw = cw.encode();
+    assert_three_way_identical(
+        &program,
+        |sys| {
+            sys.mem.store_elements(0x100, &u);
+            sys.mem.store_elements(0x200, &v);
+            sys.mem.write_word(0x300, raw);
+        },
+        "Mula carry",
+    );
+    // And the numeric expectation, against the fused path directly.
+    let schedule = BroadcastSchedule::compile(&program).unwrap();
+    let mut sys = M1System::new();
+    sys.mem.store_elements(0x100, &u);
+    sys.mem.store_elements(0x200, &v);
+    sys.mem.write_word(0x300, raw);
+    sys.run_program(&program, Some(&schedule));
+    let result = sys.mem.load_elements(0x400, 64);
+    for i in 0..64 {
+        let expect = (2i32 * u[i] as i32 * v[i] as i32) as i16;
+        assert_eq!(result[i], expect, "element {i}");
+    }
+}
+
+#[test]
+fn non_contiguous_programs_refuse_fusion_and_stay_bit_identical() {
+    // Broadcast runs with a 16-element address stride, alternating
+    // context words, or descending lines must refuse fusion entirely —
+    // and still execute bit-identically to the interpreter through the
+    // unfused scheduled path.
+    let variants: Vec<(&str, Vec<Instruction>)> = vec![
+        (
+            "stride-16 addresses",
+            (0..4)
+                .map(|c| Instruction::Dbcdc {
+                    plane: 0,
+                    cw: 0,
+                    col: c,
+                    set: Set::Zero,
+                    addr_a: 16 * c,
+                    addr_b: 16 * c,
+                })
+                .collect(),
+        ),
+        (
+            "alternating context words",
+            (0..4)
+                .map(|c| Instruction::Dbcdc {
+                    plane: 0,
+                    cw: c % 2,
+                    col: c,
+                    set: Set::Zero,
+                    addr_a: 8 * c,
+                    addr_b: 8 * c,
+                })
+                .collect(),
+        ),
+        (
+            "descending lines",
+            (0..4)
+                .map(|c| Instruction::Dbcdc {
+                    plane: 0,
+                    cw: 0,
+                    col: 3 - c,
+                    set: Set::Zero,
+                    addr_a: 8 * (3 - c),
+                    addr_b: 8 * (3 - c),
+                })
+                .collect(),
+        ),
+        (
+            "write-backs with gaps",
+            (0..4)
+                .map(|c| Instruction::Wfbi {
+                    col: c,
+                    set: Set::One,
+                    bank: Bank::A,
+                    addr: 24 * c,
+                })
+                .collect(),
+        ),
+    ];
+    for (what, mut body) in variants {
+        let mut prog = Vec::new();
+        emit_load_addr(&mut prog, Reg(1), 0x100);
+        prog.push(Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 0 });
+        emit_load_addr(&mut prog, Reg(2), 0x200);
+        prog.push(Instruction::Ldfb { rs: Reg(2), set: Set::Zero, bank: Bank::B, words: 32, fb_addr: 0 });
+        emit_load_addr(&mut prog, Reg(3), 0x300);
+        prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
+        prog.append(&mut body);
+        emit_load_addr(&mut prog, Reg(5), 0x400);
+        prog.push(Instruction::Stfb { rs: Reg(5), set: Set::One, bank: Bank::A, words: 32, fb_addr: 0 });
+        let program = Program::new(prog);
+        let schedule = BroadcastSchedule::compile(&program).unwrap();
+        assert_eq!(schedule.fused_runs(), 0, "{what}: must refuse fusion");
+        let u: Vec<i16> = (0..64).map(|i| (7 * i - 200) as i16).collect();
+        let v: Vec<i16> = (0..64).map(|i| (-3 * i + 50) as i16).collect();
+        let raw = ContextWord::two_port(AluOp::Add).encode();
+        assert_three_way_identical(
+            &program,
+            |sys| {
+                sys.mem.store_elements(0x100, &u);
+                sys.mem.store_elements(0x200, &v);
+                sys.mem.write_word(0x300, raw);
+            },
+            what,
+        );
+    }
 }
 
 #[test]
