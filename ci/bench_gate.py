@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Bench-regression gate.
+
+Compares the current BENCH_simulator.json against a baseline (the previous
+successful CI run's artifact when available, else the committed
+ci/bench-baseline.json floors) and fails if any row present in BOTH files
+has regressed in throughput by more than the allowed fraction.
+
+Rows are keyed by their "bench" name; rows present on only one side are
+reported and skipped (new benches appear, old ones retire — that is not a
+regression). Throughputs of 0 on either side are skipped too (a unit-less
+placeholder row carries no signal).
+
+Usage: bench_gate.py BASELINE CURRENT [--max-regression 0.25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: expected a JSON array of bench rows")
+    out = {}
+    for row in rows:
+        name = row.get("bench")
+        if name:
+            out[name] = float(row.get("throughput", 0.0))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="maximum allowed fractional throughput drop (default 0.25)")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        raise SystemExit("bench gate: no shared rows between baseline and current")
+
+    floor = 1.0 - args.max_regression
+    failures = []
+    print(f"{'bench':<48} {'baseline':>14} {'current':>14} {'ratio':>7}")
+    for name in shared:
+        b, c = base[name], cur[name]
+        if b <= 0.0 or c <= 0.0:
+            print(f"{name:<48} {b:>14.1f} {c:>14.1f}   skip (no signal)")
+            continue
+        ratio = c / b
+        verdict = "OK" if ratio >= floor else "REGRESSED"
+        print(f"{name:<48} {b:>14.1f} {c:>14.1f} {ratio:>6.2f}x  {verdict}")
+        if ratio < floor:
+            failures.append((name, ratio))
+
+    for name in sorted(set(base) ^ set(cur)):
+        side = "baseline-only" if name in base else "new"
+        print(f"{name:<48} ({side}; skipped)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} row(s) regressed by more than "
+              f"{args.max_regression:.0%}:", file=sys.stderr)
+        for name, ratio in failures:
+            print(f"  {name}: {ratio:.2f}x of baseline", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(shared)} shared row(s) within {args.max_regression:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+//! Capacity-measurement demo: run one or more named loadgen scenarios
+//! against the coordinator's sharded M1-simulator backend and write the
+//! combined `BENCH_coordinator.json` capacity report.
+//!
+//! ```sh
+//! cargo run --release --example loadtest                 # smoke + burst
+//! cargo run --release --example loadtest steady ramp     # pick scenarios
+//! cargo run --release --example loadtest all             # every scenario
+//! ```
+//!
+//! Unlike `repro loadtest <scenario>` (one scenario → one report), this
+//! example chains several scenarios into a single artifact — the shape CI
+//! and cross-PR trajectory tooling consume — and demonstrates overriding
+//! scenario knobs programmatically.
+
+use morpho::loadgen::{self, scenario};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scenarios: Vec<scenario::Scenario> = if args.is_empty() {
+        ["smoke", "burst"]
+            .iter()
+            .map(|n| scenario::by_name(n).expect("built-in scenario"))
+            .collect()
+    } else if args.len() == 1 && args[0] == "all" {
+        scenario::all()
+    } else {
+        args.iter()
+            .map(|n| {
+                scenario::by_name(n).unwrap_or_else(|| {
+                    eprintln!("unknown scenario `{n}` — known:");
+                    for s in scenario::all() {
+                        eprintln!("  {:<8} {}", s.name, s.summary);
+                    }
+                    std::process::exit(2)
+                })
+            })
+            .collect()
+    };
+
+    let mut reports = Vec::new();
+    for sc in &scenarios {
+        println!("── {} ── {} [{}]", sc.name, sc.summary, sc.profile.label());
+        let report = loadgen::run_scenario(sc)?;
+        println!("{}\n", report.render());
+        reports.push(report);
+    }
+
+    // A scenario run twice with the same seed offers identical request
+    // streams — demonstrate the determinism knob by rerunning the first
+    // scenario briefly with a different seed.
+    if let Some(first) = scenarios.first() {
+        let mut variant = first.clone();
+        variant.seed ^= 0xD1CE;
+        variant.duration = variant.duration.min(std::time::Duration::from_secs(1));
+        println!("── {} (reseeded {:#x}) ──", variant.name, variant.seed);
+        let report = loadgen::run_scenario(&variant)?;
+        println!("{}\n", report.render());
+    }
+
+    let path = loadgen::report::default_path();
+    loadgen::report::write_reports(&reports, &path)?;
+    println!("wrote {} scenario reports to {path}", reports.len());
+    Ok(())
+}

@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
     let client = {
         let c = c.clone();
         let completed = completed.clone();
+        let rejected = rejected.clone();
         std::thread::spawn(move || {
             let mut rng = Rng::new(7);
             let deadline = Instant::now() + Duration::from_secs(seconds);
@@ -68,8 +69,12 @@ fn main() -> anyhow::Result<()> {
                 }
                 // Reap completions opportunistically.
                 waiters.retain(|rx| match rx.try_recv() {
-                    Ok(_) => {
+                    Ok(Ok(_)) => {
                         completed.fetch_add(1, Ordering::Relaxed);
+                        false
+                    }
+                    Ok(Err(_)) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
                         false
                     }
                     Err(_) => true,
@@ -80,8 +85,14 @@ fn main() -> anyhow::Result<()> {
             }
             // Drain the stragglers.
             for rx in waiters {
-                if rx.recv().is_ok() {
-                    completed.fetch_add(1, Ordering::Relaxed);
+                match rx.recv() {
+                    Ok(Ok(_)) => {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Err(_)) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {}
                 }
             }
         })

@@ -87,7 +87,7 @@ fn main() {
             })
             .collect();
         for rx in receivers {
-            rx.recv().unwrap();
+            rx.recv().unwrap().expect("no TTLs in this ablation, nothing is shed");
         }
         let m = c.metrics();
         println!(

@@ -1,0 +1,42 @@
+//! Bench: coordinator capacity under the loadgen scenarios — the
+//! serving-layer counterpart to `benches/simulator.rs`. Runs a short
+//! closed-loop saturation probe and a burst/shedding probe on the sharded
+//! M1-simulator backend and writes `BENCH_coordinator.json` (override the
+//! path with `BENCH_COORD_JSON`), so requests/sec, latency quantiles and
+//! shed counts become part of the machine-readable cross-PR trajectory.
+
+use std::time::Duration;
+
+use morpho::benchkit::section;
+use morpho::loadgen::{self, scenario};
+
+fn main() {
+    let mut reports = Vec::new();
+
+    section("closed-loop capacity (smoke scenario, shards=2)");
+    let mut smoke = scenario::by_name("smoke").expect("smoke scenario");
+    smoke.duration = Duration::from_secs(2);
+    let r = loadgen::run_scenario(&smoke).expect("run smoke");
+    println!("{}", r.render());
+    reports.push(r);
+
+    section("burst absorption & shedding (burst scenario, fast-reject + TTL)");
+    let mut burst = scenario::by_name("burst").expect("burst scenario");
+    burst.duration = Duration::from_secs(2);
+    let r = loadgen::run_scenario(&burst).expect("run burst");
+    println!("{}", r.render());
+    reports.push(r);
+
+    section("mixed 2D/3D workload (mixed scenario, full size ladder, shards=4)");
+    let mut mixed = scenario::by_name("mixed").expect("mixed scenario");
+    mixed.duration = Duration::from_secs(2);
+    let r = loadgen::run_scenario(&mixed).expect("run mixed");
+    println!("{}", r.render());
+    reports.push(r);
+
+    let path = loadgen::report::default_path();
+    match loadgen::report::write_reports(&reports, &path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

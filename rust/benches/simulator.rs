@@ -52,16 +52,9 @@ fn write_json(rows: &[JsonRow]) {
         ));
     }
     out.push_str("]\n");
-    // Atomic emission: write a sibling temp file, then rename over the
-    // target, so a reader (CI artifact collection, cross-PR trajectory
-    // tooling) never observes a half-written JSON.
-    let tmp = format!("{path}.tmp");
-    match std::fs::write(&tmp, out).and_then(|()| std::fs::rename(&tmp, &path)) {
+    match morpho::benchkit::write_atomic(&path, &out) {
         Ok(()) => println!("\nwrote {path}"),
-        Err(e) => {
-            let _ = std::fs::remove_file(&tmp);
-            eprintln!("\nfailed to write {path}: {e}");
-        }
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }
 

@@ -95,3 +95,34 @@ pub fn bench(name: &str, f: impl FnMut()) -> Measurement {
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Atomically write `contents` to `path`: write a sibling temp file, then
+/// rename it over the target, so a concurrent reader (CI artifact
+/// collection, the bench-regression gate, cross-PR trajectory tooling)
+/// never observes a half-written file. Shared by every `BENCH_*.json`
+/// emitter. The temp file is removed on failure.
+pub fn write_atomic(path: &str, contents: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents)
+        .and_then(|()| std::fs::rename(&tmp, path))
+        .map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            e
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_atomic_replaces_target_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join("morpho_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let path = path.to_str().unwrap();
+        super::write_atomic(path, "[1]").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "[1]");
+        super::write_atomic(path, "[2]").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "[2]");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+    }
+}

@@ -11,7 +11,10 @@ use std::time::{Duration, Instant};
 use crate::mapping::streamed::TILE as M1_TILE;
 
 use super::backend::BackendKind;
-use super::request::{PendingRequest, RequestTiming, TransformResponse};
+use super::metrics::Metrics;
+use super::request::{
+    PendingRequest, RejectReason, Rejection, RequestTiming, ServeResult, TransformResponse,
+};
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -42,8 +45,13 @@ impl Default for BatcherConfig {
 /// split across several tile jobs.
 pub(crate) struct Assembly {
     pub id: u64,
-    pub reply: std::sync::mpsc::Sender<TransformResponse>,
+    pub reply: std::sync::mpsc::Sender<ServeResult>,
     pub queued: Duration,
+    /// Absolute deadline; a completion after this instant counts as
+    /// `deadline_missed` (served late — shedding only happens *before*
+    /// execution, in [`Batcher::plan`]).
+    deadline: Option<Instant>,
+    metrics: Arc<Metrics>,
     state: Mutex<AsmState>,
     /// Max over parts of backend execution time, in nanoseconds.
     exec_ns: AtomicU64,
@@ -90,8 +98,11 @@ impl Assembly {
                     simulated_cycles: (cycles_total > 0).then_some(cycles_total),
                 },
             };
+            if matches!(self.deadline, Some(d) if Instant::now() > d) {
+                self.metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            }
             // Receiver may have hung up (client gone) — that's fine.
-            let _ = self.reply.send(resp);
+            let _ = self.reply.send(Ok(resp));
         }
     }
 }
@@ -153,10 +164,29 @@ impl Batcher {
     /// Turn a window of pending requests into tile jobs: group by
     /// transform key (arrival order preserved), concatenate each group's
     /// points, cut at `max_tile` boundaries.
-    pub(crate) fn plan(&self, window: Vec<PendingRequest>, now: Instant) -> Vec<TileJob> {
+    ///
+    /// Admission control happens here: a request whose deadline has
+    /// already passed at plan time is **shed** — its client receives an
+    /// explicit [`Rejection`] instead of stale (and still-costly) results,
+    /// and `metrics.shed` counts it. Requests that make it into a job but
+    /// finish late are counted as `deadline_missed` on completion.
+    pub(crate) fn plan(
+        &self,
+        window: Vec<PendingRequest>,
+        now: Instant,
+        metrics: &Arc<Metrics>,
+    ) -> Vec<TileJob> {
         // Group preserving first-arrival order of keys.
         let mut groups: Vec<(u64, [f32; 6], Vec<PendingRequest>)> = Vec::new();
         for p in window {
+            if matches!(p.deadline, Some(d) if now > d) {
+                metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = p.reply.send(Err(Rejection {
+                    id: p.req.id,
+                    reason: RejectReason::DeadlineExceeded,
+                }));
+                continue;
+            }
             let key = p.req.batch_key();
             match groups.iter_mut().find(|(k, _, _)| *k == key) {
                 Some((_, _, v)) => v.push(p),
@@ -178,6 +208,8 @@ impl Batcher {
                     id: p.req.id,
                     reply: p.reply,
                     queued: now.saturating_duration_since(p.submitted),
+                    deadline: p.deadline,
+                    metrics: metrics.clone(),
                     state: Mutex::new(AsmState {
                         xs: vec![0.0; n],
                         ys: vec![0.0; n],
@@ -244,16 +276,21 @@ mod tests {
         id: u64,
         n: usize,
         t: Vec<Transform>,
-    ) -> (PendingRequest, mpsc::Receiver<TransformResponse>) {
+    ) -> (PendingRequest, mpsc::Receiver<ServeResult>) {
         let (tx, rx) = mpsc::channel();
         let xs: Vec<f32> = (0..n).map(|i| (id * 1000 + i as u64) as f32).collect();
         let ys: Vec<f32> = (0..n).map(|i| -((id * 1000 + i as u64) as f32)).collect();
         let p = PendingRequest {
             req: TransformRequest::new(id, xs, ys, t),
             submitted: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         (p, rx)
+    }
+
+    fn metrics() -> Arc<Metrics> {
+        Arc::new(Metrics::default())
     }
 
     fn drain(job: TileJob) {
@@ -266,7 +303,7 @@ mod tests {
         let t = vec![Transform::Translate { tx: 1.0, ty: 1.0 }];
         let (p1, _r1) = pending(1, 16, t.clone());
         let (p2, _r2) = pending(2, 16, t);
-        let jobs = b.plan(vec![p1, p2], Instant::now());
+        let jobs = b.plan(vec![p1, p2], Instant::now(), &metrics());
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].points(), 32);
         assert_eq!(jobs[0].parts.len(), 2);
@@ -277,7 +314,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
         let (p1, _r1) = pending(1, 8, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
         let (p2, _r2) = pending(2, 8, vec![Transform::Translate { tx: 2.0, ty: 0.0 }]);
-        let jobs = b.plan(vec![p1, p2], Instant::now());
+        let jobs = b.plan(vec![p1, p2], Instant::now(), &metrics());
         assert_eq!(jobs.len(), 2);
     }
 
@@ -286,13 +323,14 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
         let (p, rx) = pending(7, 200, vec![Transform::Scale { sx: 1.0, sy: 1.0 }]);
         let expected_xs = p.req.xs.clone();
-        let jobs = b.plan(vec![p], Instant::now());
+        let jobs = b.plan(vec![p], Instant::now(), &metrics());
         assert_eq!(jobs.len(), 4); // 64+64+64+8
         assert!(jobs.iter().all(|j| j.points() <= 64));
         for j in jobs {
             drain(j);
         }
-        let resp = rx.try_recv().expect("response after all parts scattered");
+        let resp =
+            rx.try_recv().expect("response after all parts scattered").expect("served");
         assert_eq!(resp.id, 7);
         assert_eq!(resp.xs, expected_xs);
     }
@@ -314,13 +352,14 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_tile: 100, ..Default::default() });
         let (p, rx) = pending(9, 150, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
         let expected_xs = p.req.xs.clone();
-        let jobs = b.plan(vec![p], Instant::now());
+        let jobs = b.plan(vec![p], Instant::now(), &metrics());
         let sizes: Vec<usize> = jobs.iter().map(|j| j.points()).collect();
         assert_eq!(sizes, vec![64, 64, 22]);
         for j in jobs {
             drain(j);
         }
-        let resp = rx.try_recv().expect("response after all parts scattered");
+        let resp =
+            rx.try_recv().expect("response after all parts scattered").expect("served");
         assert_eq!(resp.xs, expected_xs, "reassembly unaffected by rounding");
     }
 
@@ -328,9 +367,9 @@ mod tests {
     fn zero_point_request_still_gets_a_response() {
         let b = Batcher::new(BatcherConfig::default());
         let (p, rx) = pending(3, 0, vec![]);
-        let jobs = b.plan(vec![p], Instant::now());
+        let jobs = b.plan(vec![p], Instant::now(), &metrics());
         assert!(jobs.is_empty());
-        assert_eq!(rx.try_recv().unwrap().id, 3);
+        assert_eq!(rx.try_recv().unwrap().unwrap().id, 3);
     }
 
     #[test]
@@ -355,7 +394,7 @@ mod tests {
                 pendings.push(p);
                 receivers.push(rx);
             }
-            let jobs = b.plan(pendings, Instant::now());
+            let jobs = b.plan(pendings, Instant::now(), &metrics());
             // Tile bound respected.
             for j in &jobs {
                 assert!(j.points() <= b.config.max_tile);
@@ -370,7 +409,7 @@ mod tests {
             }
             // Every request answered exactly once, points in order.
             for (i, rx) in receivers.iter().enumerate() {
-                let resp = rx.try_recv().expect("one response per request");
+                let resp = rx.try_recv().expect("one response per request").expect("served");
                 let (id, xs, ys) = &expected[i];
                 assert_eq!(resp.id, *id);
                 assert_eq!(&resp.xs, xs, "x order preserved (identity scatter)");
@@ -381,15 +420,58 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadline_is_shed_with_explicit_rejection() {
+        let b = Batcher::new(BatcherConfig::default());
+        let m = metrics();
+        let t = vec![Transform::Translate { tx: 1.0, ty: 0.0 }];
+        let (mut dead, dead_rx) = pending(1, 8, t.clone());
+        dead.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (live, live_rx) = pending(2, 8, t);
+        let jobs = b.plan(vec![dead, live], Instant::now(), &m);
+        // Only the live request was planned.
+        let total: usize = jobs.iter().map(|j| j.points()).sum();
+        assert_eq!(total, 8);
+        for j in jobs {
+            drain(j);
+        }
+        match dead_rx.try_recv().expect("shed request still gets a reply") {
+            Err(Rejection { id: 1, reason: RejectReason::DeadlineExceeded }) => {}
+            other => panic!("expected deadline rejection, got {other:?}"),
+        }
+        assert!(live_rx.try_recv().unwrap().is_ok());
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_missed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn late_completion_counts_deadline_missed_but_still_serves() {
+        let b = Batcher::new(BatcherConfig::default());
+        let m = metrics();
+        // Deadline is ahead of `now` at plan time (so the request is NOT
+        // shed) but already behind wall-clock when scatter completes.
+        let (mut p, rx) = pending(4, 8, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
+        let plan_now = Instant::now() - Duration::from_millis(10);
+        p.deadline = Some(plan_now + Duration::from_millis(5));
+        let jobs = b.plan(vec![p], plan_now, &m);
+        assert_eq!(jobs.len(), 1);
+        for j in jobs {
+            drain(j);
+        }
+        assert!(rx.try_recv().unwrap().is_ok(), "late requests are served, not dropped");
+        assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.deadline_missed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn queued_duration_measured_from_submit() {
         let b = Batcher::new(BatcherConfig::default());
         let (mut p, rx) = pending(1, 4, vec![]);
         p.submitted = Instant::now() - Duration::from_millis(50);
-        let jobs = b.plan(vec![p], Instant::now());
+        let jobs = b.plan(vec![p], Instant::now(), &metrics());
         for j in jobs {
             drain(j);
         }
-        let resp = rx.try_recv().unwrap();
+        let resp = rx.try_recv().unwrap().unwrap();
         assert!(resp.timing.queued >= Duration::from_millis(50));
     }
 }

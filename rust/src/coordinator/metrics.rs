@@ -63,6 +63,15 @@ pub struct Metrics {
     pub job_points: AtomicU64,
     pub backend_errors: AtomicU64,
     pub simulated_cycles: AtomicU64,
+    /// Requests shed by the batcher because their deadline expired while
+    /// they waited in the admission queue (admission control).
+    pub shed: AtomicU64,
+    /// Requests fast-rejected at `try_submit` because the admission queue
+    /// was full.
+    pub rejected: AtomicU64,
+    /// Requests that completed, but only after their deadline had passed
+    /// (served late rather than shed — the tail the TTL should bound).
+    pub deadline_missed: AtomicU64,
     /// Queue wait per request (submit → batch formation).
     pub queue_wait: Histogram,
     /// Backend execution per job.
@@ -78,6 +87,9 @@ pub struct MetricsSnapshot {
     pub job_points: u64,
     pub backend_errors: u64,
     pub simulated_cycles: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub deadline_missed: u64,
     pub queue_wait_mean_us: f64,
     pub queue_wait_p99_us: u64,
     pub execute_mean_us: f64,
@@ -109,6 +121,9 @@ impl Metrics {
             job_points: self.job_points.load(Ordering::Relaxed),
             backend_errors: self.backend_errors.load(Ordering::Relaxed),
             simulated_cycles: self.simulated_cycles.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             queue_wait_mean_us: self.queue_wait.mean_us(),
             queue_wait_p99_us: self.queue_wait.quantile_us(0.99),
             execute_mean_us: self.execute.mean_us(),
@@ -131,6 +146,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
+             admission:  shed={} rejected={} deadline_missed={}\n\
              queue_wait: mean={:.1}us p99<={}us\n\
              execute:    mean={:.1}us p50<={}us p99<={}us\n\
              simulated M1 cycles={}",
@@ -139,6 +155,9 @@ impl MetricsSnapshot {
             self.jobs,
             self.mean_batch_points(),
             self.backend_errors,
+            self.shed,
+            self.rejected,
+            self.deadline_missed,
             self.queue_wait_mean_us,
             self.queue_wait_p99_us,
             self.execute_mean_us,
@@ -186,6 +205,17 @@ mod tests {
         assert_eq!(s.mean_batch_points(), 64.0);
         assert_eq!(s.simulated_cycles, 96);
         assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn admission_counters_flow_to_snapshot_and_render() {
+        let m = Metrics::default();
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.rejected.fetch_add(2, Ordering::Relaxed);
+        m.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.shed, s.rejected, s.deadline_missed), (3, 2, 1));
+        assert!(s.render().contains("shed=3 rejected=2 deadline_missed=1"));
     }
 
     #[test]

@@ -4,18 +4,29 @@
 //! library" into a deployable service:
 //!
 //! ```text
-//!  clients ──submit()──► bounded queue (backpressure)
-//!                            │
-//!                      batcher thread: group by transform, pack into
-//!                      tiles (64 points — the M1's natural unit — up to
-//!                      4096 for bulk), deadline-bounded
-//!                            │
-//!                      worker threads: each owns ONE backend instance
-//!                      (PJRT executors are thread-pinned) and executes
-//!                      tile jobs, scattering results back per request
-//!                            │
-//!  clients ◄──per-request channel── responses + timing
+//!  clients ──submit()───────► bounded queue (backpressure: full ⇒ block)
+//!          ──try_submit()──►   │    admission control: full ⇒ instant
+//!          ◄─QueueFull reject──┘    rejection, no queue growth
+//!                              │
+//!                        batcher thread: shed requests whose deadline
+//!                        (TTL) expired while queued ──► Rejection to the
+//!                        client; group the rest by transform, pack into
+//!                        tiles (64 points — the M1's natural unit — up to
+//!                        4096 for bulk), deadline-bounded window
+//!                              │
+//!                        worker threads: each owns ONE backend instance
+//!                        (PJRT executors are thread-pinned) and executes
+//!                        tile jobs, scattering results back per request
+//!                              │
+//!  clients ◄──per-request channel── ServeResult: response + timing, or
+//!                                   an explicit Rejection (shed/full)
 //! ```
+//!
+//! Every admitted request gets exactly one [`request::ServeResult`] on its
+//! channel — shedding is a message, never a silently dropped channel.
+//! Capacity and admission behaviour under load are measured by the
+//! [`crate::loadgen`] harness (`repro loadtest <scenario>`), which writes
+//! `BENCH_coordinator.json`.
 //!
 //! Backends: [`backend::NativeBackend`] (plain rust), [`backend::XlaBackend`]
 //! (the AOT artifacts via PJRT) and [`backend::M1SimBackend`] (the
@@ -37,6 +48,6 @@ pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend}
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pool::{RoutineSpec, TileOutcome, TilePool, TileRequest};
-pub use queue::BoundedQueue;
-pub use request::{TransformRequest, TransformResponse};
+pub use queue::{BoundedQueue, PopResult, PushError};
+pub use request::{RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse};
 pub use server::{BackendChoice, Coordinator, CoordinatorConfig};

@@ -12,6 +12,19 @@ pub enum PushError {
     Closed,
 }
 
+/// Outcome of a deadline-bounded pop. A dedicated enum rather than
+/// `Result<Option<T>, ()>`: close-vs-timeout is a three-way decision at
+/// every call site, and an opaque `Err(())` invited conflating the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopResult<T> {
+    /// An item was dequeued before the deadline.
+    Item(T),
+    /// The deadline passed with the queue still open and empty.
+    TimedOut,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
 /// Bounded blocking queue.
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
@@ -81,29 +94,28 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Pop with a deadline; `Ok(None)` means closed+drained, `Err(())`
-    /// means timed out.
-    pub fn pop_until(&self, deadline: Instant) -> Result<Option<T>, ()> {
+    /// Pop with a deadline; see [`PopResult`] for the three outcomes.
+    pub fn pop_until(&self, deadline: Instant) -> PopResult<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.not_full.notify_one();
-                return Ok(Some(item));
+                return PopResult::Item(item);
             }
             if g.closed {
-                return Ok(None);
+                return PopResult::Closed;
             }
             let now = Instant::now();
             if now >= deadline {
-                return Err(());
+                return PopResult::TimedOut;
             }
             let (guard, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
             g = guard;
             if timeout.timed_out() && g.items.is_empty() {
                 if g.closed {
-                    return Ok(None);
+                    return PopResult::Closed;
                 }
-                return Err(());
+                return PopResult::TimedOut;
             }
         }
     }
@@ -184,7 +196,7 @@ mod tests {
     fn pop_until_times_out() {
         let q: BoundedQueue<u32> = BoundedQueue::new(1);
         let d = Instant::now() + Duration::from_millis(25);
-        assert_eq!(q.pop_until(d), Err(()));
+        assert_eq!(q.pop_until(d), PopResult::TimedOut);
         assert!(Instant::now() >= d);
     }
 
@@ -193,7 +205,21 @@ mod tests {
         let q = BoundedQueue::new(1);
         q.push(42).unwrap();
         let d = Instant::now() + Duration::from_secs(1);
-        assert_eq!(q.pop_until(d), Ok(Some(42)));
+        assert_eq!(q.pop_until(d), PopResult::Item(42));
+    }
+
+    #[test]
+    fn pop_until_reports_closed_not_timed_out() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.close();
+        let d = Instant::now() + Duration::from_secs(1);
+        assert_eq!(q.pop_until(d), PopResult::Closed);
+        // Closed with items left: drain first, then report Closed.
+        let q = BoundedQueue::new(2);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop_until(Instant::now() + Duration::from_secs(1)), PopResult::Item(7));
+        assert_eq!(q.pop_until(Instant::now() + Duration::from_secs(1)), PopResult::Closed);
     }
 
     #[test]

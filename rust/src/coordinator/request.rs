@@ -13,12 +13,25 @@ pub struct TransformRequest {
     pub xs: Vec<f32>,
     pub ys: Vec<f32>,
     pub transforms: Vec<Transform>,
+    /// Optional time budget measured from submission. A request still
+    /// waiting in the admission queue when its budget expires is shed by
+    /// the batcher (the client receives a [`Rejection`] with
+    /// [`RejectReason::DeadlineExceeded`] instead of silently stale
+    /// results). `None` falls back to the coordinator's configured
+    /// default, if any.
+    pub ttl: Option<Duration>,
 }
 
 impl TransformRequest {
     pub fn new(id: u64, xs: Vec<f32>, ys: Vec<f32>, transforms: Vec<Transform>) -> Self {
         assert_eq!(xs.len(), ys.len(), "xs/ys must be parallel");
-        TransformRequest { id, xs, ys, transforms }
+        TransformRequest { id, xs, ys, transforms, ttl: None }
+    }
+
+    /// Attach a per-request deadline budget (see [`TransformRequest::ttl`]).
+    pub fn with_ttl(mut self, ttl: Duration) -> Self {
+        self.ttl = Some(ttl);
+        self
     }
 
     pub fn points(&self) -> usize {
@@ -68,11 +81,36 @@ pub struct TransformResponse {
     pub timing: RequestTiming,
 }
 
-/// Internal: a request annotated with its submit time and reply channel.
+/// Why the service refused (or shed) a request instead of serving it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// `try_submit` fast-reject: the admission queue was full.
+    QueueFull,
+    /// The request's deadline expired before a batch picked it up.
+    DeadlineExceeded,
+    /// The coordinator is shutting down.
+    ShuttingDown,
+}
+
+/// An explicit negative reply: the request was admitted (or offered) but
+/// will not be executed. Every admitted request receives exactly one
+/// [`ServeResult`] — a rejection is a message, never a dropped channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rejection {
+    pub id: u64,
+    pub reason: RejectReason,
+}
+
+/// What arrives on a request's reply channel.
+pub type ServeResult = std::result::Result<TransformResponse, Rejection>;
+
+/// Internal: a request annotated with its submit time, absolute deadline
+/// (from the request's or the coordinator's TTL) and reply channel.
 pub(crate) struct PendingRequest {
     pub req: TransformRequest,
     pub submitted: Instant,
-    pub reply: std::sync::mpsc::Sender<TransformResponse>,
+    pub deadline: Option<Instant>,
+    pub reply: std::sync::mpsc::Sender<ServeResult>,
 }
 
 #[cfg(test)]
@@ -112,5 +150,13 @@ mod tests {
     #[should_panic(expected = "parallel")]
     fn mismatched_coords_rejected() {
         TransformRequest::new(1, vec![0.0], vec![], vec![]);
+    }
+
+    #[test]
+    fn ttl_defaults_to_none_and_builds() {
+        let r = TransformRequest::new(1, vec![0.0], vec![0.0], vec![]);
+        assert_eq!(r.ttl, None);
+        let r = r.with_ttl(Duration::from_millis(5));
+        assert_eq!(r.ttl, Some(Duration::from_millis(5)));
     }
 }

@@ -4,7 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -13,8 +13,10 @@ use crate::graphics::Transform;
 use super::backend::{apply_native, Backend, M1SimBackend, NativeBackend, XlaBackend};
 use super::batcher::{Batcher, BatcherConfig, TileJob};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::BoundedQueue;
-use super::request::{PendingRequest, TransformRequest, TransformResponse};
+use super::queue::{BoundedQueue, PopResult, PushError};
+use super::request::{
+    PendingRequest, RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse,
+};
 
 /// Which backend the workers construct (each worker builds its own
 /// instance on its own thread — PJRT clients are thread-pinned).
@@ -42,6 +44,12 @@ pub struct CoordinatorConfig {
     /// scale shards (which parallelize within a job) before workers
     /// (which parallelize across jobs). Ignored by other backends.
     pub m1_shards: usize,
+    /// Default time budget applied to requests that carry no explicit
+    /// [`TransformRequest::ttl`]. A request still queued past its budget
+    /// is shed by the batcher with an explicit rejection (admission
+    /// control); one that completes late is counted `deadline_missed`.
+    /// `None` (the default) disables deadlines entirely.
+    pub default_ttl: Option<Duration>,
     pub batcher: BatcherConfig,
 }
 
@@ -53,6 +61,7 @@ impl Default for CoordinatorConfig {
             job_capacity: 256,
             workers: 2,
             m1_shards: 1,
+            default_ttl: None,
             batcher: BatcherConfig::default(),
         }
     }
@@ -62,6 +71,7 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     submit_q: Arc<BoundedQueue<PendingRequest>>,
     metrics: Arc<Metrics>,
+    default_ttl: Option<Duration>,
     next_id: AtomicU64,
     threads: Vec<JoinHandle<()>>,
 }
@@ -117,7 +127,13 @@ impl Coordinator {
             )?);
         }
 
-        Ok(Coordinator { submit_q, metrics, next_id: AtomicU64::new(1), threads })
+        Ok(Coordinator {
+            submit_q,
+            metrics,
+            default_ttl: config.default_ttl,
+            next_id: AtomicU64::new(1),
+            threads,
+        })
     }
 
     /// Submit a request; returns the channel the response arrives on.
@@ -127,26 +143,72 @@ impl Coordinator {
         xs: Vec<f32>,
         ys: Vec<f32>,
         transforms: Vec<Transform>,
-    ) -> Result<mpsc::Receiver<TransformResponse>> {
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.submit_request(TransformRequest::new(id, xs, ys, transforms))
     }
 
     /// Submit a pre-built request.
-    pub fn submit_request(
-        &self,
-        req: TransformRequest,
-    ) -> Result<mpsc::Receiver<TransformResponse>> {
+    pub fn submit_request(&self, req: TransformRequest) -> Result<mpsc::Receiver<ServeResult>> {
         let (tx, rx) = mpsc::channel();
-        self.metrics.record_request(req.points());
-        let pending = PendingRequest { req, submitted: Instant::now(), reply: tx };
+        let points = req.points();
+        let pending = self.pending(req, tx);
         self.submit_q
             .push(pending)
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        self.metrics.record_request(points);
         Ok(rx)
     }
 
-    /// Convenience: submit and wait.
+    /// Admission-control fast path: submit without blocking. Where
+    /// [`Coordinator::submit`] parks the caller while the admission queue
+    /// is full (backpressure), `try_submit` answers immediately with a
+    /// [`Rejection`] — the open-loop serving discipline, where clients
+    /// cannot be slowed down and overload must be shed at the door.
+    /// `metrics.rejected` counts the fast rejections.
+    pub fn try_submit(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+    ) -> std::result::Result<mpsc::Receiver<ServeResult>, Rejection> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.try_submit_request(TransformRequest::new(id, xs, ys, transforms))
+    }
+
+    /// Non-blocking submit of a pre-built request (see
+    /// [`Coordinator::try_submit`]).
+    pub fn try_submit_request(
+        &self,
+        req: TransformRequest,
+    ) -> std::result::Result<mpsc::Receiver<ServeResult>, Rejection> {
+        let (tx, rx) = mpsc::channel();
+        let id = req.id;
+        let points = req.points();
+        let pending = self.pending(req, tx);
+        match self.submit_q.try_push(pending) {
+            Ok(()) => {
+                self.metrics.record_request(points);
+                Ok(rx)
+            }
+            Err((_, PushError::Full)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Rejection { id, reason: RejectReason::QueueFull })
+            }
+            Err((_, PushError::Closed)) => {
+                Err(Rejection { id, reason: RejectReason::ShuttingDown })
+            }
+        }
+    }
+
+    fn pending(&self, req: TransformRequest, tx: mpsc::Sender<ServeResult>) -> PendingRequest {
+        let now = Instant::now();
+        let deadline = req.ttl.or(self.default_ttl).map(|ttl| now + ttl);
+        PendingRequest { req, submitted: now, deadline, reply: tx }
+    }
+
+    /// Convenience: submit and wait. A rejection (deadline shed) surfaces
+    /// as an error.
     pub fn transform_blocking(
         &self,
         xs: Vec<f32>,
@@ -154,11 +216,28 @@ impl Coordinator {
         transforms: Vec<Transform>,
     ) -> Result<TransformResponse> {
         let rx = self.submit(xs, ys, transforms)?;
-        Ok(rx.recv()?)
+        match rx.recv()? {
+            Ok(resp) => Ok(resp),
+            Err(rej) => Err(anyhow::anyhow!("request {} rejected: {:?}", rej.id, rej.reason)),
+        }
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Current admission-queue depth (requests admitted but not yet
+    /// batched) — the load-generation harness's saturation gauge.
+    pub fn queue_depth(&self) -> usize {
+        self.submit_q.len()
+    }
+
+    /// Begin shutdown without consuming the handle: new submissions fail,
+    /// already-admitted requests drain to completion. Useful when the
+    /// coordinator is shared behind an `Arc` (threads are joined when the
+    /// last handle drops, or by [`Coordinator::shutdown`]).
+    pub fn close(&self) {
+        self.submit_q.close();
     }
 
     /// Drain and stop all threads.
@@ -184,7 +263,7 @@ impl Drop for Coordinator {
 fn pump_loop(
     submit_q: &BoundedQueue<PendingRequest>,
     job_q: &BoundedQueue<TileJob>,
-    metrics: &Metrics,
+    metrics: &Arc<Metrics>,
     batcher: &Batcher,
 ) {
     while let Some(first) = submit_q.pop() {
@@ -193,18 +272,20 @@ fn pump_loop(
         let deadline = Instant::now() + batcher.config.max_wait;
         while points < batcher.config.flush_points {
             match submit_q.pop_until(deadline) {
-                Ok(Some(p)) => {
+                PopResult::Item(p) => {
                     points += p.req.points();
                     window.push(p);
                 }
-                Ok(None) | Err(()) => break, // closed or window expired
+                // Window expired, or the queue closed: plan what we have
+                // (a closed queue still drains admitted requests).
+                PopResult::TimedOut | PopResult::Closed => break,
             }
         }
         let now = Instant::now();
         for p in &window {
             metrics.queue_wait.record(now.saturating_duration_since(p.submitted));
         }
-        for job in batcher.plan(window, now) {
+        for job in batcher.plan(window, now, metrics) {
             if job_q.push(job).is_err() {
                 return; // shutting down
             }
@@ -362,9 +443,117 @@ mod tests {
             .push(PendingRequest {
                 req: TransformRequest::new(9, vec![], vec![], vec![]),
                 submitted: Instant::now(),
+                deadline: None,
                 reply: mpsc::channel().0,
             })
             .is_err());
+    }
+
+    #[test]
+    fn try_submit_fast_rejects_when_queue_is_full() {
+        // Saturate a 1-slot admission queue through the (deliberately
+        // slow) cycle-accurate simulator backend with a blocking feeder
+        // thread; try_submit offers must then observe QueueFull and
+        // reject instantly instead of parking.
+        let c = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendChoice::M1Sim,
+                queue_capacity: 1,
+                job_capacity: 1,
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(100),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let t = vec![Transform::Translate { tx: 1.0, ty: 1.0 }];
+        let feeder = {
+            let c = c.clone();
+            let t = t.clone();
+            std::thread::spawn(move || {
+                // Blocking submits re-fill the single queue slot the
+                // moment the pump drains it.
+                (0..24)
+                    .map(|_| c.submit(vec![1.0; 4096], vec![2.0; 4096], t.clone()).unwrap())
+                    .collect::<Vec<_>>()
+            })
+        };
+        let mut accepted = Vec::new();
+        let mut rejected = 0u64;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while rejected == 0 && Instant::now() < deadline {
+            match c.try_submit(vec![0.0; 8], vec![0.0; 8], t.clone()) {
+                Ok(rx) => accepted.push(rx),
+                Err(rej) => {
+                    assert_eq!(rej.reason, RejectReason::QueueFull);
+                    rejected += 1;
+                }
+            }
+        }
+        assert!(rejected > 0, "full queue must fast-reject");
+        assert!(c.metrics().rejected >= rejected);
+        // Everything admitted (either path) still completes.
+        for rx in feeder.join().unwrap().into_iter().chain(accepted) {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn default_ttl_sheds_stale_requests_with_rejection() {
+        // TTL far smaller than the batch window: the request expires while
+        // queued and the batcher sheds it with an explicit rejection.
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::Native,
+            workers: 1,
+            default_ttl: Some(Duration::from_millis(1)),
+            batcher: BatcherConfig {
+                max_wait: Duration::from_millis(50),
+                flush_points: usize::MAX,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let rx = c
+            .submit(vec![1.0; 8], vec![2.0; 8], vec![Transform::Translate { tx: 1.0, ty: 0.0 }])
+            .unwrap();
+        match rx.recv().unwrap() {
+            Err(Rejection { reason: RejectReason::DeadlineExceeded, .. }) => {}
+            other => panic!("expected deadline shed, got {other:?}"),
+        }
+        let m = c.metrics();
+        assert_eq!(m.shed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn per_request_ttl_overrides_coordinator_default() {
+        // Generous default, tiny per-request TTL: still shed.
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::Native,
+            workers: 1,
+            default_ttl: Some(Duration::from_secs(60)),
+            batcher: BatcherConfig {
+                max_wait: Duration::from_millis(50),
+                flush_points: usize::MAX,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let req = TransformRequest::new(
+            1,
+            vec![1.0; 8],
+            vec![2.0; 8],
+            vec![Transform::Translate { tx: 1.0, ty: 0.0 }],
+        )
+        .with_ttl(Duration::from_millis(1));
+        let rx = c.submit_request(req).unwrap();
+        assert!(rx.recv().unwrap().is_err(), "tiny per-request TTL must shed");
+        c.shutdown();
     }
 
     #[test]

@@ -28,9 +28,16 @@
 //! * [`runtime`] — the PJRT (XLA) runtime that loads the AOT-compiled
 //!   JAX/Pallas transform pipeline (`artifacts/*.hlo.txt`) and executes it
 //!   from the request path with no Python involved.
-//! * [`coordinator`] — the serving layer: async request queue, dynamic
-//!   batcher packing requests into 64-element tiles (the M1's natural
-//!   unit), scheduler and pluggable backends (XLA / M1 simulator / native).
+//! * [`coordinator`] — the serving layer: async request queue with
+//!   admission control (blocking backpressure, `try_submit` fast-reject,
+//!   TTL deadline shedding), dynamic batcher packing requests into
+//!   64-element tiles (the M1's natural unit), scheduler and pluggable
+//!   backends (XLA / M1 simulator / native).
+//! * [`loadgen`] — deterministic load generation & capacity measurement:
+//!   named scenarios (closed-loop, open-loop, burst, ramp) over seeded
+//!   workload mixes drive the coordinator end to end and write
+//!   `BENCH_coordinator.json` (throughput, latency quantiles, shed
+//!   counts, batch fill, simulated cycles/point).
 //! * [`perf`] — the reproduction harness that regenerates every table and
 //!   figure of the paper's evaluation (Tables 1–5, Figures 9–16).
 //!
@@ -41,6 +48,7 @@ pub mod baselines;
 pub mod benchkit;
 pub mod coordinator;
 pub mod graphics;
+pub mod loadgen;
 pub mod mapping;
 pub mod morphosys;
 pub mod perf;

@@ -1,0 +1,60 @@
+//! # Loadgen — deterministic load generation & capacity measurement (L4)
+//!
+//! The serving layer ([`crate::coordinator`]) batches and executes
+//! transform requests; this subsystem answers the question the paper's
+//! serving scenario actually poses: *how much* concurrent client traffic
+//! can a configuration sustain, at what latency, and what happens past
+//! saturation? It drives a running [`crate::coordinator::Coordinator`]
+//! end to end and emits a machine-readable capacity report.
+//!
+//! ```text
+//!  Scenario (name, arrival profile, workload mix, seed, knobs)
+//!      │
+//!      ├── RequestFactory: request i of stream s = f(seed, s, i) — pure,
+//!      │   wall-clock-free, so a fixed seed reproduces identical request
+//!      │   streams (the determinism contract)
+//!      │
+//!      ├── runner: closed-loop N-client drivers, or an open-loop
+//!      │   deterministic-arrival submitter (steady / burst / ramp) with a
+//!      │   polling collector; a sampler gauges admission-queue depth
+//!      │
+//!      └── CapacityReport → BENCH_coordinator.json (atomic temp+rename,
+//!          same style as BENCH_simulator.json): throughput, p50/p95/p99
+//!          latency, shed/rejected counts, queue depth, mean batch fill,
+//!          simulated M1 cycles/point
+//! ```
+//!
+//! ## Arrival disciplines
+//!
+//! * **Closed loop** — N clients, each submits → waits → repeats. Load is
+//!   self-limiting (the classic saturation probe); with a fixed seed every
+//!   client replays the identical request stream on every run.
+//! * **Open loop** — requests arrive on a fixed deterministic timetable
+//!   (no Poisson jitter: reproducibility beats realism here) regardless of
+//!   completion. Past saturation the queue grows, so open-loop scenarios
+//!   pair with admission control: `try_submit` fast-reject and/or request
+//!   TTLs, exercising the coordinator's shedding paths.
+//! * **Burst / ramp** — open-loop variants: periodic back-to-back bursts,
+//!   and a linear rate sweep that walks the service across its knee.
+//!
+//! ## Determinism contract
+//!
+//! Request *content* is a pure function of `(seed, stream, index)` —
+//! never of wall-clock time or thread interleaving. Closed-loop stream s
+//! is client s; open-loop profiles use a single stream 0 in arrival
+//! order. How *many* requests a run issues (and all timing numbers)
+//! remain machine-dependent; what is pinned is the request sequence each
+//! stream observes, which is what batching/conformance comparisons need.
+//!
+//! Run scenarios with `repro loadtest <name>` (see `repro loadtest list`),
+//! the `loadgen` bench target, or [`run_scenario`] directly.
+
+pub mod report;
+pub mod runner;
+pub mod scenario;
+pub mod workload;
+
+pub use report::CapacityReport;
+pub use runner::run_scenario;
+pub use scenario::{ArrivalProfile, Scenario, TransformKind, WorkloadMix};
+pub use workload::RequestFactory;

@@ -1,0 +1,241 @@
+//! The capacity report: one record per scenario run, rendered for humans
+//! and written to `BENCH_coordinator.json` (atomic temp-file + rename,
+//! the same contract as `BENCH_simulator.json`) for the CI trajectory.
+
+use std::time::Duration;
+
+use crate::benchkit::write_atomic;
+
+/// Everything a scenario run measured. All rates are per wall-clock
+/// second of the measured run; latency is submit → response receipt.
+#[derive(Debug, Clone)]
+pub struct CapacityReport {
+    pub scenario: String,
+    pub profile: String,
+    pub backend: &'static str,
+    pub workers: usize,
+    pub shards: usize,
+    pub seed: u64,
+    pub duration_s: f64,
+    /// Requests offered to the coordinator (including rejected ones).
+    pub submitted: u64,
+    /// Requests that received a successful response.
+    pub completed: u64,
+    /// Deadline-expired requests shed by the batcher.
+    pub shed: u64,
+    /// Fast-rejected at admission (`try_submit` on a full queue).
+    pub rejected: u64,
+    /// Served, but after their deadline.
+    pub deadline_missed: u64,
+    /// Reply channels that died without a message — always 0 in a
+    /// correct coordinator (asserted by CI's loadgen-smoke job).
+    pub failed: u64,
+    pub throughput_rps: f64,
+    pub points_per_s: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: u64,
+    pub latency_p95_us: u64,
+    pub latency_p99_us: u64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: u64,
+    /// Mean points per backend job — batching efficiency.
+    pub mean_batch_points: f64,
+    /// Simulated M1 cycles per executed point (M1Sim backend).
+    pub sim_cycles_per_point: f64,
+}
+
+/// Exact percentile over pre-sorted latency samples (nearest-rank on the
+/// raw samples — unlike the coordinator's log₂ histogram, loadgen keeps
+/// every sample, so quantiles are not bucket-rounded).
+pub fn percentile_us(sorted: &[Duration], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)].as_micros() as u64
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "0.000".to_string() // keep the report strictly-valid JSON
+    }
+}
+
+impl CapacityReport {
+    /// One JSON object (no trailing newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"backend\": \"{}\", \
+             \"workers\": {}, \"shards\": {}, \"seed\": {}, \"duration_s\": {}, \
+             \"submitted\": {}, \"completed\": {}, \"shed\": {}, \"rejected\": {}, \
+             \"deadline_missed\": {}, \"failed\": {}, \"throughput_rps\": {}, \
+             \"points_per_s\": {}, \"latency_mean_us\": {}, \"latency_p50_us\": {}, \
+             \"latency_p95_us\": {}, \"latency_p99_us\": {}, \"queue_depth_mean\": {}, \
+             \"queue_depth_max\": {}, \"mean_batch_points\": {}, \
+             \"sim_cycles_per_point\": {}}}",
+            self.scenario.replace('"', "'"),
+            self.profile.replace('"', "'"),
+            self.backend,
+            self.workers,
+            self.shards,
+            self.seed,
+            json_f64(self.duration_s),
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.rejected,
+            self.deadline_missed,
+            self.failed,
+            json_f64(self.throughput_rps),
+            json_f64(self.points_per_s),
+            json_f64(self.latency_mean_us),
+            self.latency_p50_us,
+            self.latency_p95_us,
+            self.latency_p99_us,
+            json_f64(self.queue_depth_mean),
+            self.queue_depth_max,
+            json_f64(self.mean_batch_points),
+            json_f64(self.sim_cycles_per_point),
+        )
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        format!(
+            "scenario {} [{}] on {} (workers={} shards={} seed={}) over {:.2}s\n\
+             offered={} completed={} shed={} rejected={} deadline_missed={} failed={}\n\
+             throughput: {:.1} req/s, {:.2} M points/s   mean batch {:.1} pts\n\
+             latency: mean={:.0}us p50={}us p95={}us p99={}us\n\
+             queue depth: mean={:.1} max={}   simulated M1 cycles/point={:.2}",
+            self.scenario,
+            self.profile,
+            self.backend,
+            self.workers,
+            self.shards,
+            self.seed,
+            self.duration_s,
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.rejected,
+            self.deadline_missed,
+            self.failed,
+            self.throughput_rps,
+            self.points_per_s / 1e6,
+            self.mean_batch_points,
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p95_us,
+            self.latency_p99_us,
+            self.queue_depth_mean,
+            self.queue_depth_max,
+            self.sim_cycles_per_point,
+        )
+    }
+}
+
+/// Default report path: `BENCH_coordinator.json`, overridable with the
+/// `BENCH_COORD_JSON` env var (mirrors the simulator bench's
+/// `BENCH_JSON`).
+pub fn default_path() -> String {
+    std::env::var("BENCH_COORD_JSON").unwrap_or_else(|_| "BENCH_coordinator.json".to_string())
+}
+
+/// Write reports as a JSON array, atomically.
+pub fn write_reports(reports: &[CapacityReport], path: &str) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.to_json());
+        out.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("]\n");
+    write_atomic(path, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CapacityReport {
+        CapacityReport {
+            scenario: "smoke".into(),
+            profile: "closed-loop(4)".into(),
+            backend: "m1sim",
+            workers: 1,
+            shards: 2,
+            seed: 42,
+            duration_s: 1.0,
+            submitted: 100,
+            completed: 100,
+            shed: 0,
+            rejected: 0,
+            deadline_missed: 0,
+            failed: 0,
+            throughput_rps: 100.0,
+            points_per_s: 6400.0,
+            latency_mean_us: 900.0,
+            latency_p50_us: 800,
+            latency_p95_us: 1500,
+            latency_p99_us: 2000,
+            queue_depth_mean: 1.5,
+            queue_depth_max: 4,
+            mean_batch_points: 128.0,
+            sim_cycles_per_point: 1.62,
+        }
+    }
+
+    #[test]
+    fn json_is_structurally_sound() {
+        let j = sample().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert_eq!(j.matches('{').count(), 1);
+        assert_eq!(j.matches('}').count(), 1);
+        // Every key present exactly once.
+        for key in [
+            "scenario", "profile", "backend", "workers", "shards", "seed", "duration_s",
+            "submitted", "completed", "shed", "rejected", "deadline_missed", "failed",
+            "throughput_rps", "points_per_s", "latency_mean_us", "latency_p50_us",
+            "latency_p95_us", "latency_p99_us", "queue_depth_mean", "queue_depth_max",
+            "mean_batch_points", "sim_cycles_per_point",
+        ] {
+            assert_eq!(j.matches(&format!("\"{key}\":")).count(), 1, "key {key}");
+        }
+        // No unescaped NaN/inf can reach the file.
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+    }
+
+    #[test]
+    fn nonfinite_rates_serialize_as_zero() {
+        let mut r = sample();
+        r.throughput_rps = f64::NAN;
+        r.points_per_s = f64::INFINITY;
+        let j = r.to_json();
+        assert!(j.contains("\"throughput_rps\": 0.000"));
+        assert!(j.contains("\"points_per_s\": 0.000"));
+    }
+
+    #[test]
+    fn write_reports_emits_a_json_array() {
+        let dir = std::env::temp_dir().join("morpho_loadgen_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_coordinator.json");
+        let path = path.to_str().unwrap();
+        write_reports(&[sample(), sample()], path).unwrap();
+        let s = std::fs::read_to_string(path).unwrap();
+        assert!(s.starts_with("[\n") && s.ends_with("]\n"));
+        assert_eq!(s.matches("\"scenario\"").count(), 2);
+        assert_eq!(s.matches("},").count(), 1, "exactly one separator for two rows");
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        assert_eq!(percentile_us(&samples, 0.0), 1);
+        assert_eq!(percentile_us(&samples, 0.5), 51); // nearest-rank on 0-based idx
+        assert_eq!(percentile_us(&samples, 1.0), 100);
+        assert_eq!(percentile_us(&[], 0.5), 0);
+    }
+}

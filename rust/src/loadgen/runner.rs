@@ -1,0 +1,398 @@
+//! Scenario execution: drive a live [`Coordinator`] with the scenario's
+//! arrival discipline, measure per-request latency client-side, sample
+//! admission-queue depth, and fold everything (plus the coordinator's own
+//! metrics) into a [`CapacityReport`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, ServeResult};
+
+use super::report::{percentile_us, CapacityReport};
+use super::scenario::{ArrivalProfile, Scenario};
+use super::workload::RequestFactory;
+
+/// Client-side outcome counters shared by driver/collector threads.
+#[derive(Debug, Default)]
+struct Tally {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    completed_points: AtomicU64,
+    /// Reply channels that disconnected without a message — a
+    /// coordinator bug if ever nonzero (CI asserts 0).
+    failed: AtomicU64,
+}
+
+/// In-flight open-loop requests awaiting a response.
+type Outstanding = Arc<Mutex<Vec<(Instant, mpsc::Receiver<ServeResult>)>>>;
+
+fn backend_name(b: BackendChoice) -> &'static str {
+    match b {
+        BackendChoice::Native => "native",
+        BackendChoice::Xla => "xla",
+        BackendChoice::M1Sim => "m1sim",
+    }
+}
+
+/// The deterministic open-loop arrival timetable: offsets from run start,
+/// exhausted once past `duration`. (Closed-loop scenarios have no
+/// timetable — clients self-pace.)
+struct Arrivals {
+    profile: ArrivalProfile,
+    duration: Duration,
+    index: u64,
+    /// Ramp only: next arrival offset in seconds (integrated rate).
+    ramp_next: f64,
+}
+
+impl Arrivals {
+    fn new(profile: ArrivalProfile, duration: Duration) -> Arrivals {
+        Arrivals { profile, duration, index: 0, ramp_next: 0.0 }
+    }
+
+    fn next_arrival(&mut self) -> Option<Duration> {
+        let offset = match self.profile {
+            ArrivalProfile::OpenLoop { rate } => {
+                Duration::from_nanos(self.index.saturating_mul(1_000_000_000) / rate.max(1))
+            }
+            ArrivalProfile::Burst { burst, period } => {
+                period * ((self.index / burst.max(1) as u64) as u32)
+            }
+            ArrivalProfile::Ramp { from, to } => {
+                let t = self.ramp_next;
+                let d = self.duration.as_secs_f64().max(1e-9);
+                // Instantaneous rate at t, integrated one arrival forward.
+                let r = from as f64 + (to as f64 - from as f64) * (t / d);
+                self.ramp_next = t + 1.0 / r.max(1.0);
+                Duration::from_secs_f64(t)
+            }
+            ArrivalProfile::ClosedLoop { .. } => {
+                unreachable!("closed-loop scenarios have no arrival timetable")
+            }
+        };
+        self.index += 1;
+        (offset < self.duration).then_some(offset)
+    }
+}
+
+/// Run one scenario to completion and report. The coordinator is started
+/// fresh from the scenario's knobs and fully shut down before returning.
+pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
+    let c = Arc::new(Coordinator::start(CoordinatorConfig {
+        backend: sc.backend,
+        queue_capacity: sc.queue_capacity,
+        workers: sc.workers.max(1),
+        m1_shards: sc.shards.max(1),
+        default_ttl: sc.ttl,
+        ..Default::default()
+    })?);
+    let factory = Arc::new(RequestFactory::new(sc.seed, sc.mix.clone()));
+    let tally = Arc::new(Tally::default());
+
+    // Queue-depth sampler: 1ms gauge of the admission queue.
+    let sampler_stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let c = c.clone();
+        let stop = sampler_stop.clone();
+        thread::spawn(move || {
+            let (mut sum, mut n, mut max) = (0u64, 0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                let d = c.queue_depth() as u64;
+                sum += d;
+                n += 1;
+                max = max.max(d);
+                thread::sleep(Duration::from_millis(1));
+            }
+            (sum, n, max)
+        })
+    };
+
+    let t0 = Instant::now();
+    let mut latencies = match sc.profile {
+        ArrivalProfile::ClosedLoop { clients } => {
+            closed_loop(&c, &factory, &tally, clients.max(1), t0 + sc.duration)
+        }
+        _ => open_loop(&c, &factory, &tally, sc, t0),
+    };
+    let elapsed = t0.elapsed();
+
+    sampler_stop.store(true, Ordering::Relaxed);
+    let (depth_sum, depth_n, depth_max) = sampler.join().expect("sampler thread");
+    let m = c.metrics();
+    // All helper clones are joined; unwrap to run the draining shutdown.
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+
+    latencies.sort_unstable();
+    let elapsed_s = elapsed.as_secs_f64().max(1e-9);
+    let completed = tally.completed.load(Ordering::Relaxed);
+    let sum_us: u128 = latencies.iter().map(|d| d.as_micros()).sum();
+    Ok(CapacityReport {
+        scenario: sc.name.to_string(),
+        profile: sc.profile.label(),
+        backend: backend_name(sc.backend),
+        workers: sc.workers.max(1),
+        shards: sc.shards.max(1),
+        seed: sc.seed,
+        duration_s: elapsed_s,
+        submitted: tally.submitted.load(Ordering::Relaxed),
+        completed,
+        shed: m.shed,
+        rejected: m.rejected,
+        deadline_missed: m.deadline_missed,
+        failed: tally.failed.load(Ordering::Relaxed),
+        throughput_rps: completed as f64 / elapsed_s,
+        points_per_s: tally.completed_points.load(Ordering::Relaxed) as f64 / elapsed_s,
+        latency_mean_us: if latencies.is_empty() {
+            0.0
+        } else {
+            sum_us as f64 / latencies.len() as f64
+        },
+        latency_p50_us: percentile_us(&latencies, 0.50),
+        latency_p95_us: percentile_us(&latencies, 0.95),
+        latency_p99_us: percentile_us(&latencies, 0.99),
+        queue_depth_mean: if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 },
+        queue_depth_max: depth_max,
+        mean_batch_points: m.mean_batch_points(),
+        sim_cycles_per_point: if m.job_points > 0 {
+            m.simulated_cycles as f64 / m.job_points as f64
+        } else {
+            0.0
+        },
+    })
+}
+
+/// N clients, each submit → await → repeat until `t_end`. Client `i`
+/// draws stream `i`, so the per-client request sequence is seed-pinned.
+fn closed_loop(
+    c: &Arc<Coordinator>,
+    factory: &Arc<RequestFactory>,
+    tally: &Arc<Tally>,
+    clients: usize,
+    t_end: Instant,
+) -> Vec<Duration> {
+    let handles: Vec<_> = (0..clients)
+        .map(|client| {
+            let c = c.clone();
+            let factory = factory.clone();
+            let tally = tally.clone();
+            thread::spawn(move || {
+                let mut latencies = Vec::new();
+                let mut index = 0u64;
+                while Instant::now() < t_end {
+                    let gr = factory.request(client as u64, index);
+                    index += 1;
+                    tally.submitted.fetch_add(1, Ordering::Relaxed);
+                    let t = Instant::now();
+                    match c.submit(gr.xs, gr.ys, gr.transforms) {
+                        Ok(rx) => match rx.recv() {
+                            Ok(Ok(resp)) => {
+                                latencies.push(t.elapsed());
+                                tally.completed.fetch_add(1, Ordering::Relaxed);
+                                tally
+                                    .completed_points
+                                    .fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+                            }
+                            // Shed — the coordinator's metrics carry the
+                            // reason; the client just moves on.
+                            Ok(Err(_)) => {}
+                            Err(_) => {
+                                tally.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => break, // coordinator shut down
+                    }
+                }
+                latencies
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+}
+
+/// Deterministic-timetable submitter plus a polling collector. Latency is
+/// submit → response observation (poll granularity ≈ 100µs).
+fn open_loop(
+    c: &Arc<Coordinator>,
+    factory: &Arc<RequestFactory>,
+    tally: &Arc<Tally>,
+    sc: &Scenario,
+    t0: Instant,
+) -> Vec<Duration> {
+    let outstanding: Outstanding = Arc::new(Mutex::new(Vec::new()));
+    let done = Arc::new(AtomicBool::new(false));
+    let collector = {
+        let outstanding = outstanding.clone();
+        let done = done.clone();
+        let tally = tally.clone();
+        thread::spawn(move || collect(&outstanding, &done, &tally))
+    };
+
+    let mut arrivals = Arrivals::new(sc.profile, sc.duration);
+    let mut index = 0u64;
+    while let Some(offset) = arrivals.next_arrival() {
+        let due = t0 + offset;
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            if !wait.is_zero() {
+                thread::sleep(wait);
+            }
+        }
+        let gr = factory.request(0, index);
+        index += 1;
+        tally.submitted.fetch_add(1, Ordering::Relaxed);
+        let submitted_at = Instant::now();
+        let admitted = if sc.fast_reject {
+            // Open-loop discipline: overload is shed at the door
+            // (metrics.rejected counts it), the timetable never blocks.
+            c.try_submit(gr.xs, gr.ys, gr.transforms).ok()
+        } else {
+            c.submit(gr.xs, gr.ys, gr.transforms).ok()
+        };
+        if let Some(rx) = admitted {
+            outstanding.lock().unwrap().push((submitted_at, rx));
+        }
+    }
+    done.store(true, Ordering::Relaxed);
+    collector.join().expect("collector thread")
+}
+
+fn collect(outstanding: &Outstanding, done: &AtomicBool, tally: &Tally) -> Vec<Duration> {
+    let mut local: Vec<(Instant, mpsc::Receiver<ServeResult>)> = Vec::new();
+    let mut latencies = Vec::new();
+    loop {
+        {
+            let mut g = outstanding.lock().unwrap();
+            local.append(&mut g);
+        }
+        let mut i = 0;
+        while i < local.len() {
+            let submitted_at = local[i].0;
+            match local[i].1.try_recv() {
+                Ok(Ok(resp)) => {
+                    latencies.push(submitted_at.elapsed());
+                    tally.completed.fetch_add(1, Ordering::Relaxed);
+                    tally.completed_points.fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+                    local.swap_remove(i);
+                }
+                Ok(Err(_)) => {
+                    local.swap_remove(i); // shed; server metrics count it
+                }
+                Err(mpsc::TryRecvError::Empty) => i += 1,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    tally.failed.fetch_add(1, Ordering::Relaxed);
+                    local.swap_remove(i);
+                }
+            }
+        }
+        if local.is_empty() && done.load(Ordering::Relaxed) {
+            let drained = outstanding.lock().unwrap().is_empty();
+            if drained {
+                break;
+            }
+        }
+        thread::sleep(Duration::from_micros(100));
+    }
+    latencies
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::scenario::WorkloadMix;
+
+    #[test]
+    fn open_loop_arrivals_are_deterministic_and_monotonic() {
+        let collect_offsets = |profile| {
+            let mut a = Arrivals::new(profile, Duration::from_secs(1));
+            let mut v = Vec::new();
+            while let Some(o) = a.next_arrival() {
+                v.push(o);
+            }
+            v
+        };
+        let steady = collect_offsets(ArrivalProfile::OpenLoop { rate: 100 });
+        assert_eq!(steady.len(), 100);
+        assert_eq!(steady[0], Duration::ZERO);
+        assert_eq!(steady[1], Duration::from_millis(10));
+        assert!(steady.windows(2).all(|w| w[0] <= w[1]));
+
+        let burst = collect_offsets(ArrivalProfile::Burst {
+            burst: 10,
+            period: Duration::from_millis(100),
+        });
+        assert_eq!(burst.len(), 100, "10 bursts of 10 fit in 1s");
+        assert_eq!(burst[9], Duration::ZERO, "whole burst due at once");
+        assert_eq!(burst[10], Duration::from_millis(100));
+
+        let ramp = collect_offsets(ArrivalProfile::Ramp { from: 10, to: 1000 });
+        assert!(ramp.len() > 100, "mean rate ≈ 505rps over 1s, got {}", ramp.len());
+        assert!(ramp.windows(2).all(|w| w[0] <= w[1]));
+        // Arrivals tighten as the rate ramps.
+        let head = ramp[1] - ramp[0];
+        let tail = ramp[ramp.len() - 1] - ramp[ramp.len() - 2];
+        assert!(tail < head, "ramp spacing must shrink: {head:?} → {tail:?}");
+        // And the timetable is a pure function: a second pass agrees.
+        assert_eq!(ramp, collect_offsets(ArrivalProfile::Ramp { from: 10, to: 1000 }));
+    }
+
+    #[test]
+    fn tiny_closed_loop_native_run_completes_cleanly() {
+        let sc = Scenario {
+            name: "test-closed",
+            summary: "unit",
+            profile: ArrivalProfile::ClosedLoop { clients: 2 },
+            duration: Duration::from_millis(200),
+            mix: WorkloadMix::standard(),
+            seed: 5,
+            backend: BackendChoice::Native,
+            workers: 1,
+            shards: 1,
+            queue_capacity: 64,
+            ttl: None,
+            fast_reject: false,
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.completed > 0, "closed loop must complete requests");
+        assert_eq!(r.failed, 0, "no reply channel may die silently");
+        assert!(r.submitted >= r.completed);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.latency_p99_us >= r.latency_p50_us);
+        assert_eq!(r.backend, "native");
+        assert!(r.to_json().contains("\"scenario\": \"test-closed\""));
+    }
+
+    #[test]
+    fn tiny_open_loop_run_with_fast_reject_stays_consistent() {
+        let sc = Scenario {
+            name: "test-open",
+            summary: "unit",
+            profile: ArrivalProfile::OpenLoop { rate: 400 },
+            duration: Duration::from_millis(200),
+            mix: WorkloadMix::standard(),
+            seed: 9,
+            backend: BackendChoice::Native,
+            workers: 1,
+            shards: 1,
+            queue_capacity: 4,
+            ttl: Some(Duration::from_millis(100)),
+            fast_reject: true,
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert_eq!(r.failed, 0);
+        // Conservation: every offered request is accounted for exactly
+        // once across completed / shed / rejected / still-in-flight-at-
+        // shutdown (drained before join, so in-flight is zero).
+        assert!(
+            r.completed + r.shed + r.rejected <= r.submitted,
+            "completed={} shed={} rejected={} submitted={}",
+            r.completed,
+            r.shed,
+            r.rejected,
+            r.submitted
+        );
+        assert!(r.completed > 0);
+    }
+}

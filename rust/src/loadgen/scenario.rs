@@ -1,0 +1,225 @@
+//! Scenario definitions: named, self-contained descriptions of a load
+//! test — arrival profile, workload mix, seed and coordinator knobs.
+
+use std::time::Duration;
+
+use crate::coordinator::BackendChoice;
+
+/// How requests arrive at the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProfile {
+    /// N clients, each submit → wait → repeat (self-limiting load).
+    ClosedLoop { clients: usize },
+    /// Deterministic fixed-rate arrivals (requests/second), independent
+    /// of completions.
+    OpenLoop { rate: u64 },
+    /// Every `period`, `burst` requests arrive back-to-back.
+    Burst { burst: usize, period: Duration },
+    /// Open-loop rate swept linearly from `from` to `to` req/s across the
+    /// scenario duration — walks the service across its saturation knee.
+    Ramp { from: u64, to: u64 },
+}
+
+impl ArrivalProfile {
+    /// Human/JSON label, e.g. `closed-loop(8)` or `ramp(200..6000rps)`.
+    pub fn label(&self) -> String {
+        match *self {
+            ArrivalProfile::ClosedLoop { clients } => format!("closed-loop({clients})"),
+            ArrivalProfile::OpenLoop { rate } => format!("open-loop({rate}rps)"),
+            ArrivalProfile::Burst { burst, period } => {
+                format!("burst({burst}/{}ms)", period.as_millis())
+            }
+            ArrivalProfile::Ramp { from, to } => format!("ramp({from}..{to}rps)"),
+        }
+    }
+}
+
+/// The transform vocabulary of the generated workload. Values are drawn
+/// from small discrete sets so the batcher has merge opportunities (many
+/// clients asking for *identical* transforms, as an animation frame
+/// does), and every choice stays inside the M1 backend's Q6 fixed-point
+/// envelope (|matrix entry| < 2, integer translations within ±127).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransformKind {
+    /// Vector-vector op (the paper's translation workload).
+    Translate,
+    /// Vector-scalar op (the paper's scaling workload).
+    Scale,
+    /// Matrix op (the paper's rotation workload).
+    Rotate,
+    /// rotate ∘ scale ∘ translate — the composite per-frame transform of
+    /// the animation pipeline, standing in for the companion paper's
+    /// mixed 2D/3D scene workloads (a projected 3-D frame reaches the
+    /// coordinator as exactly this composite affine).
+    Composite,
+}
+
+/// Weighted workload mix: request point counts and transform kinds.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    /// `(weight, points)` — the paper's tile-interesting sizes are
+    /// {8, 64, 500, 2117, 4096}.
+    pub sizes: Vec<(u32, usize)>,
+    /// `(weight, kind)`.
+    pub transforms: Vec<(u32, TransformKind)>,
+}
+
+impl WorkloadMix {
+    /// Small/medium requests, all three primitive transforms.
+    pub fn standard() -> WorkloadMix {
+        WorkloadMix {
+            sizes: vec![(3, 8), (4, 64), (2, 500)],
+            transforms: vec![
+                (2, TransformKind::Translate),
+                (1, TransformKind::Scale),
+                (1, TransformKind::Rotate),
+            ],
+        }
+    }
+
+    /// The full size ladder plus composite transforms — the mixed
+    /// "many scenes, many shapes" serving workload.
+    pub fn mixed() -> WorkloadMix {
+        WorkloadMix {
+            sizes: vec![(2, 8), (3, 64), (2, 500), (2, 2117), (1, 4096)],
+            transforms: vec![
+                (2, TransformKind::Translate),
+                (1, TransformKind::Scale),
+                (1, TransformKind::Rotate),
+                (2, TransformKind::Composite),
+            ],
+        }
+    }
+}
+
+/// A complete, reproducible load-test description.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub profile: ArrivalProfile,
+    pub duration: Duration,
+    pub mix: WorkloadMix,
+    /// Seeds the request factory: same seed ⇒ same per-stream request
+    /// sequences (see the module docs' determinism contract).
+    pub seed: u64,
+    pub backend: BackendChoice,
+    pub workers: usize,
+    /// Tile-pool shards per M1Sim worker.
+    pub shards: usize,
+    pub queue_capacity: usize,
+    /// Default request TTL (deadline shedding) — `None` disables.
+    pub ttl: Option<Duration>,
+    /// Open-loop admission: `try_submit` fast-reject instead of blocking
+    /// the submitter on a full queue.
+    pub fast_reject: bool,
+}
+
+fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> Scenario {
+    Scenario {
+        name,
+        summary,
+        profile,
+        duration: Duration::from_secs(5),
+        mix: WorkloadMix::standard(),
+        seed: 42,
+        backend: BackendChoice::M1Sim,
+        workers: 2,
+        shards: 2,
+        queue_capacity: 1024,
+        ttl: None,
+        fast_reject: false,
+    }
+}
+
+/// All named scenarios, in presentation order.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            duration: Duration::from_secs(1),
+            workers: 1,
+            ..base(
+                "smoke",
+                "1s closed-loop sanity run (4 clients, shards=2) — the CI gate",
+                ArrivalProfile::ClosedLoop { clients: 4 },
+            )
+        },
+        Scenario {
+            ttl: Some(Duration::from_millis(25)),
+            fast_reject: true,
+            ..base(
+                "steady",
+                "5s open-loop at 1500 req/s with 25ms TTLs — sustained-rate capacity",
+                ArrivalProfile::OpenLoop { rate: 1500 },
+            )
+        },
+        Scenario {
+            queue_capacity: 256,
+            ttl: Some(Duration::from_millis(50)),
+            fast_reject: true,
+            ..base(
+                "burst",
+                "5s of 96-request bursts every 250ms — queue absorption and shedding",
+                ArrivalProfile::Burst { burst: 96, period: Duration::from_millis(250) },
+            )
+        },
+        Scenario {
+            duration: Duration::from_secs(6),
+            ttl: Some(Duration::from_millis(25)),
+            fast_reject: true,
+            ..base(
+                "ramp",
+                "6s linear ramp 200→6000 req/s — locates the saturation knee",
+                ArrivalProfile::Ramp { from: 200, to: 6000 },
+            )
+        },
+        Scenario {
+            duration: Duration::from_secs(4),
+            mix: WorkloadMix::mixed(),
+            shards: 4,
+            seed: 20190412,
+            ..base(
+                "mixed",
+                "4s closed-loop (8 clients, shards=4): full size ladder + composites",
+                ArrivalProfile::ClosedLoop { clients: 8 },
+            )
+        },
+    ]
+}
+
+/// Look a scenario up by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    all().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_named_scenario_is_resolvable_and_m1sim_sharded() {
+        let names: Vec<&str> = all().iter().map(|s| s.name).collect();
+        assert!(names.contains(&"smoke"));
+        for s in all() {
+            let found = by_name(s.name).expect("by_name finds every listed scenario");
+            assert_eq!(found.name, s.name);
+            // The acceptance contract: loadtest scenarios exercise the
+            // sharded simulator backend.
+            assert_eq!(found.backend, BackendChoice::M1Sim);
+            assert!(found.shards >= 2, "{}: shards must be ≥ 2", s.name);
+            assert!(!found.mix.sizes.is_empty() && !found.mix.transforms.is_empty());
+        }
+        assert!(by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn profile_labels_render() {
+        assert_eq!(ArrivalProfile::ClosedLoop { clients: 4 }.label(), "closed-loop(4)");
+        assert_eq!(ArrivalProfile::OpenLoop { rate: 100 }.label(), "open-loop(100rps)");
+        assert_eq!(
+            ArrivalProfile::Burst { burst: 8, period: Duration::from_millis(20) }.label(),
+            "burst(8/20ms)"
+        );
+        assert_eq!(ArrivalProfile::Ramp { from: 1, to: 9 }.label(), "ramp(1..9rps)");
+    }
+}

@@ -11,10 +11,15 @@
 //!                           quick coordinator smoke run; backend is
 //!                           native|xla|m1sim (default xla), shards sizes
 //!                           the m1sim worker's tile pool (default 1)
+//! repro loadtest <scenario|list> [shards] [seconds]
+//!                           run a named load-generation scenario against
+//!                           the coordinator (M1Sim backend) and write
+//!                           BENCH_coordinator.json; `list` names them
 //! ```
 
 use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use morpho::graphics::Transform;
+use morpho::loadgen;
 use morpho::mapping::{VecScalarMapping, VecVecMapping};
 use morpho::morphosys::{AluOp, M1System};
 use morpho::perf::{
@@ -25,9 +30,39 @@ use morpho::perf::{
 fn usage() -> ! {
     eprintln!(
         "usage: repro <all | table N | figure N | csv DIR | trace ALG [n] | artifacts | \
-         serve [N] [native|xla|m1sim] [shards]>"
+         serve [N] [native|xla|m1sim] [shards] | loadtest <scenario|list> [shards] [seconds]>"
     );
     std::process::exit(2)
+}
+
+fn loadtest(name: &str, shards: Option<usize>, seconds: Option<u64>) {
+    if name == "list" {
+        for sc in loadgen::scenario::all() {
+            println!("{:<8} {}", sc.name, sc.summary);
+        }
+        return;
+    }
+    let mut sc = loadgen::scenario::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown scenario `{name}` — try `repro loadtest list`");
+        std::process::exit(2)
+    });
+    if let Some(s) = shards {
+        sc.shards = s.max(1);
+    }
+    if let Some(s) = seconds {
+        sc.duration = std::time::Duration::from_secs(s.max(1));
+    }
+    println!("loadtest `{}`: {} [{}]…", sc.name, sc.summary, sc.profile.label());
+    let report = loadgen::run_scenario(&sc).expect("run loadtest scenario");
+    println!("\n{}", report.render());
+    let path = loadgen::report::default_path();
+    match loadgen::report::write_reports(&[report], &path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => {
+            eprintln!("\nfailed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn print_table(n: u32) {
@@ -131,7 +166,7 @@ fn serve(requests: usize, backend: BackendChoice, m1_shards: usize) {
         })
         .collect();
     for rx in receivers {
-        rx.recv().unwrap();
+        rx.recv().unwrap().expect("serve demo requests carry no TTL, so none are shed");
     }
     println!("{}", c.metrics().render());
     c.shutdown();
@@ -197,6 +232,12 @@ fn main() {
                 Some(s) => s.parse().unwrap_or_else(|_| usage()),
             };
             serve(n, backend, shards);
+        }
+        Some("loadtest") => {
+            let name = it.next().unwrap_or_else(|| usage());
+            let shards = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
+            let seconds = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
+            loadtest(name, shards, seconds);
         }
         _ => usage(),
     }

@@ -129,6 +129,7 @@ fn backpressure_bounds_queue_growth() {
             // worker just fans tiles across two simulators.
             m1_shards: 2,
             batcher: BatcherConfig { max_wait: Duration::from_micros(100), ..Default::default() },
+            ..Default::default()
         })
         .unwrap(),
     );
@@ -143,7 +144,7 @@ fn backpressure_bounds_queue_growth() {
         })
         .collect();
     for (i, rx) in receivers.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().expect("no TTL configured, nothing is shed");
         assert_eq!(resp.xs[0], i as f32 + 1.0);
     }
 }
@@ -174,7 +175,7 @@ fn batching_merges_same_transform_requests() {
         })
         .collect();
     for rx in receivers {
-        rx.recv().unwrap();
+        rx.recv().unwrap().expect("no TTL configured, nothing is shed");
     }
     let m = c.metrics();
     assert_eq!(m.requests, 100);

@@ -1,0 +1,203 @@
+//! Integration: the loadgen harness end to end against real backends,
+//! and the coordinator's delivery guarantee under mid-stream shutdown —
+//! every in-flight request gets a response or an explicit clean
+//! rejection; reply channels never just die.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use morpho::coordinator::{
+    BackendChoice, BatcherConfig, Coordinator, CoordinatorConfig, ServeResult,
+};
+use morpho::graphics::Transform;
+use morpho::loadgen::{self, ArrivalProfile, Scenario, WorkloadMix};
+
+/// The CI smoke scenario, shortened: must complete real requests on the
+/// sharded M1 simulator with zero failed (dead-channel) requests and
+/// report simulated cycles.
+#[test]
+fn smoke_scenario_runs_on_sharded_m1sim() {
+    let mut sc = loadgen::scenario::by_name("smoke").expect("smoke scenario exists");
+    sc.duration = Duration::from_millis(300);
+    assert!(sc.shards >= 2);
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert!(r.completed > 0, "smoke must serve requests: {}", r.render());
+    assert_eq!(r.failed, 0, "reply channels must never die: {}", r.render());
+    assert_eq!(r.backend, "m1sim");
+    assert!(r.shards >= 2);
+    assert!(
+        r.sim_cycles_per_point > 0.0,
+        "the M1Sim backend must report simulated cycles: {}",
+        r.render()
+    );
+    assert!(r.mean_batch_points > 0.0);
+    assert!(r.latency_p99_us >= r.latency_p50_us);
+}
+
+/// The report writer produces the CI-consumed artifact shape: a JSON
+/// array, one object per scenario, written atomically.
+#[test]
+fn loadtest_report_file_matches_ci_contract() {
+    let mut sc = loadgen::scenario::by_name("smoke").unwrap();
+    sc.duration = Duration::from_millis(200);
+    let report = loadgen::run_scenario(&sc).unwrap();
+    let dir = std::env::temp_dir().join("morpho_loadgen_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_coordinator.json");
+    let path = path.to_str().unwrap();
+    loadgen::report::write_reports(&[report], path).unwrap();
+    let s = std::fs::read_to_string(path).unwrap();
+    assert!(s.trim_start().starts_with('[') && s.trim_end().ends_with(']'));
+    assert!(s.contains("\"scenario\": \"smoke\""));
+    assert!(s.contains("\"failed\": 0"));
+    assert!(!std::path::Path::new(&format!("{path}.tmp")).exists(), "atomic rename");
+}
+
+/// A custom (non-registry) scenario exercises the open-loop burst path
+/// against the simulator with fast-reject admission.
+#[test]
+fn burst_profile_with_fast_reject_accounts_for_every_request() {
+    let sc = Scenario {
+        name: "test-burst",
+        summary: "integration",
+        profile: ArrivalProfile::Burst { burst: 24, period: Duration::from_millis(50) },
+        duration: Duration::from_millis(300),
+        mix: WorkloadMix::standard(),
+        seed: 77,
+        backend: BackendChoice::M1Sim,
+        workers: 1,
+        shards: 2,
+        queue_capacity: 16,
+        ttl: Some(Duration::from_millis(200)),
+        fast_reject: true,
+    };
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert_eq!(r.failed, 0);
+    assert!(r.submitted >= 24, "at least the first burst is offered");
+    assert!(r.completed + r.shed + r.rejected <= r.submitted);
+    assert!(r.completed > 0);
+}
+
+type Receivers = Arc<Mutex<Vec<mpsc::Receiver<ServeResult>>>>;
+type Storm = (Vec<std::thread::JoinHandle<()>>, Receivers, Arc<AtomicU64>);
+
+fn submit_storm(c: &Arc<Coordinator>, threads: usize, per_thread: usize, points: usize) -> Storm {
+    let receivers = Arc::new(Mutex::new(Vec::new()));
+    let clean_rejects = Arc::new(AtomicU64::new(0));
+    let handles = (0..threads)
+        .map(|t| {
+            let c = c.clone();
+            let receivers = receivers.clone();
+            let clean_rejects = clean_rejects.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let xs = vec![(t * per_thread + i) as f32 % 100.0; points];
+                    let ys = vec![1.0f32; points];
+                    match c.submit(xs, ys, vec![Transform::Translate { tx: 2.0, ty: -1.0 }]) {
+                        Ok(rx) => receivers.lock().unwrap().push(rx),
+                        // Clean rejection at submit: the queue closed.
+                        Err(_) => {
+                            clean_rejects.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    (handles, receivers, clean_rejects)
+}
+
+/// The shutdown-under-load guarantee: close the coordinator while
+/// several threads are mid-stream. Every submission must either be
+/// cleanly refused at the door, or — once admitted — receive exactly one
+/// reply (response or rejection). No hangs, no dropped reply channels.
+#[test]
+fn shutdown_mid_stream_answers_or_cleanly_rejects_everything() {
+    for (backend, shards) in [(BackendChoice::Native, 1), (BackendChoice::M1Sim, 2)] {
+        let c = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend,
+                m1_shards: shards,
+                workers: 2,
+                queue_capacity: 32,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let (handles, receivers, clean_rejects) = submit_storm(&c, 4, 60, 64);
+        // Let the storm get going, then slam the door mid-stream.
+        std::thread::sleep(Duration::from_millis(5));
+        c.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let receivers = std::mem::take(&mut *receivers.lock().unwrap());
+        let admitted = receivers.len() as u64;
+        let mut served = 0u64;
+        for rx in receivers {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(_)) => served += 1,
+                Ok(Err(rej)) => panic!(
+                    "admitted request {} rejected ({:?}) despite having no TTL",
+                    rej.id, rej.reason
+                ),
+                Err(e) => panic!(
+                    "admitted request hung or its reply channel died: {e:?} \
+                     ({backend:?}, admitted={admitted})"
+                ),
+            }
+        }
+        assert_eq!(served, admitted, "every admitted request must be served");
+        assert_eq!(
+            admitted + clean_rejects.load(Ordering::Relaxed),
+            4 * 60,
+            "every submission accounted for ({backend:?})"
+        );
+        // Post-shutdown submissions are refused cleanly too.
+        assert!(c.submit(vec![1.0], vec![1.0], vec![]).is_err());
+    }
+}
+
+/// Same storm, but with TTL deadlines active: admitted requests may now
+/// legitimately resolve to a shed rejection — but still exactly one
+/// reply each, never a hang or dead channel.
+#[test]
+fn shutdown_mid_stream_with_ttls_still_replies_to_everything() {
+    let c = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::M1Sim,
+            m1_shards: 2,
+            workers: 1,
+            queue_capacity: 16,
+            default_ttl: Some(Duration::from_millis(2)),
+            batcher: BatcherConfig { max_wait: Duration::from_millis(5), ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let (handles, receivers, _clean_rejects) = submit_storm(&c, 4, 40, 500);
+    std::thread::sleep(Duration::from_millis(5));
+    c.close();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let receivers = std::mem::take(&mut *receivers.lock().unwrap());
+    let (mut served, mut shed) = (0u64, 0u64);
+    for rx in receivers {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => served += 1,
+            Ok(Err(_)) => shed += 1,
+            Err(e) => panic!("request hung or reply channel died: {e:?}"),
+        }
+    }
+    // With a 2ms TTL against a 5ms batch window some requests shed; both
+    // outcomes are legitimate — silence is not.
+    assert!(served + shed > 0);
+    let m = c.metrics();
+    assert_eq!(m.shed, shed, "client-observed sheds match the metrics counter");
+}
