@@ -11,11 +11,11 @@ use morpho::baselines::routines as x86;
 use morpho::baselines::Cpu;
 use morpho::benchkit::section;
 use morpho::mapping::{
-    runner::{run_routine, run_routine_on},
+    runner::{run_routine, run_routine_async},
     DotProductMapping, MatVecMapping, SaxpyMapping, TiledVecVecMapping, VecReduceMapping,
     VecVecMapping,
 };
-use morpho::morphosys::{AluOp, M1System};
+use morpho::morphosys::AluOp;
 
 fn main() {
     section("ablation 1: frame-buffer double buffering (simulated M1 cycles)");
@@ -28,13 +28,11 @@ fn main() {
         let v = vec![1i16; n];
         let naive = TiledVecVecMapping { n, op: AluOp::Add, streamed: false }.compile();
         let streamed = TiledVecVecMapping { n, op: AluOp::Add, streamed: true }.compile();
-        let ns = run_routine_on(&mut M1System::new(), &naive, &u, Some(&v)).report.cycles;
-        let na = run_routine_on(&mut M1System::new().with_async_dma(), &naive, &u, Some(&v))
-            .report
-            .cycles;
-        let sa = run_routine_on(&mut M1System::new().with_async_dma(), &streamed, &u, Some(&v))
-            .report
-            .cycles;
+        // The thread-local runners: blocking and async-DMA systems reused
+        // across rows, both riding the scheduled/fused tier (§Perf PR 5).
+        let ns = run_routine(&naive, &u, Some(&v)).report.cycles;
+        let na = run_routine_async(&naive, &u, Some(&v)).report.cycles;
+        let sa = run_routine_async(&streamed, &u, Some(&v)).report.cycles;
         println!(
             "{:>6} {:>12} {:>14} {:>16} {:>8.1}%",
             n,

@@ -12,7 +12,7 @@ use morpho::benchkit::{bench, section, Measurement};
 use morpho::coordinator::backend::{Backend, M1SimBackend};
 use morpho::mapping::{
     runner::{run_routine3_with, run_routine_on},
-    PointTransformMapping, VecVecMapping,
+    PointTransformMapping, StreamedTiledMapping, VecVecMapping,
 };
 use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, MuxASel, RcArray};
 use morpho::morphosys::{AluOp, BroadcastSchedule, M1System};
@@ -200,6 +200,61 @@ fn main() {
         m_sched.mean.as_secs_f64() / m_fused.mean.as_secs_f64()
     );
     rows.push(row(&m_fused, "points_per_s", m_fused.throughput(2117.0)));
+
+    section("async-DMA streamed tier (set ping-pong, 2117-point covering plan)");
+    // The paper's headline large-n scenario: a 2 117-point translation
+    // streamed through the two frame-buffer sets under async DMA (34
+    // ping-ponged 64-point tiles — 2 176 elements, tail zero-padded, the
+    // same whole-tile covering the coordinator plans). Both rows run the
+    // identical routine on the same async-DMA system; the only
+    // difference is the executor tier: the interpreter (the pre-§Perf-
+    // PR 5 path for async DMA) vs the compiled schedule with precomputed
+    // async accounting and fused SIMD runs.
+    let streamed = StreamedTiledMapping { n: 2176, op: AluOp::Add }.compile();
+    let streamed_sched = BroadcastSchedule::compile(&streamed.program).unwrap();
+    assert!(streamed_sched.fused_runs() > 0, "streamed tiles must fuse");
+    let mut su = vec![0i16; 2176];
+    let mut sv = vec![0i16; 2176];
+    for (i, (u, v)) in su.iter_mut().zip(sv.iter_mut()).take(2117).enumerate() {
+        *u = (i % 251) as i16 - 125;
+        *v = (i % 83) as i16 - 41;
+    }
+    let mut sys4 = M1System::new().with_async_dma();
+    // The two tiers must agree bit-for-bit on the async report before we
+    // time them.
+    sys4.reset_chip();
+    let ri = run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, None).report;
+    sys4.reset_chip();
+    let rs = run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, Some(&streamed_sched))
+        .report;
+    assert_eq!(
+        (ri.cycles, ri.slots, ri.executed, ri.broadcasts),
+        (rs.cycles, rs.slots, rs.executed, rs.broadcasts),
+        "async accounting must match the interpreter"
+    );
+    let m_sa_interp = bench("streamed-async translation-2117 (interpreter)", || {
+        sys4.reset_chip();
+        std::hint::black_box(run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, None));
+    });
+    println!("  → {:.2} M simulated-points/s", m_sa_interp.throughput(2117.0) / 1e6);
+    rows.push(row(&m_sa_interp, "points_per_s", m_sa_interp.throughput(2117.0)));
+    let m_sa_sched = bench("streamed-async translation-2117 (scheduled)", || {
+        sys4.reset_chip();
+        std::hint::black_box(run_routine3_with(
+            &mut sys4,
+            &streamed,
+            &su,
+            Some(&sv),
+            None,
+            Some(&streamed_sched),
+        ));
+    });
+    println!(
+        "  → {:.2} M simulated-points/s ({:.2}× vs interpreter)",
+        m_sa_sched.throughput(2117.0) / 1e6,
+        m_sa_interp.mean.as_secs_f64() / m_sa_sched.mean.as_secs_f64()
+    );
+    rows.push(row(&m_sa_sched, "points_per_s", m_sa_sched.throughput(2117.0)));
 
     section("x86 baseline interpreter");
     let ub: Vec<i16> = (0..64).collect();

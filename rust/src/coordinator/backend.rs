@@ -175,13 +175,28 @@ impl M1SimBackend {
         M1SimBackend::with_shards(1)
     }
 
-    /// Backend over a pool with `shards` execution shards.
+    /// Backend over a pool with `shards` execution shards (blocking-DMA
+    /// simulators, the paper's published listing model).
     pub fn with_shards(shards: usize) -> M1SimBackend {
-        M1SimBackend { pool: TilePool::new(shards), shift: 6 }
+        M1SimBackend::with_config(shards, false)
+    }
+
+    /// Backend over a pool with `shards` execution shards and an explicit
+    /// DMA mode: `async_dma` runs every shard simulator in the
+    /// overlapped non-blocking mode (§Perf PR 5), so reported simulated
+    /// cycles reflect the M1's double-buffered frame-buffer overlap.
+    /// Functional outputs are identical in both modes.
+    pub fn with_config(shards: usize, async_dma: bool) -> M1SimBackend {
+        M1SimBackend { pool: TilePool::with_mode(shards, async_dma), shift: 6 }
     }
 
     pub fn shards(&self) -> usize {
         self.pool.shards()
+    }
+
+    /// Whether the backing pool simulates in async-DMA mode.
+    pub fn async_dma(&self) -> bool {
+        self.pool.async_dma()
     }
 
     fn quantizable(params: &[f32; 6], shift: u8) -> Option<FixedPointParams> {
@@ -358,6 +373,27 @@ mod tests {
         let cycles = m1.apply(&params, &mut xs, &mut ys).unwrap();
         assert_eq!(cycles, None);
         assert_eq!(xs, vec![100.0, 200.0]);
+    }
+
+    #[test]
+    fn async_dma_backend_matches_blocking_outputs_with_fewer_cycles() {
+        // DMA mode is a timing knob, never a results knob: identical
+        // transformed points, and the overlapped mode reports at most the
+        // blocking cycle count (strictly fewer once a job spans tiles).
+        let params = [1.0, 0.0, 0.0, 1.0, 7.0, -3.0];
+        let base_x: Vec<f32> = (0..500).map(|i| (i as f32) - 250.0).collect();
+        let base_y: Vec<f32> = (0..500).map(|i| (i % 89) as f32).collect();
+        let mut blocking = M1SimBackend::new();
+        assert!(!blocking.async_dma());
+        let (mut bx, mut by) = (base_x.clone(), base_y.clone());
+        let bc = blocking.apply(&params, &mut bx, &mut by).unwrap().unwrap();
+        let mut overlapped = M1SimBackend::with_config(1, true);
+        assert!(overlapped.async_dma());
+        let (mut ax, mut ay) = (base_x, base_y);
+        let ac = overlapped.apply(&params, &mut ax, &mut ay).unwrap().unwrap();
+        assert_eq!(bx, ax);
+        assert_eq!(by, ay);
+        assert!(ac < bc, "async cycles/point {ac} !< blocking {bc}");
     }
 
     #[test]

@@ -129,8 +129,8 @@ struct Shard {
 }
 
 impl Shard {
-    fn new(shared: SharedRoutines) -> Shard {
-        Shard { sys: M1System::new(), routines: HashMap::new(), shared }
+    fn new(shared: SharedRoutines, async_dma: bool) -> Shard {
+        Shard { sys: M1System::with_dma_mode(async_dma), routines: HashMap::new(), shared }
     }
 
     /// Compiled routine for a spec: local probe, then the shared map
@@ -188,6 +188,11 @@ enum Exec {
 /// and the determinism contract.
 pub struct TilePool {
     shards: usize,
+    /// Every shard simulator runs in async-DMA mode (§Perf PR 5): tiles
+    /// report the overlapped cycle counts and execute on the async
+    /// scheduled/fused tier. Functional results are identical to
+    /// blocking mode — the DMA mode only changes cycle accounting.
+    async_dma: bool,
     exec: Exec,
     /// The cross-shard routine cache every shard of this pool fills and
     /// reads (see [`SharedRoutines`]).
@@ -198,12 +203,23 @@ impl TilePool {
     /// Build a pool with `shards` execution shards (`0` is treated as
     /// `1`). `shards == 1` spawns no threads.
     pub fn new(shards: usize) -> TilePool {
+        Self::with_mode(shards, false)
+    }
+
+    /// As [`TilePool::new`], choosing the shards' DMA mode: `async_dma`
+    /// runs every shard simulator in the overlapped non-blocking-DMA
+    /// mode (`M1System::with_async_dma`), so tile reports carry the
+    /// double-buffered cycle counts (§Perf PR 5). The determinism
+    /// contract is unchanged within a mode: pooled output and accounting
+    /// are bit-for-bit serial execution's, for any shard count.
+    pub fn with_mode(shards: usize, async_dma: bool) -> TilePool {
         let shards = shards.max(1);
         let routines: SharedRoutines = Arc::new(Mutex::new(HashMap::new()));
         if shards == 1 {
             return TilePool {
                 shards,
-                exec: Exec::Inline(Box::new(Shard::new(routines.clone()))),
+                async_dma,
+                exec: Exec::Inline(Box::new(Shard::new(routines.clone(), async_dma))),
                 routines,
             };
         }
@@ -216,7 +232,7 @@ impl TilePool {
             let handle = std::thread::Builder::new()
                 .name(format!("m1-shard-{s}"))
                 .spawn(move || {
-                    let mut shard = Shard::new(shared);
+                    let mut shard = Shard::new(shared, async_dma);
                     while let Ok(batch) = rx.recv() {
                         drain_batch(&mut shard, &batch);
                     }
@@ -224,11 +240,16 @@ impl TilePool {
                 .expect("spawn tile-pool shard");
             handles.push(handle);
         }
-        TilePool { shards, exec: Exec::Threads { feeds, handles }, routines }
+        TilePool { shards, async_dma, exec: Exec::Threads { feeds, handles }, routines }
     }
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Whether this pool's shards run in async-DMA mode.
+    pub fn async_dma(&self) -> bool {
+        self.async_dma
     }
 
     /// Number of distinct routine specs compiled into the cross-shard
@@ -436,6 +457,33 @@ mod tests {
             v: Some(xs),
         }]);
         assert_eq!(pool.cached_routines(), 2);
+    }
+
+    #[test]
+    fn async_dma_pool_matches_serial_async_bit_for_bit() {
+        // The §Perf PR 5 mode: every shard simulator in async-DMA mode.
+        // Results are identical to the blocking pool's; cycle reports are
+        // the overlapped counts, and both are shard-count-independent.
+        let (tiles, expected) = add_tiles(13);
+        let mut serial = TilePool::with_mode(1, true);
+        assert!(serial.async_dma());
+        let baseline = serial.run(tiles.clone());
+        assert_eq!(splice(&baseline), expected);
+        let blocking = TilePool::new(1).run(tiles.clone());
+        for (a, b) in baseline.iter().zip(&blocking) {
+            assert_eq!(a.result, b.result, "DMA mode must not change results");
+            assert!(a.report.cycles <= b.report.cycles, "async must not be slower");
+        }
+        for shards in [2usize, 4, 8] {
+            let mut pool = TilePool::with_mode(shards, true);
+            let out = pool.run(tiles.clone());
+            assert_eq!(splice(&out), splice(&baseline), "shards={shards}");
+            for (a, b) in out.iter().zip(&baseline) {
+                assert_eq!(a.report.cycles, b.report.cycles);
+                assert_eq!(a.report.slots, b.report.slots);
+                assert_eq!(a.report.broadcasts, b.report.broadcasts);
+            }
+        }
     }
 
     #[test]

@@ -1,21 +1,5 @@
-//! `repro` — the reproduction CLI.
-//!
-//! ```text
-//! repro all                 regenerate every table and figure
-//! repro table <1..5>        one table (1–2: TinyRISC listings)
-//! repro figure <9..16>      one figure (ASCII chart)
-//! repro csv <dir>           write tables 3–5 and figures 9–16 as CSV
-//! repro trace <translation|scaling> [n]   mULATE-style execution trace
-//! repro artifacts           list AOT artifacts and PJRT platform
-//! repro serve [requests] [backend] [shards]
-//!                           quick coordinator smoke run; backend is
-//!                           native|xla|m1sim (default xla), shards sizes
-//!                           the m1sim worker's tile pool (default 1)
-//! repro loadtest <scenario|list> [shards] [seconds]
-//!                           run a named load-generation scenario against
-//!                           the coordinator (M1Sim backend) and write
-//!                           BENCH_coordinator.json; `list` names them
-//! ```
+//! `repro` — the reproduction CLI. Run `repro help` (or any unknown
+//! verb) for the authoritative verb listing in [`USAGE`].
 
 use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
 use morpho::graphics::Transform;
@@ -27,11 +11,34 @@ use morpho::perf::{
     to_csv,
 };
 
+/// The single authoritative verb listing: printed by `repro help` (exit
+/// 0) and, to stderr, on any malformed or unknown invocation (exit 2).
+const USAGE: &str = "\
+repro — Performance Analysis of Linear Algebraic Functions, reproduction CLI
+
+usage: repro <verb> [args]
+
+verbs:
+  all                       regenerate every table and figure
+  table <1..5>              one table (1-2: TinyRISC listings)
+  figure <9..16>            one figure (ASCII chart)
+  csv <dir>                 write tables 3-5 and figures 9-16 as CSV
+  trace <translation|scaling> [n]
+                            mULATE-style execution trace (default n=64)
+  artifacts                 list AOT artifacts and the PJRT platform
+  serve [requests] [native|xla|m1sim] [shards] [sync|async]
+                            quick coordinator smoke run; backend defaults
+                            to xla; `shards` sizes the m1sim worker's tile
+                            pool (default 1); `async` runs the m1sim
+                            shards in overlapped async-DMA mode
+  loadtest <scenario|list> [shards] [seconds]
+                            run a named load-generation scenario against
+                            the coordinator (M1Sim backend) and write
+                            BENCH_coordinator.json; `list` names them
+  help                      print this listing";
+
 fn usage() -> ! {
-    eprintln!(
-        "usage: repro <all | table N | figure N | csv DIR | trace ALG [n] | artifacts | \
-         serve [N] [native|xla|m1sim] [shards] | loadtest <scenario|list> [shards] [seconds]>"
-    );
+    eprintln!("{USAGE}");
     std::process::exit(2)
 }
 
@@ -141,11 +148,12 @@ fn artifacts() {
     }
 }
 
-fn serve(requests: usize, backend: BackendChoice, m1_shards: usize) {
+fn serve(requests: usize, backend: BackendChoice, m1_shards: usize, m1_async_dma: bool) {
     let c = Coordinator::start(CoordinatorConfig {
         backend,
         workers: 1,
         m1_shards,
+        m1_async_dma,
         ..Default::default()
     })
     .expect("start coordinator");
@@ -231,7 +239,12 @@ fn main() {
                 None => 1,
                 Some(s) => s.parse().unwrap_or_else(|_| usage()),
             };
-            serve(n, backend, shards);
+            let async_dma = match it.next() {
+                None | Some("sync") => false,
+                Some("async") => true,
+                Some(_) => usage(),
+            };
+            serve(n, backend, shards, async_dma);
         }
         Some("loadtest") => {
             let name = it.next().unwrap_or_else(|| usage());
@@ -239,6 +252,8 @@ fn main() {
             let seconds = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
             loadtest(name, shards, seconds);
         }
+        Some("help") | Some("-h") | Some("--help") => println!("{USAGE}"),
+        // Unknown (or missing) verb: the authoritative listing, non-zero.
         _ => usage(),
     }
 }

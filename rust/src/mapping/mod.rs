@@ -34,4 +34,4 @@ pub use routines::{
     VecScalarMapping, VecVecMapping,
 };
 pub use runner::{run_routine, RoutineOutput};
-pub use streamed::TiledVecVecMapping;
+pub use streamed::{StreamedTiledMapping, TiledVecVecMapping};

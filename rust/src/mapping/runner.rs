@@ -25,6 +25,13 @@ std::thread_local! {
     static SHARED_SYS: std::cell::RefCell<M1System> =
         std::cell::RefCell::new(M1System::new());
 
+    // Async-DMA counterpart of SHARED_SYS (§Perf PR 5): the overlapped
+    // execution mode of the paper's streamed mappings, reusable across
+    // run_routine_async calls. One schedule cache serves both modes —
+    // schedules carry precomputed accounting for each.
+    static SHARED_ASYNC_SYS: std::cell::RefCell<M1System> =
+        std::cell::RefCell::new(M1System::new().with_async_dma());
+
     // Per-thread fast path over [`GLOBAL_SCHEDULES`]: a hit costs one
     // HashMap probe and no locking, so the tile pool's shards stay
     // lock-free on the hot path. Keys are `Arc<Program>`s shared with the
@@ -93,6 +100,20 @@ fn shared_schedule_for(program: &Program) -> (Arc<Program>, Option<Arc<Broadcast
 /// context words, run, and read the result back from main memory.
 pub fn run_routine(routine: &MappedRoutine, u: &[i16], v: Option<&[i16]>) -> RoutineOutput {
     SHARED_SYS.with(|sys| {
+        let mut sys = sys.borrow_mut();
+        sys.reset_chip();
+        run_routine_on(&mut sys, routine, u, v)
+    })
+}
+
+/// As [`run_routine`] but on the per-thread **async-DMA** system — the
+/// overlapped-execution mode the paper's streamed mappings are designed
+/// for. Rides the same cross-shard schedule cache as the blocking path:
+/// a [`BroadcastSchedule`] carries precomputed accounting for **both**
+/// DMA modes (§Perf PR 5), so async execution takes the scheduled/fused
+/// tier too, reporting the async cycle count.
+pub fn run_routine_async(routine: &MappedRoutine, u: &[i16], v: Option<&[i16]>) -> RoutineOutput {
+    SHARED_ASYNC_SYS.with(|sys| {
         let mut sys = sys.borrow_mut();
         sys.reset_chip();
         run_routine_on(&mut sys, routine, u, v)
@@ -392,6 +413,32 @@ mod tests {
             assert_eq!(fast.report.executed, interp.report.executed, "{}", routine.name);
             assert_eq!(fast.report.broadcasts, interp.report.broadcasts, "{}", routine.name);
         }
+    }
+
+    #[test]
+    fn run_routine_async_overlaps_dma_and_matches_blocking_results() {
+        // The async thread-local runner: identical results to the
+        // blocking runner, fewer cycles on the streamed multi-tile shape
+        // (DMA hidden behind compute), and the async report equal to the
+        // interpreter's for the same mode.
+        use crate::mapping::StreamedTiledMapping;
+        let n = 256;
+        let routine = StreamedTiledMapping { n, op: AluOp::Add }.compile();
+        let u: Vec<i16> = (0..n as i16).collect();
+        let v: Vec<i16> = (0..n as i16).map(|i| 5 - i).collect();
+        let blocking = run_routine(&routine, &u, Some(&v));
+        let overlapped = run_routine_async(&routine, &u, Some(&v));
+        assert_eq!(blocking.result, overlapped.result);
+        assert!(
+            overlapped.report.cycles < blocking.report.cycles,
+            "async {} !< blocking {}",
+            overlapped.report.cycles,
+            blocking.report.cycles
+        );
+        let mut interp_sys = crate::morphosys::M1System::new().with_async_dma().with_trace();
+        let interp = run_routine_on(&mut interp_sys, &routine, &u, Some(&v));
+        assert_eq!(overlapped.report.cycles, interp.report.cycles);
+        assert_eq!(overlapped.report.slots, interp.report.slots);
     }
 
     #[test]

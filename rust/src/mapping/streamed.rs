@@ -5,12 +5,30 @@
 //! divided into two sets, new application data can be loaded into it
 //! without interrupting the operation of the RC array". The published
 //! listings never exercise it (single-tile workloads, blocking DMA). This
-//! module does: [`TiledVecVecMapping`] emits either a **naive** schedule
-//! (load tile → compute → store, one set) or a **streamed** schedule that
-//! ping-pongs the two frame-buffer sets so tile t+1's DMA overlaps tile
-//! t's broadcasts — measurable only under the async-DMA system mode
-//! (`M1System::with_async_dma`), which is exactly the hardware the quote
-//! describes. The ablation bench quantifies the claim.
+//! module does: [`StreamedTiledMapping`] is the first-class **set
+//! ping-pong** schedule — tile t computes from set `t mod 2` while tile
+//! t+1's DMA streams into the other set — measurable under the async-DMA
+//! system mode (`M1System::with_async_dma`), which is exactly the
+//! hardware the quote describes. [`TiledVecVecMapping`] keeps the
+//! **naive** single-set load → compute → store baseline (and delegates
+//! its `streamed` mode to the ping-pong mapping). The ablation bench
+//! quantifies the claim.
+//!
+//! ## Emitted shape (§Perf PR 5)
+//!
+//! Every per-tile phase of the streamed schedule is emitted in the shape
+//! the compiled tiers want, so the whole program rides the
+//! scheduled/fused path in **both** DMA modes (see
+//! [`crate::morphosys::BroadcastSchedule`]):
+//!
+//! * **loads** — both bank addresses are formed first, then the two
+//!   same-set `ldfb` fills issue back-to-back (one contiguous engine
+//!   stream per set, no scalar work splitting the transfers);
+//! * **broadcasts** — one run of eight contiguous `dbcdc`s per tile
+//!   (ascending columns, bus addresses advancing by 8), which fuses into
+//!   a single SIMD lane-kernel loop;
+//! * **write-backs** — one run of eight contiguous `wfbi`s to one
+//!   frame-buffer span, which fuses into a single slice commit.
 //!
 //! Both schedules run every tile on **one** simulator instance. The third
 //! way to scale multi-tile workloads is across simulators: the sharded
@@ -35,7 +53,119 @@ const TILE_WORDS: usize = TILE / 2;
 /// (inputs occupy 0..64 of banks A/B; outputs go to 512.. of bank A).
 const OUT_FB: usize = 512;
 
+/// Emit the `ldui`/`ldli` pair loading the full 32-bit address `addr`
+/// into `rd`. Always both halves (unlike the single-tile mappings'
+/// skip-zero-low-half emission): tiles beyond the first need the low
+/// half, and a uniform pair keeps every tile's shape identical.
+fn emit_addr(prog: &mut Vec<Instruction>, rd: Reg, addr: usize) {
+    prog.push(Instruction::Ldui { rd, imm: (addr >> 16) as u16 });
+    prog.push(Instruction::Ldli { rd, imm: (addr & 0xFFFF) as u16 });
+}
+
+/// Emit the shared context-word preamble (one column-plane word from
+/// [`CTX_ADDR`]).
+fn emit_ctx_preamble(prog: &mut Vec<Instruction>) {
+    prog.push(Instruction::Ldui { rd: Reg(3), imm: (CTX_ADDR >> 16) as u16 });
+    prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
+}
+
+/// Emit the load of tile `t` into `set`: addresses formed first, then
+/// the two same-set fills back-to-back (contiguous loads — one unbroken
+/// engine stream per set).
+fn emit_tile_load(prog: &mut Vec<Instruction>, set: Set, t: usize) {
+    let off = t * TILE_WORDS;
+    emit_addr(prog, Reg(1), U_ADDR + off);
+    emit_addr(prog, Reg(2), V_ADDR + off);
+    prog.push(Instruction::Ldfb { rs: Reg(1), set, bank: Bank::A, words: TILE_WORDS, fb_addr: 0 });
+    prog.push(Instruction::Ldfb { rs: Reg(2), set, bank: Bank::B, words: TILE_WORDS, fb_addr: 0 });
+}
+
+/// Emit one tile's compute phase against `set`: eight contiguous
+/// double-bank column broadcasts (ascending columns, bus addresses
+/// advancing by [`ARRAY_DIM`]) — exactly the fused-run shape.
+fn emit_tile_compute(prog: &mut Vec<Instruction>, set: Set) {
+    for c in 0..ARRAY_DIM {
+        prog.push(Instruction::Dbcdc {
+            plane: 0,
+            cw: 0,
+            col: c,
+            set,
+            addr_a: c * ARRAY_DIM,
+            addr_b: c * ARRAY_DIM,
+        });
+    }
+}
+
+/// Emit tile `t`'s result drain from `set`: eight contiguous write-backs
+/// into one frame-buffer span (the fused single-slice commit shape),
+/// then the store DMA back to main memory.
+fn emit_tile_store(prog: &mut Vec<Instruction>, set: Set, t: usize) {
+    for c in 0..ARRAY_DIM {
+        prog.push(Instruction::Wfbi { col: c, set, bank: Bank::A, addr: OUT_FB + c * ARRAY_DIM });
+    }
+    emit_addr(prog, Reg(5), RESULT_ADDR + t * TILE_WORDS);
+    prog.push(Instruction::Stfb { rs: Reg(5), set, bank: Bank::A, words: TILE_WORDS, fb_addr: OUT_FB });
+}
+
+/// The streamed multi-tile element-wise mapping (n a multiple of 64),
+/// built around explicit frame-buffer **set ping-pong**: tile `t` lives
+/// in set `t mod 2`, so under async DMA the fills of tile t+1 overlap
+/// the broadcasts of tile t — the paper's double-buffering scenario as a
+/// software pipeline: `load(0); for t: load(t+1) ‖ compute(t); store(t)`.
+///
+/// The emitted per-tile programs are fusion-eligible by construction
+/// (see the module docs), so this mapping executes on the
+/// scheduled/fused tier in both DMA modes.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamedTiledMapping {
+    pub n: usize,
+    pub op: AluOp,
+}
+
+impl StreamedTiledMapping {
+    /// The ping-pong: tile `t` computes from (and stores through) set
+    /// `t mod 2` while the other set is being filled.
+    fn tile_set(t: usize) -> Set {
+        Set::from_index(t % 2)
+    }
+
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(self.n >= TILE && self.n % TILE == 0, "n must be a multiple of {TILE}");
+        assert!(!self.op.uses_immediate());
+        let tiles = self.n / TILE;
+        let mut prog = Vec::new();
+        emit_ctx_preamble(&mut prog);
+
+        // Software pipeline over the two sets:
+        //   load(0); for t: [load(t+1) into the other set] ‖ compute(t);
+        //   store(t).
+        emit_tile_load(&mut prog, Self::tile_set(0), 0);
+        for t in 0..tiles {
+            if t + 1 < tiles {
+                emit_tile_load(&mut prog, Self::tile_set(t + 1), t + 1);
+            }
+            emit_tile_compute(&mut prog, Self::tile_set(t));
+            emit_tile_store(&mut prog, Self::tile_set(t), t);
+        }
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("streamed-vecvec-{:?}-{}", self.op, self.n),
+            program,
+            ctx_words: vec![(CTX_ADDR, ContextWord::two_port(self.op).encode())],
+            u_elems: self.n,
+            v_elems: Some(self.n),
+            w_elems: None,
+            result_elems: self.n,
+            predicted_cycles,
+        }
+    }
+}
+
 /// Multi-tile element-wise vector-vector mapping (n a multiple of 64).
+/// `streamed: false` is the naive single-set baseline; `streamed: true`
+/// delegates to [`StreamedTiledMapping`]'s set ping-pong.
 #[derive(Debug, Clone, Copy)]
 pub struct TiledVecVecMapping {
     pub n: usize,
@@ -45,84 +175,28 @@ pub struct TiledVecVecMapping {
 }
 
 impl TiledVecVecMapping {
-    fn tile_set(&self, t: usize) -> Set {
-        if self.streamed {
-            Set::from_index(t % 2)
-        } else {
-            Set::Zero
-        }
-    }
-
-    /// Emit the load of tile `t` into its set.
-    fn emit_load(&self, prog: &mut Vec<Instruction>, t: usize) {
-        let set = self.tile_set(t);
-        let off = t * TILE_WORDS;
-        // Full 32-bit addresses (tiles beyond the first need the low half).
-        prog.push(Instruction::Ldui { rd: Reg(1), imm: ((U_ADDR + off) >> 16) as u16 });
-        prog.push(Instruction::Ldli { rd: Reg(1), imm: ((U_ADDR + off) & 0xFFFF) as u16 });
-        prog.push(Instruction::Ldfb { rs: Reg(1), set, bank: Bank::A, words: TILE_WORDS, fb_addr: 0 });
-        prog.push(Instruction::Ldui { rd: Reg(2), imm: ((V_ADDR + off) >> 16) as u16 });
-        prog.push(Instruction::Ldli { rd: Reg(2), imm: ((V_ADDR + off) & 0xFFFF) as u16 });
-        prog.push(Instruction::Ldfb { rs: Reg(2), set, bank: Bank::B, words: TILE_WORDS, fb_addr: 0 });
-    }
-
-    /// Emit compute + write-back + store of tile `t`.
-    fn emit_compute_store(&self, prog: &mut Vec<Instruction>, t: usize) {
-        let set = self.tile_set(t);
-        for c in 0..ARRAY_DIM {
-            prog.push(Instruction::Dbcdc {
-                plane: 0,
-                cw: 0,
-                col: c,
-                set,
-                addr_a: c * ARRAY_DIM,
-                addr_b: c * ARRAY_DIM,
-            });
-        }
-        for c in 0..ARRAY_DIM {
-            prog.push(Instruction::Wfbi { col: c, set, bank: Bank::A, addr: OUT_FB + c * ARRAY_DIM });
-        }
-        let out = RESULT_ADDR + t * TILE_WORDS;
-        prog.push(Instruction::Ldui { rd: Reg(5), imm: (out >> 16) as u16 });
-        prog.push(Instruction::Ldli { rd: Reg(5), imm: (out & 0xFFFF) as u16 });
-        prog.push(Instruction::Stfb { rs: Reg(5), set, bank: Bank::A, words: TILE_WORDS, fb_addr: OUT_FB });
-    }
-
     pub fn compile(&self) -> MappedRoutine {
+        if self.streamed {
+            return StreamedTiledMapping { n: self.n, op: self.op }.compile();
+        }
         assert!(self.n >= TILE && self.n % TILE == 0, "n must be a multiple of {TILE}");
         assert!(!self.op.uses_immediate());
         let tiles = self.n / TILE;
         let mut prog = Vec::new();
+        emit_ctx_preamble(&mut prog);
 
-        // Context word once.
-        prog.push(Instruction::Ldui { rd: Reg(3), imm: (CTX_ADDR >> 16) as u16 });
-        prog.push(Instruction::Ldctxt { rs: Reg(3), block: Block::Column, plane: 0, word: 0, count: 1 });
-
-        if self.streamed {
-            // Software pipeline: load(0); for t: [load(t+1)] ‖ compute(t).
-            self.emit_load(&mut prog, 0);
-            for t in 0..tiles {
-                if t + 1 < tiles {
-                    self.emit_load(&mut prog, t + 1);
-                }
-                self.emit_compute_store(&mut prog, t);
-            }
-        } else {
-            for t in 0..tiles {
-                self.emit_load(&mut prog, t);
-                self.emit_compute_store(&mut prog, t);
-            }
+        // Naive baseline: everything through set 0, strictly
+        // load → compute → store per tile (no overlap to exploit).
+        for t in 0..tiles {
+            emit_tile_load(&mut prog, Set::Zero, t);
+            emit_tile_compute(&mut prog, Set::Zero);
+            emit_tile_store(&mut prog, Set::Zero, t);
         }
 
         let program = Program::new(prog);
         let predicted_cycles = program.paper_cycles();
         MappedRoutine {
-            name: format!(
-                "tiled-vecvec-{:?}-{}{}",
-                self.op,
-                self.n,
-                if self.streamed { "-streamed" } else { "" }
-            ),
+            name: format!("tiled-vecvec-{:?}-{}", self.op, self.n),
             program,
             ctx_words: vec![(CTX_ADDR, ContextWord::two_port(self.op).encode())],
             u_elems: self.n,
@@ -242,13 +316,7 @@ mod tests {
                 let naive = TiledVecVecMapping { n, op: AluOp::Add, streamed: false }.compile();
                 let streamed = TiledVecVecMapping { n, op: AluOp::Add, streamed: true }.compile();
                 for async_dma in [false, true] {
-                    let mk = || {
-                        if async_dma {
-                            M1System::new().with_async_dma()
-                        } else {
-                            M1System::new()
-                        }
-                    };
+                    let mk = || M1System::with_dma_mode(async_dma);
                     let a = run_routine_on(&mut mk(), &naive, &u, Some(&v));
                     let b = run_routine_on(&mut mk(), &streamed, &u, Some(&v));
                     assert_eq!(a.result, want, "naive n={n} async={async_dma}");
@@ -286,5 +354,60 @@ mod tests {
     #[should_panic(expected = "multiple of 64")]
     fn ragged_sizes_rejected() {
         TiledVecVecMapping { n: 100, op: AluOp::Add, streamed: false }.compile();
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 64")]
+    fn streamed_ragged_sizes_rejected() {
+        StreamedTiledMapping { n: 100, op: AluOp::Add }.compile();
+    }
+
+    #[test]
+    fn tiled_streamed_mode_delegates_to_the_streamed_mapping() {
+        let tiled = TiledVecVecMapping { n: 192, op: AluOp::Add, streamed: true }.compile();
+        let streamed = StreamedTiledMapping { n: 192, op: AluOp::Add }.compile();
+        assert_eq!(tiled.program, streamed.program);
+        assert_eq!(tiled.ctx_words, streamed.ctx_words);
+    }
+
+    #[test]
+    fn streamed_async_runs_on_the_scheduled_fused_tier() {
+        // The §Perf PR 5 acceptance shape: the async-DMA streamed mapping
+        // must ride the scheduled/fused tier — the shared cache compiles
+        // it (no interpreter fallback), every tile's broadcast and
+        // write-back runs fuse, and the scheduled execution is
+        // bit-identical to the interpreter on results AND cycle reports
+        // in both DMA modes.
+        use crate::mapping::runner::{run_routine3_with, schedule_for};
+        let n = 256;
+        let routine = StreamedTiledMapping { n, op: AluOp::Add }.compile();
+        let schedule = schedule_for(&routine.program).expect("streamed programs must compile");
+        assert_eq!(
+            schedule.fused_runs(),
+            2 * (n / TILE),
+            "one fused broadcast run + one fused write-back run per tile"
+        );
+        let u: Vec<i16> = (0..n as i16).collect();
+        let v: Vec<i16> = (0..n as i16).map(|i| 3 * i - 7).collect();
+        let want = expected(&u, &v);
+        for async_dma in [false, true] {
+            let mut interp_sys = M1System::with_dma_mode(async_dma);
+            let interp = run_routine3_with(&mut interp_sys, &routine, &u, Some(&v), None, None);
+            let mut sched_sys = M1System::with_dma_mode(async_dma);
+            let sched =
+                run_routine3_with(&mut sched_sys, &routine, &u, Some(&v), None, Some(&schedule));
+            assert_eq!(interp.result, want, "interpreter result async={async_dma}");
+            assert_eq!(sched.result, want, "scheduled result async={async_dma}");
+            assert_eq!(interp.report.cycles, sched.report.cycles, "cycles async={async_dma}");
+            assert_eq!(interp.report.slots, sched.report.slots, "slots async={async_dma}");
+            assert_eq!(
+                interp.report.executed, sched.report.executed,
+                "executed async={async_dma}"
+            );
+            assert_eq!(
+                interp.report.broadcasts, sched.report.broadcasts,
+                "broadcasts async={async_dma}"
+            );
+        }
     }
 }

@@ -101,8 +101,11 @@ pub fn fb_to_mem(
     mem_addr: usize,
     words: usize,
 ) {
-    let elems = fb.read_slice(set, bank, fb_addr, 2 * words).to_vec();
-    mem.store_elements(mem_addr, &elems);
+    // Borrow the frame-buffer span directly — `fb` and `mem` are disjoint
+    // borrows, so the old per-transfer `.to_vec()` copy (a heap
+    // allocation on every `stfb`) was pure overhead.
+    let elems = fb.read_slice(set, bank, fb_addr, 2 * words);
+    mem.store_elements(mem_addr, elems);
 }
 
 /// DMA transfer: main memory → context memory (one 32-bit context word per

@@ -18,6 +18,26 @@
 //! reported cycle count of a routine is the cycle index at which its final
 //! instruction issues — i.e. `total issue slots - 1` (Table 1's listing
 //! occupies slots 0..=96 and the paper reports 96 cycles).
+//!
+//! ## Execution tiers (§Perf)
+//!
+//! One architectural semantics, three executors, two DMA timing models —
+//! every cell of this grid produces bit-identical state and cycle
+//! reports (pinned by `tests/conformance.rs`):
+//!
+//! | tier | blocking DMA (paper listings) | async DMA (double-buffered overlap) |
+//! |------|-------------------------------|--------------------------------------|
+//! | **interpreter** ([`M1System::run`]) | reference executor + slot accounting | reference executor + [`timing`]'s `AsyncDma` issue model |
+//! | **scheduled** ([`M1System::run_program`] with a [`BroadcastSchedule`]) | pre-decoded steps, accounting precomputed at compile time | same steps; async issue/readiness accounting **also precomputed** (§Perf PR 5) |
+//! | **fused** (`Step::FusedRun` inside a schedule) | broadcast/write-back runs as 8-wide SIMD lane kernels | identical — fusion is DMA-mode-independent |
+//!
+//! Dispatch: `run_program` takes the scheduled/fused tier whenever a
+//! schedule is supplied and the system is not tracing; the DMA mode only
+//! selects which precomputed report is returned. Programs with branches
+//! never compile to schedules; tracing systems always interpret. The
+//! async accounting is compile-time computable because every latency
+//! input of the issue model is a static instruction field — the only
+//! dynamic hazard in the ISA is control flow.
 
 pub mod context_memory;
 pub mod dma;

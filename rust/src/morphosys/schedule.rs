@@ -9,17 +9,30 @@
 //! [`BroadcastSchedule::compile`] flattens a straight-line program once
 //! into a vector of pre-classified steps and **precomputes the entire
 //! cycle accounting** (issue slots, final-issue cycle, executed count,
-//! broadcast count) at compile time, using exactly the blocking-DMA issue
-//! model of [`M1System::run`]. Executing a schedule is then pure data
+//! broadcast count) at compile time — for **both DMA modes** (§Perf
+//! PR 5): the blocking issue model of [`M1System::run`] and the
+//! non-blocking `AsyncDma` issue/readiness model of
+//! `M1System::with_async_dma` (see [`super::timing`]). Executing a
+//! schedule is then pure data
 //! movement and RC-array compute — no per-instruction dispatch, no
-//! accounting arithmetic, no trace plumbing.
+//! accounting arithmetic, no trace plumbing — and the report comes from
+//! whichever precomputed accounting matches the executing system's mode.
+//!
+//! The async accounting is computable at compile time because every
+//! latency input of the issue model is a static instruction field
+//! (transfer word counts, set/bank selects): each DMA step's issue cycle
+//! and readiness edge, and each broadcast/write-back's stall-or-proceed
+//! decision, are replayed over the **same** `AsyncDma` state machine
+//! the interpreter steps at run time — identical by construction, and
+//! pinned bit-for-bit by the conformance suite in both modes. The only
+//! dynamic hazard in the ISA is control flow: programs with branches
+//! (`jmp`/`bnez`) refuse to compile and callers fall back to the
+//! interpreter, as do tracing systems (which need per-instruction event
+//! plumbing).
 //!
 //! Schedules are compiled once per distinct program and reused across
 //! `run_routine` calls (see the thread-local cache in
-//! [`crate::mapping::runner`]). Programs with branches (`jmp`/`bnez`)
-//! don't compile — callers fall back to the interpreter — and the
-//! schedule path is only taken in blocking-DMA, non-tracing mode, where
-//! its accounting is bit-for-bit identical to the interpreter's.
+//! [`crate::mapping::runner`]).
 //!
 //! [`M1System::run`]: crate::morphosys::M1System::run
 
@@ -27,6 +40,7 @@ use super::context_memory::{PLANES, PLANE_WORDS};
 use super::frame_buffer::{Bank, Set, BANK_ELEMS};
 use super::rc_array::{BroadcastMode, ARRAY_DIM};
 use super::system::ExecutionReport;
+use super::timing::AsyncDma;
 use super::tinyrisc::{Instruction, Program};
 
 /// One pre-decoded step of a schedule.
@@ -121,6 +135,12 @@ pub struct BroadcastSchedule {
     validated: bool,
     cycles: u64,
     slots: u64,
+    /// Final-issue cycle under the `AsyncDma` issue model (§Perf PR 5)
+    /// — the same program's accounting on an async-DMA system.
+    async_cycles: u64,
+    /// Issue-slot total under the async model (`last issue + 1`, the
+    /// interpreter's convention).
+    async_slots: u64,
     executed: u64,
     broadcasts: u64,
 }
@@ -150,6 +170,13 @@ impl BroadcastSchedule {
         let mut executed = 0u64;
         let mut broadcasts = 0u64;
         let mut last_issue = 0u64;
+        // Async-DMA accounting, replayed over the interpreter's own issue
+        // model (§Perf PR 5): every latency input is a static instruction
+        // field, so the whole stall-or-proceed resolution happens here at
+        // compile time.
+        let mut dma = AsyncDma::default();
+        let mut async_slots = 0u64;
+        let mut async_last = 0u64;
         let mut validated = true;
         let bus_ok = |bus: Option<(Bank, usize)>| match bus {
             Some((_, addr)) => addr + ARRAY_DIM <= BANK_ELEMS,
@@ -163,6 +190,10 @@ impl BroadcastSchedule {
             // current slot count and occupies `issue_slots()` slots.
             last_issue = slots;
             slots += instr.issue_slots();
+            // Async model: issue when the engine/resources allow, then
+            // the next instruction is offered one cycle later.
+            async_last = dma.issue(instr, async_slots);
+            async_slots = async_last + 1;
             executed += 1;
             match *instr {
                 Instruction::Jmp { .. } | Instruction::Bnez { .. } => return None,
@@ -243,6 +274,8 @@ impl BroadcastSchedule {
             validated,
             cycles: last_issue,
             slots,
+            async_cycles: async_last,
+            async_slots,
             executed,
             broadcasts,
         })
@@ -273,6 +306,27 @@ impl BroadcastSchedule {
             slots: self.slots,
             executed: self.executed,
             broadcasts: self.broadcasts,
+        }
+    }
+
+    /// The precomputed **async-DMA** execution report (identical to what
+    /// the interpreter would account for this program on an
+    /// `M1System::with_async_dma` system — §Perf PR 5).
+    pub fn async_report(&self) -> ExecutionReport {
+        ExecutionReport {
+            cycles: self.async_cycles,
+            slots: self.async_slots,
+            executed: self.executed,
+            broadcasts: self.broadcasts,
+        }
+    }
+
+    /// Report for the executing system's DMA mode.
+    pub(crate) fn report_for(&self, async_dma: bool) -> ExecutionReport {
+        if async_dma {
+            self.async_report()
+        } else {
+            self.report()
         }
     }
 
@@ -640,5 +694,46 @@ mod tests {
         assert!(s.is_empty());
         let r = s.report();
         assert_eq!((r.cycles, r.slots, r.executed, r.broadcasts), (0, 0, 0, 0));
+        let ra = s.async_report();
+        assert_eq!((ra.cycles, ra.slots, ra.executed, ra.broadcasts), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn async_accounting_matches_the_interpreter_in_both_dma_modes() {
+        // Compile once, compare against a fresh interpreter run in each
+        // DMA mode — the precomputed reports must be bit-identical to
+        // what `M1System::run` accounts, across representative mapping
+        // shapes (single-tile, multi-broadcast, and the ping-ponged
+        // streamed schedule whose overlap is the whole point).
+        use crate::mapping::{StreamedTiledMapping, TiledVecVecMapping, VecScalarMapping, VecVecMapping};
+        use crate::morphosys::{AluOp, M1System};
+        let programs = [
+            VecVecMapping { n: 64, op: AluOp::Add }.compile().program,
+            VecScalarMapping { n: 64, op: AluOp::Cmul, scalar: 5 }.compile().program,
+            TiledVecVecMapping { n: 256, op: AluOp::Add, streamed: false }.compile().program,
+            StreamedTiledMapping { n: 256, op: AluOp::Add }.compile().program,
+        ];
+        for (i, program) in programs.iter().enumerate() {
+            let s = BroadcastSchedule::compile(program).unwrap();
+            for async_dma in [false, true] {
+                let mut sys = M1System::with_dma_mode(async_dma);
+                let ri = sys.run(program);
+                let rs = s.report_for(async_dma);
+                assert_eq!(ri.cycles, rs.cycles, "program {i} async={async_dma} cycles");
+                assert_eq!(ri.slots, rs.slots, "program {i} async={async_dma} slots");
+                assert_eq!(ri.executed, rs.executed, "program {i} async={async_dma} executed");
+                assert_eq!(ri.broadcasts, rs.broadcasts, "program {i} async={async_dma} broadcasts");
+            }
+            // Overlap really is modelled: the multi-tile shapes finish
+            // earlier under async DMA.
+            if i >= 2 {
+                assert!(
+                    s.async_report().cycles < s.report().cycles,
+                    "program {i}: async {} !< blocking {}",
+                    s.async_report().cycles,
+                    s.report().cycles
+                );
+            }
+        }
     }
 }

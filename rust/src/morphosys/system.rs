@@ -13,6 +13,7 @@ use super::frame_buffer::{Bank, FrameBuffer, Set};
 use super::mulate::{Trace, TraceEvent};
 use super::rc_array::{BroadcastMode, ContextWord, RcArray, ARRAY_DIM};
 use super::schedule::{BroadcastSchedule, FusedRun, Step};
+use super::timing::AsyncDma;
 use super::tinyrisc::{Instruction, Program, RegFile};
 
 /// Hard cap on executed instructions, so runaway branch loops fail fast
@@ -62,17 +63,6 @@ pub struct M1System {
     async_dma: bool,
 }
 
-/// Tracks in-flight DMA in async mode.
-#[derive(Debug, Clone, Copy, Default)]
-struct DmaState {
-    /// When the single DMA engine is next free.
-    engine_free: u64,
-    /// Per (set, bank): cycle at which its last fill completes.
-    bank_ready: [[u64; 2]; 2],
-    /// Cycle at which the last context load completes.
-    ctx_ready: u64,
-}
-
 impl Default for M1System {
     fn default() -> Self {
         Self::new()
@@ -96,6 +86,15 @@ impl M1System {
     pub fn with_async_dma(mut self) -> M1System {
         self.async_dma = true;
         self
+    }
+
+    /// Fresh system with the DMA mode chosen by flag — the one place the
+    /// "blocking or overlapped?" conditional construction lives (used by
+    /// the tile pool's shards and the differential test grids).
+    pub fn with_dma_mode(async_dma: bool) -> M1System {
+        let mut sys = M1System::new();
+        sys.async_dma = async_dma;
+        sys
     }
 
     /// Enable mULATE-style instruction tracing (costs time; off by
@@ -196,57 +195,6 @@ impl M1System {
         }
     }
 
-    /// Async-DMA issue scheduling: returns the cycle at which `instr`
-    /// issues, updating the DMA engine/resource readiness windows.
-    fn async_issue(&self, dma: &mut DmaState, instr: &Instruction, slots: u64) -> u64 {
-        use super::timing::{ctx_dma_slots, fb_dma_slots};
-        let bank_idx = |set: &Set, bank: &Bank| (set.index(), bank.index());
-        match instr {
-            Instruction::Ldfb { set, bank, words, .. } => {
-                // DMA instructions need the engine; they then run in the
-                // background.
-                let issue = slots.max(dma.engine_free);
-                let done = issue + fb_dma_slots(*words);
-                dma.engine_free = done;
-                let (s, b) = bank_idx(set, bank);
-                dma.bank_ready[s][b] = done;
-                issue
-            }
-            Instruction::Stfb { set, bank, words, .. } => {
-                // A store additionally waits for any in-flight fill of
-                // its source bank.
-                let (s, b) = bank_idx(set, bank);
-                let issue = slots.max(dma.engine_free).max(dma.bank_ready[s][b]);
-                dma.engine_free = issue + fb_dma_slots(*words);
-                issue
-            }
-            Instruction::Ldctxt { count, .. } => {
-                let issue = slots.max(dma.engine_free);
-                let done = issue + ctx_dma_slots(*count);
-                dma.engine_free = done;
-                dma.ctx_ready = done;
-                issue
-            }
-            Instruction::Dbcdc { set, .. } | Instruction::Dbcdr { set, .. } => {
-                let s = set.index();
-                slots
-                    .max(dma.ctx_ready)
-                    .max(dma.bank_ready[s][0])
-                    .max(dma.bank_ready[s][1])
-            }
-            Instruction::Sbcb { set, bank, .. } | Instruction::Sbcbr { set, bank, .. } => {
-                let (s, b) = bank_idx(set, bank);
-                slots.max(dma.ctx_ready).max(dma.bank_ready[s][b])
-            }
-            Instruction::Wfbi { set, bank, .. } | Instruction::Wfbir { set, bank, .. } => {
-                // Don't collide with an in-flight fill of the target bank.
-                let (s, b) = bank_idx(set, bank);
-                slots.max(dma.bank_ready[s][b])
-            }
-            _ => slots,
-        }
-    }
-
     /// Run a program to completion (falling off the end or `halt`).
     pub fn run(&mut self, program: &Program) -> ExecutionReport {
         let mut pc = 0usize;
@@ -254,12 +202,15 @@ impl M1System {
         let mut executed = 0u64;
         let mut broadcasts = 0u64;
         let mut last_issue = 0u64;
-        let mut dma = DmaState::default();
+        // The shared async issue model (see [`AsyncDma`]): the schedule
+        // compiler replays this exact state machine at compile time, so
+        // the two tiers cannot drift.
+        let mut dma = AsyncDma::default();
 
         while pc < program.len() {
             let instr = program.instructions[pc];
             let issue_cycle = if self.async_dma {
-                self.async_issue(&mut dma, &instr, slots)
+                dma.issue(&instr, slots)
             } else {
                 slots += instr.issue_slots();
                 slots - instr.issue_slots()
@@ -428,24 +379,28 @@ impl M1System {
     }
 
     /// Run a program, taking the pre-decoded fast path when a schedule is
-    /// supplied and this system is in plain blocking-DMA, non-tracing
-    /// mode (where the schedule's precomputed accounting is bit-for-bit
-    /// the interpreter's). Async-DMA and tracing systems fall back to the
-    /// interpreter, which models those modes.
+    /// supplied and this system is not tracing. Schedules carry
+    /// precomputed accounting for **both** DMA modes (§Perf PR 5): the
+    /// blocking model and the async issue/readiness model, each
+    /// bit-for-bit the interpreter's. Only tracing systems fall back to
+    /// the interpreter (traces need per-instruction event plumbing).
     pub fn run_program(
         &mut self,
         program: &Program,
         schedule: Option<&BroadcastSchedule>,
     ) -> ExecutionReport {
         match schedule {
-            Some(s) if !self.async_dma && self.trace.is_none() => self.run_scheduled(s),
+            Some(s) if self.trace.is_none() => self.run_scheduled(s),
             _ => self.run(program),
         }
     }
 
     /// Execute a pre-decoded schedule: no per-instruction fetch/dispatch,
     /// no cycle arithmetic, no trace plumbing — just the architectural
-    /// effects. The report comes precomputed from compile time.
+    /// effects. The report comes precomputed from compile time, in this
+    /// system's DMA mode. (Architectural state evolution is identical in
+    /// both DMA modes — the mode only changes *when* instructions issue,
+    /// never what they do — so one step vector serves both.)
     fn run_scheduled(&mut self, schedule: &BroadcastSchedule) -> ExecutionReport {
         // Compile-time validation of every broadcast's static coordinates
         // unlocks unchecked frame-buffer plane reads (§Perf); unvalidated
@@ -469,7 +424,7 @@ impl M1System {
                 Step::FusedRun(run) => self.exec_fused(&run, validated),
             }
         }
-        schedule.report()
+        schedule.report_for(self.async_dma)
     }
 
     /// Execute one compile-time-fused run (§Perf, fused tile-kernel
@@ -732,7 +687,7 @@ mod tests {
     }
 
     #[test]
-    fn run_program_falls_back_for_async_or_tracing_systems() {
+    fn run_program_falls_back_only_for_tracing_systems() {
         use crate::morphosys::schedule::BroadcastSchedule;
         let p = assemble("ldli r1, 5\nldli r2, 6").unwrap();
         let schedule = BroadcastSchedule::compile(&p).unwrap();
@@ -740,10 +695,58 @@ mod tests {
         let mut traced = M1System::new().with_trace();
         traced.run_program(&p, Some(&schedule));
         assert_eq!(traced.take_trace().unwrap().events.len(), 2);
-        // Async system: the interpreter's async accounting is used.
+        // Async system: the scheduled tier runs it (§Perf PR 5), with the
+        // precomputed async accounting equal to the interpreter's.
         let mut asn = M1System::new().with_async_dma();
-        let r = asn.run_program(&p, Some(&schedule));
-        assert_eq!(r.executed, 2);
+        let rs = asn.run_program(&p, Some(&schedule));
+        let ri = M1System::new().with_async_dma().run(&p);
+        assert_eq!((rs.cycles, rs.slots, rs.executed), (ri.cycles, ri.slots, ri.executed));
+    }
+
+    #[test]
+    fn async_scheduled_tier_matches_interpreter_accounting_with_interleaved_dma() {
+        // The overlap shape of `async_dma_mode_overlaps_loads_with_scalar
+        // _work`, executed through the pre-decoded schedule on an
+        // async-DMA system: the precomputed async report must reproduce
+        // the interpreter's stall-or-proceed outcome exactly (ldfb at 1,
+        // ldctxt queued behind the engine, sbcb stalled to ctx-ready 37,
+        // wfbi at 38).
+        use crate::morphosys::schedule::BroadcastSchedule;
+        let src = "
+            ldli   r1, 0x100
+            ldfb   r1, 0, a, 32
+            ldli   r2, 1
+            ldli   r2, 2
+            ldli   r3, 0x300
+            ldctxt r3, col, 0, 0, 1
+            sbcb   0, 0, 0, 0, a, 0x0
+            wfbi   0, 1, a, 0x0
+        ";
+        let p = assemble(src).unwrap();
+        let schedule = BroadcastSchedule::compile(&p).unwrap();
+        let stage = |sys: &mut M1System| {
+            sys.mem
+                .write_word(0x300, ContextWord::immediate(crate::morphosys::AluOp::Cadd, 1).encode());
+        };
+        let mut interp = M1System::new().with_async_dma();
+        stage(&mut interp);
+        let ri = interp.run(&p);
+        let mut sched = M1System::new().with_async_dma();
+        stage(&mut sched);
+        let rs = sched.run_program(&p, Some(&schedule));
+        assert_eq!(rs.cycles, 38);
+        assert_eq!((ri.cycles, ri.slots, ri.executed, ri.broadcasts), (rs.cycles, rs.slots, rs.executed, rs.broadcasts));
+        assert_eq!(
+            interp.fb.read_slice(Set::One, Bank::A, 0, 8),
+            sched.fb.read_slice(Set::One, Bank::A, 0, 8),
+            "write-back window"
+        );
+        // The same schedule still reports blocking accounting on a
+        // blocking system (41-cycle wfbi issue — see the overlap test).
+        let mut blocking = M1System::new();
+        stage(&mut blocking);
+        let rb = blocking.run_program(&p, Some(&schedule));
+        assert_eq!(rb.cycles, 41);
     }
 
     #[test]

@@ -63,6 +63,86 @@ pub fn ctx_dma_slots(words: usize) -> u64 {
     CTX_SETUP_CYCLES + words.max(1) as u64
 }
 
+use super::frame_buffer::{Bank, Set};
+use super::tinyrisc::Instruction;
+
+/// The async-DMA issue model: one DMA engine running transfers in the
+/// background, with per-resource readiness windows consumers stall on.
+///
+/// This is the **single implementation** of the non-blocking issue
+/// discipline, shared by the interpreter
+/// ([`crate::morphosys::M1System::run`]) and the schedule compiler
+/// ([`crate::morphosys::BroadcastSchedule::compile`]) — so the
+/// pre-decoded tier's precomputed async accounting is bit-for-bit the
+/// interpreter's *by construction* (§Perf PR 5), on top of being pinned
+/// by the conformance suite.
+///
+/// Every latency input is a **static instruction field** (`words`,
+/// `count`, set/bank selects) — no TinyRISC register value feeds the
+/// issue model — which is what makes the whole accounting computable at
+/// schedule-compile time for any straight-line program.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct AsyncDma {
+    /// When the single DMA engine is next free.
+    engine_free: u64,
+    /// Per (set, bank): cycle at which its last fill completes.
+    bank_ready: [[u64; 2]; 2],
+    /// Cycle at which the last context load completes.
+    ctx_ready: u64,
+}
+
+impl AsyncDma {
+    /// Cycle at which `instr` issues when offered at cycle `slots`,
+    /// updating the engine/resource readiness windows.
+    pub(crate) fn issue(&mut self, instr: &Instruction, slots: u64) -> u64 {
+        let bank_idx = |set: &Set, bank: &Bank| (set.index(), bank.index());
+        match instr {
+            Instruction::Ldfb { set, bank, words, .. } => {
+                // DMA instructions need the engine; they then run in the
+                // background.
+                let issue = slots.max(self.engine_free);
+                let done = issue + fb_dma_slots(*words);
+                self.engine_free = done;
+                let (s, b) = bank_idx(set, bank);
+                self.bank_ready[s][b] = done;
+                issue
+            }
+            Instruction::Stfb { set, bank, words, .. } => {
+                // A store additionally waits for any in-flight fill of
+                // its source bank.
+                let (s, b) = bank_idx(set, bank);
+                let issue = slots.max(self.engine_free).max(self.bank_ready[s][b]);
+                self.engine_free = issue + fb_dma_slots(*words);
+                issue
+            }
+            Instruction::Ldctxt { count, .. } => {
+                let issue = slots.max(self.engine_free);
+                let done = issue + ctx_dma_slots(*count);
+                self.engine_free = done;
+                self.ctx_ready = done;
+                issue
+            }
+            Instruction::Dbcdc { set, .. } | Instruction::Dbcdr { set, .. } => {
+                let s = set.index();
+                slots
+                    .max(self.ctx_ready)
+                    .max(self.bank_ready[s][0])
+                    .max(self.bank_ready[s][1])
+            }
+            Instruction::Sbcb { set, bank, .. } | Instruction::Sbcbr { set, bank, .. } => {
+                let (s, b) = bank_idx(set, bank);
+                slots.max(self.ctx_ready).max(self.bank_ready[s][b])
+            }
+            Instruction::Wfbi { set, bank, .. } | Instruction::Wfbir { set, bank, .. } => {
+                // Don't collide with an in-flight fill of the target bank.
+                let (s, b) = bank_idx(set, bank);
+                slots.max(self.bank_ready[s][b])
+            }
+            _ => slots,
+        }
+    }
+}
+
 /// M1 system clock, Hz (the paper: "operational at a frequency of
 /// 100 MHz").
 pub const M1_CLOCK_HZ: u64 = 100_000_000;
@@ -119,6 +199,23 @@ mod tests {
         // scaling, n = 8 → 14 cycles
         let s8 = 1 + fb_dma_slots(4) + 1 + ctx_dma_slots(1) + 1 + 1 + 1;
         assert_eq!(s8, 14);
+    }
+
+    #[test]
+    fn async_issue_model_serializes_the_single_dma_engine() {
+        use crate::morphosys::tinyrisc::Reg;
+        let mut dma = AsyncDma::default();
+        let ldfb = |set, bank| Instruction::Ldfb { rs: Reg(1), set, bank, words: 32, fb_addr: 0 };
+        // The first fill issues immediately and occupies the engine for
+        // its 32-word burst; the second queues behind it.
+        assert_eq!(dma.issue(&ldfb(Set::Zero, Bank::A), 0), 0);
+        assert_eq!(dma.issue(&ldfb(Set::Zero, Bank::B), 1), 32);
+        // A double-bank broadcast on the filling set stalls to the latest
+        // bank-ready edge.
+        let bc = Instruction::Dbcdc { plane: 0, cw: 0, col: 0, set: Set::Zero, addr_a: 0, addr_b: 0 };
+        assert_eq!(dma.issue(&bc, 33), 64);
+        // Scalar work never stalls on the engine.
+        assert_eq!(dma.issue(&Instruction::NOP, 65), 65);
     }
 
     #[test]

@@ -297,6 +297,42 @@ fn random_programs_scheduled_path_is_bit_identical_to_interpreter() {
     });
 }
 
+#[test]
+fn random_programs_scheduled_path_is_bit_identical_in_both_dma_modes() {
+    // The async-DMA differential axis (§Perf PR 5): the same randomized
+    // straight-line programs — interleaved DMA fills/drains, context
+    // loads, broadcasts, write-backs — run interpreter-vs-scheduled on
+    // **async-DMA** systems as well as blocking ones. The schedule's
+    // precomputed async issue/readiness accounting and the executed
+    // architectural state (cell planes, frame buffer, context memory,
+    // memory window) must both be bit-identical to the interpreter's.
+    for_each_case("scheduled == interpreter across DMA modes", 220, |rng| {
+        let staging = Staging::random(rng);
+        let program = random_program(rng);
+        let schedule = BroadcastSchedule::compile(&program)
+            .expect("straight-line programs always compile");
+        for async_dma in [false, true] {
+            let mut interp = M1System::with_dma_mode(async_dma);
+            staging.apply(&mut interp);
+            let ri = interp.run(&program);
+
+            let mut sched = M1System::with_dma_mode(async_dma);
+            staging.apply(&mut sched);
+            let rs = sched.run_program(&program, Some(&schedule));
+
+            assert_eq!(ri.cycles, rs.cycles, "cycles (async={async_dma})");
+            assert_eq!(ri.slots, rs.slots, "slots (async={async_dma})");
+            assert_eq!(ri.executed, rs.executed, "executed (async={async_dma})");
+            assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts (async={async_dma})");
+            assert_systems_identical(
+                &interp,
+                &sched,
+                &format!("post-run state (async={async_dma})"),
+            );
+        }
+    });
+}
+
 /// Build the canonical fusable tile program: stage `u`/`v` at 0x100/0x200
 /// and a raw context word at 0x300, DMA both banks, load the word, fire
 /// `sweeps` full 8-column contiguous double-bank broadcast runs, write all
@@ -579,6 +615,46 @@ fn pooled_backend_matches_serial_across_shard_counts_and_sizes() {
                 sc.to_bits(),
                 pc.to_bits(),
                 "aggregate cycles n={n} shards={shards}: {sc} vs {pc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_async_dma_backend_matches_serial_across_shard_counts_and_sizes() {
+    // The §Perf PR 5 acceptance grid, async-DMA edition: shard counts
+    // {1, 2, 4, 8} × n ∈ {64, 500, 2117, 4096} on overlapped-DMA shard
+    // simulators. Outputs must equal the blocking backend's
+    // byte-for-byte (DMA mode never changes results), aggregate cycles
+    // must be shard-count-independent and strictly below blocking's
+    // (the overlap win).
+    let params = [0.5, -0.25, 0.25, 0.5, 7.0, -3.0];
+    for &n in &[64usize, 500, 2117, 4096] {
+        let mut rng = Rng::new(0xA57E ^ n as u64);
+        let base_x: Vec<f32> = (0..n).map(|_| rng.range_i64(-2000, 2000) as f32).collect();
+        let base_y: Vec<f32> = (0..n).map(|_| rng.range_i64(-2000, 2000) as f32).collect();
+
+        let mut blocking = M1SimBackend::new();
+        let (mut bx, mut by) = (base_x.clone(), base_y.clone());
+        let bc = blocking.apply(&params, &mut bx, &mut by).unwrap().unwrap();
+
+        let mut serial_async = M1SimBackend::with_config(1, true);
+        let (mut sx, mut sy) = (base_x.clone(), base_y.clone());
+        let sc = serial_async.apply(&params, &mut sx, &mut sy).unwrap().unwrap();
+        assert_bits_equal(&bx, &sx, &format!("async vs blocking xs n={n}"));
+        assert_bits_equal(&by, &sy, &format!("async vs blocking ys n={n}"));
+        assert!(sc < bc, "n={n}: async cycles/point {sc} !< blocking {bc}");
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut pooled = M1SimBackend::with_config(shards, true);
+            let (mut px, mut py) = (base_x.clone(), base_y.clone());
+            let pc = pooled.apply(&params, &mut px, &mut py).unwrap().unwrap();
+            assert_bits_equal(&sx, &px, &format!("async xs n={n} shards={shards}"));
+            assert_bits_equal(&sy, &py, &format!("async ys n={n} shards={shards}"));
+            assert_eq!(
+                sc.to_bits(),
+                pc.to_bits(),
+                "async aggregate cycles n={n} shards={shards}: {sc} vs {pc}"
             );
         }
     }
