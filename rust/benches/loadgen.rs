@@ -34,6 +34,12 @@ fn main() {
     println!("{}", r.render());
     reports.push(r);
 
+    section("degraded capacity under seeded fault injection (chaos scenario)");
+    let chaos = scenario::by_name("chaos").expect("chaos scenario");
+    let r = loadgen::run_scenario(&chaos).expect("run chaos");
+    println!("{}", r.render());
+    reports.push(r);
+
     let path = loadgen::report::default_path();
     match loadgen::report::write_reports(&reports, &path) {
         Ok(()) => println!("\nwrote {path}"),

@@ -7,7 +7,8 @@ use anyhow::Result;
 use crate::graphics::{FixedPointParams, Mat3};
 use crate::runtime::Executor;
 
-use super::pool::{RoutineSpec, TilePool, TileRequest};
+use super::faults::FaultPlan;
+use super::pool::{PoolHealth, RoutineSpec, TilePool, TileRequest};
 
 /// Which backend served a job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -36,6 +37,12 @@ pub trait Backend {
     /// buffers in place. Returns simulated cycles per point when the
     /// backend models hardware (the M1 simulator).
     fn apply(&mut self, params: &[f32; 6], xs: &mut [f32], ys: &mut [f32]) -> Result<Option<f64>>;
+
+    /// Cumulative supervision counters, for backends that run supervised
+    /// execution shards (the M1 pool). `None` for stateless backends.
+    fn health(&self) -> Option<PoolHealth> {
+        None
+    }
 }
 
 /// Apply the affine params on the CPU (shared by the native backend and
@@ -187,7 +194,19 @@ impl M1SimBackend {
     /// cycles reflect the M1's double-buffered frame-buffer overlap.
     /// Functional outputs are identical in both modes.
     pub fn with_config(shards: usize, async_dma: bool) -> M1SimBackend {
-        M1SimBackend { pool: TilePool::with_mode(shards, async_dma), shift: 6 }
+        M1SimBackend::with_faults(shards, async_dma, None)
+    }
+
+    /// As [`M1SimBackend::with_config`], with a deterministic
+    /// fault-injection schedule for the pool's shards (chaos/test only —
+    /// see [`FaultPlan`]). Results stay bit-identical to a fault-free
+    /// backend; only timing and the [`PoolHealth`] counters change.
+    pub fn with_faults(
+        shards: usize,
+        async_dma: bool,
+        faults: Option<FaultPlan>,
+    ) -> M1SimBackend {
+        M1SimBackend { pool: TilePool::with_faults(shards, async_dma, faults), shift: 6 }
     }
 
     pub fn shards(&self) -> usize {
@@ -215,6 +234,10 @@ impl Default for M1SimBackend {
 impl Backend for M1SimBackend {
     fn kind(&self) -> BackendKind {
         BackendKind::M1Sim
+    }
+
+    fn health(&self) -> Option<PoolHealth> {
+        Some(self.pool.health())
     }
 
     fn apply(&mut self, params: &[f32; 6], xs: &mut [f32], ys: &mut [f32]) -> Result<Option<f64>> {

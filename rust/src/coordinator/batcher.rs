@@ -101,7 +101,10 @@ impl Assembly {
             if matches!(self.deadline, Some(d) if Instant::now() > d) {
                 self.metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
             }
-            // Receiver may have hung up (client gone) — that's fine.
+            // One reply per admitted request: count it even if the
+            // receiver hung up (client gone) — the coordinator's graceful
+            // drain waits on responses == requests.
+            self.metrics.responses.fetch_add(1, Ordering::Relaxed);
             let _ = self.reply.send(Ok(resp));
         }
     }
@@ -181,6 +184,7 @@ impl Batcher {
         for p in window {
             if matches!(p.deadline, Some(d) if now > d) {
                 metrics.shed.fetch_add(1, Ordering::Relaxed);
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
                 let _ = p.reply.send(Err(Rejection {
                     id: p.req.id,
                     reason: RejectReason::DeadlineExceeded,
@@ -441,6 +445,8 @@ mod tests {
         assert!(live_rx.try_recv().unwrap().is_ok());
         assert_eq!(m.shed.load(Ordering::Relaxed), 1);
         assert_eq!(m.deadline_missed.load(Ordering::Relaxed), 0);
+        // Both requests got exactly one reply (one served, one rejected).
+        assert_eq!(m.responses.load(Ordering::Relaxed), 2);
     }
 
     #[test]

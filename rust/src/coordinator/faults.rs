@@ -1,0 +1,284 @@
+//! Deterministic fault injection for the tile pool (§Robustness).
+//!
+//! A [`FaultPlan`] is a **seeded, test-only** schedule of failures that
+//! the pool's shards consult at every tile dispatch: panic here, stall
+//! there, kill this shard thread outright, drop that reply. All decisions
+//! are pure functions of the seed and the pool-wide dispatch counter, so
+//! a failing chaos run is re-executable bit-for-bit from its seed alone —
+//! the property the repro artifacts ([`crate::replay`]) and the CI
+//! `chaos-smoke` job build on.
+//!
+//! The plan is shared (`Arc` internals, cheap `Clone`) so one schedule
+//! spans every worker's pool in a coordinator; production configs leave
+//! [`super::CoordinatorConfig::fault_plan`] as `None` and none of this
+//! code runs on the serving path.
+//!
+//! Injection never compromises the determinism contract: a panicked or
+//! killed tile is re-run by the supervision layer (see
+//! [`super::pool::TilePool`]), and tiles are pure functions of their
+//! inputs, so results stay bit-identical to a fault-free run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What the plan tells a shard to do at one tile dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FaultAction {
+    /// Run the tile normally.
+    None,
+    /// Sleep before running the tile — a stalled DMA engine / descheduled
+    /// shard. Timing-only: results are untouched.
+    Stall(Duration),
+    /// Panic before running the tile (caught by the shard supervisor,
+    /// which warm-restarts the simulator and retries).
+    Panic,
+    /// Kill the shard thread outright, abandoning the rest of its claimed
+    /// chunk (the caller-side recovery pass re-dispatches those tiles and
+    /// respawns the thread).
+    Die,
+}
+
+#[derive(Debug)]
+struct FaultInner {
+    seed: u64,
+    /// Panic on every `panic_every`-th dispatch (1-indexed); `0` disables.
+    panic_every: u64,
+    max_panics: u64,
+    /// Kill the shard thread on every `die_every`-th dispatch; `0` disables.
+    die_every: u64,
+    max_deaths: u64,
+    /// Stall on every `stall_every`-th dispatch; `0` disables.
+    stall_every: u64,
+    stall: Duration,
+    /// Drop the reply of every `drop_every`-th *completed* tile; `0`
+    /// disables.
+    drop_every: u64,
+    max_drops: u64,
+    /// Extra delay the batcher pump sleeps per batch window (a stalled
+    /// upstream queue); `None` disables.
+    queue_stall: Option<Duration>,
+    dispatched: AtomicU64,
+    completed: AtomicU64,
+    panics: AtomicU64,
+    deaths: AtomicU64,
+    drops: AtomicU64,
+}
+
+/// A seeded, shareable fault-injection schedule. See the module docs.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    inner: Arc<FaultInner>,
+}
+
+/// SplitMix64 — the crate-standard cheap deterministic scrambler, used to
+/// derive the chaos profile's knobs from one seed.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Bump `ctr` if it is still below `max`; `true` when the bump happened
+/// (i.e. this fault instance may fire).
+fn bump_below(ctr: &AtomicU64, max: u64) -> bool {
+    ctr.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| (v < max).then_some(v + 1))
+        .is_ok()
+}
+
+impl FaultPlan {
+    fn quiet(seed: u64) -> FaultInner {
+        FaultInner {
+            seed,
+            panic_every: 0,
+            max_panics: 0,
+            die_every: 0,
+            max_deaths: 0,
+            stall_every: 0,
+            stall: Duration::ZERO,
+            drop_every: 0,
+            max_drops: 0,
+            queue_stall: None,
+            dispatched: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            deaths: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+        }
+    }
+
+    /// The full chaos profile, every knob derived deterministically from
+    /// `seed`: recurring shard panics, a couple of outright shard-thread
+    /// deaths, periodic DMA stalls, dropped tile replies and a stalled
+    /// batcher pump. This is what `repro loadtest chaos` runs.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        let mut s = seed;
+        let mut next = || splitmix64(&mut s);
+        FaultPlan {
+            inner: Arc::new(FaultInner {
+                panic_every: 6 + next() % 5,
+                max_panics: 4,
+                die_every: 25 + next() % 10,
+                max_deaths: 2,
+                stall_every: 16,
+                stall: Duration::from_micros(100 + next() % 200),
+                drop_every: 9 + next() % 4,
+                max_drops: 3,
+                queue_stall: Some(Duration::from_micros(200)),
+                ..Self::quiet(seed)
+            }),
+        }
+    }
+
+    /// Panic (exactly once) on the `nth` tile dispatch, 1-indexed.
+    pub fn panic_at(seed: u64, nth: u64) -> FaultPlan {
+        assert!(nth > 0, "dispatch counts are 1-indexed");
+        FaultPlan {
+            inner: Arc::new(FaultInner { panic_every: nth, max_panics: 1, ..Self::quiet(seed) }),
+        }
+    }
+
+    /// Kill the dispatching shard thread (exactly once) on the `nth` tile
+    /// dispatch, 1-indexed.
+    pub fn shard_death_at(seed: u64, nth: u64) -> FaultPlan {
+        assert!(nth > 0, "dispatch counts are 1-indexed");
+        FaultPlan {
+            inner: Arc::new(FaultInner { die_every: nth, max_deaths: 1, ..Self::quiet(seed) }),
+        }
+    }
+
+    /// Drop (exactly once) the reply of the `nth` completed tile,
+    /// 1-indexed.
+    pub fn drop_reply_at(seed: u64, nth: u64) -> FaultPlan {
+        assert!(nth > 0, "completion counts are 1-indexed");
+        FaultPlan {
+            inner: Arc::new(FaultInner { drop_every: nth, max_drops: 1, ..Self::quiet(seed) }),
+        }
+    }
+
+    /// Stall every `every`-th dispatch by `stall` (timing-only).
+    pub fn stall_every(seed: u64, every: u64, stall: Duration) -> FaultPlan {
+        assert!(every > 0, "dispatch counts are 1-indexed");
+        FaultPlan {
+            inner: Arc::new(FaultInner { stall_every: every, stall, ..Self::quiet(seed) }),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.inner.seed
+    }
+
+    /// The pump-loop stall this plan injects per batch window, if any.
+    pub fn queue_stall(&self) -> Option<Duration> {
+        self.inner.queue_stall
+    }
+
+    /// Consult the plan at one tile dispatch (shard side). Advances the
+    /// pool-wide dispatch counter.
+    pub(crate) fn on_dispatch(&self) -> FaultAction {
+        let i = &*self.inner;
+        let n = i.dispatched.fetch_add(1, Ordering::Relaxed) + 1;
+        if i.die_every != 0 && n % i.die_every == 0 && bump_below(&i.deaths, i.max_deaths) {
+            return FaultAction::Die;
+        }
+        if i.panic_every != 0 && n % i.panic_every == 0 && bump_below(&i.panics, i.max_panics) {
+            return FaultAction::Panic;
+        }
+        if i.stall_every != 0 && n % i.stall_every == 0 {
+            return FaultAction::Stall(i.stall);
+        }
+        FaultAction::None
+    }
+
+    /// Consult the plan after one tile completed (shard side): `true`
+    /// means the shard must *drop* the reply instead of sending it, and
+    /// the caller-side recovery pass must make the result whole again.
+    pub(crate) fn take_drop_reply(&self) -> bool {
+        let i = &*self.inner;
+        if i.drop_every == 0 {
+            return false;
+        }
+        let n = i.completed.fetch_add(1, Ordering::Relaxed) + 1;
+        n % i.drop_every == 0 && bump_below(&i.drops, i.max_drops)
+    }
+
+    /// Injected panics that actually fired so far.
+    pub fn panics_fired(&self) -> u64 {
+        self.inner.panics.load(Ordering::Relaxed)
+    }
+
+    /// Injected shard-thread deaths that actually fired so far.
+    pub fn deaths_fired(&self) -> u64 {
+        self.inner.deaths.load(Ordering::Relaxed)
+    }
+
+    /// Injected reply drops that actually fired so far.
+    pub fn drops_fired(&self) -> u64 {
+        self.inner.drops.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_at_fires_exactly_once_at_the_scheduled_dispatch() {
+        let plan = FaultPlan::panic_at(7, 3);
+        let actions: Vec<FaultAction> = (0..9).map(|_| plan.on_dispatch()).collect();
+        assert_eq!(actions[2], FaultAction::Panic, "fires on the 3rd dispatch");
+        assert_eq!(
+            actions.iter().filter(|a| **a == FaultAction::Panic).count(),
+            1,
+            "max_panics bounds recurrence even though 6 and 9 are also multiples"
+        );
+        assert_eq!(plan.panics_fired(), 1);
+    }
+
+    #[test]
+    fn clones_share_one_schedule() {
+        let plan = FaultPlan::panic_at(7, 2);
+        let other = plan.clone();
+        assert_eq!(plan.on_dispatch(), FaultAction::None);
+        // The clone sees the shared counter: its first call is dispatch 2.
+        assert_eq!(other.on_dispatch(), FaultAction::Panic);
+        assert_eq!(plan.panics_fired(), 1);
+    }
+
+    #[test]
+    fn drop_reply_counts_completions_not_dispatches() {
+        let plan = FaultPlan::drop_reply_at(7, 2);
+        assert_eq!(plan.on_dispatch(), FaultAction::None);
+        assert_eq!(plan.on_dispatch(), FaultAction::None);
+        assert!(!plan.take_drop_reply());
+        assert!(plan.take_drop_reply(), "2nd completion drops");
+        assert!(!plan.take_drop_reply(), "bounded by max_drops");
+        assert_eq!(plan.drops_fired(), 1);
+    }
+
+    #[test]
+    fn chaos_profile_is_deterministic_in_the_seed() {
+        let a = FaultPlan::chaos(42);
+        let b = FaultPlan::chaos(42);
+        let seq_a: Vec<FaultAction> = (0..200).map(|_| a.on_dispatch()).collect();
+        let seq_b: Vec<FaultAction> = (0..200).map(|_| b.on_dispatch()).collect();
+        assert_eq!(seq_a, seq_b, "same seed, same schedule");
+        assert!(seq_a.iter().any(|x| *x == FaultAction::Panic));
+        assert!(seq_a.iter().any(|x| *x == FaultAction::Die));
+        assert!(seq_a.iter().any(|x| matches!(x, FaultAction::Stall(_))));
+        assert!(a.queue_stall().is_some());
+        let c = FaultPlan::chaos(43);
+        let seq_c: Vec<FaultAction> = (0..200).map(|_| c.on_dispatch()).collect();
+        assert_ne!(seq_a, seq_c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn stall_plan_only_stalls() {
+        let plan = FaultPlan::stall_every(1, 2, Duration::from_micros(50));
+        assert_eq!(plan.on_dispatch(), FaultAction::None);
+        assert_eq!(plan.on_dispatch(), FaultAction::Stall(Duration::from_micros(50)));
+        assert_eq!(plan.panics_fired() + plan.deaths_fired() + plan.drops_fired(), 0);
+    }
+}

@@ -57,21 +57,39 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
-    pub responses_points: AtomicU64,
     pub points: AtomicU64,
     pub jobs: AtomicU64,
     pub job_points: AtomicU64,
     pub backend_errors: AtomicU64,
     pub simulated_cycles: AtomicU64,
+    /// Replies actually delivered to request channels — successful
+    /// responses *and* explicit rejections. Graceful drain
+    /// (`Coordinator::close`) waits for `responses == requests`; the
+    /// exactly-one-reply invariant is `responses ≤ requests` at every
+    /// instant and equality at quiescence.
+    pub responses: AtomicU64,
     /// Requests shed by the batcher because their deadline expired while
     /// they waited in the admission queue (admission control).
     pub shed: AtomicU64,
     /// Requests fast-rejected at `try_submit` because the admission queue
     /// was full.
     pub rejected: AtomicU64,
+    /// Requests fast-rejected at `try_submit` because the coordinator was
+    /// shutting down (queue closed) — distinct from `rejected` so
+    /// capacity reports can separate overload from shutdown.
+    pub closed: AtomicU64,
     /// Requests that completed, but only after their deadline had passed
     /// (served late rather than shed — the tail the TTL should bound).
     pub deadline_missed: AtomicU64,
+    /// Supervised tile crashes in the M1 pool (real or injected), folded
+    /// in from [`super::PoolHealth`] by the workers.
+    pub shard_crashes: AtomicU64,
+    /// Warm restarts of M1 pool shards.
+    pub shard_restarts: AtomicU64,
+    /// Tiles re-run on a recovery shard after a shard death / lost reply.
+    pub tiles_redispatched: AtomicU64,
+    /// Slowest single pool recovery pass observed, in µs (gauge, max).
+    pub recovery_max_us: AtomicU64,
     /// Queue wait per request (submit → batch formation).
     pub queue_wait: Histogram,
     /// Backend execution per job.
@@ -87,9 +105,15 @@ pub struct MetricsSnapshot {
     pub job_points: u64,
     pub backend_errors: u64,
     pub simulated_cycles: u64,
+    pub responses: u64,
     pub shed: u64,
     pub rejected: u64,
+    pub closed: u64,
     pub deadline_missed: u64,
+    pub shard_crashes: u64,
+    pub shard_restarts: u64,
+    pub tiles_redispatched: u64,
+    pub recovery_max_us: u64,
     pub queue_wait_mean_us: f64,
     pub queue_wait_p99_us: u64,
     pub execute_mean_us: f64,
@@ -113,6 +137,28 @@ impl Metrics {
         }
     }
 
+    /// Fold a per-worker pool-health *delta* into the service counters
+    /// (the cumulative [`super::PoolHealth`] snapshots are diffed by the
+    /// worker so several workers can share one `Metrics`).
+    pub fn record_pool_delta(
+        &self,
+        crashes: u64,
+        restarts: u64,
+        redispatched: u64,
+        recovery_max_us: u64,
+    ) {
+        if crashes > 0 {
+            self.shard_crashes.fetch_add(crashes, Ordering::Relaxed);
+        }
+        if restarts > 0 {
+            self.shard_restarts.fetch_add(restarts, Ordering::Relaxed);
+        }
+        if redispatched > 0 {
+            self.tiles_redispatched.fetch_add(redispatched, Ordering::Relaxed);
+        }
+        self.recovery_max_us.fetch_max(recovery_max_us, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -121,9 +167,15 @@ impl Metrics {
             job_points: self.job_points.load(Ordering::Relaxed),
             backend_errors: self.backend_errors.load(Ordering::Relaxed),
             simulated_cycles: self.simulated_cycles.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            shard_crashes: self.shard_crashes.load(Ordering::Relaxed),
+            shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
+            tiles_redispatched: self.tiles_redispatched.load(Ordering::Relaxed),
+            recovery_max_us: self.recovery_max_us.load(Ordering::Relaxed),
             queue_wait_mean_us: self.queue_wait.mean_us(),
             queue_wait_p99_us: self.queue_wait.quantile_us(0.99),
             execute_mean_us: self.execute.mean_us(),
@@ -145,12 +197,14 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
-             admission:  shed={} rejected={} deadline_missed={}\n\
+            "requests={} responses={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
+             admission:  shed={} rejected={} deadline_missed={} closed={}\n\
+             supervision: crashes={} restarts={} redispatched={} recovery_max={}us\n\
              queue_wait: mean={:.1}us p99<={}us\n\
              execute:    mean={:.1}us p50<={}us p99<={}us\n\
              simulated M1 cycles={}",
             self.requests,
+            self.responses,
             self.points,
             self.jobs,
             self.mean_batch_points(),
@@ -158,6 +212,11 @@ impl MetricsSnapshot {
             self.shed,
             self.rejected,
             self.deadline_missed,
+            self.closed,
+            self.shard_crashes,
+            self.shard_restarts,
+            self.tiles_redispatched,
+            self.recovery_max_us,
             self.queue_wait_mean_us,
             self.queue_wait_p99_us,
             self.execute_mean_us,
@@ -216,6 +275,23 @@ mod tests {
         let s = m.snapshot();
         assert_eq!((s.shed, s.rejected, s.deadline_missed), (3, 2, 1));
         assert!(s.render().contains("shed=3 rejected=2 deadline_missed=1"));
+    }
+
+    #[test]
+    fn supervision_counters_flow_to_snapshot_and_render() {
+        let m = Metrics::default();
+        m.responses.fetch_add(5, Ordering::Relaxed);
+        m.closed.fetch_add(2, Ordering::Relaxed);
+        m.record_pool_delta(3, 3, 7, 450);
+        m.record_pool_delta(0, 0, 0, 120); // gauge keeps the max
+        let s = m.snapshot();
+        assert_eq!(s.responses, 5);
+        assert_eq!(s.closed, 2);
+        assert_eq!((s.shard_crashes, s.shard_restarts), (3, 3));
+        assert_eq!(s.tiles_redispatched, 7);
+        assert_eq!(s.recovery_max_us, 450);
+        assert!(s.render().contains("crashes=3 restarts=3 redispatched=7 recovery_max=450us"));
+        assert!(s.render().contains("closed=2"));
     }
 
     #[test]

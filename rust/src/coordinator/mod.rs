@@ -18,6 +18,14 @@
 //!                        (PJRT executors are thread-pinned) and executes
 //!                        tile jobs, scattering results back per request
 //!                              │
+//!                        shard supervision (M1 backend): tile panics are
+//!                        caught, the shard warm-restarts from its boot
+//!                        snapshot and the tile re-runs; dead shard
+//!                        threads are respawned and their abandoned tiles
+//!                        re-dispatched on a recovery shard — results stay
+//!                        bit-identical and exactly-one-reply holds even
+//!                        under injected chaos (`FaultPlan`)
+//!                              │
 //!  clients ◄──per-request channel── ServeResult: response + timing, or
 //!                                   an explicit Rejection (shed/full)
 //! ```
@@ -38,6 +46,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod pool;
 pub mod queue;
@@ -46,8 +55,9 @@ pub mod server;
 
 pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
 pub use batcher::{Batcher, BatcherConfig};
+pub use faults::FaultPlan;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use pool::{RoutineSpec, TileOutcome, TilePool, TileRequest};
+pub use pool::{PoolHealth, RoutineSpec, TileOutcome, TilePool, TileRequest};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use request::{RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse};
 pub use server::{BackendChoice, Coordinator, CoordinatorConfig};

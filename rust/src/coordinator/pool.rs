@@ -1,4 +1,4 @@
-//! # Sharded tile-execution pool (§Perf)
+//! # Sharded tile-execution pool (§Perf, §Robustness)
 //!
 //! The M1 mappings decompose every workload into independent 64-point
 //! tiles (one full 8×8 RC-array configuration); the serial `M1SimBackend`
@@ -31,10 +31,35 @@
 //! simply claims fewer chunks) without per-tile channel traffic or a
 //! per-shard deque.
 //!
+//! ## Self-healing supervision (§Robustness)
+//!
+//! Shards are supervised, so a crash inside a tile — a simulator bug, or
+//! an injected [`FaultPlan`] fault — degrades capacity instead of losing
+//! work or wedging the caller:
+//!
+//! * **crash containment**: each tile runs under `catch_unwind`; on panic
+//!   the shard dumps a repro artifact ([`crate::replay`], opt-in via
+//!   `MORPHO_REPRO_DIR`), **warm-restarts** its simulator from the
+//!   pristine boot snapshot taken at construction, and retries the tile
+//!   once fault-free;
+//! * **shard death**: if a shard thread dies outright, its claimed but
+//!   unfinished tiles never reply. The caller notices the reply channel
+//!   closing short of `n` results, re-runs exactly the missing tiles on a
+//!   dedicated fault-free **recovery shard**, and respawns dead threads
+//!   before the next batch;
+//! * **lost replies** take the same recovery path — every tile of every
+//!   batch completes **exactly once** from the caller's point of view.
+//!
+//! Because tiles are pure functions of their inputs (fresh `reset_chip`
+//! per tile), a re-run is bit-identical to the lost run, so the
+//! determinism contract below survives arbitrary crash/restart
+//! interleavings. [`TilePool::health`] exposes the crash/restart/
+//! redispatch counters the coordinator folds into its metrics.
+//!
 //! ## Determinism contract
 //!
 //! Pooled execution is **bit-for-bit identical** to serial execution,
-//! independent of shard count and interleaving:
+//! independent of shard count, interleaving and injected faults:
 //!
 //! * every tile runs on a freshly `reset_chip`-ed system, so a tile's
 //!   result depends only on its own inputs — never on which shard ran it
@@ -60,12 +85,19 @@
 //! [`BroadcastSchedule`]: crate::morphosys::BroadcastSchedule
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::mapping::{runner::run_routine_on, MappedRoutine, PointTransformMapping, VecVecMapping};
+use super::faults::{FaultAction, FaultPlan};
+use crate::mapping::{
+    runner::run_routine_on, runner::stage_routine3_on, MappedRoutine, PointTransformMapping,
+    VecVecMapping, RESULT_ADDR,
+};
 use crate::morphosys::{AluOp, ExecutionReport, M1System};
+use crate::replay::ReproArtifact;
 
 /// Compact, hashable description of the routine a tile runs. Shards
 /// compile specs on demand and cache the result, so a transform repeated
@@ -119,18 +151,59 @@ const ROUTINE_CACHE_MAX: usize = 512;
 /// its spec, so which shard compiles it first cannot change any result.
 type SharedRoutines = Arc<Mutex<HashMap<RoutineSpec, Arc<MappedRoutine>>>>;
 
+/// Shared supervision counters, written by shards and the caller-side
+/// recovery pass, read out as a [`PoolHealth`] snapshot.
+#[derive(Debug, Default)]
+struct PoolStats {
+    crashes: AtomicU64,
+    restarts: AtomicU64,
+    redispatched: AtomicU64,
+    recovery_max_us: AtomicU64,
+}
+
+/// Snapshot of a pool's supervision counters (cumulative since
+/// construction). The coordinator's workers diff successive snapshots
+/// into the serving metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolHealth {
+    /// Tile executions that panicked (real bugs or injected faults).
+    pub crashes: u64,
+    /// Warm restarts of a shard simulator from its boot snapshot.
+    pub restarts: u64,
+    /// Tiles re-run on the recovery shard after a shard death or a lost
+    /// reply.
+    pub redispatched: u64,
+    /// Slowest single caller-side recovery pass observed, in µs — the
+    /// latency cost of a shard death under load.
+    pub recovery_max_us: u64,
+}
+
 /// Per-shard execution state: a private simulator plus the private fast
 /// path over the pool-shared routine cache. Never shared between threads.
 struct Shard {
     sys: M1System,
+    /// Pristine boot-state snapshot taken at construction; crash recovery
+    /// warm-restarts the simulator from this image instead of paying a
+    /// full reconstruction.
+    warm: Vec<u8>,
+    async_dma: bool,
+    faults: Option<FaultPlan>,
+    stats: Arc<PoolStats>,
     /// Thread-private hits over `shared` (no locking once warm).
     routines: HashMap<RoutineSpec, Arc<MappedRoutine>>,
     shared: SharedRoutines,
 }
 
 impl Shard {
-    fn new(shared: SharedRoutines, async_dma: bool) -> Shard {
-        Shard { sys: M1System::with_dma_mode(async_dma), routines: HashMap::new(), shared }
+    fn new(
+        shared: SharedRoutines,
+        async_dma: bool,
+        faults: Option<FaultPlan>,
+        stats: Arc<PoolStats>,
+    ) -> Shard {
+        let sys = M1System::with_dma_mode(async_dma);
+        let warm = sys.snapshot();
+        Shard { sys, warm, async_dma, faults, stats, routines: HashMap::new(), shared }
     }
 
     /// Compiled routine for a spec: local probe, then the shared map
@@ -159,6 +232,86 @@ impl Shard {
         let out = run_routine_on(&mut self.sys, &routine, &tile.u, tile.v.as_deref());
         TileOutcome { result: out.result, report: out.report }
     }
+
+    /// Run one tile under crash supervision, applying an injected fault.
+    /// On panic (injected or real): dump a repro artifact, warm-restart
+    /// the simulator and retry once fault-free — bit-identical, because a
+    /// tile is a pure function of its inputs. `None` means even the
+    /// fault-free retry crashed (the shard restarts and survives; the
+    /// caller's recovery pass owns the tile).
+    fn run_tile_supervised(&mut self, tile: &TileRequest, action: FaultAction) -> Option<TileOutcome> {
+        if let FaultAction::Stall(d) = action {
+            std::thread::sleep(d);
+        }
+        let inject = action == FaultAction::Panic;
+        let first = catch_unwind(AssertUnwindSafe(|| {
+            if inject {
+                panic!("injected shard fault (seed-scheduled)");
+            }
+            self.run_tile(tile)
+        }));
+        match first {
+            Ok(outcome) => Some(outcome),
+            Err(_) => {
+                self.stats.crashes.fetch_add(1, Ordering::Relaxed);
+                self.dump_crash_artifact(tile);
+                self.restart();
+                match catch_unwind(AssertUnwindSafe(|| self.run_tile(tile))) {
+                    Ok(outcome) => Some(outcome),
+                    Err(_) => {
+                        // Double fault: restart again and hand the tile to
+                        // the caller-side recovery pass.
+                        self.restart();
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Warm-restart the simulator from the boot snapshot (full rebuild if
+    /// even the snapshot image is unusable).
+    fn restart(&mut self) {
+        if self.sys.restore(&self.warm).is_err() {
+            self.sys = M1System::with_dma_mode(self.async_dma);
+        }
+        self.stats.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Best-effort repro-artifact dump for a crashed tile (no-op unless
+    /// `MORPHO_REPRO_DIR` is set — see [`crate::replay`]). Stages the tile
+    /// on a *fresh* simulator so the artifact's pre-state is exactly what
+    /// a clean run would start from, then records the per-step digests.
+    /// Guarded by `catch_unwind`: a failing dump never takes down the
+    /// supervisor that is handling the original crash.
+    fn dump_crash_artifact(&mut self, tile: &TileRequest) {
+        let Some(dir) = crate::replay::dump_dir() else { return };
+        let seed = self.faults.as_ref().map(|f| f.seed()).unwrap_or(0);
+        let routine = self.routine_for(tile.spec);
+        let async_dma = self.async_dma;
+        let summary = format!(
+            "shard crash while running {:?} ({} elems, async_dma={async_dma}, fault seed {seed})",
+            tile.spec,
+            tile.u.len(),
+        );
+        let dumped = catch_unwind(AssertUnwindSafe(|| -> crate::Result<std::path::PathBuf> {
+            let mut sys = M1System::with_dma_mode(async_dma);
+            stage_routine3_on(&mut sys, &routine, &tile.u, tile.v.as_deref(), None);
+            let pre = sys.snapshot();
+            let artifact = ReproArtifact::capture(
+                seed,
+                summary,
+                routine.program.clone(),
+                pre,
+                RESULT_ADDR,
+                Vec::new(),
+            )?;
+            artifact.write_into(&dir)
+        }));
+        if let Ok(Ok(path)) = dumped {
+            eprintln!("m1-shard: crash repro artifact dumped to {}", path.display());
+        }
+    }
 }
 
 /// One `run` call's worth of work, shared read-only across shards; `next`
@@ -184,8 +337,8 @@ enum Exec {
     Threads { feeds: Vec<mpsc::Sender<Batch>>, handles: Vec<JoinHandle<()>> },
 }
 
-/// The sharded tile-execution pool. See the module docs for the design
-/// and the determinism contract.
+/// The sharded tile-execution pool. See the module docs for the design,
+/// the determinism contract and the supervision model.
 pub struct TilePool {
     shards: usize,
     /// Every shard simulator runs in async-DMA mode (§Perf PR 5): tiles
@@ -197,6 +350,13 @@ pub struct TilePool {
     /// The cross-shard routine cache every shard of this pool fills and
     /// reads (see [`SharedRoutines`]).
     routines: SharedRoutines,
+    /// Test-only injected-fault schedule shared with every shard; `None`
+    /// on every production path.
+    faults: Option<FaultPlan>,
+    stats: Arc<PoolStats>,
+    /// Caller-thread shard that re-runs tiles lost to shard deaths or
+    /// dropped replies. Always fault-free: recovery must terminate.
+    recovery: Box<Shard>,
 }
 
 impl TilePool {
@@ -213,34 +373,48 @@ impl TilePool {
     /// contract is unchanged within a mode: pooled output and accounting
     /// are bit-for-bit serial execution's, for any shard count.
     pub fn with_mode(shards: usize, async_dma: bool) -> TilePool {
+        Self::with_faults(shards, async_dma, None)
+    }
+
+    /// As [`TilePool::with_mode`], with a deterministic fault-injection
+    /// schedule every shard consults at each dispatch (test/chaos only —
+    /// see [`FaultPlan`]). Injected faults exercise the supervision paths
+    /// without changing any result.
+    pub fn with_faults(shards: usize, async_dma: bool, faults: Option<FaultPlan>) -> TilePool {
         let shards = shards.max(1);
         let routines: SharedRoutines = Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(PoolStats::default());
+        let recovery = Box::new(Shard::new(routines.clone(), async_dma, None, stats.clone()));
         if shards == 1 {
+            let inline =
+                Box::new(Shard::new(routines.clone(), async_dma, faults.clone(), stats.clone()));
             return TilePool {
                 shards,
                 async_dma,
-                exec: Exec::Inline(Box::new(Shard::new(routines.clone(), async_dma))),
+                exec: Exec::Inline(inline),
                 routines,
+                faults,
+                stats,
+                recovery,
             };
         }
         let mut feeds = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for s in 0..shards {
-            let (tx, rx) = mpsc::channel::<Batch>();
+            let (tx, handle) =
+                spawn_shard(s, routines.clone(), async_dma, faults.clone(), stats.clone());
             feeds.push(tx);
-            let shared = routines.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("m1-shard-{s}"))
-                .spawn(move || {
-                    let mut shard = Shard::new(shared, async_dma);
-                    while let Ok(batch) = rx.recv() {
-                        drain_batch(&mut shard, &batch);
-                    }
-                })
-                .expect("spawn tile-pool shard");
             handles.push(handle);
         }
-        TilePool { shards, async_dma, exec: Exec::Threads { feeds, handles }, routines }
+        TilePool {
+            shards,
+            async_dma,
+            exec: Exec::Threads { feeds, handles },
+            routines,
+            faults,
+            stats,
+            recovery,
+        }
     }
 
     pub fn shards(&self) -> usize {
@@ -258,38 +432,116 @@ impl TilePool {
         self.routines.lock().unwrap().len()
     }
 
-    /// Execute a tile plan. Outcomes are returned in tile order; see the
-    /// module docs for the determinism contract.
+    /// Cumulative supervision counters (see [`PoolHealth`]).
+    pub fn health(&self) -> PoolHealth {
+        PoolHealth {
+            crashes: self.stats.crashes.load(Ordering::Relaxed),
+            restarts: self.stats.restarts.load(Ordering::Relaxed),
+            redispatched: self.stats.redispatched.load(Ordering::Relaxed),
+            recovery_max_us: self.stats.recovery_max_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute a tile plan. Outcomes are returned in tile order, each tile
+    /// completing **exactly once** even across shard crashes, deaths and
+    /// lost replies; see the module docs for the determinism contract.
     pub fn run(&mut self, tiles: Vec<TileRequest>) -> Vec<TileOutcome> {
-        match &mut self.exec {
-            Exec::Inline(shard) => tiles.iter().map(|t| shard.run_tile(t)).collect(),
-            Exec::Threads { feeds, .. } => {
-                let n = tiles.len();
-                if n == 0 {
-                    return Vec::new();
-                }
-                // Chunks small enough that every shard claims several
-                // (self-balancing), large enough to amortize the claim.
-                let chunk = (n / (feeds.len() * 4)).max(1);
-                let tasks = Arc::new(TaskSet { tiles, next: AtomicUsize::new(0), chunk });
-                let (tx, rx) = mpsc::channel();
-                for feed in feeds.iter() {
-                    // A send only fails if a shard died; the recv below
-                    // surfaces that as a panic with context.
-                    let _ = feed.send(Batch { tasks: tasks.clone(), reply: tx.clone() });
-                }
-                drop(tx);
-                let mut out: Vec<Option<TileOutcome>> = Vec::with_capacity(n);
-                out.resize_with(n, || None);
-                for _ in 0..n {
-                    let (i, outcome) =
-                        rx.recv().expect("tile-pool shard died mid-batch");
-                    out[i] = Some(outcome);
-                }
-                out.into_iter()
-                    .map(|o| o.expect("every tile completes exactly once"))
-                    .collect()
+        let faults = self.faults.clone();
+        if let Exec::Inline(shard) = &mut self.exec {
+            return tiles
+                .iter()
+                .map(|t| {
+                    let mut action =
+                        faults.as_ref().map(|f| f.on_dispatch()).unwrap_or(FaultAction::None);
+                    if action == FaultAction::Die {
+                        // There is no thread to kill inline; a death
+                        // injection degrades to a supervised crash.
+                        action = FaultAction::Panic;
+                    }
+                    shard
+                        .run_tile_supervised(t, action)
+                        .unwrap_or_else(|| shard.run_tile(t))
+                })
+                .collect();
+        }
+        let n = tiles.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<TileOutcome>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let mut filled = 0usize;
+        let tasks;
+        {
+            let Exec::Threads { feeds, .. } = &mut self.exec else { unreachable!() };
+            // Chunks small enough that every shard claims several
+            // (self-balancing), large enough to amortize the claim.
+            let chunk = (n / (feeds.len() * 4)).max(1);
+            tasks = Arc::new(TaskSet { tiles, next: AtomicUsize::new(0), chunk });
+            let (tx, rx) = mpsc::channel();
+            for feed in feeds.iter() {
+                // A send only fails if that shard is already dead; its
+                // tiles reach the recovery pass below either way.
+                let _ = feed.send(Batch { tasks: tasks.clone(), reply: tx.clone() });
             }
+            drop(tx);
+            while filled < n {
+                match rx.recv() {
+                    Ok((i, outcome)) => {
+                        if out[i].is_none() {
+                            out[i] = Some(outcome);
+                            filled += 1;
+                        }
+                    }
+                    // Every shard finished the batch (or died) with
+                    // replies still missing: recover below.
+                    Err(_) => break,
+                }
+            }
+        }
+        if filled < n {
+            let t0 = Instant::now();
+            for (i, slot) in out.iter_mut().enumerate() {
+                if slot.is_some() {
+                    continue;
+                }
+                let tile = &tasks.tiles[i];
+                let outcome = self
+                    .recovery
+                    .run_tile_supervised(tile, FaultAction::None)
+                    .unwrap_or_else(|| self.recovery.run_tile(tile));
+                self.stats.redispatched.fetch_add(1, Ordering::Relaxed);
+                *slot = Some(outcome);
+            }
+            self.stats
+                .recovery_max_us
+                .fetch_max(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            self.respawn_dead_shards();
+        }
+        out.into_iter()
+            .map(|o| o.expect("every tile completes exactly once"))
+            .collect()
+    }
+
+    /// Replace any shard thread that has exited (injected `Die` faults or
+    /// a real thread death) with a fresh one on the same feed slot, so
+    /// capacity recovers before the next batch.
+    fn respawn_dead_shards(&mut self) {
+        let Exec::Threads { feeds, handles } = &mut self.exec else { return };
+        for s in 0..handles.len() {
+            if !handles[s].is_finished() {
+                continue;
+            }
+            let (tx, handle) = spawn_shard(
+                s,
+                self.routines.clone(),
+                self.async_dma,
+                self.faults.clone(),
+                self.stats.clone(),
+            );
+            feeds[s] = tx;
+            let old = std::mem::replace(&mut handles[s], handle);
+            let _ = old.join();
         }
     }
 
@@ -335,20 +587,57 @@ impl Drop for TilePool {
     }
 }
 
+/// Spawn one shard worker thread; returns its feed plus the join handle.
+fn spawn_shard(
+    s: usize,
+    shared: SharedRoutines,
+    async_dma: bool,
+    faults: Option<FaultPlan>,
+    stats: Arc<PoolStats>,
+) -> (mpsc::Sender<Batch>, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<Batch>();
+    let handle = std::thread::Builder::new()
+        .name(format!("m1-shard-{s}"))
+        .spawn(move || {
+            let mut shard = Shard::new(shared, async_dma, faults, stats);
+            while let Ok(batch) = rx.recv() {
+                if !drain_batch(&mut shard, &batch) {
+                    return; // injected shard death: abandon the feed
+                }
+            }
+        })
+        .expect("spawn tile-pool shard");
+    (tx, handle)
+}
+
 /// Shard side of a batch: claim chunks of tile indices until the cursor
-/// passes the end, running each tile and replying with its index.
-fn drain_batch(shard: &mut Shard, batch: &Batch) {
+/// passes the end, running each tile supervised and replying with its
+/// index. Returns `false` when an injected `Die` fault kills the shard —
+/// the thread must exit, abandoning the rest of its claimed chunk (the
+/// caller's recovery pass picks those tiles up).
+fn drain_batch(shard: &mut Shard, batch: &Batch) -> bool {
     let tasks = &batch.tasks;
     loop {
         let start = tasks.next.fetch_add(tasks.chunk, Ordering::Relaxed);
         if start >= tasks.tiles.len() {
-            return;
+            return true;
         }
         let end = (start + tasks.chunk).min(tasks.tiles.len());
         for i in start..end {
-            let outcome = shard.run_tile(&tasks.tiles[i]);
+            let action =
+                shard.faults.as_ref().map(|f| f.on_dispatch()).unwrap_or(FaultAction::None);
+            if action == FaultAction::Die {
+                shard.stats.crashes.fetch_add(1, Ordering::Relaxed);
+                return false; // hard shard death mid-chunk
+            }
+            let Some(outcome) = shard.run_tile_supervised(&tasks.tiles[i], action) else {
+                continue; // double fault: the caller's recovery pass owns it
+            };
+            if shard.faults.as_ref().is_some_and(|f| f.take_drop_reply()) {
+                continue; // injected lost reply: recovery makes it whole
+            }
             if batch.reply.send((i, outcome)).is_err() {
-                return; // caller went away mid-batch
+                return true; // caller went away mid-batch
             }
         }
     }
@@ -357,6 +646,7 @@ fn drain_batch(shard: &mut Shard, batch: &Batch) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn add_tiles(n_tiles: usize) -> (Vec<TileRequest>, Vec<i16>) {
         let mut tiles = Vec::new();
@@ -376,6 +666,16 @@ mod tests {
 
     fn splice(outcomes: &[TileOutcome]) -> Vec<i16> {
         outcomes.iter().flat_map(|o| o.result.iter().copied()).collect()
+    }
+
+    /// Full comparison of a faulted run against the fault-free baseline:
+    /// results, cycles, slots — the bit-identical contract.
+    fn assert_identical(out: &[TileOutcome], baseline: &[TileOutcome], what: &str) {
+        assert_eq!(splice(out), splice(baseline), "{what}: results");
+        for (a, b) in out.iter().zip(baseline) {
+            assert_eq!(a.report.cycles, b.report.cycles, "{what}: cycles");
+            assert_eq!(a.report.slots, b.report.slots, "{what}: slots");
+        }
     }
 
     #[test]
@@ -513,5 +813,122 @@ mod tests {
             assert_eq!(yp[i], ys[i] - 3);
             assert_eq!(out[1].result[i], xs[i] - ys[i]);
         }
+    }
+
+    // ── supervision ────────────────────────────────────────────────────
+
+    #[test]
+    fn injected_panic_is_supervised_and_results_stay_bit_identical() {
+        let (tiles, _) = add_tiles(16);
+        let baseline = TilePool::new(1).run(tiles.clone());
+        let plan = FaultPlan::panic_at(11, 5);
+        let mut pool = TilePool::with_faults(4, false, Some(plan.clone()));
+        let out = pool.run(tiles);
+        assert_identical(&out, &baseline, "panic injection");
+        assert_eq!(plan.panics_fired(), 1, "the scheduled fault must actually fire");
+        let health = pool.health();
+        assert!(health.crashes >= 1, "crash must be counted: {health:?}");
+        assert!(health.restarts >= 1, "shard must warm-restart: {health:?}");
+    }
+
+    #[test]
+    fn inline_pool_survives_injected_panic() {
+        let (tiles, expected) = add_tiles(6);
+        let plan = FaultPlan::panic_at(3, 2);
+        let mut pool = TilePool::with_faults(1, false, Some(plan.clone()));
+        assert_eq!(splice(&pool.run(tiles)), expected);
+        assert_eq!(plan.panics_fired(), 1);
+        assert!(pool.health().restarts >= 1);
+    }
+
+    #[test]
+    fn shard_death_redispatches_the_lost_tiles_and_respawns() {
+        let (tiles, _) = add_tiles(24);
+        let baseline = TilePool::new(1).run(tiles.clone());
+        let plan = FaultPlan::shard_death_at(5, 7);
+        let mut pool = TilePool::with_faults(3, false, Some(plan.clone()));
+        let out = pool.run(tiles.clone());
+        assert_identical(&out, &baseline, "shard death");
+        assert_eq!(plan.deaths_fired(), 1);
+        let health = pool.health();
+        assert!(health.redispatched >= 1, "abandoned tiles must be re-run: {health:?}");
+        assert!(health.recovery_max_us > 0, "recovery time must be recorded");
+        // The dead shard was respawned: the pool serves the next batch at
+        // full capacity, still bit-identical.
+        let again = pool.run(tiles);
+        assert_identical(&again, &baseline, "post-respawn batch");
+    }
+
+    #[test]
+    fn dropped_replies_are_recovered_exactly_once() {
+        let (tiles, _) = add_tiles(12);
+        let baseline = TilePool::new(1).run(tiles.clone());
+        let plan = FaultPlan::drop_reply_at(9, 4);
+        let mut pool = TilePool::with_faults(2, false, Some(plan.clone()));
+        let out = pool.run(tiles);
+        assert_identical(&out, &baseline, "dropped reply");
+        assert_eq!(plan.drops_fired(), 1);
+        assert!(pool.health().redispatched >= 1);
+    }
+
+    #[test]
+    fn chaos_profile_stays_bit_identical_under_compound_faults() {
+        // Panics, deaths, stalls and drops all firing in one batch — the
+        // whole supervision stack at once, and the result must still be
+        // exactly the fault-free serial result, every tile exactly once.
+        let (tiles, _) = add_tiles(64);
+        let baseline = TilePool::new(1).run(tiles.clone());
+        let plan = FaultPlan::chaos(0xC0FFEE);
+        let mut pool = TilePool::with_faults(4, false, Some(plan.clone()));
+        let out = pool.run(tiles.clone());
+        assert_identical(&out, &baseline, "chaos");
+        assert!(
+            plan.panics_fired() + plan.deaths_fired() + plan.drops_fired() > 0,
+            "chaos must actually inject something over 64 dispatches"
+        );
+        // And the pool keeps serving after the storm.
+        assert_identical(&pool.run(tiles), &baseline, "post-chaos batch");
+    }
+
+    #[test]
+    fn stall_faults_change_timing_only() {
+        let (tiles, _) = add_tiles(8);
+        let baseline = TilePool::new(1).run(tiles.clone());
+        let plan = FaultPlan::stall_every(3, 2, Duration::from_micros(200));
+        let mut pool = TilePool::with_faults(2, false, Some(plan));
+        let out = pool.run(tiles);
+        assert_identical(&out, &baseline, "stalls");
+        let health = pool.health();
+        assert_eq!(health.crashes, 0);
+        assert_eq!(health.restarts, 0);
+    }
+
+    #[test]
+    fn crash_dumps_a_replayable_repro_artifact() {
+        // Opt into artifact dumping via the env knob, crash one tile, and
+        // check the artifact replays cleanly to its recorded digests.
+        let dir = std::env::temp_dir().join(format!("m1-repro-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("MORPHO_REPRO_DIR", &dir);
+        let (tiles, expected) = add_tiles(4);
+        let plan = FaultPlan::panic_at(99, 2);
+        let mut pool = TilePool::with_faults(1, false, Some(plan));
+        let out = pool.run(tiles);
+        std::env::remove_var("MORPHO_REPRO_DIR");
+        assert_eq!(splice(&out), expected, "results survive the crash");
+        // Other concurrently-crashing tests may dump here while the env
+        // var is set; key on the seed baked into the artifact name.
+        let artifact = std::fs::read_dir(&dir)
+            .expect("repro dir must exist")
+            .filter_map(|e| e.ok())
+            .find(|e| {
+                e.file_name().to_string_lossy().starts_with("repro-seed99-")
+            })
+            .expect("crash must dump an artifact");
+        let art = ReproArtifact::read_from(&artifact.path()).unwrap();
+        assert_eq!(art.seed, 99);
+        assert!(art.summary.contains("shard crash"));
+        assert!(art.replay().unwrap().is_match(), "artifact must reproduce cleanly");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -167,6 +167,32 @@ mod tests {
     }
 
     #[test]
+    fn try_push_distinguishes_closed_from_full() {
+        // The two rejection causes must stay distinct all the way up the
+        // stack: `Full` is overload (caller may retry / shed load),
+        // `Closed` is shutdown (retrying is pointless). Closed wins even
+        // when the queue is also full, and the item comes back intact in
+        // both cases.
+        let q = BoundedQueue::new(1);
+        q.try_push(10).unwrap();
+        match q.try_push(11) {
+            Err((11, PushError::Full)) => {}
+            other => panic!("open+full must report Full, got {other:?}"),
+        }
+        q.close();
+        match q.try_push(12) {
+            Err((12, PushError::Closed)) => {}
+            other => panic!("closed+full must report Closed, got {other:?}"),
+        }
+        // Drain below capacity: still Closed, never Full.
+        assert_eq!(q.pop(), Some(10));
+        match q.try_push(13) {
+            Err((13, PushError::Closed)) => {}
+            other => panic!("closed+empty must report Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn close_drains_then_none() {
         let q = BoundedQueue::new(4);
         q.push(1).unwrap();

@@ -12,6 +12,7 @@ use crate::graphics::Transform;
 
 use super::backend::{apply_native, Backend, M1SimBackend, NativeBackend, XlaBackend};
 use super::batcher::{Batcher, BatcherConfig, TileJob};
+use super::faults::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::queue::{BoundedQueue, PopResult, PushError};
 use super::request::{
@@ -57,6 +58,13 @@ pub struct CoordinatorConfig {
     /// control); one that completes late is counted `deadline_missed`.
     /// `None` (the default) disables deadlines entirely.
     pub default_ttl: Option<Duration>,
+    /// Deterministic fault-injection schedule shared by every `M1Sim`
+    /// worker's tile pool (chaos/test only — see [`FaultPlan`]). Injected
+    /// shard panics, deaths, stalls and dropped replies exercise the
+    /// supervision paths; results stay bit-identical and every admitted
+    /// request still gets exactly one reply. `None` (the default, and the
+    /// only sensible production value) makes all injection code dormant.
+    pub fault_plan: Option<FaultPlan>,
     pub batcher: BatcherConfig,
 }
 
@@ -70,6 +78,7 @@ impl Default for CoordinatorConfig {
             m1_shards: 1,
             m1_async_dma: false,
             default_ttl: None,
+            fault_plan: None,
             batcher: BatcherConfig::default(),
         }
     }
@@ -98,9 +107,11 @@ impl Coordinator {
             let job_q = job_q.clone();
             let metrics = metrics.clone();
             let batcher = Batcher::new(config.batcher);
+            // Injected upstream stall per batch window (chaos only).
+            let stall = config.fault_plan.as_ref().and_then(|f| f.queue_stall());
             threads.push(std::thread::Builder::new().name("morpho-pump".into()).spawn(
                 move || {
-                    pump_loop(&submit_q, &job_q, &metrics, &batcher);
+                    pump_loop(&submit_q, &job_q, &metrics, &batcher, stall);
                     job_q.close();
                 },
             )?);
@@ -113,6 +124,7 @@ impl Coordinator {
             let choice = config.backend;
             let m1_shards = config.m1_shards;
             let m1_async_dma = config.m1_async_dma;
+            let faults = config.fault_plan.clone();
             threads.push(std::thread::Builder::new().name(format!("morpho-worker-{w}")).spawn(
                 move || {
                     // Backend construction happens on the worker thread
@@ -120,7 +132,7 @@ impl Coordinator {
                     let mut backend: Box<dyn Backend> = match choice {
                         BackendChoice::Native => Box::new(NativeBackend),
                         BackendChoice::M1Sim => {
-                            Box::new(M1SimBackend::with_config(m1_shards, m1_async_dma))
+                            Box::new(M1SimBackend::with_faults(m1_shards, m1_async_dma, faults))
                         }
                         BackendChoice::Xla => match XlaBackend::discover() {
                             Ok(b) => Box::new(b),
@@ -207,6 +219,9 @@ impl Coordinator {
                 Err(Rejection { id, reason: RejectReason::QueueFull })
             }
             Err((_, PushError::Closed)) => {
+                // Distinct from `rejected`: this is shutdown, not
+                // overload — capacity reports keep the two apart.
+                self.metrics.closed.fetch_add(1, Ordering::Relaxed);
                 Err(Rejection { id, reason: RejectReason::ShuttingDown })
             }
         }
@@ -243,17 +258,32 @@ impl Coordinator {
         self.submit_q.len()
     }
 
-    /// Begin shutdown without consuming the handle: new submissions fail,
-    /// already-admitted requests drain to completion. Useful when the
-    /// coordinator is shared behind an `Arc` (threads are joined when the
-    /// last handle drops, or by [`Coordinator::shutdown`]).
+    /// Graceful shutdown without consuming the handle: new submissions
+    /// fail immediately (`ShuttingDown` rejections, counted in
+    /// `metrics.closed`), and `close` then **waits for every
+    /// already-admitted request to receive its reply** — response or
+    /// explicit rejection — before returning, so the exactly-one-reply
+    /// invariant survives shutdown. Useful when the coordinator is shared
+    /// behind an `Arc` (threads are joined when the last handle drops, or
+    /// by [`Coordinator::shutdown`]). The drain wait is bounded (~30 s)
+    /// so a wedged backend cannot hang the caller forever.
     pub fn close(&self) {
         self.submit_q.close();
+        let cap = Instant::now() + Duration::from_secs(30);
+        loop {
+            let requests = self.metrics.requests.load(Ordering::Relaxed);
+            let responses = self.metrics.responses.load(Ordering::Relaxed);
+            if (responses >= requests && self.submit_q.is_empty()) || Instant::now() >= cap {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 
-    /// Drain and stop all threads.
+    /// Drain and stop all threads (graceful: admitted requests are
+    /// answered before the queues wind down).
     pub fn shutdown(mut self) {
-        self.submit_q.close();
+        self.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -271,13 +301,19 @@ impl Drop for Coordinator {
 
 /// Batch-window loop: wait for a first request, give it `max_wait` to
 /// attract company (or until `flush_points` accumulate), then plan jobs.
+/// `stall` is the injected per-window upstream delay of a chaos run
+/// (`None` on every production path).
 fn pump_loop(
     submit_q: &BoundedQueue<PendingRequest>,
     job_q: &BoundedQueue<TileJob>,
     metrics: &Arc<Metrics>,
     batcher: &Batcher,
+    stall: Option<Duration>,
 ) {
     while let Some(first) = submit_q.pop() {
+        if let Some(d) = stall {
+            std::thread::sleep(d); // injected stalled-upstream-queue fault
+        }
         let mut window = vec![first];
         let mut points = window[0].req.points();
         let deadline = Instant::now() + batcher.config.max_wait;
@@ -304,8 +340,12 @@ fn pump_loop(
     }
 }
 
-/// Worker loop: execute jobs on the backend, scatter results.
+/// Worker loop: execute jobs on the backend, scatter results, and fold
+/// the backend's supervision-counter deltas into the service metrics
+/// (several workers share one `Metrics`, so each diffs its own backend's
+/// cumulative [`super::PoolHealth`] snapshots).
 fn worker_loop(job_q: &BoundedQueue<TileJob>, metrics: &Metrics, backend: &mut dyn Backend) {
+    let mut last_health = backend.health().unwrap_or_default();
     while let Some(mut job) = job_q.pop() {
         let params = job.params;
         let t0 = Instant::now();
@@ -321,6 +361,15 @@ fn worker_loop(job_q: &BoundedQueue<TileJob>, metrics: &Metrics, backend: &mut d
         let exec = t0.elapsed();
         metrics.record_job(job.points(), exec, cycles);
         job.scatter(backend.kind(), exec, cycles);
+        if let Some(h) = backend.health() {
+            metrics.record_pool_delta(
+                h.crashes - last_health.crashes,
+                h.restarts - last_health.restarts,
+                h.redispatched - last_health.redispatched,
+                h.recovery_max_us,
+            );
+            last_health = h;
+        }
     }
 }
 
@@ -482,6 +531,88 @@ mod tests {
         assert_eq!(serial.ys, pooled.ys);
         assert_eq!(serial.timing.simulated_cycles, pooled.timing.simulated_cycles);
         assert_eq!(pooled.timing.backend, BackendKind::M1Sim);
+    }
+
+    #[test]
+    fn closed_coordinator_counts_shutdown_rejections_distinctly() {
+        let c = native_coordinator();
+        c.close();
+        match c.try_submit(vec![1.0], vec![2.0], vec![]) {
+            Err(Rejection { reason: RejectReason::ShuttingDown, .. }) => {}
+            other => panic!("expected shutdown rejection, got {other:?}"),
+        }
+        let m = c.metrics();
+        assert_eq!(m.closed, 1, "shutdown rejections get their own counter");
+        assert_eq!(m.rejected, 0, "…and must not masquerade as overload");
+        c.shutdown();
+    }
+
+    #[test]
+    fn close_drains_every_admitted_request_before_returning() {
+        let c = native_coordinator();
+        let t = vec![Transform::Translate { tx: 1.0, ty: 0.0 }];
+        let receivers: Vec<_> = (0..16)
+            .map(|i| c.submit(vec![i as f32; 32], vec![0.0; 32], t.clone()).unwrap())
+            .collect();
+        c.close();
+        // Graceful drain: by the time close() returns, every admitted
+        // request already has its reply waiting — no recv() blocking, no
+        // dropped channels.
+        for (i, rx) in receivers.iter().enumerate() {
+            let resp = rx.try_recv().unwrap_or_else(|_| panic!("request {i} not drained"));
+            assert_eq!(resp.unwrap().xs[0], i as f32 + 1.0);
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 16);
+        assert_eq!(m.responses, 16, "exactly one reply per admitted request");
+        c.shutdown();
+    }
+
+    #[test]
+    fn chaos_fault_plan_serves_bit_identical_results_with_one_reply_each() {
+        // End-to-end supervision: a chaos plan injects shard panics,
+        // deaths and dropped replies under the M1 backend, yet every
+        // response is bit-identical to the fault-free run and every
+        // request gets exactly one reply.
+        let run = |faults: Option<FaultPlan>| {
+            let c = Coordinator::start(CoordinatorConfig {
+                backend: BackendChoice::M1Sim,
+                workers: 1,
+                m1_shards: 2,
+                fault_plan: faults,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap();
+            // 2048 points = 32 tile dispatches: enough for the chaos
+            // profile (panic_every ∈ [6,10]) to fire several times.
+            let n = 2048;
+            let xs: Vec<f32> = (0..n).map(|i| ((i % 127) as f32) - 63.0).collect();
+            let ys: Vec<f32> = (0..n).map(|i| ((i % 89) as f32) - 44.0).collect();
+            let resp = c
+                .transform_blocking(xs, ys, vec![Transform::Translate { tx: 3.0, ty: -2.0 }])
+                .unwrap();
+            let m = c.metrics();
+            c.shutdown();
+            (resp, m)
+        };
+        let (clean, _) = run(None);
+        let plan = FaultPlan::chaos(2024);
+        let (chaotic, m) = run(Some(plan.clone()));
+        assert_eq!(clean.xs, chaotic.xs, "injected faults must not change results");
+        assert_eq!(clean.ys, chaotic.ys);
+        assert_eq!(
+            clean.timing.simulated_cycles, chaotic.timing.simulated_cycles,
+            "cycle accounting is fault-independent"
+        );
+        assert!(plan.panics_fired() > 0, "chaos must fire over 32 dispatches");
+        assert!(m.shard_crashes > 0, "worker must fold pool health into metrics");
+        assert!(m.shard_restarts > 0);
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.responses, 1);
     }
 
     #[test]

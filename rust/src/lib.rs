@@ -40,6 +40,9 @@
 //!   counts, batch fill, simulated cycles/point).
 //! * [`perf`] — the reproduction harness that regenerates every table and
 //!   figure of the paper's evaluation (Tables 1–5, Figures 9–16).
+//! * [`replay`] — self-contained failure-repro artifacts: program +
+//!   pre-state snapshot + per-step state digests, replayable to the exact
+//!   first divergent instruction (`repro replay <file>`).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -52,6 +55,7 @@ pub mod loadgen;
 pub mod mapping;
 pub mod morphosys;
 pub mod perf;
+pub mod replay;
 pub mod runtime;
 pub mod testkit;
 

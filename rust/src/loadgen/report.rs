@@ -27,9 +27,24 @@ pub struct CapacityReport {
     pub rejected: u64,
     /// Served, but after their deadline.
     pub deadline_missed: u64,
+    /// Fast-rejected because the coordinator was shutting down — kept
+    /// distinct from `rejected` (overload) so the failure breakdown
+    /// separates "retry later" from "stop retrying".
+    pub closed: u64,
     /// Reply channels that died without a message — always 0 in a
-    /// correct coordinator (asserted by CI's loadgen-smoke job).
+    /// correct coordinator (asserted by CI's loadgen-smoke and
+    /// chaos-smoke jobs, fault injection included).
     pub failed: u64,
+    /// Seed of the armed fault plan, when the scenario injected faults.
+    pub fault_seed: Option<u64>,
+    /// Supervised tile crashes in the M1 pool (injected or real).
+    pub shard_crashes: u64,
+    /// Warm restarts of crashed shards from their boot snapshot.
+    pub shard_restarts: u64,
+    /// Tiles re-run on the recovery shard after a death / lost reply.
+    pub tiles_redispatched: u64,
+    /// Slowest single pool recovery pass, µs (gauge).
+    pub recovery_max_us: u64,
     pub throughput_rps: f64,
     pub points_per_s: f64,
     pub latency_mean_us: f64,
@@ -70,7 +85,10 @@ impl CapacityReport {
             "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"backend\": \"{}\", \
              \"workers\": {}, \"shards\": {}, \"seed\": {}, \"duration_s\": {}, \
              \"submitted\": {}, \"completed\": {}, \"shed\": {}, \"rejected\": {}, \
-             \"deadline_missed\": {}, \"failed\": {}, \"throughput_rps\": {}, \
+             \"deadline_missed\": {}, \"closed\": {}, \"failed\": {}, \
+             \"fault_seed\": {}, \"shard_crashes\": {}, \"shard_restarts\": {}, \
+             \"tiles_redispatched\": {}, \"recovery_max_us\": {}, \
+             \"throughput_rps\": {}, \
              \"points_per_s\": {}, \"latency_mean_us\": {}, \"latency_p50_us\": {}, \
              \"latency_p95_us\": {}, \"latency_p99_us\": {}, \"queue_depth_mean\": {}, \
              \"queue_depth_max\": {}, \"mean_batch_points\": {}, \
@@ -87,7 +105,13 @@ impl CapacityReport {
             self.shed,
             self.rejected,
             self.deadline_missed,
+            self.closed,
             self.failed,
+            self.fault_seed.map_or("null".to_string(), |s| s.to_string()),
+            self.shard_crashes,
+            self.shard_restarts,
+            self.tiles_redispatched,
+            self.recovery_max_us,
             json_f64(self.throughput_rps),
             json_f64(self.points_per_s),
             json_f64(self.latency_mean_us),
@@ -103,9 +127,9 @@ impl CapacityReport {
 
     /// Human-readable summary block.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "scenario {} [{}] on {} (workers={} shards={} seed={}) over {:.2}s\n\
-             offered={} completed={} shed={} rejected={} deadline_missed={} failed={}\n\
+             offered={} completed={} shed={} rejected={} deadline_missed={} closed={} failed={}\n\
              throughput: {:.1} req/s, {:.2} M points/s   mean batch {:.1} pts\n\
              latency: mean={:.0}us p50={}us p95={}us p99={}us\n\
              queue depth: mean={:.1} max={}   simulated M1 cycles/point={:.2}",
@@ -121,6 +145,7 @@ impl CapacityReport {
             self.shed,
             self.rejected,
             self.deadline_missed,
+            self.closed,
             self.failed,
             self.throughput_rps,
             self.points_per_s / 1e6,
@@ -132,7 +157,18 @@ impl CapacityReport {
             self.queue_depth_mean,
             self.queue_depth_max,
             self.sim_cycles_per_point,
-        )
+        );
+        if let Some(seed) = self.fault_seed {
+            out.push_str(&format!(
+                "\nfault injection (seed {seed}): crashes={} restarts={} \
+                 redispatched={} recovery_max={}us",
+                self.shard_crashes,
+                self.shard_restarts,
+                self.tiles_redispatched,
+                self.recovery_max_us,
+            ));
+        }
+        out
     }
 }
 
@@ -173,7 +209,13 @@ mod tests {
             shed: 0,
             rejected: 0,
             deadline_missed: 0,
+            closed: 0,
             failed: 0,
+            fault_seed: None,
+            shard_crashes: 0,
+            shard_restarts: 0,
+            tiles_redispatched: 0,
+            recovery_max_us: 0,
             throughput_rps: 100.0,
             points_per_s: 6400.0,
             latency_mean_us: 900.0,
@@ -196,15 +238,38 @@ mod tests {
         // Every key present exactly once.
         for key in [
             "scenario", "profile", "backend", "workers", "shards", "seed", "duration_s",
-            "submitted", "completed", "shed", "rejected", "deadline_missed", "failed",
-            "throughput_rps", "points_per_s", "latency_mean_us", "latency_p50_us",
-            "latency_p95_us", "latency_p99_us", "queue_depth_mean", "queue_depth_max",
-            "mean_batch_points", "sim_cycles_per_point",
+            "submitted", "completed", "shed", "rejected", "deadline_missed", "closed",
+            "failed", "fault_seed", "shard_crashes", "shard_restarts", "tiles_redispatched",
+            "recovery_max_us", "throughput_rps", "points_per_s", "latency_mean_us",
+            "latency_p50_us", "latency_p95_us", "latency_p99_us", "queue_depth_mean",
+            "queue_depth_max", "mean_batch_points", "sim_cycles_per_point",
         ] {
             assert_eq!(j.matches(&format!("\"{key}\":")).count(), 1, "key {key}");
         }
         // No unescaped NaN/inf can reach the file.
         assert!(!j.contains("NaN") && !j.contains("inf"));
+        // Fault-free runs serialize a JSON null seed.
+        assert!(j.contains("\"fault_seed\": null"));
+    }
+
+    #[test]
+    fn fault_injected_report_carries_the_supervision_breakdown() {
+        let mut r = sample();
+        r.fault_seed = Some(0xC0FFEE);
+        r.shard_crashes = 4;
+        r.shard_restarts = 4;
+        r.tiles_redispatched = 2;
+        r.recovery_max_us = 800;
+        r.closed = 1;
+        let j = r.to_json();
+        assert!(j.contains(&format!("\"fault_seed\": {}", 0xC0FFEE)));
+        assert!(j.contains("\"shard_crashes\": 4"));
+        assert!(j.contains("\"closed\": 1"));
+        let text = r.render();
+        assert!(text.contains("fault injection (seed 12648430)"));
+        assert!(text.contains("crashes=4 restarts=4 redispatched=2 recovery_max=800us"));
+        // Fault-free reports keep the human block clean.
+        assert!(!sample().render().contains("fault injection"));
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, ServeResult};
+use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, FaultPlan, ServeResult};
 
 use super::report::{percentile_us, CapacityReport};
 use super::scenario::{ArrivalProfile, Scenario};
@@ -86,6 +86,7 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         workers: sc.workers.max(1),
         m1_shards: sc.shards.max(1),
         default_ttl: sc.ttl,
+        fault_plan: sc.fault_seed.map(FaultPlan::chaos),
         ..Default::default()
     })?);
     let factory = Arc::new(RequestFactory::new(sc.seed, sc.mix.clone()));
@@ -143,7 +144,13 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         shed: m.shed,
         rejected: m.rejected,
         deadline_missed: m.deadline_missed,
+        closed: m.closed,
         failed: tally.failed.load(Ordering::Relaxed),
+        fault_seed: sc.fault_seed,
+        shard_crashes: m.shard_crashes,
+        shard_restarts: m.shard_restarts,
+        tiles_redispatched: m.tiles_redispatched,
+        recovery_max_us: m.recovery_max_us,
         throughput_rps: completed as f64 / elapsed_s,
         points_per_s: tally.completed_points.load(Ordering::Relaxed) as f64 / elapsed_s,
         latency_mean_us: if latencies.is_empty() {
@@ -353,6 +360,7 @@ mod tests {
             queue_capacity: 64,
             ttl: None,
             fast_reject: false,
+            fault_seed: None,
         };
         let r = run_scenario(&sc).unwrap();
         assert!(r.completed > 0, "closed loop must complete requests");
@@ -379,6 +387,7 @@ mod tests {
             queue_capacity: 4,
             ttl: Some(Duration::from_millis(100)),
             fast_reject: true,
+            fault_seed: None,
         };
         let r = run_scenario(&sc).unwrap();
         assert_eq!(r.failed, 0);
@@ -394,5 +403,33 @@ mod tests {
             r.submitted
         );
         assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn tiny_chaos_run_loses_no_replies_under_injected_faults() {
+        let sc = Scenario {
+            name: "test-chaos",
+            summary: "unit",
+            profile: ArrivalProfile::ClosedLoop { clients: 2 },
+            duration: Duration::from_millis(300),
+            mix: WorkloadMix::standard(),
+            seed: 11,
+            backend: BackendChoice::M1Sim,
+            workers: 1,
+            shards: 2,
+            queue_capacity: 64,
+            ttl: None,
+            fast_reject: false,
+            fault_seed: Some(7),
+        };
+        let r = run_scenario(&sc).unwrap();
+        // The whole point of supervision: injected crashes/deaths/dropped
+        // replies must never surface as a dead reply channel.
+        assert_eq!(r.failed, 0, "supervision may not lose replies");
+        assert!(r.completed > 0, "degraded service still serves");
+        assert_eq!(r.fault_seed, Some(7));
+        let j = r.to_json();
+        assert!(j.contains("\"fault_seed\": 7"));
+        assert!(j.contains("\"shard_crashes\""));
     }
 }

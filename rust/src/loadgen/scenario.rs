@@ -113,6 +113,12 @@ pub struct Scenario {
     /// Open-loop admission: `try_submit` fast-reject instead of blocking
     /// the submitter on a full queue.
     pub fast_reject: bool,
+    /// Deterministic fault injection: `Some(seed)` arms
+    /// [`crate::coordinator::FaultPlan::chaos`] inside the coordinator's
+    /// M1 tile pools, so the scenario measures *degraded* capacity
+    /// (supervised crashes, shard deaths, dropped replies) rather than
+    /// the fault-free ceiling. `None` for every ordinary scenario.
+    pub fault_seed: Option<u64>,
 }
 
 fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> Scenario {
@@ -129,6 +135,7 @@ fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> S
         queue_capacity: 1024,
         ttl: None,
         fast_reject: false,
+        fault_seed: None,
     }
 }
 
@@ -184,6 +191,16 @@ pub fn all() -> Vec<Scenario> {
                 ArrivalProfile::ClosedLoop { clients: 8 },
             )
         },
+        Scenario {
+            duration: Duration::from_secs(2),
+            workers: 1,
+            fault_seed: Some(0xC0FFEE),
+            ..base(
+                "chaos",
+                "2s closed-loop under seeded fault injection — degraded capacity & self-healing",
+                ArrivalProfile::ClosedLoop { clients: 4 },
+            )
+        },
     ]
 }
 
@@ -210,6 +227,21 @@ mod tests {
             assert!(!found.mix.sizes.is_empty() && !found.mix.transforms.is_empty());
         }
         assert!(by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn chaos_is_the_only_fault_armed_scenario() {
+        for s in all() {
+            assert_eq!(
+                s.fault_seed.is_some(),
+                s.name == "chaos",
+                "{}: fault injection must stay opt-in per scenario",
+                s.name
+            );
+        }
+        let chaos = by_name("chaos").expect("chaos scenario listed");
+        assert_eq!(chaos.backend, BackendChoice::M1Sim, "faults live in the M1 pool");
+        assert!(chaos.shards >= 2, "chaos needs shards to kill");
     }
 
     #[test]

@@ -35,6 +35,10 @@ verbs:
                             run a named load-generation scenario against
                             the coordinator (M1Sim backend) and write
                             BENCH_coordinator.json; `list` names them
+  replay <file.m1ra>        re-execute a failure-repro artifact (dumped on
+                            shard crashes when MORPHO_REPRO_DIR is set)
+                            step by step and report the exact first
+                            divergent instruction; exit 0 iff it matches
   help                      print this listing";
 
 fn usage() -> ! {
@@ -67,6 +71,36 @@ fn loadtest(name: &str, shards: Option<usize>, seconds: Option<u64>) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => {
             eprintln!("\nfailed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn replay(path: &str) {
+    let art = match morpho::replay::ReproArtifact::read_from(std::path::Path::new(path)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("failed to read repro artifact {path}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("repro artifact {path}");
+    println!("  summary: {}", art.summary);
+    println!(
+        "  fault seed {} · {} instructions · {} recorded step digests",
+        art.seed,
+        art.program.instructions.len(),
+        art.step_digests.len()
+    );
+    match art.replay() {
+        Ok(outcome) => {
+            println!("{}", outcome.render());
+            if !outcome.is_match() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("replay failed: {e:#}");
             std::process::exit(1);
         }
     }
@@ -251,6 +285,10 @@ fn main() {
             let shards = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
             let seconds = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
             loadtest(name, shards, seconds);
+        }
+        Some("replay") => {
+            let path = it.next().unwrap_or_else(|| usage());
+            replay(path);
         }
         Some("help") | Some("-h") | Some("--help") => println!("{USAGE}"),
         // Unknown (or missing) verb: the authoritative listing, non-zero.

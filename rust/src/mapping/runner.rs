@@ -156,6 +156,23 @@ pub fn run_routine3_with(
     w: Option<&[i16]>,
     schedule: Option<&BroadcastSchedule>,
 ) -> RoutineOutput {
+    stage_routine3_on(sys, routine, u, v, w);
+    let report = sys.run_program(&routine.program, schedule);
+    let result = sys.mem.load_elements(RESULT_ADDR, routine.result_elems);
+    RoutineOutput { result, report }
+}
+
+/// Stage a routine's inputs and context words into `sys`'s main memory
+/// **without running it** — the pre-execution state a repro artifact
+/// ([`crate::replay`]) snapshots so a crashed tile can be re-executed
+/// step by step offline.
+pub fn stage_routine3_on(
+    sys: &mut M1System,
+    routine: &MappedRoutine,
+    u: &[i16],
+    v: Option<&[i16]>,
+    w: Option<&[i16]>,
+) {
     assert_eq!(u.len(), routine.u_elems, "{}: U length", routine.name);
     sys.mem.store_elements(U_ADDR, u);
     match (routine.v_elems, v) {
@@ -179,9 +196,6 @@ pub fn run_routine3_with(
     for &(addr, word) in &routine.ctx_words {
         sys.mem.write_word(addr, word);
     }
-    let report = sys.run_program(&routine.program, schedule);
-    let result = sys.mem.load_elements(RESULT_ADDR, routine.result_elems);
-    RoutineOutput { result, report }
 }
 
 #[cfg(test)]

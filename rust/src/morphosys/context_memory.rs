@@ -93,6 +93,22 @@ impl ContextMemory {
         self.decoded[i] = ContextWord::decode(value);
     }
 
+    /// All raw words in storage order (`[block][plane][word]`), for
+    /// [`crate::morphosys::snapshot`].
+    pub(crate) fn snapshot_words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Restore from a [`ContextMemory::snapshot_words`] image, re-decoding
+    /// every word so the lockstep decode cache stays consistent.
+    pub(crate) fn restore_words(&mut self, words: &[u32]) {
+        assert_eq!(words.len(), self.words.len(), "context snapshot size mismatch");
+        self.words.copy_from_slice(words);
+        for (d, &w) in self.decoded.iter_mut().zip(words) {
+            *d = ContextWord::decode(w);
+        }
+    }
+
     /// DMA fill of consecutive words within one plane.
     pub fn write_slice(&mut self, block: Block, plane: usize, word: usize, values: &[u32]) {
         assert!(word + values.len() <= PLANE_WORDS, "context fill out of range");

@@ -59,6 +59,18 @@ impl MainMemory {
         words
     }
 
+    /// Every word in storage order, for [`crate::morphosys::snapshot`].
+    pub(crate) fn snapshot_words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// Restore from a [`MainMemory::snapshot_words`] image, resizing to
+    /// the snapshot's word count.
+    pub(crate) fn restore_words(&mut self, words: &[u32]) {
+        self.words.clear();
+        self.words.extend_from_slice(words);
+    }
+
     /// Load `count` 16-bit elements starting at word address `addr`.
     pub fn load_elements(&self, addr: usize, count: usize) -> Vec<i16> {
         let mut out = Vec::with_capacity(count);

@@ -157,6 +157,21 @@ impl FrameBuffer {
         bus
     }
 
+    /// Raw storage plus dirty spans, for [`crate::morphosys::snapshot`]:
+    /// the flat `[set][bank][element]` plane and the four per-bank spans
+    /// (needed so a restored buffer's `clear` stays equivalent to full
+    /// zeroing).
+    pub(crate) fn snapshot_parts(&self) -> (&[i16], &[(usize, usize); 4]) {
+        (&self.data, &self.dirty)
+    }
+
+    /// Restore from a [`FrameBuffer::snapshot_parts`] image.
+    pub(crate) fn restore_parts(&mut self, data: &[i16], dirty: [(usize, usize); 4]) {
+        assert_eq!(data.len(), self.data.len(), "FB snapshot size mismatch");
+        self.data.copy_from_slice(data);
+        self.dirty = dirty;
+    }
+
     /// [`FrameBuffer::operand_bus`] without the per-element bounds checks,
     /// for broadcast steps whose bus addresses were validated when their
     /// [`BroadcastSchedule`] compiled (§Perf).

@@ -45,6 +45,7 @@ pub mod frame_buffer;
 pub mod mulate;
 pub mod rc_array;
 pub mod schedule;
+pub mod snapshot;
 pub mod system;
 pub mod timing;
 pub mod tinyrisc;
@@ -52,5 +53,6 @@ pub mod tinyrisc;
 pub use frame_buffer::{Bank, FrameBuffer, Set};
 pub use rc_array::{AluOp, ContextWord, RcArray};
 pub use schedule::BroadcastSchedule;
+pub use snapshot::{fnv1a64, SnapshotError};
 pub use system::{ExecutionReport, M1System};
 pub use tinyrisc::{Instruction, Program, Reg};

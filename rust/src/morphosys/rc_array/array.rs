@@ -102,9 +102,20 @@ impl RcArray {
         self.acc[row][col]
     }
 
+    /// Set one cell's accumulator (tests / state injection — the restore
+    /// counterpart of [`RcArray::acc`]).
+    pub fn set_acc(&mut self, row: usize, col: usize, value: i32) {
+        self.acc[row][col] = value;
+    }
+
     /// One cell's express latch.
     pub fn express(&self, row: usize, col: usize) -> Option<i16> {
         self.express[row][col]
+    }
+
+    /// Set one cell's express latch (tests / state injection).
+    pub fn set_express(&mut self, row: usize, col: usize, value: Option<i16>) {
+        self.express[row][col] = value;
     }
 
     /// Assemble the AoS view of one cell (debug/inspection; the planes are

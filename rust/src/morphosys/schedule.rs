@@ -141,6 +141,11 @@ pub struct BroadcastSchedule {
     /// Issue-slot total under the async model (`last issue + 1`, the
     /// interpreter's convention).
     async_slots: u64,
+    /// Final state of the async issue model after the whole program — what
+    /// the interpreter's `AsyncDma` ends at, captured at compile time so
+    /// the scheduled tier can expose identical in-flight DMA state to
+    /// [`crate::morphosys::snapshot`].
+    final_async: AsyncDma,
     executed: u64,
     broadcasts: u64,
 }
@@ -276,9 +281,15 @@ impl BroadcastSchedule {
             slots,
             async_cycles: async_last,
             async_slots,
+            final_async: dma,
             executed,
             broadcasts,
         })
+    }
+
+    /// Final async-DMA engine state after the program (see the field docs).
+    pub(crate) fn final_async(&self) -> AsyncDma {
+        self.final_async
     }
 
     /// Whether every broadcast step passed compile-time bounds validation

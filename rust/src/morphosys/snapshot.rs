@@ -1,0 +1,448 @@
+//! Snapshot/restore of the full M1 architectural state (§Robustness).
+//!
+//! [`M1System::snapshot`] serializes everything a program's execution can
+//! observe — TinyRISC registers, frame buffer (including dirty spans, so
+//! a restored system's `reset_chip` stays equivalent to full zeroing),
+//! context memory, all four RC-array planes, the async-DMA engine's
+//! readiness windows, and main memory — to a stable, versioned,
+//! little-endian byte format. [`M1System::restore`] is its exact inverse:
+//! `snapshot → restore → run` is bit-identical to `run` on the original
+//! system, across both DMA modes and all three execution tiers (pinned by
+//! the snapshot axis of `tests/conformance.rs`).
+//!
+//! The format is self-contained (magic + version + sized sections), so
+//! repro artifacts (see [`crate::replay`]) can embed snapshots and replay
+//! them in a later process, and a corrupt or truncated image fails with a
+//! typed [`SnapshotError`] instead of garbage state.
+
+use super::context_memory::{PLANES, PLANE_WORDS};
+use super::frame_buffer::BANK_ELEMS;
+use super::rc_array::ARRAY_DIM;
+use super::system::M1System;
+use super::timing::AsyncDma;
+
+/// Leading magic of every snapshot image.
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"M1SS";
+
+/// Current (and only) format version.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Why a snapshot image failed to restore.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// The image does not start with [`SNAPSHOT_MAGIC`].
+    BadMagic,
+    /// The image's version is not [`SNAPSHOT_VERSION`].
+    UnsupportedVersion(u16),
+    /// The image ended before a section was complete.
+    Truncated,
+    /// The image has bytes past the final section.
+    TrailingBytes(usize),
+    /// A field held an impossible value (e.g. a dirty span past the bank).
+    BadValue(&'static str),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::BadMagic => write!(f, "not an M1 snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (expected {SNAPSHOT_VERSION})")
+            }
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::TrailingBytes(n) => write!(f, "{n} trailing bytes after snapshot"),
+            SnapshotError::BadValue(what) => write!(f, "snapshot field out of range: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// FNV-1a/64 over a byte string — the digest used to fingerprint per-step
+/// snapshots in repro artifacts (stable across platforms and runs; no
+/// dependency beyond arithmetic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Little-endian byte sink with typed appenders.
+struct Writer {
+    out: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i16(&mut self, v: i16) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Little-endian cursor over a snapshot image.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        let end = self.pos.checked_add(n).ok_or(SnapshotError::Truncated)?;
+        if end > self.bytes.len() {
+            return Err(SnapshotError::Truncated);
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i16(&mut self) -> Result<i16, SnapshotError> {
+        Ok(i16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32, SnapshotError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+impl M1System {
+    /// Serialize the full architectural state to the versioned format
+    /// (see the module docs). Transient observation plumbing (tracing) is
+    /// deliberately excluded — it never affects architectural evolution.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let (fb_data, fb_dirty) = self.fb.snapshot_parts();
+        let mem_words = self.mem.snapshot_words();
+        // Header + fixed sections + memory; sizing up front keeps this a
+        // single allocation even for the 2 MiB default memory.
+        let mut w = Writer {
+            out: Vec::with_capacity(
+                4 + 2 + 1
+                    + 16 * 4
+                    + fb_data.len() * 2
+                    + 4 * 8
+                    + 2 * PLANES * PLANE_WORDS * 4
+                    + ARRAY_DIM * ARRAY_DIM * (2 + 4 * 2 + 4 + 3)
+                    + 6 * 8
+                    + 4
+                    + mem_words.len() * 4,
+            ),
+        };
+        w.out.extend_from_slice(&SNAPSHOT_MAGIC);
+        w.u16(SNAPSHOT_VERSION);
+        w.u8(self.async_dma() as u8);
+        for v in self.regs.snapshot_regs() {
+            w.u32(v);
+        }
+        for &e in fb_data {
+            w.i16(e);
+        }
+        for &(lo, hi) in fb_dirty {
+            w.u32(lo as u32);
+            w.u32(hi as u32);
+        }
+        for &word in self.ctx.snapshot_words() {
+            w.u32(word);
+        }
+        for row in 0..ARRAY_DIM {
+            for col in 0..ARRAY_DIM {
+                w.i16(self.array.out(row, col));
+                for r in 0..4 {
+                    w.i16(self.array.reg(row, col, r));
+                }
+                w.i32(self.array.acc(row, col));
+                match self.array.express(row, col) {
+                    Some(v) => {
+                        w.u8(1);
+                        w.i16(v);
+                    }
+                    None => {
+                        w.u8(0);
+                        w.i16(0);
+                    }
+                }
+            }
+        }
+        for word in self.dma_state().to_words() {
+            w.u64(word);
+        }
+        w.u32(mem_words.len() as u32);
+        for &word in mem_words {
+            w.u32(word);
+        }
+        w.out
+    }
+
+    /// Restore from a [`M1System::snapshot`] image, replacing **all**
+    /// architectural state (including the DMA mode flag and main-memory
+    /// size). On error the system is left unchanged — every field is
+    /// validated before the first mutation.
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<(), SnapshotError> {
+        let mut r = Reader { bytes, pos: 0 };
+        if r.take(4)? != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = r.u16()?;
+        if version != SNAPSHOT_VERSION {
+            return Err(SnapshotError::UnsupportedVersion(version));
+        }
+        let async_dma = match r.u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapshotError::BadValue("async_dma flag")),
+        };
+        let mut regs = [0u32; 16];
+        for v in &mut regs {
+            *v = r.u32()?;
+        }
+        let mut fb_data = vec![0i16; 2 * 2 * BANK_ELEMS];
+        for e in &mut fb_data {
+            *e = r.i16()?;
+        }
+        let mut fb_dirty = [(0usize, 0usize); 4];
+        for span in &mut fb_dirty {
+            let (lo, hi) = (r.u32()? as usize, r.u32()? as usize);
+            // A clean span is (BANK_ELEMS, 0); a dirty one is a subrange
+            // of the bank. Anything else would defeat the span-clear
+            // equivalence.
+            if lo > BANK_ELEMS || (lo < hi && hi > BANK_ELEMS) {
+                return Err(SnapshotError::BadValue("frame-buffer dirty span"));
+            }
+            *span = (lo, hi);
+        }
+        let mut ctx = vec![0u32; 2 * PLANES * PLANE_WORDS];
+        for word in &mut ctx {
+            *word = r.u32()?;
+        }
+        struct CellImage {
+            out: i16,
+            regs: [i16; 4],
+            acc: i32,
+            express: Option<i16>,
+        }
+        let mut cells = Vec::with_capacity(ARRAY_DIM * ARRAY_DIM);
+        for _ in 0..ARRAY_DIM * ARRAY_DIM {
+            let out = r.i16()?;
+            let mut cregs = [0i16; 4];
+            for v in &mut cregs {
+                *v = r.i16()?;
+            }
+            let acc = r.i32()?;
+            let flag = r.u8()?;
+            let xv = r.i16()?;
+            let express = match flag {
+                0 => None,
+                1 => Some(xv),
+                _ => return Err(SnapshotError::BadValue("express flag")),
+            };
+            cells.push(CellImage { out, regs: cregs, acc, express });
+        }
+        let mut dma_words = [0u64; 6];
+        for word in &mut dma_words {
+            *word = r.u64()?;
+        }
+        let mem_len = r.u32()? as usize;
+        let mut mem = vec![0u32; mem_len];
+        for word in &mut mem {
+            *word = r.u32()?;
+        }
+        if r.pos != bytes.len() {
+            return Err(SnapshotError::TrailingBytes(bytes.len() - r.pos));
+        }
+
+        // Everything parsed and validated — commit.
+        self.set_async_dma(async_dma);
+        self.regs.restore_regs(&regs);
+        self.fb.restore_parts(&fb_data, fb_dirty);
+        self.ctx.restore_words(&ctx);
+        for (i, cell) in cells.iter().enumerate() {
+            let (row, col) = (i / ARRAY_DIM, i % ARRAY_DIM);
+            self.array.set_out(row, col, cell.out);
+            for (r, &v) in cell.regs.iter().enumerate() {
+                self.array.set_reg(row, col, r, v);
+            }
+            self.array.set_acc(row, col, cell.acc);
+            self.array.set_express(row, col, cell.express);
+        }
+        self.set_dma_state(AsyncDma::from_words(&dma_words));
+        self.mem.restore_words(&mem);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{runner::run_routine_on, VecVecMapping};
+    use crate::morphosys::AluOp;
+
+    fn populated_system() -> M1System {
+        let mut sys = M1System::new();
+        let u: Vec<i16> = (0..64).map(|i| 3 * i - 40).collect();
+        let v: Vec<i16> = (0..64).map(|i| 7 - i).collect();
+        let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        run_routine_on(&mut sys, &routine, &u, Some(&v));
+        sys
+    }
+
+    #[test]
+    fn roundtrip_restores_every_observable_plane() {
+        let sys = populated_system();
+        let image = sys.snapshot();
+        let mut restored = M1System::new();
+        restored.restore(&image).unwrap();
+        // Byte-for-byte: re-snapshotting the restored system reproduces
+        // the image, which covers every serialized plane at once.
+        assert_eq!(restored.snapshot(), image);
+    }
+
+    #[test]
+    fn roundtrip_preserves_the_dma_mode_flag() {
+        let sys = M1System::new().with_async_dma();
+        let mut restored = M1System::new();
+        restored.restore(&sys.snapshot()).unwrap();
+        assert!(restored.async_dma());
+        let mut back = M1System::new().with_async_dma();
+        back.restore(&M1System::new().snapshot()).unwrap();
+        assert!(!back.async_dma());
+    }
+
+    #[test]
+    fn corrupt_images_fail_with_typed_errors() {
+        let image = populated_system().snapshot();
+        let mut sys = M1System::new();
+        assert_eq!(sys.restore(b"nope"), Err(SnapshotError::BadMagic));
+        let mut wrong_version = image.clone();
+        wrong_version[4] = 99;
+        assert_eq!(sys.restore(&wrong_version), Err(SnapshotError::UnsupportedVersion(99)));
+        assert_eq!(sys.restore(&image[..image.len() - 1]), Err(SnapshotError::Truncated));
+        let mut trailing = image.clone();
+        trailing.push(0);
+        assert_eq!(sys.restore(&trailing), Err(SnapshotError::TrailingBytes(1)));
+        let mut bad_flag = image.clone();
+        bad_flag[6] = 7;
+        assert_eq!(sys.restore(&bad_flag), Err(SnapshotError::BadValue("async_dma flag")));
+        // A failed restore leaves the target untouched.
+        assert_eq!(sys.snapshot(), M1System::new().snapshot());
+    }
+
+    #[test]
+    fn mid_transfer_async_dma_state_roundtrips_and_continues_identically() {
+        // Snapshot an async-DMA system *mid-routine* (in-flight readiness
+        // windows live in the AsyncDma words) and at its end, restore
+        // each, and require byte-identity — then run a second routine on
+        // original and restored and require bit-identical continuation.
+        let u: Vec<i16> = (0..64).map(|i| 5 * i - 150).collect();
+        let v: Vec<i16> = (0..64).map(|i| 31 - 2 * i).collect();
+        let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let mut sys = M1System::new().with_async_dma();
+        let mut mid = None;
+        crate::mapping::runner::stage_routine3_on(&mut sys, &routine, &u, Some(&v), None);
+        let total = routine.program.instructions.len() as u64;
+        sys.run_with(&routine.program, |step, s| {
+            // Early enough that DMA fills are still inside their windows.
+            if step == total / 4 {
+                mid = Some(s.snapshot());
+            }
+        });
+        let mid = mid.expect("routine long enough to snapshot mid-run");
+        let mut restored_mid = M1System::new();
+        restored_mid.restore(&mid).unwrap();
+        assert!(restored_mid.async_dma(), "mode flag rides in the image");
+        assert_eq!(restored_mid.snapshot(), mid, "mid-transfer image roundtrips");
+
+        let end = sys.snapshot();
+        let mut restored = M1System::new();
+        restored.restore(&end).unwrap();
+        let o1 = run_routine_on(&mut sys, &routine, &v, Some(&u));
+        let o2 = run_routine_on(&mut restored, &routine, &v, Some(&u));
+        assert_eq!(o1.result, o2.result, "continuation results");
+        assert_eq!(o1.report.cycles, o2.report.cycles, "continuation cycles");
+    }
+
+    #[test]
+    fn mula_accumulator_state_survives_restore_and_carries_forward() {
+        // `Mula` leaves live accumulator state in every cell; a restore
+        // must reproduce it exactly, and a follow-up run on original vs
+        // restored must stay bit-identical (the carry is architectural).
+        use crate::morphosys::rc_array::ARRAY_DIM;
+        let u: Vec<i16> = (0..64).map(|i| 2 * i - 63).collect();
+        let v: Vec<i16> = (0..64).map(|i| i + 1).collect();
+        let routine = VecVecMapping { n: 64, op: AluOp::Mula }.compile();
+        let mut sys = M1System::new();
+        run_routine_on(&mut sys, &routine, &u, Some(&v));
+        let image = sys.snapshot();
+        let mut restored = M1System::new();
+        restored.restore(&image).unwrap();
+        let mut any_live = false;
+        for row in 0..ARRAY_DIM {
+            for col in 0..ARRAY_DIM {
+                assert_eq!(
+                    sys.array.acc(row, col),
+                    restored.array.acc(row, col),
+                    "acc ({row},{col})"
+                );
+                any_live |= sys.array.acc(row, col) != 0;
+            }
+        }
+        assert!(any_live, "Mula must leave nonzero accumulator state to pin");
+        let o1 = run_routine_on(&mut sys, &routine, &v, Some(&u));
+        let o2 = run_routine_on(&mut restored, &routine, &v, Some(&u));
+        assert_eq!(o1.result, o2.result, "post-restore Mula run");
+        assert_eq!(o1.report.cycles, o2.report.cycles);
+    }
+
+    #[test]
+    fn dirty_span_clears_behave_identically_after_restore() {
+        // The frame buffer serializes its dirty spans, so `reset_chip` on
+        // a restored system must equal `reset_chip` on the original —
+        // span-bounded clearing can't leave restored-but-untracked data
+        // behind.
+        let mut sys = populated_system();
+        let mut restored = M1System::new();
+        restored.restore(&sys.snapshot()).unwrap();
+        sys.reset_chip();
+        restored.reset_chip();
+        assert_eq!(sys.snapshot(), restored.snapshot(), "post-reset state");
+        // And a reset system is indistinguishable from pristine chip
+        // state (memory aside, which reset_chip deliberately keeps).
+        let mut pristine = M1System::new();
+        let words = sys.mem.snapshot_words().to_vec();
+        pristine.mem.restore_words(&words);
+        assert_eq!(sys.snapshot(), pristine.snapshot(), "reset == pristine chip");
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a/64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -61,6 +61,14 @@ pub struct M1System {
     /// hardware description advertises ("new application data can be
     /// loaded … without interrupting the operation of the RC array").
     async_dma: bool,
+    /// Final async-DMA engine state of the last run (readiness windows of
+    /// in-flight transfers) — architectural state under the async model,
+    /// so [`crate::morphosys::snapshot`] captures and restores it. The
+    /// interpreter deposits its issue-model state here when a run ends;
+    /// the scheduled tier deposits the compile-time-replayed equivalent.
+    /// Always default in blocking mode (the blocking path never touches
+    /// the issue model).
+    dma: AsyncDma,
 }
 
 impl Default for M1System {
@@ -79,7 +87,29 @@ impl M1System {
             mem: MainMemory::default_size(),
             trace: None,
             async_dma: false,
+            dma: AsyncDma::default(),
         }
+    }
+
+    /// Whether this system runs the non-blocking DMA issue model.
+    pub fn async_dma(&self) -> bool {
+        self.async_dma
+    }
+
+    /// Switch the DMA mode in place (snapshot restore adopts the
+    /// snapshotted system's mode).
+    pub(crate) fn set_async_dma(&mut self, async_dma: bool) {
+        self.async_dma = async_dma;
+    }
+
+    /// The async-DMA engine state after the last run (see the field docs).
+    pub(crate) fn dma_state(&self) -> AsyncDma {
+        self.dma
+    }
+
+    /// Restore the async-DMA engine state (snapshot restore path).
+    pub(crate) fn set_dma_state(&mut self, dma: AsyncDma) {
+        self.dma = dma;
     }
 
     /// Enable the non-blocking-DMA ablation mode (see the field docs).
@@ -122,6 +152,7 @@ impl M1System {
         self.fb.clear();
         self.ctx.clear();
         self.array.reset();
+        self.dma = AsyncDma::default();
     }
 
     /// Record a trace event. The effect string is built **lazily** — with
@@ -197,6 +228,19 @@ impl M1System {
 
     /// Run a program to completion (falling off the end or `halt`).
     pub fn run(&mut self, program: &Program) -> ExecutionReport {
+        self.run_with(program, |_, _| {})
+    }
+
+    /// As [`M1System::run`], invoking `observer` after each executed
+    /// instruction with the 0-based dynamic step index and the
+    /// post-instruction system state. The replay tooling
+    /// ([`crate::replay`]) uses this to digest per-step state; the
+    /// ordinary path passes a no-op closure that compiles away.
+    pub fn run_with(
+        &mut self,
+        program: &Program,
+        mut observer: impl FnMut(u64, &M1System),
+    ) -> ExecutionReport {
         let mut pc = 0usize;
         let mut slots = 0u64;
         let mut executed = 0u64;
@@ -206,6 +250,7 @@ impl M1System {
         // compiler replays this exact state machine at compile time, so
         // the two tiers cannot drift.
         let mut dma = AsyncDma::default();
+        let mut halted = false;
 
         while pc < program.len() {
             let instr = program.instructions[pc];
@@ -364,12 +409,20 @@ impl M1System {
                 }
                 Instruction::Halt => {
                     self.record(issue_cycle, pc, &instr, || "halt".to_string());
-                    break;
+                    halted = true;
                 }
+            }
+            observer(executed - 1, self);
+            if halted {
+                break;
             }
             pc = next_pc;
         }
 
+        // Deposit the final issue-model state (default in blocking mode —
+        // the blocking path never calls `issue`), so snapshots taken after
+        // a run capture in-flight async transfers.
+        self.dma = dma;
         ExecutionReport {
             cycles: last_issue,
             slots,
@@ -424,6 +477,11 @@ impl M1System {
                 Step::FusedRun(run) => self.exec_fused(&run, validated),
             }
         }
+        // Same deposit as the interpreter: the schedule's compile-time
+        // replay of the issue model ends in exactly the state the
+        // interpreter's run-time replay would (async mode), and blocking
+        // mode never touches the model.
+        self.dma = if self.async_dma { schedule.final_async() } else { AsyncDma::default() };
         schedule.report_for(self.async_dma)
     }
 

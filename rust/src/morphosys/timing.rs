@@ -141,6 +141,29 @@ impl AsyncDma {
             _ => slots,
         }
     }
+
+    /// Flatten the readiness windows for [`crate::morphosys::snapshot`]:
+    /// `[engine_free, bank_ready[0][0], bank_ready[0][1], bank_ready[1][0],
+    /// bank_ready[1][1], ctx_ready]`.
+    pub(crate) fn to_words(self) -> [u64; 6] {
+        [
+            self.engine_free,
+            self.bank_ready[0][0],
+            self.bank_ready[0][1],
+            self.bank_ready[1][0],
+            self.bank_ready[1][1],
+            self.ctx_ready,
+        ]
+    }
+
+    /// Inverse of [`AsyncDma::to_words`].
+    pub(crate) fn from_words(w: &[u64; 6]) -> AsyncDma {
+        AsyncDma {
+            engine_free: w[0],
+            bank_ready: [[w[1], w[2]], [w[3], w[4]]],
+            ctx_ready: w[5],
+        }
+    }
 }
 
 /// M1 system clock, Hz (the paper: "operational at a frequency of

@@ -38,6 +38,23 @@ impl RegFile {
         let v = (self.read(r) & 0xFFFF_0000) | imm as u32;
         self.write(r, v);
     }
+
+    /// All sixteen registers, for [`crate::morphosys::snapshot`]. Slot 0
+    /// always reads as zero (the hardwired r0).
+    pub fn snapshot_regs(&self) -> [u32; 16] {
+        let mut regs = self.regs;
+        regs[0] = 0;
+        regs
+    }
+
+    /// Restore from a [`RegFile::snapshot_regs`] image. Goes through
+    /// [`RegFile::write`], so the r0-is-zero invariant survives even a
+    /// hand-crafted image with a nonzero slot 0.
+    pub fn restore_regs(&mut self, regs: &[u32; 16]) {
+        for (i, &v) in regs.iter().enumerate() {
+            self.write(Reg(i as u8), v);
+        }
+    }
 }
 
 #[cfg(test)]

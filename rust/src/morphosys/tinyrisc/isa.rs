@@ -95,6 +95,227 @@ impl Instruction {
             _ => None,
         }
     }
+
+    /// Append this instruction's tag-byte encoding (little-endian fields)
+    /// — the portable program codec used by repro artifacts
+    /// ([`crate::replay`]). One tag byte per variant, fields in
+    /// declaration order; `usize` fields travel as `u32` (all in-range
+    /// values fit: addresses are bounded by the 2 MiB memory and word
+    /// counts by the frame buffer).
+    pub fn encode_bytes(&self, out: &mut Vec<u8>) {
+        let u32f = |out: &mut Vec<u8>, v: usize| out.extend_from_slice(&(v as u32).to_le_bytes());
+        match *self {
+            Instruction::Ldui { rd, imm } => {
+                out.push(0);
+                out.push(rd.0);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Instruction::Ldli { rd, imm } => {
+                out.push(1);
+                out.push(rd.0);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Instruction::Add { rd, rs, rt } => out.extend_from_slice(&[2, rd.0, rs.0, rt.0]),
+            Instruction::Sub { rd, rs, rt } => out.extend_from_slice(&[3, rd.0, rs.0, rt.0]),
+            Instruction::Addi { rd, rs, imm } => {
+                out.extend_from_slice(&[4, rd.0, rs.0]);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Instruction::Ldfb { rs, set, bank, words, fb_addr } => {
+                out.extend_from_slice(&[5, rs.0, set.index() as u8, bank.index() as u8]);
+                u32f(out, words);
+                u32f(out, fb_addr);
+            }
+            Instruction::Stfb { rs, set, bank, words, fb_addr } => {
+                out.extend_from_slice(&[6, rs.0, set.index() as u8, bank.index() as u8]);
+                u32f(out, words);
+                u32f(out, fb_addr);
+            }
+            Instruction::Ldctxt { rs, block, plane, word, count } => {
+                out.extend_from_slice(&[7, rs.0, block.index() as u8]);
+                u32f(out, plane);
+                u32f(out, word);
+                u32f(out, count);
+            }
+            Instruction::Dbcdc { plane, cw, col, set, addr_a, addr_b } => {
+                out.push(8);
+                u32f(out, plane);
+                u32f(out, cw);
+                u32f(out, col);
+                out.push(set.index() as u8);
+                u32f(out, addr_a);
+                u32f(out, addr_b);
+            }
+            Instruction::Dbcdr { plane, cw, row, set, addr_a, addr_b } => {
+                out.push(9);
+                u32f(out, plane);
+                u32f(out, cw);
+                u32f(out, row);
+                out.push(set.index() as u8);
+                u32f(out, addr_a);
+                u32f(out, addr_b);
+            }
+            Instruction::Sbcb { plane, cw, col, set, bank, addr } => {
+                out.push(10);
+                u32f(out, plane);
+                u32f(out, cw);
+                u32f(out, col);
+                out.push(set.index() as u8);
+                out.push(bank.index() as u8);
+                u32f(out, addr);
+            }
+            Instruction::Sbcbr { plane, cw, row, set, bank, addr } => {
+                out.push(11);
+                u32f(out, plane);
+                u32f(out, cw);
+                u32f(out, row);
+                out.push(set.index() as u8);
+                out.push(bank.index() as u8);
+                u32f(out, addr);
+            }
+            Instruction::Wfbi { col, set, bank, addr } => {
+                out.push(12);
+                u32f(out, col);
+                out.push(set.index() as u8);
+                out.push(bank.index() as u8);
+                u32f(out, addr);
+            }
+            Instruction::Wfbir { row, set, bank, addr } => {
+                out.push(13);
+                u32f(out, row);
+                out.push(set.index() as u8);
+                out.push(bank.index() as u8);
+                u32f(out, addr);
+            }
+            Instruction::Jmp { target } => {
+                out.push(14);
+                u32f(out, target);
+            }
+            Instruction::Bnez { rs, target } => {
+                out.extend_from_slice(&[15, rs.0]);
+                u32f(out, target);
+            }
+            Instruction::Halt => out.push(16),
+        }
+    }
+
+    /// Decode one instruction from `bytes` at `*pos`, advancing `*pos`
+    /// past it. The inverse of [`Instruction::encode_bytes`].
+    pub fn decode_bytes(bytes: &[u8], pos: &mut usize) -> Result<Instruction, &'static str> {
+        fn u8f(bytes: &[u8], pos: &mut usize) -> Result<u8, &'static str> {
+            let v = *bytes.get(*pos).ok_or("truncated instruction")?;
+            *pos += 1;
+            Ok(v)
+        }
+        fn u16f(bytes: &[u8], pos: &mut usize) -> Result<u16, &'static str> {
+            let end = pos.checked_add(2).filter(|&e| e <= bytes.len());
+            let s = end.map(|e| &bytes[*pos..e]).ok_or("truncated instruction")?;
+            *pos += 2;
+            Ok(u16::from_le_bytes(s.try_into().unwrap()))
+        }
+        fn u32f(bytes: &[u8], pos: &mut usize) -> Result<usize, &'static str> {
+            let end = pos.checked_add(4).filter(|&e| e <= bytes.len());
+            let s = end.map(|e| &bytes[*pos..e]).ok_or("truncated instruction")?;
+            *pos += 4;
+            Ok(u32::from_le_bytes(s.try_into().unwrap()) as usize)
+        }
+        let reg = |bytes: &[u8], pos: &mut usize| u8f(bytes, pos).map(Reg);
+        let set = |bytes: &[u8], pos: &mut usize| {
+            u8f(bytes, pos).map(|v| Set::from_index(v as usize))
+        };
+        let bank = |bytes: &[u8], pos: &mut usize| {
+            u8f(bytes, pos).map(|v| Bank::from_index(v as usize))
+        };
+        let tag = u8f(bytes, pos)?;
+        Ok(match tag {
+            0 => Instruction::Ldui { rd: reg(bytes, pos)?, imm: u16f(bytes, pos)? },
+            1 => Instruction::Ldli { rd: reg(bytes, pos)?, imm: u16f(bytes, pos)? },
+            2 => Instruction::Add {
+                rd: reg(bytes, pos)?,
+                rs: reg(bytes, pos)?,
+                rt: reg(bytes, pos)?,
+            },
+            3 => Instruction::Sub {
+                rd: reg(bytes, pos)?,
+                rs: reg(bytes, pos)?,
+                rt: reg(bytes, pos)?,
+            },
+            4 => Instruction::Addi {
+                rd: reg(bytes, pos)?,
+                rs: reg(bytes, pos)?,
+                imm: u16f(bytes, pos)? as i16,
+            },
+            5 => Instruction::Ldfb {
+                rs: reg(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                words: u32f(bytes, pos)?,
+                fb_addr: u32f(bytes, pos)?,
+            },
+            6 => Instruction::Stfb {
+                rs: reg(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                words: u32f(bytes, pos)?,
+                fb_addr: u32f(bytes, pos)?,
+            },
+            7 => Instruction::Ldctxt {
+                rs: reg(bytes, pos)?,
+                block: Block::from_index(u8f(bytes, pos)? as usize),
+                plane: u32f(bytes, pos)?,
+                word: u32f(bytes, pos)?,
+                count: u32f(bytes, pos)?,
+            },
+            8 => Instruction::Dbcdc {
+                plane: u32f(bytes, pos)?,
+                cw: u32f(bytes, pos)?,
+                col: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                addr_a: u32f(bytes, pos)?,
+                addr_b: u32f(bytes, pos)?,
+            },
+            9 => Instruction::Dbcdr {
+                plane: u32f(bytes, pos)?,
+                cw: u32f(bytes, pos)?,
+                row: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                addr_a: u32f(bytes, pos)?,
+                addr_b: u32f(bytes, pos)?,
+            },
+            10 => Instruction::Sbcb {
+                plane: u32f(bytes, pos)?,
+                cw: u32f(bytes, pos)?,
+                col: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                addr: u32f(bytes, pos)?,
+            },
+            11 => Instruction::Sbcbr {
+                plane: u32f(bytes, pos)?,
+                cw: u32f(bytes, pos)?,
+                row: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                addr: u32f(bytes, pos)?,
+            },
+            12 => Instruction::Wfbi {
+                col: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                addr: u32f(bytes, pos)?,
+            },
+            13 => Instruction::Wfbir {
+                row: u32f(bytes, pos)?,
+                set: set(bytes, pos)?,
+                bank: bank(bytes, pos)?,
+                addr: u32f(bytes, pos)?,
+            },
+            14 => Instruction::Jmp { target: u32f(bytes, pos)? },
+            15 => Instruction::Bnez { rs: reg(bytes, pos)?, target: u32f(bytes, pos)? },
+            16 => Instruction::Halt,
+            _ => return Err("unknown instruction tag"),
+        })
+    }
 }
 
 /// A TinyRISC program: a flat instruction vector, index == PC.
@@ -181,6 +402,43 @@ mod tests {
         let row = Instruction::Sbcbr { plane: 0, cw: 0, row: 2, set: Set::Zero, bank: Bank::A, addr: 0 };
         assert_eq!(row.broadcast_mode(), Some(BroadcastMode::Row));
         assert_eq!(Instruction::NOP.broadcast_mode(), None);
+    }
+
+    #[test]
+    fn tag_byte_codec_roundtrips_every_variant() {
+        let all = vec![
+            Instruction::Ldui { rd: Reg(3), imm: 0xBEEF },
+            Instruction::Ldli { rd: Reg(4), imm: 0x1234 },
+            Instruction::Add { rd: Reg(1), rs: Reg(2), rt: Reg(3) },
+            Instruction::Sub { rd: Reg(4), rs: Reg(5), rt: Reg(6) },
+            Instruction::Addi { rd: Reg(7), rs: Reg(8), imm: -42 },
+            Instruction::Ldfb { rs: Reg(1), set: Set::Zero, bank: Bank::A, words: 32, fb_addr: 64 },
+            Instruction::Stfb { rs: Reg(2), set: Set::One, bank: Bank::B, words: 4, fb_addr: 128 },
+            Instruction::Ldctxt { rs: Reg(3), block: Block::Row, plane: 1, word: 7, count: 9 },
+            Instruction::Dbcdc { plane: 1, cw: 5, col: 3, set: Set::One, addr_a: 10, addr_b: 20 },
+            Instruction::Dbcdr { plane: 0, cw: 6, row: 2, set: Set::Zero, addr_a: 30, addr_b: 40 },
+            Instruction::Sbcb { plane: 1, cw: 7, col: 4, set: Set::Zero, bank: Bank::B, addr: 50 },
+            Instruction::Sbcbr { plane: 0, cw: 8, row: 5, set: Set::One, bank: Bank::A, addr: 60 },
+            Instruction::Wfbi { col: 6, set: Set::Zero, bank: Bank::A, addr: 70 },
+            Instruction::Wfbir { row: 7, set: Set::One, bank: Bank::B, addr: 80 },
+            Instruction::Jmp { target: 12 },
+            Instruction::Bnez { rs: Reg(9), target: 3 },
+            Instruction::Halt,
+        ];
+        let mut bytes = Vec::new();
+        for i in &all {
+            i.encode_bytes(&mut bytes);
+        }
+        let mut pos = 0;
+        for want in &all {
+            let got = Instruction::decode_bytes(&bytes, &mut pos).expect("decodable");
+            assert_eq!(&got, want);
+        }
+        assert_eq!(pos, bytes.len(), "decoder must consume exactly what the encoder wrote");
+        // Corruption is a typed error, never a panic.
+        assert!(Instruction::decode_bytes(&[200], &mut 0).is_err());
+        assert!(Instruction::decode_bytes(&[5, 1], &mut 0).is_err());
+        assert!(Instruction::decode_bytes(&[], &mut 0).is_err());
     }
 
     #[test]

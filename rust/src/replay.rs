@@ -1,0 +1,396 @@
+//! Failure-replay artifacts (§Robustness).
+//!
+//! When a shard crashes (real or injected) or a conformance axis
+//! diverges, the supervision layer dumps a **self-contained repro
+//! artifact**: the TinyRISC program, the complete pre-execution machine
+//! state (an [`M1System::snapshot`] image), the seed and fault context it
+//! ran under, a per-step FNV-1a/64 digest of the full architectural state
+//! after every executed instruction, and (when known) the expected result
+//! elements. `repro replay <file>` re-executes the artifact step by step
+//! on a fresh simulator and reports the **exact first step** at which the
+//! replayed state diverges from the recorded digests — turning a flaky
+//! crash under load into a deterministic single-instruction pointer.
+//!
+//! ## Artifact format (`.m1ra`, version 1, little-endian)
+//!
+//! ```text
+//! magic "M1RA" | version u16
+//! seed u64
+//! summary: u32 len + UTF-8 bytes        (human fault context)
+//! program: u32 count + tag-byte instructions (Instruction::encode_bytes)
+//! pre-state: u32 len + M1System snapshot bytes ("M1SS" image)
+//! result_addr u32 | expected: u32 count + i16 elements (may be empty)
+//! digests: u32 count + u64 per executed step (fnv1a64 of the snapshot)
+//! ```
+//!
+//! Dumping is **opt-in** via the `MORPHO_REPRO_DIR` environment variable
+//! so ordinary test runs never write artifacts; the CI chaos-smoke job
+//! sets it and uploads whatever appears.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context};
+
+use crate::morphosys::{fnv1a64, Instruction, M1System, Program};
+use crate::Result;
+
+/// Magic prefix of a repro artifact.
+pub const ARTIFACT_MAGIC: [u8; 4] = *b"M1RA";
+/// Current artifact format version.
+pub const ARTIFACT_VERSION: u16 = 1;
+
+/// A self-contained failure reproduction: everything needed to re-execute
+/// one tile run step by step, plus the recorded truth to diverge against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReproArtifact {
+    /// Seed of the fault plan (or conformance case) that produced this.
+    pub seed: u64,
+    /// Human-readable fault context ("shard crash while …").
+    pub summary: String,
+    /// The TinyRISC program the tile ran.
+    pub program: Program,
+    /// Full pre-execution machine state ([`M1System::snapshot`] image).
+    pub pre_state: Vec<u8>,
+    /// Main-memory element address the expected result lives at.
+    pub result_addr: usize,
+    /// Expected result elements; empty when the original run never
+    /// finished (e.g. a crash artifact).
+    pub expected_result: Vec<i16>,
+    /// FNV-1a/64 digest of the full snapshot after each executed step.
+    pub step_digests: Vec<u64>,
+}
+
+/// Outcome of replaying an artifact against its recorded digests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplayOutcome {
+    /// Every step digest (and the expected result, when recorded)
+    /// matched: the artifact reproduces cleanly.
+    Match { steps: usize },
+    /// The replayed state first diverged from the recording at `step`
+    /// (0-indexed executed-instruction count).
+    Diverged { step: usize, recorded: u64, replayed: u64 },
+    /// Every common step matched but the executions ran for different
+    /// step counts (control flow diverged at the end).
+    StepCountMismatch { recorded: usize, replayed: usize },
+    /// All steps matched but the result read back differs at `index`.
+    ResultMismatch { index: usize, expected: i16, found: i16 },
+}
+
+impl ReplayOutcome {
+    pub fn is_match(&self) -> bool {
+        matches!(self, ReplayOutcome::Match { .. })
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            ReplayOutcome::Match { steps } => {
+                format!("MATCH: all {steps} steps and the result reproduce bit-for-bit")
+            }
+            ReplayOutcome::Diverged { step, recorded, replayed } => format!(
+                "DIVERGED at step {step}: recorded digest {recorded:#018x}, \
+                 replayed {replayed:#018x}"
+            ),
+            ReplayOutcome::StepCountMismatch { recorded, replayed } => format!(
+                "STEP-COUNT MISMATCH: recording executed {recorded} steps, replay {replayed}"
+            ),
+            ReplayOutcome::ResultMismatch { index, expected, found } => format!(
+                "RESULT MISMATCH at element {index}: expected {expected}, found {found}"
+            ),
+        }
+    }
+}
+
+/// Run `program` from the restored `pre_state`, collecting the per-step
+/// state digests (the expensive part of capture and the whole of replay).
+fn digest_run(pre_state: &[u8], program: &Program) -> Result<(M1System, Vec<u64>)> {
+    let mut sys = M1System::new();
+    sys.restore(pre_state).map_err(|e| anyhow::anyhow!("artifact pre-state: {e}"))?;
+    let mut digests = Vec::new();
+    sys.run_with(program, |_, s| digests.push(fnv1a64(&s.snapshot())));
+    Ok((sys, digests))
+}
+
+impl ReproArtifact {
+    /// Capture an artifact: restore `pre_state` into a fresh simulator,
+    /// execute `program`, and record the digest of the full architectural
+    /// state after every step. `expected_result` may be empty when the
+    /// correct answer is unknown (crash artifacts).
+    pub fn capture(
+        seed: u64,
+        summary: String,
+        program: Program,
+        pre_state: Vec<u8>,
+        result_addr: usize,
+        expected_result: Vec<i16>,
+    ) -> Result<ReproArtifact> {
+        let (_, step_digests) = digest_run(&pre_state, &program)?;
+        Ok(ReproArtifact {
+            seed,
+            summary,
+            program,
+            pre_state,
+            result_addr,
+            expected_result,
+            step_digests,
+        })
+    }
+
+    /// Re-execute this artifact step by step and compare against the
+    /// recording; see [`ReplayOutcome`].
+    pub fn replay(&self) -> Result<ReplayOutcome> {
+        let (sys, replayed) = digest_run(&self.pre_state, &self.program)?;
+        for (step, (rec, rep)) in self.step_digests.iter().zip(&replayed).enumerate() {
+            if rec != rep {
+                return Ok(ReplayOutcome::Diverged { step, recorded: *rec, replayed: *rep });
+            }
+        }
+        if replayed.len() != self.step_digests.len() {
+            return Ok(ReplayOutcome::StepCountMismatch {
+                recorded: self.step_digests.len(),
+                replayed: replayed.len(),
+            });
+        }
+        if !self.expected_result.is_empty() {
+            let found = sys.mem.load_elements(self.result_addr, self.expected_result.len());
+            for (index, (e, f)) in self.expected_result.iter().zip(&found).enumerate() {
+                if e != f {
+                    return Ok(ReplayOutcome::ResultMismatch {
+                        index,
+                        expected: *e,
+                        found: *f,
+                    });
+                }
+            }
+        }
+        Ok(ReplayOutcome::Match { steps: replayed.len() })
+    }
+
+    /// Serialize to the `.m1ra` wire format (see the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.summary.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.summary.as_bytes());
+        out.extend_from_slice(&(self.program.instructions.len() as u32).to_le_bytes());
+        for i in &self.program.instructions {
+            i.encode_bytes(&mut out);
+        }
+        out.extend_from_slice(&(self.pre_state.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.pre_state);
+        out.extend_from_slice(&(self.result_addr as u32).to_le_bytes());
+        out.extend_from_slice(&(self.expected_result.len() as u32).to_le_bytes());
+        for e in &self.expected_result {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.step_digests.len() as u32).to_le_bytes());
+        for d in &self.step_digests {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse the `.m1ra` wire format.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ReproArtifact> {
+        let mut pos = 0usize;
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+            let end = pos.checked_add(n).filter(|&e| e <= bytes.len());
+            match end {
+                Some(e) => {
+                    let s = &bytes[*pos..e];
+                    *pos = e;
+                    Ok(s)
+                }
+                None => bail!("truncated artifact at offset {pos}"),
+            }
+        }
+        fn u16f(bytes: &[u8], pos: &mut usize) -> Result<u16> {
+            Ok(u16::from_le_bytes(take(bytes, pos, 2)?.try_into().unwrap()))
+        }
+        fn u32f(bytes: &[u8], pos: &mut usize) -> Result<usize> {
+            Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()) as usize)
+        }
+        fn u64f(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+            Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+        }
+        if take(bytes, &mut pos, 4)? != ARTIFACT_MAGIC {
+            bail!("not a repro artifact (bad magic; expected \"M1RA\")");
+        }
+        let version = u16f(bytes, &mut pos)?;
+        if version != ARTIFACT_VERSION {
+            bail!("unsupported artifact version {version} (this build reads {ARTIFACT_VERSION})");
+        }
+        let seed = u64f(bytes, &mut pos)?;
+        let summary_len = u32f(bytes, &mut pos)?;
+        let summary = std::str::from_utf8(take(bytes, &mut pos, summary_len)?)
+            .context("artifact summary is not UTF-8")?
+            .to_string();
+        let n_instr = u32f(bytes, &mut pos)?;
+        let mut instructions = Vec::with_capacity(n_instr.min(1 << 20));
+        for k in 0..n_instr {
+            let i = Instruction::decode_bytes(bytes, &mut pos)
+                .map_err(|e| anyhow::anyhow!("instruction {k}: {e}"))?;
+            instructions.push(i);
+        }
+        let pre_len = u32f(bytes, &mut pos)?;
+        let pre_state = take(bytes, &mut pos, pre_len)?.to_vec();
+        let result_addr = u32f(bytes, &mut pos)?;
+        let n_expected = u32f(bytes, &mut pos)?;
+        let mut expected_result = Vec::with_capacity(n_expected.min(1 << 20));
+        for _ in 0..n_expected {
+            expected_result
+                .push(i16::from_le_bytes(take(bytes, &mut pos, 2)?.try_into().unwrap()));
+        }
+        let n_digests = u32f(bytes, &mut pos)?;
+        let mut step_digests = Vec::with_capacity(n_digests.min(1 << 20));
+        for _ in 0..n_digests {
+            step_digests.push(u64f(bytes, &mut pos)?);
+        }
+        if pos != bytes.len() {
+            bail!("{} trailing bytes after artifact", bytes.len() - pos);
+        }
+        Ok(ReproArtifact {
+            seed,
+            summary,
+            program: Program::new(instructions),
+            pre_state,
+            result_addr,
+            expected_result,
+            step_digests,
+        })
+    }
+
+    /// Write this artifact into `dir` under a unique name; returns the
+    /// path. The name carries the seed and the pre-state digest so repeat
+    /// crashes of the same case overwrite rather than accumulate.
+    pub fn write_into(&self, dir: &Path) -> Result<PathBuf> {
+        static SERIAL: AtomicU64 = AtomicU64::new(0);
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating repro dir {}", dir.display()))?;
+        let n = SERIAL.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!(
+            "repro-seed{}-{:016x}-{n}.m1ra",
+            self.seed,
+            fnv1a64(&self.pre_state)
+        ));
+        std::fs::write(&path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Read an artifact file.
+    pub fn read_from(path: &Path) -> Result<ReproArtifact> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// The opt-in artifact directory: `MORPHO_REPRO_DIR`, or `None` (no
+/// dumping) when unset or empty.
+pub fn dump_dir() -> Option<PathBuf> {
+    match std::env::var_os("MORPHO_REPRO_DIR") {
+        Some(d) if !d.is_empty() => Some(PathBuf::from(d)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::runner::stage_routine3_on;
+    use crate::mapping::{VecVecMapping, RESULT_ADDR};
+    use crate::morphosys::AluOp;
+
+    /// A staged 64-point add tile: (program, pre-state snapshot, expected).
+    fn staged_case(async_dma: bool) -> (Program, Vec<u8>, Vec<i16>) {
+        let routine = VecVecMapping { n: 64, op: AluOp::Add }.compile();
+        let u: Vec<i16> = (0..64).collect();
+        let v: Vec<i16> = (0..64).map(|i| 500 - 3 * i).collect();
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a + b).collect();
+        let mut sys = M1System::with_dma_mode(async_dma);
+        stage_routine3_on(&mut sys, &routine, &u, Some(&v), None);
+        (routine.program.clone(), sys.snapshot(), expected)
+    }
+
+    fn artifact(async_dma: bool) -> ReproArtifact {
+        let (program, pre, expected) = staged_case(async_dma);
+        ReproArtifact::capture(
+            17,
+            "unit-test artifact".into(),
+            program,
+            pre,
+            RESULT_ADDR,
+            expected,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn captured_artifact_replays_to_a_match() {
+        for async_dma in [false, true] {
+            let art = artifact(async_dma);
+            assert!(!art.step_digests.is_empty());
+            let outcome = art.replay().unwrap();
+            assert!(outcome.is_match(), "{async_dma}: {}", outcome.render());
+        }
+    }
+
+    #[test]
+    fn wire_format_roundtrips_exactly() {
+        let art = artifact(false);
+        let bytes = art.to_bytes();
+        let back = ReproArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back, art);
+        // Corruption is a typed error, never a panic.
+        assert!(ReproArtifact::from_bytes(b"nope").is_err());
+        assert!(ReproArtifact::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(ReproArtifact::from_bytes(&trailing).is_err());
+        let mut bad_version = bytes;
+        bad_version[4] = 99;
+        assert!(ReproArtifact::from_bytes(&bad_version).is_err());
+    }
+
+    #[test]
+    fn tampered_digest_reports_the_exact_first_divergent_step() {
+        // The acceptance property: a divergence artifact replays to the
+        // precise first step at which the recording and re-execution
+        // disagree — for every possible position.
+        let art = artifact(false);
+        for k in [0usize, 1, art.step_digests.len() / 2, art.step_digests.len() - 1] {
+            let mut tampered = art.clone();
+            tampered.step_digests[k] ^= 1;
+            match tampered.replay().unwrap() {
+                ReplayOutcome::Diverged { step, recorded, replayed } => {
+                    assert_eq!(step, k, "first divergence must be at the tampered step");
+                    assert_eq!(recorded ^ 1, replayed);
+                }
+                other => panic!("expected divergence at {k}, got {}", other.render()),
+            }
+        }
+    }
+
+    #[test]
+    fn tampered_expected_result_reports_result_mismatch() {
+        let mut art = artifact(false);
+        art.expected_result[5] ^= 0x40;
+        match art.replay().unwrap() {
+            ReplayOutcome::ResultMismatch { index: 5, .. } => {}
+            other => panic!("expected result mismatch, got {}", other.render()),
+        }
+    }
+
+    #[test]
+    fn write_and_read_roundtrip_through_a_file() {
+        let art = artifact(true);
+        let dir = std::env::temp_dir().join("morpho-replay-test");
+        let path = art.write_into(&dir).unwrap();
+        let back = ReproArtifact::read_from(&path).unwrap();
+        assert_eq!(back, art);
+        assert!(back.replay().unwrap().is_match());
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -560,6 +560,88 @@ fn non_contiguous_programs_refuse_fusion_and_stay_bit_identical() {
 }
 
 #[test]
+fn snapshot_restore_run_is_bit_identical_to_direct_run() {
+    // The snapshot conformance axis (§Robustness): restoring a staged
+    // system from its image and running must be indistinguishable —
+    // report and full architectural state — from running the original,
+    // in both DMA modes and on both the interpreter and scheduled tiers.
+    // The restore target deliberately starts in the *opposite* DMA mode:
+    // the image carries the mode flag.
+    for_each_case("snapshot/restore == direct", 80, |rng| {
+        let staging = Staging::random(rng);
+        let program = random_program(rng);
+        let schedule =
+            BroadcastSchedule::compile(&program).expect("straight-line programs always compile");
+        for async_dma in [false, true] {
+            let mut direct = M1System::with_dma_mode(async_dma);
+            staging.apply(&mut direct);
+            let image = direct.snapshot();
+            let rd = direct.run(&program);
+
+            let mut restored = M1System::with_dma_mode(!async_dma);
+            restored.restore(&image).expect("staged image restores");
+            let rr = restored.run(&program);
+            assert_eq!(rd.cycles, rr.cycles, "cycles (async={async_dma})");
+            assert_eq!(rd.slots, rr.slots, "slots (async={async_dma})");
+            assert_eq!(rd.executed, rr.executed, "executed (async={async_dma})");
+            assert_systems_identical(
+                &direct,
+                &restored,
+                &format!("restored interpreter run (async={async_dma})"),
+            );
+
+            let mut sched = M1System::with_dma_mode(!async_dma);
+            sched.restore(&image).expect("staged image restores");
+            let rs = sched.run_program(&program, Some(&schedule));
+            assert_eq!(rd.cycles, rs.cycles, "scheduled cycles (async={async_dma})");
+            assert_systems_identical(
+                &direct,
+                &sched,
+                &format!("restored scheduled run (async={async_dma})"),
+            );
+        }
+    });
+}
+
+#[test]
+fn split_runs_through_a_snapshot_match_uninterrupted_continuation() {
+    // Warm-restart fidelity: cut a random program at a random instruction
+    // boundary, run the prefix, snapshot, and run the suffix on (a) the
+    // original system and (b) a fresh system restored from the image.
+    // Both suffix runs — including any async-DMA readiness state the
+    // prefix left behind — must agree bit-for-bit. This is exactly what
+    // the tile pool's supervised warm restart relies on.
+    for_each_case("snapshot continuation", 60, |rng| {
+        let program = random_program(rng);
+        if program.instructions.len() < 4 {
+            return;
+        }
+        let staging = Staging::random(rng);
+        let k = 1 + rng.below((program.instructions.len() - 1) as u64) as usize;
+        let prefix = Program::new(program.instructions[..k].to_vec());
+        let suffix = Program::new(program.instructions[k..].to_vec());
+        for async_dma in [false, true] {
+            let mut original = M1System::with_dma_mode(async_dma);
+            staging.apply(&mut original);
+            original.run(&prefix);
+            let image = original.snapshot();
+            let ra = original.run(&suffix);
+
+            let mut resumed = M1System::new();
+            resumed.restore(&image).expect("mid-sequence image restores");
+            let rb = resumed.run(&suffix);
+            assert_eq!(ra.cycles, rb.cycles, "suffix cycles (k={k}, async={async_dma})");
+            assert_eq!(ra.executed, rb.executed, "suffix executed (k={k}, async={async_dma})");
+            assert_systems_identical(
+                &original,
+                &resumed,
+                &format!("suffix state (k={k}, async={async_dma})"),
+            );
+        }
+    });
+}
+
+#[test]
 fn most_generated_schedules_take_the_validated_fast_path() {
     // The generator only emits in-range addresses, so every schedule must
     // validate — i.e. the unchecked-read path is what the differential

@@ -71,12 +71,86 @@ fn burst_profile_with_fast_reject_accounts_for_every_request() {
         queue_capacity: 16,
         ttl: Some(Duration::from_millis(200)),
         fast_reject: true,
+        fault_seed: None,
     };
     let r = loadgen::run_scenario(&sc).unwrap();
     assert_eq!(r.failed, 0);
     assert!(r.submitted >= 24, "at least the first burst is offered");
     assert!(r.completed + r.shed + r.rejected <= r.submitted);
     assert!(r.completed > 0);
+}
+
+/// The chaos scenario end to end: seeded faults crash shards inside the
+/// pool while the coordinator serves — yet no reply channel dies, the
+/// run completes requests, and the degraded-capacity report carries the
+/// supervision breakdown.
+#[test]
+fn chaos_scenario_degrades_gracefully_and_loses_nothing() {
+    let mut sc = loadgen::scenario::by_name("chaos").expect("chaos scenario exists");
+    sc.duration = Duration::from_millis(400);
+    assert!(sc.fault_seed.is_some(), "chaos must arm fault injection");
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert_eq!(r.failed, 0, "supervision may not lose replies: {}", r.render());
+    assert!(r.completed > 0, "degraded service still serves: {}", r.render());
+    assert_eq!(r.fault_seed, sc.fault_seed);
+    // Over ~400ms of 4-client closed-loop M1Sim traffic the chaos plan's
+    // panic schedule (one per ~6-10 tile dispatches) always fires.
+    assert!(
+        r.shard_crashes > 0 && r.shard_restarts > 0,
+        "chaos must actually crash shards: {}",
+        r.render()
+    );
+    assert!(r.render().contains("fault injection (seed"));
+    assert!(r.to_json().contains("\"shard_crashes\""));
+}
+
+/// Chaos determinism: the same requests served fault-free and under an
+/// armed chaos plan produce bit-identical responses — supervision repairs
+/// every injected failure before it can reach a client.
+#[test]
+fn chaos_responses_are_bit_identical_to_fault_free_serving() {
+    use morpho::coordinator::FaultPlan;
+    let run = |faults: Option<FaultPlan>| -> Vec<(Vec<f32>, Vec<f32>)> {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::M1Sim,
+            m1_shards: 2,
+            workers: 1,
+            batcher: BatcherConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+            fault_plan: faults,
+            ..Default::default()
+        })
+        .unwrap();
+        let receivers: Vec<_> = (0..12)
+            .map(|i| {
+                let n = 64 + (i * 97) % 1000;
+                let xs: Vec<f32> = (0..n).map(|k| ((k + i) % 113) as f32 - 56.0).collect();
+                let ys: Vec<f32> = (0..n).map(|k| ((k * 3) % 89) as f32 - 44.0).collect();
+                c.submit(xs, ys, vec![Transform::Translate { tx: 5.0, ty: -7.0 }]).unwrap()
+            })
+            .collect();
+        let out = receivers
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv().expect("reply channel alive").expect("no TTL, never shed");
+                (resp.xs, resp.ys)
+            })
+            .collect();
+        c.shutdown();
+        out
+    };
+    let clean = run(None);
+    let plan = FaultPlan::chaos(0xD15EA5E);
+    let chaotic = run(Some(plan.clone()));
+    assert!(plan.panics_fired() > 0, "the chaos plan must have injected panics");
+    for (i, (c, f)) in clean.iter().zip(&chaotic).enumerate() {
+        assert_eq!(c.0.len(), f.0.len(), "request {i} xs length");
+        for (j, (a, b)) in c.0.iter().zip(&f.0).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i} xs[{j}]");
+        }
+        for (j, (a, b)) in c.1.iter().zip(&f.1).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i} ys[{j}]");
+        }
+    }
 }
 
 type Receivers = Arc<Mutex<Vec<mpsc::Receiver<ServeResult>>>>;
