@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use morpho::benchkit::section;
-use morpho::loadgen::{self, scenario};
+use morpho::loadgen::{self, scenario, TransportKind};
 
 fn main() {
     let mut reports = Vec::new();
@@ -19,6 +19,18 @@ fn main() {
     let r = loadgen::run_scenario(&smoke).expect("run smoke");
     println!("{}", r.render());
     reports.push(r);
+
+    section("transport tax (steady scenario, in-process vs loopback TCP)");
+    // The §Scale acceptance bar reads these two rows: loopback p99 is
+    // expected within ~15% of in-process on `steady` (the wire adds
+    // framing + two socket hops, not contention).
+    for transport in [TransportKind::InProcess, TransportKind::Tcp] {
+        let mut steady = scenario::by_name("steady").expect("steady scenario");
+        steady.duration = Duration::from_secs(2);
+        let r = loadgen::run_scenario(&steady.with_transport(transport)).expect("run steady");
+        println!("{}", r.render());
+        reports.push(r);
+    }
 
     section("burst absorption & shedding (burst scenario, fast-reject + TTL)");
     let mut burst = scenario::by_name("burst").expect("burst scenario");

@@ -4,6 +4,12 @@
 //! library" into a deployable service:
 //!
 //! ```text
+//!  remote clients ──TCP frames──► WireServer (accept loop + per-connection
+//!  (wire.rs protocol)             reader/writer threads; malformed frame ⇒
+//!                                 ProtocolError + close THAT connection;
+//!                                 shutdown ⇒ stop accepting, drain admitted,
+//!                                 then close — exactly-one-reply holds)
+//!                              │
 //!  clients ──submit()───────► bounded queue (backpressure: full ⇒ block)
 //!          ──try_submit()──►   │    admission control: full ⇒ instant
 //!          ◄─QueueFull reject──┘    rejection, no queue growth
@@ -52,6 +58,7 @@ pub mod pool;
 pub mod queue;
 pub mod request;
 pub mod server;
+pub mod wire;
 
 pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
 pub use batcher::{Batcher, BatcherConfig};
@@ -60,4 +67,5 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use pool::{PoolHealth, RoutineSpec, TileOutcome, TilePool, TileRequest};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use request::{RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse};
-pub use server::{BackendChoice, Coordinator, CoordinatorConfig};
+pub use server::{BackendChoice, Coordinator, CoordinatorConfig, WireServer};
+pub use wire::{Frame, WireError, MAX_FRAME, WIRE_VERSION};

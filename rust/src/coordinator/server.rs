@@ -1,8 +1,12 @@
 //! The coordinator service: submit → queue → batcher pump → worker pool →
-//! per-request response channels.
+//! per-request response channels — plus [`WireServer`], the TCP listener
+//! that feeds the same admission path from remote connections speaking
+//! the [`super::wire`] protocol.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -18,6 +22,7 @@ use super::queue::{BoundedQueue, PopResult, PushError};
 use super::request::{
     PendingRequest, RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse,
 };
+use super::wire::{self, Frame};
 
 /// Which backend the workers construct (each worker builds its own
 /// instance on its own thread — PJRT clients are thread-pinned).
@@ -174,13 +179,34 @@ impl Coordinator {
     /// Submit a pre-built request.
     pub fn submit_request(&self, req: TransformRequest) -> Result<mpsc::Receiver<ServeResult>> {
         let (tx, rx) = mpsc::channel();
-        let points = req.points();
-        let pending = self.pending(req, tx);
-        self.submit_q
-            .push(pending)
+        self.submit_request_shared(req, tx)
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
-        self.metrics.record_request(points);
         Ok(rx)
+    }
+
+    /// Blocking submit replying on a caller-supplied sender — the wire
+    /// path, where one per-connection channel muxes every reply for that
+    /// connection (tagged by request id) instead of a channel per
+    /// request. Errs only when the coordinator is shutting down; the
+    /// rejection is *returned*, not sent, so the caller controls whether
+    /// it goes onto the shared channel.
+    pub fn submit_request_shared(
+        &self,
+        req: TransformRequest,
+        reply: mpsc::Sender<ServeResult>,
+    ) -> std::result::Result<(), Rejection> {
+        let id = req.id;
+        let points = req.points();
+        match self.submit_q.push(self.pending(req, reply)) {
+            Ok(()) => {
+                self.metrics.record_request(points);
+                Ok(())
+            }
+            Err(_) => {
+                self.metrics.closed.fetch_add(1, Ordering::Relaxed);
+                Err(Rejection { id, reason: RejectReason::ShuttingDown })
+            }
+        }
     }
 
     /// Admission-control fast path: submit without blocking. Where
@@ -206,13 +232,24 @@ impl Coordinator {
         req: TransformRequest,
     ) -> std::result::Result<mpsc::Receiver<ServeResult>, Rejection> {
         let (tx, rx) = mpsc::channel();
+        self.try_submit_request_shared(req, tx)?;
+        Ok(rx)
+    }
+
+    /// Non-blocking submit replying on a caller-supplied sender (the wire
+    /// path's fast-reject discipline — see
+    /// [`Coordinator::submit_request_shared`]).
+    pub fn try_submit_request_shared(
+        &self,
+        req: TransformRequest,
+        reply: mpsc::Sender<ServeResult>,
+    ) -> std::result::Result<(), Rejection> {
         let id = req.id;
         let points = req.points();
-        let pending = self.pending(req, tx);
-        match self.submit_q.try_push(pending) {
+        match self.submit_q.try_push(self.pending(req, reply)) {
             Ok(()) => {
                 self.metrics.record_request(points);
-                Ok(rx)
+                Ok(())
             }
             Err((_, PushError::Full)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -295,6 +332,216 @@ impl Drop for Coordinator {
         self.submit_q.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+    }
+}
+
+// ── the network serving tier ───────────────────────────────────────────
+
+/// Accept-loop poll interval: the listener runs nonblocking so the
+/// accept thread can observe the stop flag without a self-connect trick.
+const ACCEPT_POLL: Duration = Duration::from_millis(1);
+
+/// A live connection: the server-side stream (kept for shutdown
+/// signalling) plus its reader/writer thread pair.
+struct Conn {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// The TCP serving surface: a listener whose connections speak the
+/// [`super::wire`] protocol and feed the shared [`Coordinator`]
+/// admission path.
+///
+/// Per connection, a **reader** thread decodes request frames and
+/// submits them (`fast_reject` flag selects `try_submit` semantics)
+/// with a clone of the connection's shared reply sender; a **writer**
+/// thread drains that channel and writes response/rejection frames
+/// back, muxed out of order by request id. A malformed frame is
+/// answered with a `ProtocolError` frame and closes *that connection
+/// only* — the listener and every other connection keep serving.
+///
+/// [`WireServer::shutdown`] drains gracefully: stop accepting (late
+/// connects are refused at the OS level), close the coordinator — which
+/// waits until every admitted request has its reply — then unblock the
+/// readers so the writers can flush and exit. The exactly-one-reply
+/// contract holds across the wire: every request frame read before
+/// shutdown gets exactly one result frame (requests racing the close
+/// get an explicit `ShuttingDown` rejection).
+pub struct WireServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+    accept: Option<JoinHandle<()>>,
+    coordinator: Arc<Coordinator>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting.
+    pub fn bind(addr: &str, coordinator: Arc<Coordinator>) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::<Conn>::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let coordinator = coordinator.clone();
+            std::thread::Builder::new().name("morpho-accept".into()).spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            match spawn_connection(stream, coordinator.clone()) {
+                                Ok(conn) => conns.lock().unwrap().push(conn),
+                                Err(e) => eprintln!("morpho-accept: connection setup: {e}"),
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(e) => {
+                            eprintln!("morpho-accept: {e}");
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                    }
+                    reap_finished(&conns);
+                }
+                // The listener drops here: late connects are refused by
+                // the OS — the clean end-of-service signal.
+            })?
+        };
+        Ok(WireServer { local_addr, stop, conns, accept: Some(accept), coordinator })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports for clients).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop accepting, answer everything admitted, close.
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        // 1. Stop accepting; joining the accept thread drops the
+        //    listener, so late connects fail fast at connect().
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // 2. Drain: close() waits until every admitted request has its
+        //    reply on its connection channel. Requests that race the
+        //    close get explicit ShuttingDown rejections from the readers.
+        self.coordinator.close();
+        // 3. Unblock readers (EOF on the read half). Each reader drops
+        //    its reply sender; once the in-flight clones inside the
+        //    coordinator are gone too, the writer drains the channel tail
+        //    and exits — replies flush before the streams drop.
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in conns {
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Join and drop connections whose threads have both exited (clients
+/// that disconnected) so a long-lived listener doesn't accumulate dead
+/// handles.
+fn reap_finished(conns: &Mutex<Vec<Conn>>) {
+    let mut guard = conns.lock().unwrap();
+    let mut i = 0;
+    while i < guard.len() {
+        if guard[i].reader.is_finished() && guard[i].writer.is_finished() {
+            let c = guard.swap_remove(i);
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn spawn_connection(stream: TcpStream, coordinator: Arc<Coordinator>) -> io::Result<Conn> {
+    // Accepted sockets inherit the listener's nonblocking flag on some
+    // platforms; connection threads want plain blocking I/O.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    let mut read_half = stream.try_clone()?;
+    // Writes go through a mutex'd clone so the reader can emit a
+    // connection-fatal ProtocolError frame without tearing a response
+    // frame the writer is mid-way through.
+    let write_half = Arc::new(Mutex::new(stream.try_clone()?));
+    let (tx, rx) = mpsc::channel::<ServeResult>();
+    let writer = {
+        let write_half = write_half.clone();
+        std::thread::Builder::new().name("morpho-conn-writer".into()).spawn(move || {
+            while let Ok(res) = rx.recv() {
+                let bytes = wire::encode_result(&res);
+                let mut w = write_half.lock().unwrap();
+                if wire::write_frame(&mut *w, &bytes).is_err() {
+                    break; // peer gone; remaining replies are undeliverable
+                }
+            }
+        })?
+    };
+    let reader = std::thread::Builder::new().name("morpho-conn-reader".into()).spawn(move || {
+        reader_loop(&mut read_half, &write_half, &coordinator, tx);
+    })?;
+    Ok(Conn { stream, reader, writer })
+}
+
+/// Per-connection request pump: read frames until EOF or a protocol
+/// error, submitting each request with a clone of this connection's
+/// shared reply sender. Dropping `reply` on exit is what lets the writer
+/// finish once the last in-flight result lands.
+fn reader_loop(
+    stream: &mut TcpStream,
+    write_half: &Mutex<TcpStream>,
+    coordinator: &Coordinator,
+    reply: mpsc::Sender<ServeResult>,
+) {
+    let fatal = |code: u8, message: &str| {
+        let bytes = wire::encode_protocol_error(code, message);
+        let mut w = write_half.lock().unwrap();
+        let _ = wire::write_frame(&mut *w, &bytes);
+        let _ = w.shutdown(Shutdown::Both);
+    };
+    loop {
+        let payload = match wire::read_frame(stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean EOF at a frame boundary
+            Err(e) => return fatal(wire::ERR_MALFORMED, &e.to_string()),
+        };
+        match wire::decode_frame(&payload) {
+            Ok(Frame::Request { req, fast_reject }) => {
+                let submitted = if fast_reject {
+                    coordinator.try_submit_request_shared(req, reply.clone())
+                } else {
+                    coordinator.submit_request_shared(req, reply.clone())
+                };
+                if let Err(rej) = submitted {
+                    // Exactly one reply even when admission refuses: the
+                    // rejection goes back over the same channel.
+                    let _ = reply.send(Err(rej));
+                }
+            }
+            Ok(_) => {
+                return fatal(wire::ERR_UNEXPECTED_KIND, "client sent a server-only frame kind")
+            }
+            Err(e) => return fatal(wire::ERR_MALFORMED, &e.to_string()),
         }
     }
 }

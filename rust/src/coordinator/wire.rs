@@ -1,0 +1,632 @@
+//! The serving wire protocol (§Scale): versioned, length-prefixed binary
+//! frames carrying [`TransformRequest`]s to the coordinator and
+//! [`ServeResult`]s back — the format `repro serve --listen` speaks and
+//! the loadgen TCP transport drives over loopback.
+//!
+//! ## Frame layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! frame   := len u32 | payload                (len = payload bytes, ≤ MAX_FRAME)
+//! payload := version u8 (=1) | kind u8 | body
+//!
+//! kind 1 — Request (client → server):
+//!   id u64 | flags u8 (bit0: fast-reject admission; other bits must be 0) |
+//!   ttl: tag u8 (0 none / 1 some) [+ nanos u64] |
+//!   transforms: count u32, each tag u8 + f32-bit params
+//!     (1 Translate: tx ty · 2 Scale: sx sy · 3 Rotate: theta ·
+//!      4 RotateAbout: theta cx cy) |
+//!   points: count u32 | xs f32-bits × count | ys f32-bits × count
+//!
+//! kind 2 — Response (server → client):
+//!   id u64 | queued_ns u64 | execute_ns u64 | backend u8
+//!   (1 native / 2 xla / 3 m1sim) | cycles: tag u8 [+ u64] |
+//!   points: count u32 | xs f32-bits × count | ys f32-bits × count
+//!
+//! kind 3 — Rejection (server → client):
+//!   id u64 | reason u8 (1 queue-full / 2 deadline-exceeded / 3 shutting-down)
+//!
+//! kind 4 — ProtocolError (server → client, then the connection closes):
+//!   code u8 | message: len u32 + UTF-8
+//! ```
+//!
+//! Every `f32` travels as its IEEE-754 bit pattern (`to_bits`), so a
+//! decoded value re-encodes byte-identically — the canonical-encoding
+//! property the differential transport tests pin. Decoding is strict:
+//! unknown versions/kinds/tags, length mismatches and trailing bytes are
+//! typed [`WireError`]s, and a frame announcing more than [`MAX_FRAME`]
+//! bytes is refused before any allocation. A malformed frame is a
+//! connection-fatal protocol error: the server answers with a `kind 4`
+//! frame and closes **that connection only**.
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::graphics::Transform;
+
+use super::backend::BackendKind;
+use super::request::{
+    RejectReason, Rejection, RequestTiming, ServeResult, TransformRequest, TransformResponse,
+};
+
+/// Wire protocol version carried in every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard ceiling on a frame's payload size. The largest legitimate frame
+/// (a 4096-point response) is ~32 KiB; anything claiming more than this
+/// is corruption or abuse and is refused before allocation.
+pub const MAX_FRAME: usize = 1 << 20;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_REJECTION: u8 = 3;
+const KIND_PROTOCOL_ERROR: u8 = 4;
+
+/// ProtocolError code: the frame could not be read or decoded.
+pub const ERR_MALFORMED: u8 = 1;
+/// ProtocolError code: a well-formed frame of a kind the receiver does
+/// not accept (e.g. a client sending a server-only Response).
+pub const ERR_UNEXPECTED_KIND: u8 = 2;
+
+/// Why a frame could not be read or decoded. Any variant is fatal for
+/// the connection that produced it (the stream offset is unrecoverable),
+/// but never for the listener or for other connections.
+#[derive(Debug)]
+pub enum WireError {
+    /// The underlying socket/stream failed.
+    Io(io::Error),
+    /// EOF or end-of-buffer in the middle of a frame.
+    Truncated { context: &'static str },
+    /// The length prefix announced more than [`MAX_FRAME`] bytes.
+    Oversized { announced: usize },
+    /// The frame's version byte is not [`WIRE_VERSION`].
+    BadVersion { found: u8 },
+    /// Unknown frame kind byte.
+    BadKind { found: u8 },
+    /// Unknown enum tag (transform kind, backend, rejection reason, …).
+    BadTag { what: &'static str, found: u8 },
+    /// The payload decoded cleanly but bytes were left over.
+    TrailingBytes { count: usize },
+    /// A declared element count is implausible for the payload size.
+    BadCount { what: &'static str, count: usize },
+    /// A string field is not UTF-8.
+    BadUtf8,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::Truncated { context } => write!(f, "truncated frame ({context})"),
+            WireError::Oversized { announced } => {
+                write!(f, "oversized frame: {announced} bytes announced (max {MAX_FRAME})")
+            }
+            WireError::BadVersion { found } => {
+                write!(f, "unsupported wire version {found} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadKind { found } => write!(f, "unknown frame kind {found}"),
+            WireError::BadTag { what, found } => write!(f, "unknown {what} tag {found}"),
+            WireError::TrailingBytes { count } => {
+                write!(f, "{count} trailing bytes after frame payload")
+            }
+            WireError::BadCount { what, count } => {
+                write!(f, "implausible {what} count {count} for frame size")
+            }
+            WireError::BadUtf8 => write!(f, "string field is not UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// A decoded frame.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// A client request plus its admission discipline: `fast_reject`
+    /// asks for `try_submit` semantics (instant [`Rejection`] on a full
+    /// queue) instead of blocking backpressure.
+    Request { req: TransformRequest, fast_reject: bool },
+    /// The exactly-one reply for an accepted request frame: a response
+    /// or an explicit rejection.
+    Result(ServeResult),
+    /// Connection-fatal protocol error report; the sender closes the
+    /// connection after this frame.
+    ProtocolError { code: u8, message: String },
+}
+
+// ── encoding ───────────────────────────────────────────────────────────
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_points(out: &mut Vec<u8>, xs: &[f32], ys: &[f32]) {
+    debug_assert_eq!(xs.len(), ys.len());
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &x in xs {
+        put_f32(out, x);
+    }
+    for &y in ys {
+        put_f32(out, y);
+    }
+}
+
+fn put_transform(out: &mut Vec<u8>, t: &Transform) {
+    match *t {
+        Transform::Translate { tx, ty } => {
+            out.push(1);
+            put_f32(out, tx);
+            put_f32(out, ty);
+        }
+        Transform::Scale { sx, sy } => {
+            out.push(2);
+            put_f32(out, sx);
+            put_f32(out, sy);
+        }
+        Transform::Rotate { theta } => {
+            out.push(3);
+            put_f32(out, theta);
+        }
+        Transform::RotateAbout { theta, cx, cy } => {
+            out.push(4);
+            put_f32(out, theta);
+            put_f32(out, cx);
+            put_f32(out, cy);
+        }
+    }
+}
+
+fn backend_tag(kind: BackendKind) -> u8 {
+    match kind {
+        BackendKind::Native => 1,
+        BackendKind::Xla => 2,
+        BackendKind::M1Sim => 3,
+    }
+}
+
+fn reason_tag(reason: RejectReason) -> u8 {
+    match reason {
+        RejectReason::QueueFull => 1,
+        RejectReason::DeadlineExceeded => 2,
+        RejectReason::ShuttingDown => 3,
+    }
+}
+
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Wrap a finished payload in the length prefix.
+fn finish(payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn header(kind: u8) -> Vec<u8> {
+    vec![WIRE_VERSION, kind]
+}
+
+/// Encode a request frame (length prefix included).
+pub fn encode_request(req: &TransformRequest, fast_reject: bool) -> Vec<u8> {
+    let mut p = header(KIND_REQUEST);
+    p.extend_from_slice(&req.id.to_le_bytes());
+    p.push(fast_reject as u8);
+    match req.ttl {
+        None => p.push(0),
+        Some(ttl) => {
+            p.push(1);
+            p.extend_from_slice(&duration_ns(ttl).to_le_bytes());
+        }
+    }
+    p.extend_from_slice(&(req.transforms.len() as u32).to_le_bytes());
+    for t in &req.transforms {
+        put_transform(&mut p, t);
+    }
+    put_points(&mut p, &req.xs, &req.ys);
+    finish(p)
+}
+
+/// Encode a result frame — response or rejection (length prefix included).
+pub fn encode_result(res: &ServeResult) -> Vec<u8> {
+    let mut p;
+    match res {
+        Ok(resp) => {
+            p = header(KIND_RESPONSE);
+            p.extend_from_slice(&resp.id.to_le_bytes());
+            p.extend_from_slice(&duration_ns(resp.timing.queued).to_le_bytes());
+            p.extend_from_slice(&duration_ns(resp.timing.execute).to_le_bytes());
+            p.push(backend_tag(resp.timing.backend));
+            match resp.timing.simulated_cycles {
+                None => p.push(0),
+                Some(c) => {
+                    p.push(1);
+                    p.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+            put_points(&mut p, &resp.xs, &resp.ys);
+        }
+        Err(rej) => {
+            p = header(KIND_REJECTION);
+            p.extend_from_slice(&rej.id.to_le_bytes());
+            p.push(reason_tag(rej.reason));
+        }
+    }
+    finish(p)
+}
+
+/// Encode a connection-fatal protocol-error frame (length prefix included).
+pub fn encode_protocol_error(code: u8, message: &str) -> Vec<u8> {
+    let mut p = header(KIND_PROTOCOL_ERROR);
+    p.push(code);
+    let mut cut = message.len().min(512);
+    while !message.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let msg = &message.as_bytes()[..cut];
+    p.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    p.extend_from_slice(msg);
+    finish(p)
+}
+
+// ── decoding ───────────────────────────────────────────────────────────
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], WireError> {
+        match self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) {
+            Some(end) => {
+                let s = &self.bytes[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(WireError::Truncated { context }),
+        }
+    }
+
+    fn u8(&mut self, context: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, context)?[0])
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<usize, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, context)?.try_into().unwrap()) as usize)
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, context)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, context: &'static str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(u32::from_le_bytes(self.take(4, context)?.try_into().unwrap())))
+    }
+
+    /// A count whose elements each occupy at least `elem_bytes` of the
+    /// remaining payload — rejects counts a corrupt frame cannot hold.
+    fn count(&mut self, elem_bytes: usize, what: &'static str) -> Result<usize, WireError> {
+        let count = self.u32(what)?;
+        if count.saturating_mul(elem_bytes) > self.bytes.len() - self.pos {
+            return Err(WireError::BadCount { what, count });
+        }
+        Ok(count)
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+fn read_points(c: &mut Cursor) -> Result<(Vec<f32>, Vec<f32>), WireError> {
+    let n = c.count(8, "points")?;
+    let mut xs = Vec::with_capacity(n);
+    for _ in 0..n {
+        xs.push(c.f32("xs")?);
+    }
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        ys.push(c.f32("ys")?);
+    }
+    Ok((xs, ys))
+}
+
+fn read_transform(c: &mut Cursor) -> Result<Transform, WireError> {
+    match c.u8("transform tag")? {
+        1 => Ok(Transform::Translate { tx: c.f32("tx")?, ty: c.f32("ty")? }),
+        2 => Ok(Transform::Scale { sx: c.f32("sx")?, sy: c.f32("sy")? }),
+        3 => Ok(Transform::Rotate { theta: c.f32("theta")? }),
+        4 => Ok(Transform::RotateAbout {
+            theta: c.f32("theta")?,
+            cx: c.f32("cx")?,
+            cy: c.f32("cy")?,
+        }),
+        found => Err(WireError::BadTag { what: "transform", found }),
+    }
+}
+
+/// Decode one frame payload (the bytes after the length prefix).
+pub fn decode_frame(payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor { bytes: payload, pos: 0 };
+    let version = c.u8("version")?;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion { found: version });
+    }
+    let kind = c.u8("kind")?;
+    let frame = match kind {
+        KIND_REQUEST => {
+            let id = c.u64("id")?;
+            let flags = c.u8("flags")?;
+            if flags & !1 != 0 {
+                return Err(WireError::BadTag { what: "request flags", found: flags });
+            }
+            let ttl = match c.u8("ttl tag")? {
+                0 => None,
+                1 => Some(Duration::from_nanos(c.u64("ttl")?)),
+                found => return Err(WireError::BadTag { what: "ttl", found }),
+            };
+            let n_transforms = c.count(5, "transforms")?;
+            let mut transforms = Vec::with_capacity(n_transforms);
+            for _ in 0..n_transforms {
+                transforms.push(read_transform(&mut c)?);
+            }
+            let (xs, ys) = read_points(&mut c)?;
+            Frame::Request {
+                req: TransformRequest { id, xs, ys, transforms, ttl },
+                fast_reject: flags & 1 != 0,
+            }
+        }
+        KIND_RESPONSE => {
+            let id = c.u64("id")?;
+            let queued = Duration::from_nanos(c.u64("queued")?);
+            let execute = Duration::from_nanos(c.u64("execute")?);
+            let backend = match c.u8("backend tag")? {
+                1 => BackendKind::Native,
+                2 => BackendKind::Xla,
+                3 => BackendKind::M1Sim,
+                found => return Err(WireError::BadTag { what: "backend", found }),
+            };
+            let simulated_cycles = match c.u8("cycles tag")? {
+                0 => None,
+                1 => Some(c.u64("cycles")?),
+                found => return Err(WireError::BadTag { what: "cycles", found }),
+            };
+            let (xs, ys) = read_points(&mut c)?;
+            Frame::Result(Ok(TransformResponse {
+                id,
+                xs,
+                ys,
+                timing: RequestTiming { queued, execute, backend, simulated_cycles },
+            }))
+        }
+        KIND_REJECTION => {
+            let id = c.u64("id")?;
+            let reason = match c.u8("reason tag")? {
+                1 => RejectReason::QueueFull,
+                2 => RejectReason::DeadlineExceeded,
+                3 => RejectReason::ShuttingDown,
+                found => return Err(WireError::BadTag { what: "rejection reason", found }),
+            };
+            Frame::Result(Err(Rejection { id, reason }))
+        }
+        KIND_PROTOCOL_ERROR => {
+            let code = c.u8("error code")?;
+            let len = c.count(1, "error message")?;
+            let message = std::str::from_utf8(c.take(len, "error message")?)
+                .map_err(|_| WireError::BadUtf8)?
+                .to_string();
+            Frame::ProtocolError { code, message }
+        }
+        found => return Err(WireError::BadKind { found }),
+    };
+    if c.remaining() != 0 {
+        return Err(WireError::TrailingBytes { count: c.remaining() });
+    }
+    Ok(frame)
+}
+
+/// Re-encode a decoded frame. Decoding is canonical: for any byte string
+/// that decodes, `encode(decode(bytes)) == bytes` (pinned by the wire
+/// property tests) — so a bit flip either fails to decode or produces a
+/// *different* frame, never a silent alias.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    match frame {
+        Frame::Request { req, fast_reject } => encode_request(req, *fast_reject),
+        Frame::Result(res) => encode_result(res),
+        Frame::ProtocolError { code, message } => encode_protocol_error(*code, message),
+    }
+}
+
+// ── stream I/O ─────────────────────────────────────────────────────────
+
+/// Read one frame payload from a stream. `Ok(None)` is a clean EOF at a
+/// frame boundary (the peer closed); EOF mid-frame is
+/// [`WireError::Truncated`], and an announced length beyond
+/// [`MAX_FRAME`] is refused before any allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(WireError::Truncated { context: "length prefix" }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized { announced: len });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated { context: "payload" }
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Ok(Some(payload))
+}
+
+/// Write pre-encoded frame bytes (as produced by the `encode_*` helpers).
+pub fn write_frame(w: &mut impl Write, frame_bytes: &[u8]) -> io::Result<()> {
+    w.write_all(frame_bytes)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> TransformRequest {
+        TransformRequest {
+            id: 42,
+            xs: vec![1.0, -2.5, f32::MIN_POSITIVE],
+            ys: vec![0.0, 3.25, -0.0],
+            transforms: vec![
+                Transform::Translate { tx: 1.0, ty: -2.0 },
+                Transform::RotateAbout { theta: 0.5, cx: 3.0, cy: 4.0 },
+            ],
+            ttl: Some(Duration::from_micros(1500)),
+        }
+    }
+
+    #[test]
+    fn request_roundtrips_through_the_frame_layer() {
+        let req = sample_request();
+        let bytes = encode_request(&req, true);
+        let payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::Request { req: back, fast_reject } => {
+                assert!(fast_reject);
+                assert_eq!(back.id, req.id);
+                assert_eq!(back.ttl, req.ttl);
+                assert_eq!(back.transforms, req.transforms);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&back.xs), bits(&req.xs));
+                assert_eq!(bits(&back.ys), bits(&req.ys));
+            }
+            other => panic!("expected request frame, got {other:?}"),
+        }
+        // Canonical: re-encoding reproduces the wire bytes exactly.
+        let payload2 = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        assert_eq!(encode_frame(&decode_frame(&payload2).unwrap()), bytes);
+    }
+
+    #[test]
+    fn results_roundtrip_both_variants() {
+        let ok: ServeResult = Ok(TransformResponse {
+            id: 7,
+            xs: vec![9.5],
+            ys: vec![-1.5],
+            timing: RequestTiming {
+                queued: Duration::from_nanos(1234),
+                execute: Duration::from_nanos(567_890),
+                backend: BackendKind::M1Sim,
+                simulated_cycles: Some(314),
+            },
+        });
+        let rej: ServeResult = Err(Rejection { id: 8, reason: RejectReason::DeadlineExceeded });
+        for res in [ok, rej] {
+            let bytes = encode_result(&res);
+            let payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+            match decode_frame(&payload).unwrap() {
+                Frame::Result(back) => match (&res, &back) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.id, b.id);
+                        assert_eq!(a.timing.queued, b.timing.queued);
+                        assert_eq!(a.timing.execute, b.timing.execute);
+                        assert_eq!(a.timing.backend, b.timing.backend);
+                        assert_eq!(a.timing.simulated_cycles, b.timing.simulated_cycles);
+                        assert_eq!(a.xs, b.xs);
+                        assert_eq!(a.ys, b.ys);
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b),
+                    _ => panic!("variant flipped in transit"),
+                },
+                other => panic!("expected result frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn protocol_error_roundtrips_and_truncates_long_messages() {
+        let bytes = encode_protocol_error(3, &"x".repeat(2000));
+        let payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::ProtocolError { code: 3, message } => assert_eq!(message.len(), 512),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation_are_distinguished() {
+        assert!(read_frame(&mut &[][..]).unwrap().is_none(), "empty stream is clean EOF");
+        let bytes = encode_request(&sample_request(), false);
+        for cut in [1, 3, 5, bytes.len() - 1] {
+            match read_frame(&mut &bytes[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected truncation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused_before_allocation() {
+        let mut bytes = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0; 16]);
+        match read_frame(&mut &bytes[..]) {
+            Err(WireError::Oversized { announced }) => assert_eq!(announced, MAX_FRAME + 1),
+            other => panic!("expected oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_kind_and_tags_are_typed_errors() {
+        assert!(matches!(decode_frame(&[9, 1]), Err(WireError::BadVersion { found: 9 })));
+        assert!(matches!(decode_frame(&[WIRE_VERSION, 99]), Err(WireError::BadKind { found: 99 })));
+        let mut p = vec![WIRE_VERSION, KIND_REJECTION];
+        p.extend_from_slice(&5u64.to_le_bytes());
+        p.push(77); // unknown rejection reason
+        assert!(matches!(decode_frame(&p), Err(WireError::BadTag { .. })));
+        // Undefined request-flag bits are rejected, not ignored — ignoring
+        // them would let a flipped bit alias the canonical encoding.
+        let mut q = vec![WIRE_VERSION, KIND_REQUEST];
+        q.extend_from_slice(&5u64.to_le_bytes());
+        q.push(2); // flags: undefined bit 1
+        assert!(matches!(
+            decode_frame(&q),
+            Err(WireError::BadTag { what: "request flags", found: 2 })
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let bytes = encode_result(&Err(Rejection { id: 1, reason: RejectReason::QueueFull }));
+        let mut payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        payload.push(0);
+        assert!(matches!(decode_frame(&payload), Err(WireError::TrailingBytes { count: 1 })));
+    }
+
+    #[test]
+    fn implausible_counts_are_rejected_without_allocation() {
+        // A request frame claiming u32::MAX points in a tiny payload.
+        let mut p = vec![WIRE_VERSION, KIND_REQUEST];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.push(0); // flags
+        p.push(0); // no ttl
+        p.extend_from_slice(&0u32.to_le_bytes()); // no transforms
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd point count
+        assert!(matches!(decode_frame(&p), Err(WireError::BadCount { .. })));
+    }
+}

@@ -18,6 +18,10 @@
 //!      │   deterministic-arrival submitter (steady / burst / ramp) with a
 //!      │   polling collector; a sampler gauges admission-queue depth
 //!      │
+//!      ├── transport: in-process library calls, or the wire protocol
+//!      │   over a loopback `WireServer` the runner stands up — same
+//!      │   seeded streams, a `transport` column in the report
+//!      │
 //!      └── CapacityReport → BENCH_coordinator.json (atomic temp+rename,
 //!          same style as BENCH_simulator.json): throughput, p50/p95/p99
 //!          latency, shed/rejected counts, queue depth, mean batch fill,
@@ -52,9 +56,11 @@
 pub mod report;
 pub mod runner;
 pub mod scenario;
+pub mod transport;
 pub mod workload;
 
 pub use report::CapacityReport;
 pub use runner::run_scenario;
 pub use scenario::{ArrivalProfile, Scenario, TransformKind, WorkloadMix};
+pub use transport::{TransportKind, WireClient};
 pub use workload::RequestFactory;

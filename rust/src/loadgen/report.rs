@@ -12,6 +12,10 @@ use crate::benchkit::write_atomic;
 pub struct CapacityReport {
     pub scenario: String,
     pub profile: String,
+    /// Which path the traffic took: `in-process` (library calls) or
+    /// `tcp` (the wire protocol over a loopback listener). ROADMAP
+    /// §Scale's acceptance bar compares the two rows.
+    pub transport: &'static str,
     pub backend: &'static str,
     pub workers: usize,
     pub shards: usize,
@@ -82,7 +86,8 @@ impl CapacityReport {
     /// One JSON object (no trailing newline).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"backend\": \"{}\", \
+            "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"transport\": \"{}\", \
+             \"backend\": \"{}\", \
              \"workers\": {}, \"shards\": {}, \"seed\": {}, \"duration_s\": {}, \
              \"submitted\": {}, \"completed\": {}, \"shed\": {}, \"rejected\": {}, \
              \"deadline_missed\": {}, \"closed\": {}, \"failed\": {}, \
@@ -95,6 +100,7 @@ impl CapacityReport {
              \"sim_cycles_per_point\": {}}}",
             self.scenario.replace('"', "'"),
             self.profile.replace('"', "'"),
+            self.transport,
             self.backend,
             self.workers,
             self.shards,
@@ -128,13 +134,14 @@ impl CapacityReport {
     /// Human-readable summary block.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "scenario {} [{}] on {} (workers={} shards={} seed={}) over {:.2}s\n\
+            "scenario {} [{}] via {} on {} (workers={} shards={} seed={}) over {:.2}s\n\
              offered={} completed={} shed={} rejected={} deadline_missed={} closed={} failed={}\n\
              throughput: {:.1} req/s, {:.2} M points/s   mean batch {:.1} pts\n\
              latency: mean={:.0}us p50={}us p95={}us p99={}us\n\
              queue depth: mean={:.1} max={}   simulated M1 cycles/point={:.2}",
             self.scenario,
             self.profile,
+            self.transport,
             self.backend,
             self.workers,
             self.shards,
@@ -199,6 +206,7 @@ mod tests {
         CapacityReport {
             scenario: "smoke".into(),
             profile: "closed-loop(4)".into(),
+            transport: "in-process",
             backend: "m1sim",
             workers: 1,
             shards: 2,
@@ -237,7 +245,8 @@ mod tests {
         assert_eq!(j.matches('}').count(), 1);
         // Every key present exactly once.
         for key in [
-            "scenario", "profile", "backend", "workers", "shards", "seed", "duration_s",
+            "scenario", "profile", "transport", "backend", "workers", "shards", "seed",
+            "duration_s",
             "submitted", "completed", "shed", "rejected", "deadline_missed", "closed",
             "failed", "fault_seed", "shard_crashes", "shard_restarts", "tiles_redispatched",
             "recovery_max_us", "throughput_rps", "points_per_s", "latency_mean_us",

@@ -1,5 +1,7 @@
 //! Scenario execution: drive a live [`Coordinator`] with the scenario's
-//! arrival discipline, measure per-request latency client-side, sample
+//! arrival discipline — over the scenario's transport (in-process calls,
+//! or the wire protocol against a loopback [`WireServer`] stood up for
+//! the run) — measure per-request latency client-side, sample
 //! admission-queue depth, and fold everything (plus the coordinator's own
 //! metrics) into a [`CapacityReport`].
 
@@ -8,10 +10,13 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, FaultPlan, ServeResult};
+use crate::coordinator::{
+    BackendChoice, Coordinator, CoordinatorConfig, FaultPlan, ServeResult, WireServer,
+};
 
 use super::report::{percentile_us, CapacityReport};
 use super::scenario::{ArrivalProfile, Scenario};
+use super::transport::{Submitted, TransportCtx, TransportKind};
 use super::workload::RequestFactory;
 
 /// Client-side outcome counters shared by driver/collector threads.
@@ -78,7 +83,9 @@ impl Arrivals {
 }
 
 /// Run one scenario to completion and report. The coordinator is started
-/// fresh from the scenario's knobs and fully shut down before returning.
+/// fresh from the scenario's knobs (plus, on the TCP transport, a
+/// loopback [`WireServer`] in front of it) and fully shut down before
+/// returning.
 pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
     let c = Arc::new(Coordinator::start(CoordinatorConfig {
         backend: sc.backend,
@@ -89,6 +96,17 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         fault_plan: sc.fault_seed.map(FaultPlan::chaos),
         ..Default::default()
     })?);
+    let (server, ctx) = match sc.transport {
+        TransportKind::InProcess => (None, TransportCtx::InProcess(c.clone())),
+        TransportKind::Tcp => {
+            let server = WireServer::bind("127.0.0.1:0", c.clone())?;
+            // Clients stamp the scenario TTL on each request frame, so
+            // the wire's deadline field gets real traffic (the server
+            // default would apply regardless — same effective budget).
+            let ctx = TransportCtx::Tcp { addr: server.local_addr(), ttl: sc.ttl };
+            (Some(server), ctx)
+        }
+    };
     let factory = Arc::new(RequestFactory::new(sc.seed, sc.mix.clone()));
     let tally = Arc::new(Tally::default());
 
@@ -113,16 +131,23 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
     let t0 = Instant::now();
     let mut latencies = match sc.profile {
         ArrivalProfile::ClosedLoop { clients } => {
-            closed_loop(&c, &factory, &tally, clients.max(1), t0 + sc.duration)
+            closed_loop(&ctx, &factory, &tally, clients.max(1), t0 + sc.duration)
         }
-        _ => open_loop(&c, &factory, &tally, sc, t0),
+        _ => open_loop(&ctx, &factory, &tally, sc, t0),
     };
     let elapsed = t0.elapsed();
 
     sampler_stop.store(true, Ordering::Relaxed);
     let (depth_sum, depth_n, depth_max) = sampler.join().expect("sampler thread");
     let m = c.metrics();
-    // All helper clones are joined; unwrap to run the draining shutdown.
+    // Graceful drain first (stops accepting, flushes admitted replies),
+    // which also releases the server's coordinator handle…
+    drop(ctx);
+    if let Some(server) = server {
+        server.shutdown();
+    }
+    // …then all helper clones are joined; unwrap to run the draining
+    // shutdown.
     if let Ok(c) = Arc::try_unwrap(c) {
         c.shutdown();
     }
@@ -134,6 +159,7 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
     Ok(CapacityReport {
         scenario: sc.name.to_string(),
         profile: sc.profile.label(),
+        transport: sc.transport.label(),
         backend: backend_name(sc.backend),
         workers: sc.workers.max(1),
         shards: sc.shards.max(1),
@@ -174,8 +200,11 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
 
 /// N clients, each submit → await → repeat until `t_end`. Client `i`
 /// draws stream `i`, so the per-client request sequence is seed-pinned.
+/// Each client owns its own connection (an `Arc` clone in-process, a
+/// dedicated loopback socket on TCP — one connection per user, as real
+/// serving would see).
 fn closed_loop(
-    c: &Arc<Coordinator>,
+    ctx: &TransportCtx,
     factory: &Arc<RequestFactory>,
     tally: &Arc<Tally>,
     clients: usize,
@@ -183,10 +212,18 @@ fn closed_loop(
 ) -> Vec<Duration> {
     let handles: Vec<_> = (0..clients)
         .map(|client| {
-            let c = c.clone();
+            let conn = ctx.connect();
             let factory = factory.clone();
             let tally = tally.clone();
             thread::spawn(move || {
+                let conn = match conn {
+                    Ok(conn) => conn,
+                    Err(e) => {
+                        eprintln!("loadgen client {client}: connect failed: {e}");
+                        tally.failed.fetch_add(1, Ordering::Relaxed);
+                        return Vec::new();
+                    }
+                };
                 let mut latencies = Vec::new();
                 let mut index = 0u64;
                 while Instant::now() < t_end {
@@ -194,8 +231,8 @@ fn closed_loop(
                     index += 1;
                     tally.submitted.fetch_add(1, Ordering::Relaxed);
                     let t = Instant::now();
-                    match c.submit(gr.xs, gr.ys, gr.transforms) {
-                        Ok(rx) => match rx.recv() {
+                    match conn.submit(gr.xs, gr.ys, gr.transforms, false) {
+                        Submitted::Handle(rx) => match rx.recv() {
                             Ok(Ok(resp)) => {
                                 latencies.push(t.elapsed());
                                 tally.completed.fetch_add(1, Ordering::Relaxed);
@@ -210,7 +247,8 @@ fn closed_loop(
                                 tally.failed.fetch_add(1, Ordering::Relaxed);
                             }
                         },
-                        Err(_) => break, // coordinator shut down
+                        Submitted::Rejected => {}
+                        Submitted::Down => break, // coordinator shut down
                     }
                 }
                 latencies
@@ -221,14 +259,25 @@ fn closed_loop(
 }
 
 /// Deterministic-timetable submitter plus a polling collector. Latency is
-/// submit → response observation (poll granularity ≈ 100µs).
+/// submit → response observation (poll granularity ≈ 100µs). One
+/// connection carries the whole timetable; over TCP the reply demux
+/// hands back the same per-request receivers the collector already
+/// polls.
 fn open_loop(
-    c: &Arc<Coordinator>,
+    ctx: &TransportCtx,
     factory: &Arc<RequestFactory>,
     tally: &Arc<Tally>,
     sc: &Scenario,
     t0: Instant,
 ) -> Vec<Duration> {
+    let conn = match ctx.connect() {
+        Ok(conn) => conn,
+        Err(e) => {
+            eprintln!("loadgen open-loop: connect failed: {e}");
+            tally.failed.fetch_add(1, Ordering::Relaxed);
+            return Vec::new();
+        }
+    };
     let outstanding: Outstanding = Arc::new(Mutex::new(Vec::new()));
     let done = Arc::new(AtomicBool::new(false));
     let collector = {
@@ -251,15 +300,15 @@ fn open_loop(
         index += 1;
         tally.submitted.fetch_add(1, Ordering::Relaxed);
         let submitted_at = Instant::now();
-        let admitted = if sc.fast_reject {
-            // Open-loop discipline: overload is shed at the door
-            // (metrics.rejected counts it), the timetable never blocks.
-            c.try_submit(gr.xs, gr.ys, gr.transforms).ok()
-        } else {
-            c.submit(gr.xs, gr.ys, gr.transforms).ok()
-        };
-        if let Some(rx) = admitted {
-            outstanding.lock().unwrap().push((submitted_at, rx));
+        // With `fast_reject`, overload is shed at the door
+        // (metrics.rejected counts it — in-process as a returned
+        // rejection, over the wire as a rejection frame on the handle)
+        // and the timetable never blocks.
+        match conn.submit(gr.xs, gr.ys, gr.transforms, sc.fast_reject) {
+            Submitted::Handle(rx) => {
+                outstanding.lock().unwrap().push((submitted_at, rx));
+            }
+            Submitted::Rejected | Submitted::Down => {}
         }
     }
     done.store(true, Ordering::Relaxed);
@@ -361,6 +410,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: None,
+            transport: TransportKind::InProcess,
         };
         let r = run_scenario(&sc).unwrap();
         assert!(r.completed > 0, "closed loop must complete requests");
@@ -369,7 +419,33 @@ mod tests {
         assert!(r.throughput_rps > 0.0);
         assert!(r.latency_p99_us >= r.latency_p50_us);
         assert_eq!(r.backend, "native");
+        assert_eq!(r.transport, "in-process");
         assert!(r.to_json().contains("\"scenario\": \"test-closed\""));
+    }
+
+    #[test]
+    fn tiny_closed_loop_run_over_loopback_tcp_completes_cleanly() {
+        let sc = Scenario {
+            name: "test-tcp",
+            summary: "unit",
+            profile: ArrivalProfile::ClosedLoop { clients: 2 },
+            duration: Duration::from_millis(200),
+            mix: WorkloadMix::standard(),
+            seed: 5,
+            backend: BackendChoice::Native,
+            workers: 1,
+            shards: 1,
+            queue_capacity: 64,
+            ttl: None,
+            fast_reject: false,
+            fault_seed: None,
+            transport: TransportKind::Tcp,
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.completed > 0, "wire clients must complete requests");
+        assert_eq!(r.failed, 0, "no reply may be lost crossing the wire");
+        assert_eq!(r.transport, "tcp");
+        assert!(r.to_json().contains("\"transport\": \"tcp\""));
     }
 
     #[test]
@@ -388,6 +464,7 @@ mod tests {
             ttl: Some(Duration::from_millis(100)),
             fast_reject: true,
             fault_seed: None,
+            transport: TransportKind::InProcess,
         };
         let r = run_scenario(&sc).unwrap();
         assert_eq!(r.failed, 0);
@@ -421,6 +498,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: Some(7),
+            transport: TransportKind::InProcess,
         };
         let r = run_scenario(&sc).unwrap();
         // The whole point of supervision: injected crashes/deaths/dropped

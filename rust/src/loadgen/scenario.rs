@@ -5,6 +5,8 @@ use std::time::Duration;
 
 use crate::coordinator::BackendChoice;
 
+use super::transport::TransportKind;
+
 /// How requests arrive at the coordinator.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalProfile {
@@ -119,6 +121,18 @@ pub struct Scenario {
     /// (supervised crashes, shard deaths, dropped replies) rather than
     /// the fault-free ceiling. `None` for every ordinary scenario.
     pub fault_seed: Option<u64>,
+    /// How traffic reaches the coordinator: library calls, or the wire
+    /// protocol over a loopback listener the runner stands up. Same
+    /// seeded streams either way — the report rows are comparable.
+    pub transport: TransportKind,
+}
+
+impl Scenario {
+    /// The same scenario driven over a different transport.
+    pub fn with_transport(mut self, transport: TransportKind) -> Scenario {
+        self.transport = transport;
+        self
+    }
 }
 
 fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> Scenario {
@@ -136,6 +150,7 @@ fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> S
         ttl: None,
         fast_reject: false,
         fault_seed: None,
+        transport: TransportKind::InProcess,
     }
 }
 
@@ -225,6 +240,14 @@ mod tests {
             assert_eq!(found.backend, BackendChoice::M1Sim);
             assert!(found.shards >= 2, "{}: shards must be ≥ 2", s.name);
             assert!(!found.mix.sizes.is_empty() && !found.mix.transforms.is_empty());
+            // Transport is an orthogonal axis, not a per-scenario knob:
+            // every named scenario defaults in-process and can be
+            // re-driven over the wire.
+            assert_eq!(found.transport, TransportKind::InProcess);
+            assert_eq!(
+                found.with_transport(TransportKind::Tcp).transport,
+                TransportKind::Tcp
+            );
         }
         assert!(by_name("no-such-scenario").is_none());
     }

@@ -1,0 +1,256 @@
+//! Client transports: how loadgen traffic reaches the coordinator.
+//!
+//! Every scenario runs on either transport with the same seeded request
+//! streams, so the two `CapacityReport` rows are directly comparable —
+//! in-process measures the library ceiling, loopback adds the wire
+//! protocol, kernel sockets, and the server's per-connection threads
+//! (acceptance: ROADMAP §Scale's ~15% bar at the same p99).
+//!
+//! * [`TransportKind::InProcess`] — `submit`/`try_submit` library calls,
+//!   a per-request reply channel straight from the coordinator.
+//! * [`TransportKind::Tcp`] — a [`WireClient`] per driver thread: request
+//!   frames out over loopback, a background reader demuxing result
+//!   frames by id into per-request channels. The driver-facing surface
+//!   is the same `mpsc::Receiver<ServeResult>` either way, so the
+//!   runner's collection/accounting logic is transport-blind.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::wire::{self, Frame};
+use crate::coordinator::{Coordinator, RejectReason, ServeResult, TransformRequest};
+use crate::graphics::Transform;
+
+/// Which path a scenario's traffic takes to the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Library calls in the loadgen process (the pre-wire baseline).
+    InProcess,
+    /// The wire protocol over a loopback TCP connection per driver.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Stable label used in `CapacityReport`/`BENCH_coordinator.json`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "in-process",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a CLI `--transport` value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "in-process" | "inprocess" | "local" => Some(TransportKind::InProcess),
+            "tcp" | "loopback" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// A client connection speaking the [`wire`] protocol: submissions write
+/// request frames (client-assigned ids), a background reader thread
+/// routes each result frame to its request's channel. Dropping the
+/// client closes the connection and disconnects any still-pending
+/// receivers (observed as `failed` by the runner — never the case on a
+/// clean server).
+pub struct WireClient {
+    writer: Mutex<TcpStream>,
+    pending: Arc<Mutex<HashMap<u64, mpsc::Sender<ServeResult>>>>,
+    next_id: AtomicU64,
+    /// TTL stamped on every outgoing request (the wire carries it
+    /// explicitly; `None` defers to the server's default).
+    ttl: Option<Duration>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl WireClient {
+    /// Connect to a [`crate::coordinator::WireServer`] and start the
+    /// reply-demux reader.
+    pub fn connect(addr: SocketAddr, ttl: Option<Duration>) -> io::Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let writer = Mutex::new(stream.try_clone()?);
+        let mut read_half = stream;
+        let pending: Arc<Mutex<HashMap<u64, mpsc::Sender<ServeResult>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let reader = {
+            let pending = pending.clone();
+            std::thread::Builder::new().name("wire-client-reader".into()).spawn(move || {
+                loop {
+                    let payload = match wire::read_frame(&mut read_half) {
+                        Ok(Some(p)) => p,
+                        Ok(None) | Err(_) => break, // server closed / stream died
+                    };
+                    match wire::decode_frame(&payload) {
+                        Ok(Frame::Result(res)) => {
+                            let id = match &res {
+                                Ok(resp) => resp.id,
+                                Err(rej) => rej.id,
+                            };
+                            if let Some(tx) = pending.lock().unwrap().remove(&id) {
+                                let _ = tx.send(res);
+                            }
+                        }
+                        Ok(Frame::ProtocolError { code, message }) => {
+                            eprintln!("wire client: server protocol error {code}: {message}");
+                            break;
+                        }
+                        // A request frame from the server, or garbage:
+                        // nothing sane continues from here.
+                        Ok(Frame::Request { .. }) | Err(_) => break,
+                    }
+                }
+                // Orphan every outstanding request so waiting receivers
+                // observe a disconnect instead of hanging.
+                pending.lock().unwrap().clear();
+            })?
+        };
+        Ok(WireClient { writer, pending, next_id: AtomicU64::new(1), ttl, reader: Some(reader) })
+    }
+
+    /// Send one request; the reply (response or rejection) arrives on the
+    /// returned channel. `fast_reject` selects the server's `try_submit`
+    /// admission discipline.
+    pub fn submit(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+        fast_reject: bool,
+    ) -> io::Result<mpsc::Receiver<ServeResult>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = TransformRequest::new(id, xs, ys, transforms);
+        req.ttl = self.ttl;
+        self.submit_request(req, fast_reject)
+    }
+
+    /// Send a pre-built request (the id must be unique per connection).
+    pub fn submit_request(
+        &self,
+        req: TransformRequest,
+        fast_reject: bool,
+    ) -> io::Result<mpsc::Receiver<ServeResult>> {
+        let (tx, rx) = mpsc::channel();
+        let bytes = wire::encode_request(&req, fast_reject);
+        // Register before writing: the reply can race back before the
+        // writer lock is even released.
+        self.pending.lock().unwrap().insert(req.id, tx);
+        let res = {
+            let mut w = self.writer.lock().unwrap();
+            wire::write_frame(&mut *w, &bytes)
+        };
+        if let Err(e) = res {
+            self.pending.lock().unwrap().remove(&req.id);
+            return Err(e);
+        }
+        Ok(rx)
+    }
+}
+
+impl Drop for WireClient {
+    fn drop(&mut self) {
+        // Half-close: the server reader sees EOF and stops accepting our
+        // requests; in-flight replies still flush before the reader ends.
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(Shutdown::Write);
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// What a submission produced, transport-independent.
+pub(crate) enum Submitted {
+    /// Admitted (or at least in flight): the reply arrives here.
+    Handle(mpsc::Receiver<ServeResult>),
+    /// Fast-rejected before a handle existed (in-process `try_submit`) —
+    /// the coordinator's metrics carry the reason.
+    Rejected,
+    /// The coordinator or connection is gone; stop driving.
+    Down,
+}
+
+/// Factory for per-driver-thread connections: closed-loop clients each
+/// get their own (realistic per-user connections over TCP; cheap Arc
+/// clones in-process).
+pub(crate) enum TransportCtx {
+    InProcess(Arc<Coordinator>),
+    Tcp { addr: SocketAddr, ttl: Option<Duration> },
+}
+
+impl TransportCtx {
+    pub(crate) fn connect(&self) -> io::Result<ClientConn> {
+        match self {
+            TransportCtx::InProcess(c) => Ok(ClientConn::InProcess(c.clone())),
+            TransportCtx::Tcp { addr, ttl } => {
+                Ok(ClientConn::Tcp(WireClient::connect(*addr, *ttl)?))
+            }
+        }
+    }
+}
+
+/// One driver thread's connection to the service.
+pub(crate) enum ClientConn {
+    InProcess(Arc<Coordinator>),
+    Tcp(WireClient),
+}
+
+impl ClientConn {
+    /// Submit generated traffic. Over TCP a rejection arrives as a
+    /// result frame on the handle (the runner's collectors already treat
+    /// `Ok(Err(_))` as shed/rejected); in-process fast-rejects surface
+    /// as [`Submitted::Rejected`] with no handle at all — either way the
+    /// coordinator's metrics count it exactly once.
+    pub(crate) fn submit(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+        fast_reject: bool,
+    ) -> Submitted {
+        match self {
+            ClientConn::InProcess(c) => {
+                if fast_reject {
+                    match c.try_submit(xs, ys, transforms) {
+                        Ok(rx) => Submitted::Handle(rx),
+                        Err(rej) if rej.reason == RejectReason::ShuttingDown => Submitted::Down,
+                        Err(_) => Submitted::Rejected,
+                    }
+                } else {
+                    match c.submit(xs, ys, transforms) {
+                        Ok(rx) => Submitted::Handle(rx),
+                        Err(_) => Submitted::Down,
+                    }
+                }
+            }
+            ClientConn::Tcp(wc) => match wc.submit(xs, ys, transforms, fast_reject) {
+                Ok(rx) => Submitted::Handle(rx),
+                Err(_) => Submitted::Down,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_labels_and_parsing_roundtrip() {
+        assert_eq!(TransportKind::InProcess.label(), "in-process");
+        assert_eq!(TransportKind::Tcp.label(), "tcp");
+        for t in [TransportKind::InProcess, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(t.label()), Some(t));
+        }
+        assert_eq!(TransportKind::parse("loopback"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+}

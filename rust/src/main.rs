@@ -1,9 +1,12 @@
 //! `repro` — the reproduction CLI. Run `repro help` (or any unknown
 //! verb) for the authoritative verb listing in [`USAGE`].
 
-use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig};
+use std::sync::Arc;
+
+use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, WireServer, WIRE_VERSION};
 use morpho::graphics::Transform;
 use morpho::loadgen;
+use morpho::loadgen::TransportKind;
 use morpho::mapping::{VecScalarMapping, VecVecMapping};
 use morpho::morphosys::{AluOp, M1System};
 use morpho::perf::{
@@ -31,10 +34,17 @@ verbs:
                             to xla; `shards` sizes the m1sim worker's tile
                             pool (default 1); `async` runs the m1sim
                             shards in overlapped async-DMA mode
-  loadtest <scenario|list> [shards] [seconds]
+  serve --listen <addr> [native|xla|m1sim] [shards] [sync|async]
+                            bind the wire-protocol TCP listener on <addr>
+                            (e.g. 127.0.0.1:7070) and serve until stdin
+                            closes / Ctrl-C, then drain gracefully (every
+                            admitted request is answered before exit)
+  loadtest <scenario|list> [--transport tcp|in-process] [shards] [seconds]
                             run a named load-generation scenario against
                             the coordinator (M1Sim backend) and write
-                            BENCH_coordinator.json; `list` names them
+                            BENCH_coordinator.json; `list` names them;
+                            `--transport tcp` drives it over a loopback
+                            wire-protocol listener instead of in-process
   replay <file.m1ra>        re-execute a failure-repro artifact (dumped on
                             shard crashes when MORPHO_REPRO_DIR is set)
                             step by step and report the exact first
@@ -46,7 +56,7 @@ fn usage() -> ! {
     std::process::exit(2)
 }
 
-fn loadtest(name: &str, shards: Option<usize>, seconds: Option<u64>) {
+fn loadtest(name: &str, transport: Option<TransportKind>, shards: Option<usize>, seconds: Option<u64>) {
     if name == "list" {
         for sc in loadgen::scenario::all() {
             println!("{:<8} {}", sc.name, sc.summary);
@@ -57,13 +67,22 @@ fn loadtest(name: &str, shards: Option<usize>, seconds: Option<u64>) {
         eprintln!("unknown scenario `{name}` — try `repro loadtest list`");
         std::process::exit(2)
     });
+    if let Some(t) = transport {
+        sc = sc.with_transport(t);
+    }
     if let Some(s) = shards {
         sc.shards = s.max(1);
     }
     if let Some(s) = seconds {
         sc.duration = std::time::Duration::from_secs(s.max(1));
     }
-    println!("loadtest `{}`: {} [{}]…", sc.name, sc.summary, sc.profile.label());
+    println!(
+        "loadtest `{}` via {}: {} [{}]…",
+        sc.name,
+        sc.transport.label(),
+        sc.summary,
+        sc.profile.label()
+    );
     let report = loadgen::run_scenario(&sc).expect("run loadtest scenario");
     println!("\n{}", report.render());
     let path = loadgen::report::default_path();
@@ -214,6 +233,44 @@ fn serve(requests: usize, backend: BackendChoice, m1_shards: usize, m1_async_dma
     c.shutdown();
 }
 
+/// `repro serve --listen <addr>`: put the coordinator on the wire and
+/// serve remote clients until the operator closes stdin (or Ctrl-C kills
+/// the process outright), then drain gracefully — stop accepting, answer
+/// everything admitted, report, exit.
+fn serve_listen(addr: &str, backend: BackendChoice, m1_shards: usize, m1_async_dma: bool) {
+    let c = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend,
+            workers: 2,
+            m1_shards,
+            m1_async_dma,
+            ..Default::default()
+        })
+        .expect("start coordinator"),
+    );
+    let server = WireServer::bind(addr, c.clone()).unwrap_or_else(|e| {
+        eprintln!("failed to bind {addr}: {e:#}");
+        std::process::exit(1)
+    });
+    println!(
+        "serving wire protocol v{WIRE_VERSION} on {} ({:?} backend, shards={})",
+        server.local_addr(),
+        backend,
+        m1_shards
+    );
+    println!("close stdin (Ctrl-D) to drain and stop");
+    let mut line = String::new();
+    while matches!(std::io::stdin().read_line(&mut line), Ok(n) if n > 0) {
+        line.clear();
+    }
+    println!("draining…");
+    server.shutdown();
+    println!("{}", c.metrics().render());
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut it = args.iter().map(String::as_str);
@@ -257,12 +314,28 @@ fn main() {
         Some("artifacts") => artifacts(),
         Some("serve") => {
             // Strictly positional: a malformed count/shards errors out
-            // instead of silently shifting the arguments.
-            let n = match it.next() {
-                None => 100,
-                Some(s) => s.parse().unwrap_or_else(|_| usage()),
+            // instead of silently shifting the arguments. `--listen`
+            // replaces the request count (a listener serves until told
+            // to stop, not for N requests).
+            let mut first = it.next();
+            let listen = if first == Some("--listen") {
+                let addr = it.next().unwrap_or_else(|| usage());
+                first = it.next();
+                Some(addr)
+            } else {
+                None
             };
-            let backend = match it.next() {
+            let n = match (listen, first) {
+                (_, None) => 100,
+                // With --listen the next positional is the backend, not
+                // a request count — `first` already holds it.
+                (Some(_), Some(_)) => 100,
+                (None, Some(s)) => {
+                    first = it.next();
+                    s.parse().unwrap_or_else(|_| usage())
+                }
+            };
+            let backend = match first {
                 None => BackendChoice::Xla,
                 Some("native") => BackendChoice::Native,
                 Some("xla") => BackendChoice::Xla,
@@ -278,13 +351,29 @@ fn main() {
                 Some("async") => true,
                 Some(_) => usage(),
             };
-            serve(n, backend, shards, async_dma);
+            match listen {
+                Some(addr) => serve_listen(addr, backend, shards, async_dma),
+                None => serve(n, backend, shards, async_dma),
+            }
         }
         Some("loadtest") => {
             let name = it.next().unwrap_or_else(|| usage());
-            let shards = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
-            let seconds = it.next().map(|s| s.parse().unwrap_or_else(|_| usage()));
-            loadtest(name, shards, seconds);
+            let mut rest: Vec<&str> = it.collect();
+            let transport = if rest.first() == Some(&"--transport") {
+                rest.remove(0);
+                if rest.is_empty() {
+                    usage();
+                }
+                Some(TransportKind::parse(rest.remove(0)).unwrap_or_else(|| usage()))
+            } else {
+                None
+            };
+            if rest.len() > 2 {
+                usage();
+            }
+            let shards = rest.first().map(|s| s.parse().unwrap_or_else(|_| usage()));
+            let seconds = rest.get(1).map(|s| s.parse().unwrap_or_else(|_| usage()));
+            loadtest(name, transport, shards, seconds);
         }
         Some("replay") => {
             let path = it.next().unwrap_or_else(|| usage());

@@ -16,7 +16,10 @@
 //! Every case derives from a deterministic seed. CI runs a fixed seed
 //! matrix by exporting `CONFORMANCE_SEED`, which perturbs the base seed
 //! so each matrix entry explores a disjoint case set; failures print the
-//! exact per-case seed to reproduce locally.
+//! exact per-case seed to reproduce locally. When `MORPHO_REPRO_DIR` is
+//! set, interpreter-vs-scheduled divergences additionally dump a
+//! self-contained `.m1ra` artifact (see `morpho::replay`) that
+//! `repro replay` reports as divergent.
 
 use morpho::coordinator::backend::{apply_native, Backend, M1SimBackend};
 use morpho::morphosys::context_memory::Block;
@@ -25,7 +28,9 @@ use morpho::morphosys::rc_array::ARRAY_DIM;
 use morpho::morphosys::{
     AluOp, Bank, BroadcastSchedule, ContextWord, Instruction, M1System, Program, Reg, Set,
 };
+use morpho::replay::{dump_dir, ReplayOutcome, ReproArtifact};
 use morpho::testkit::Rng;
+use std::path::{Path, PathBuf};
 
 /// Words of main memory the generator stages into and programs may write;
 /// the differential check compares this whole window.
@@ -42,16 +47,71 @@ fn seed_base() -> u64 {
 }
 
 /// Run `cases` seeded cases, printing the reproducing seed on failure.
-fn for_each_case(name: &str, cases: u64, mut case: impl FnMut(&mut Rng)) {
+/// The closure also receives the case seed so failure paths can stamp it
+/// into dumped repro artifacts.
+fn for_each_case(name: &str, cases: u64, mut case: impl FnMut(&mut Rng, u64)) {
     let base = seed_base();
     for i in 0..cases {
         let seed = base.wrapping_add(i.wrapping_mul(0xA24B_AED4_963E_E407));
         let mut rng = Rng::new(seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| case(&mut rng)));
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| case(&mut rng, seed)));
         if let Err(e) = result {
             eprintln!("conformance `{name}` failed on case {i} (seed {seed:#x})");
             std::panic::resume_unwind(e);
         }
+    }
+}
+
+/// Build and write a `.m1ra` divergence artifact: the staged pre-state
+/// and program with the reference interpreter's per-step digests, plus
+/// the *candidate* tier's memory window recorded as the expected result.
+/// `repro replay` then re-derives the reference run and reports the
+/// divergence (a result mismatch at the first differing element) instead
+/// of a clean match.
+fn dump_divergence_artifact(
+    dir: &Path,
+    seed: u64,
+    what: &str,
+    pre_state: Vec<u8>,
+    program: &Program,
+    candidate_mem: Vec<i16>,
+) -> morpho::Result<PathBuf> {
+    let artifact = ReproArtifact::capture(
+        seed,
+        format!("conformance divergence: {what}"),
+        program.clone(),
+        pre_state,
+        0,
+        candidate_mem,
+    )?;
+    artifact.write_into(dir)
+}
+
+/// Run a differential case's assertions; when they fail and
+/// `MORPHO_REPRO_DIR` is set, dump a divergence artifact before
+/// propagating the panic (ordinary runs never write anything). The
+/// `pre_state` and `candidate_mem` closures are only invoked on failure.
+fn guard_differential(
+    seed: u64,
+    what: &str,
+    pre_state: impl FnOnce() -> Vec<u8>,
+    program: &Program,
+    candidate_mem: impl FnOnce() -> Vec<i16>,
+    assertions: impl FnOnce(),
+) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(assertions));
+    if let Err(e) = result {
+        if let Some(dir) = dump_dir() {
+            match dump_divergence_artifact(&dir, seed, what, pre_state(), program, candidate_mem())
+            {
+                Ok(path) => {
+                    eprintln!("conformance: divergence artifact at {}", path.display());
+                }
+                Err(err) => eprintln!("conformance: artifact dump failed: {err}"),
+            }
+        }
+        std::panic::resume_unwind(e);
     }
 }
 
@@ -275,7 +335,7 @@ fn assert_systems_identical(a: &M1System, b: &M1System, what: &str) {
 
 #[test]
 fn random_programs_scheduled_path_is_bit_identical_to_interpreter() {
-    for_each_case("scheduled == interpreter", 220, |rng| {
+    for_each_case("scheduled == interpreter", 220, |rng, seed| {
         let staging = Staging::random(rng);
         let program = random_program(rng);
         let schedule = BroadcastSchedule::compile(&program)
@@ -289,11 +349,24 @@ fn random_programs_scheduled_path_is_bit_identical_to_interpreter() {
         staging.apply(&mut sched);
         let rs = sched.run_program(&program, Some(&schedule));
 
-        assert_eq!(ri.cycles, rs.cycles, "cycles");
-        assert_eq!(ri.slots, rs.slots, "slots");
-        assert_eq!(ri.executed, rs.executed, "executed");
-        assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts");
-        assert_systems_identical(&interp, &sched, "post-run state");
+        guard_differential(
+            seed,
+            "scheduled vs interpreter",
+            || {
+                let mut fresh = M1System::new();
+                staging.apply(&mut fresh);
+                fresh.snapshot()
+            },
+            &program,
+            || sched.mem.load_elements(0, 2 * MEM_WINDOW),
+            || {
+                assert_eq!(ri.cycles, rs.cycles, "cycles");
+                assert_eq!(ri.slots, rs.slots, "slots");
+                assert_eq!(ri.executed, rs.executed, "executed");
+                assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts");
+                assert_systems_identical(&interp, &sched, "post-run state");
+            },
+        );
     });
 }
 
@@ -306,7 +379,7 @@ fn random_programs_scheduled_path_is_bit_identical_in_both_dma_modes() {
     // precomputed async issue/readiness accounting and the executed
     // architectural state (cell planes, frame buffer, context memory,
     // memory window) must both be bit-identical to the interpreter's.
-    for_each_case("scheduled == interpreter across DMA modes", 220, |rng| {
+    for_each_case("scheduled == interpreter across DMA modes", 220, |rng, seed| {
         let staging = Staging::random(rng);
         let program = random_program(rng);
         let schedule = BroadcastSchedule::compile(&program)
@@ -320,17 +393,73 @@ fn random_programs_scheduled_path_is_bit_identical_in_both_dma_modes() {
             staging.apply(&mut sched);
             let rs = sched.run_program(&program, Some(&schedule));
 
-            assert_eq!(ri.cycles, rs.cycles, "cycles (async={async_dma})");
-            assert_eq!(ri.slots, rs.slots, "slots (async={async_dma})");
-            assert_eq!(ri.executed, rs.executed, "executed (async={async_dma})");
-            assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts (async={async_dma})");
-            assert_systems_identical(
-                &interp,
-                &sched,
-                &format!("post-run state (async={async_dma})"),
+            guard_differential(
+                seed,
+                &format!("scheduled vs interpreter (async={async_dma})"),
+                || {
+                    let mut fresh = M1System::with_dma_mode(async_dma);
+                    staging.apply(&mut fresh);
+                    fresh.snapshot()
+                },
+                &program,
+                || sched.mem.load_elements(0, 2 * MEM_WINDOW),
+                || {
+                    assert_eq!(ri.cycles, rs.cycles, "cycles (async={async_dma})");
+                    assert_eq!(ri.slots, rs.slots, "slots (async={async_dma})");
+                    assert_eq!(ri.executed, rs.executed, "executed (async={async_dma})");
+                    assert_eq!(ri.broadcasts, rs.broadcasts, "broadcasts (async={async_dma})");
+                    assert_systems_identical(
+                        &interp,
+                        &sched,
+                        &format!("post-run state (async={async_dma})"),
+                    );
+                },
             );
         }
     });
+}
+
+#[test]
+fn forced_divergence_dumps_an_artifact_that_replays_as_divergent() {
+    // The artifact contract end to end: force a divergence through the
+    // same dump path the differential tests use — a candidate memory
+    // window that differs from the reference in one element — and assert
+    // the written `.m1ra` file replays as divergent, not as a clean
+    // match. Uses an explicit directory rather than `MORPHO_REPRO_DIR`
+    // (mutating the env would race parallel tests).
+    let seed = 0xD1FF_0000_0000_0001u64;
+    let mut rng = Rng::new(seed);
+    let staging = Staging::random(&mut rng);
+    let program = random_program(&mut rng);
+
+    let mut reference = M1System::new();
+    staging.apply(&mut reference);
+    let pre_state = reference.snapshot();
+    reference.run(&program);
+
+    // The "candidate" result: the reference window with one corrupted
+    // element — the smallest divergence a broken tier could produce.
+    let mut candidate_mem = reference.mem.load_elements(0, 2 * MEM_WINDOW);
+    candidate_mem[123] = candidate_mem[123].wrapping_add(1);
+
+    let dir = std::env::temp_dir().join("morpho-conformance-divergence-test");
+    let path =
+        dump_divergence_artifact(&dir, seed, "forced unit divergence", pre_state, &program, candidate_mem)
+            .expect("artifact dump");
+
+    let artifact = ReproArtifact::read_from(&path).expect("artifact reads back");
+    assert_eq!(artifact.seed, seed);
+    assert!(artifact.summary.contains("forced unit divergence"));
+    let outcome = artifact.replay().expect("artifact replays");
+    assert!(!outcome.is_match(), "forced divergence replayed clean: {}", outcome.render());
+    match outcome {
+        ReplayOutcome::ResultMismatch { index, expected, found } => {
+            assert_eq!(index, 123, "divergence must point at the corrupted element");
+            assert_eq!(expected, found.wrapping_add(1));
+        }
+        other => panic!("expected a result mismatch, got {}", other.render()),
+    }
+    let _ = std::fs::remove_file(path);
 }
 
 /// Build the canonical fusable tile program: stage `u`/`v` at 0x100/0x200
@@ -404,7 +533,7 @@ fn fused_runs_match_interpreter_for_every_alu_op() {
     // accumulator state carries from one fused run into the next.
     for op_bits in 0..16u8 {
         let op = AluOp::from_bits(op_bits);
-        for_each_case(&format!("fused {op:?}"), 12, |rng| {
+        for_each_case(&format!("fused {op:?}"), 12, |rng, _seed| {
             let mut cw = if op.uses_immediate() {
                 ContextWord::immediate(op, rng.range_i64(-128, 127) as i16)
             } else {
@@ -567,7 +696,7 @@ fn snapshot_restore_run_is_bit_identical_to_direct_run() {
     // in both DMA modes and on both the interpreter and scheduled tiers.
     // The restore target deliberately starts in the *opposite* DMA mode:
     // the image carries the mode flag.
-    for_each_case("snapshot/restore == direct", 80, |rng| {
+    for_each_case("snapshot/restore == direct", 80, |rng, _seed| {
         let staging = Staging::random(rng);
         let program = random_program(rng);
         let schedule =
@@ -611,7 +740,7 @@ fn split_runs_through_a_snapshot_match_uninterrupted_continuation() {
     // Both suffix runs — including any async-DMA readiness state the
     // prefix left behind — must agree bit-for-bit. This is exactly what
     // the tile pool's supervised warm restart relies on.
-    for_each_case("snapshot continuation", 60, |rng| {
+    for_each_case("snapshot continuation", 60, |rng, _seed| {
         let program = random_program(rng);
         if program.instructions.len() < 4 {
             return;
@@ -646,7 +775,7 @@ fn most_generated_schedules_take_the_validated_fast_path() {
     // The generator only emits in-range addresses, so every schedule must
     // validate — i.e. the unchecked-read path is what the differential
     // test above actually exercises.
-    for_each_case("schedules validate", 50, |rng| {
+    for_each_case("schedules validate", 50, |rng, _seed| {
         let program = random_program(rng);
         assert!(BroadcastSchedule::compile(&program).unwrap().is_validated());
     });
@@ -749,7 +878,7 @@ fn pooled_backend_randomized_conformance_against_serial() {
     // tile of non-multiple-of-64 sizes.
     let mut serial = M1SimBackend::new();
     let mut pooled = M1SimBackend::with_shards(4);
-    for_each_case("pooled == serial", 200, |rng| {
+    for_each_case("pooled == serial", 200, |rng, _seed| {
         let n = rng.range_i64(1, 300) as usize;
         let params = random_quantizable_params(rng);
         let base_x: Vec<f32> = (0..n).map(|_| rng.range_i64(-4000, 4000) as f32).collect();

@@ -8,10 +8,12 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use morpho::coordinator::{
-    BackendChoice, BatcherConfig, Coordinator, CoordinatorConfig, ServeResult,
+    BackendChoice, BatcherConfig, Coordinator, CoordinatorConfig, ServeResult, WireServer,
 };
 use morpho::graphics::Transform;
-use morpho::loadgen::{self, ArrivalProfile, Scenario, WorkloadMix};
+use morpho::loadgen::{
+    self, ArrivalProfile, RequestFactory, Scenario, TransportKind, WireClient, WorkloadMix,
+};
 
 /// The CI smoke scenario, shortened: must complete real requests on the
 /// sharded M1 simulator with zero failed (dead-channel) requests and
@@ -72,12 +74,98 @@ fn burst_profile_with_fast_reject_accounts_for_every_request() {
         ttl: Some(Duration::from_millis(200)),
         fast_reject: true,
         fault_seed: None,
+        transport: TransportKind::InProcess,
     };
     let r = loadgen::run_scenario(&sc).unwrap();
     assert_eq!(r.failed, 0);
     assert!(r.submitted >= 24, "at least the first burst is offered");
     assert!(r.completed + r.shed + r.rejected <= r.submitted);
     assert!(r.completed > 0);
+}
+
+/// The transport differential (ROADMAP §Scale): the same seeded request
+/// set served in-process and over the loopback wire protocol yields
+/// bit-identical response payloads, and both ledgers agree — everything
+/// offered is admitted, everything admitted is answered.
+#[test]
+fn same_seeded_requests_are_bit_identical_across_transports() {
+    let factory = RequestFactory::new(4242, WorkloadMix::standard());
+    let requests: Vec<_> = (0..24u64).map(|i| factory.request(i % 3, i / 3)).collect();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    let config = || CoordinatorConfig {
+        backend: BackendChoice::M1Sim,
+        m1_shards: 2,
+        workers: 2,
+        batcher: BatcherConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+        ..Default::default()
+    };
+
+    // In-process: straight library calls.
+    let c = Coordinator::start(config()).unwrap();
+    let rxs: Vec<_> = requests
+        .iter()
+        .map(|g| c.submit(g.xs.clone(), g.ys.clone(), g.transforms.clone()).unwrap())
+        .collect();
+    let in_process: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+            (bits(&r.xs), bits(&r.ys))
+        })
+        .collect();
+    let m = c.metrics();
+    assert_eq!(m.requests, requests.len() as u64, "in-process: all admitted");
+    assert_eq!(m.responses, m.requests, "in-process: answered == admitted");
+    c.shutdown();
+
+    // Loopback: the same requests through the wire protocol.
+    let c = Arc::new(Coordinator::start(config()).unwrap());
+    let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+    let client = WireClient::connect(server.local_addr(), None).unwrap();
+    let rxs: Vec<_> = requests
+        .iter()
+        .map(|g| client.submit(g.xs.clone(), g.ys.clone(), g.transforms.clone(), false).unwrap())
+        .collect();
+    let over_wire: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+            (bits(&r.xs), bits(&r.ys))
+        })
+        .collect();
+    let m = c.metrics();
+    assert_eq!(m.requests, requests.len() as u64, "loopback: all admitted");
+    assert_eq!(m.responses, m.requests, "loopback: answered == admitted");
+    drop(client);
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+
+    assert_eq!(in_process, over_wire, "transports must serve bit-identical payloads");
+}
+
+/// The scenario axis of the same differential: `run_scenario` on each
+/// transport completes cleanly, stamps the report's transport column,
+/// and shows identical closed-loop accounting — without TTLs or
+/// fast-reject, everything offered is answered on both paths.
+#[test]
+fn scenario_accounting_is_identical_across_transports() {
+    for transport in [TransportKind::InProcess, TransportKind::Tcp] {
+        let mut sc = loadgen::scenario::by_name("smoke").unwrap().with_transport(transport);
+        sc.duration = Duration::from_millis(250);
+        let r = loadgen::run_scenario(&sc).unwrap();
+        assert_eq!(r.transport, transport.label());
+        assert_eq!(r.failed, 0, "{}: no reply channel may die", transport.label());
+        assert!(r.completed > 0, "{}: must serve requests", transport.label());
+        assert_eq!(
+            r.completed, r.submitted,
+            "{}: closed-loop without TTLs answers everything it offers",
+            transport.label()
+        );
+        assert_eq!(r.shed + r.rejected + r.closed, 0, "{}: nothing shed", transport.label());
+        assert!(r.to_json().contains(&format!("\"transport\": \"{}\"", transport.label())));
+    }
 }
 
 /// The chaos scenario end to end: seeded faults crash shards inside the

@@ -1,0 +1,417 @@
+//! Wire-protocol properties and the loopback serving tier end to end:
+//! seeded random frames round-trip bit-identically (the canonical
+//! encoding the differential transport suite relies on), corrupt frames
+//! are typed rejections that poison only their own connection, and a
+//! listener under live load drains gracefully — every admitted request
+//! answered exactly once, late connects refused at the OS level.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::Duration;
+
+use morpho::coordinator::request::RequestTiming;
+use morpho::coordinator::wire::{self, ERR_MALFORMED, ERR_UNEXPECTED_KIND};
+use morpho::coordinator::{
+    BackendChoice, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, Frame, RejectReason,
+    Rejection, ServeResult, TransformRequest, TransformResponse, WireError, WireServer, MAX_FRAME,
+    WIRE_VERSION,
+};
+use morpho::graphics::Transform;
+use morpho::loadgen::WireClient;
+use morpho::testkit::{check, Rng};
+
+// ── generators ─────────────────────────────────────────────────────────
+
+fn random_transform(rng: &mut Rng) -> Transform {
+    match rng.below(4) {
+        0 => Transform::Translate {
+            tx: rng.f32_range(-100.0, 100.0),
+            ty: rng.f32_range(-100.0, 100.0),
+        },
+        1 => Transform::Scale { sx: rng.f32_range(-2.0, 2.0), sy: rng.f32_range(-2.0, 2.0) },
+        2 => Transform::Rotate { theta: rng.f32_range(-3.2, 3.2) },
+        _ => Transform::RotateAbout {
+            theta: rng.f32_range(-3.2, 3.2),
+            cx: rng.f32_range(-50.0, 50.0),
+            cy: rng.f32_range(-50.0, 50.0),
+        },
+    }
+}
+
+fn random_request(rng: &mut Rng) -> TransformRequest {
+    let n = rng.below(65) as usize;
+    TransformRequest {
+        id: rng.next_u64(),
+        xs: (0..n).map(|_| rng.f32_range(-1e4, 1e4)).collect(),
+        ys: (0..n).map(|_| rng.f32_range(-1e4, 1e4)).collect(),
+        transforms: (0..rng.below(5)).map(|_| random_transform(rng)).collect(),
+        ttl: if rng.bool() { Some(Duration::from_nanos(rng.next_u64())) } else { None },
+    }
+}
+
+fn random_result(rng: &mut Rng) -> ServeResult {
+    if rng.bool() {
+        let n = rng.below(33) as usize;
+        Ok(TransformResponse {
+            id: rng.next_u64(),
+            xs: (0..n).map(|_| rng.f32_range(-1e4, 1e4)).collect(),
+            ys: (0..n).map(|_| rng.f32_range(-1e4, 1e4)).collect(),
+            timing: RequestTiming {
+                queued: Duration::from_nanos(rng.next_u64()),
+                execute: Duration::from_nanos(rng.next_u64()),
+                backend: match rng.below(3) {
+                    0 => BackendKind::Native,
+                    1 => BackendKind::Xla,
+                    _ => BackendKind::M1Sim,
+                },
+                simulated_cycles: if rng.bool() { Some(rng.next_u64()) } else { None },
+            },
+        })
+    } else {
+        Err(Rejection {
+            id: rng.next_u64(),
+            reason: match rng.below(3) {
+                0 => RejectReason::QueueFull,
+                1 => RejectReason::DeadlineExceeded,
+                _ => RejectReason::ShuttingDown,
+            },
+        })
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ── properties ─────────────────────────────────────────────────────────
+
+/// Seeded random requests and results survive encode → frame → decode
+/// with every `f32` bit pattern intact, and re-encoding the decoded
+/// frame reproduces the original wire bytes exactly.
+#[test]
+fn seeded_random_frames_roundtrip_bit_identically() {
+    check("wire roundtrip", 200, |rng| {
+        let req = random_request(rng);
+        let fast = rng.bool();
+        let bytes = wire::encode_request(&req, fast);
+        let payload = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
+        let frame = wire::decode_frame(&payload).unwrap();
+        assert_eq!(wire::encode_frame(&frame), bytes, "request re-encode is bit-identical");
+        match frame {
+            Frame::Request { req: back, fast_reject } => {
+                assert_eq!(fast_reject, fast);
+                assert_eq!(back.id, req.id);
+                assert_eq!(back.ttl, req.ttl);
+                assert_eq!(back.transforms, req.transforms);
+                assert_eq!(bits(&back.xs), bits(&req.xs));
+                assert_eq!(bits(&back.ys), bits(&req.ys));
+            }
+            other => panic!("expected request frame, got {other:?}"),
+        }
+
+        let res = random_result(rng);
+        let bytes = wire::encode_result(&res);
+        let payload = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
+        let frame = wire::decode_frame(&payload).unwrap();
+        assert_eq!(wire::encode_frame(&frame), bytes, "result re-encode is bit-identical");
+        match (frame, res) {
+            (Frame::Result(Ok(b)), Ok(a)) => {
+                assert_eq!(b.id, a.id);
+                assert_eq!(b.timing.queued, a.timing.queued);
+                assert_eq!(b.timing.execute, a.timing.execute);
+                assert_eq!(b.timing.backend, a.timing.backend);
+                assert_eq!(b.timing.simulated_cycles, a.timing.simulated_cycles);
+                assert_eq!(bits(&b.xs), bits(&a.xs));
+                assert_eq!(bits(&b.ys), bits(&a.ys));
+            }
+            (Frame::Result(Err(b)), Err(a)) => assert_eq!(a, b),
+            (frame, res) => panic!("variant flipped in transit: {frame:?} vs {res:?}"),
+        }
+    });
+}
+
+/// Corruption can't alias: flipping any single bit of a valid payload
+/// either fails to decode (a typed [`WireError`]) or decodes to a frame
+/// whose canonical re-encoding *is* the flipped byte string — never a
+/// second encoding of the original frame.
+#[test]
+fn every_bit_flip_fails_decode_or_reencodes_to_the_flipped_bytes() {
+    let mut rng = Rng::new(0x51DE_CA11);
+    let mut frames: Vec<Vec<u8>> = vec![
+        wire::encode_protocol_error(ERR_MALFORMED, "truncated frame (payload)"),
+        wire::encode_result(&Err(Rejection { id: 3, reason: RejectReason::QueueFull })),
+    ];
+    for _ in 0..3 {
+        let mut req = random_request(&mut rng);
+        req.xs.truncate(8); // keep the flip sweep cheap
+        req.ys.truncate(8);
+        frames.push(wire::encode_request(&req, rng.bool()));
+        frames.push(wire::encode_result(&random_result(&mut rng)));
+    }
+    for bytes in frames {
+        let payload = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
+        for bit in 0..payload.len() * 8 {
+            let mut flipped = payload.clone();
+            flipped[bit / 8] ^= 1 << (bit % 8);
+            if let Ok(frame) = wire::decode_frame(&flipped) {
+                let mut expect = (flipped.len() as u32).to_le_bytes().to_vec();
+                expect.extend_from_slice(&flipped);
+                assert_eq!(
+                    wire::encode_frame(&frame),
+                    expect,
+                    "bit {bit} decoded to a non-canonical alias"
+                );
+            }
+        }
+    }
+}
+
+/// Frame-layer stream handling: the only clean EOF is at a frame
+/// boundary; every mid-frame cut is a typed truncation, and an absurd
+/// length prefix is refused before any allocation happens.
+#[test]
+fn truncated_and_oversized_streams_are_rejected_at_the_frame_layer() {
+    let req = TransformRequest::new(
+        9,
+        vec![1.0, 2.0, 3.0],
+        vec![4.0, 5.0, 6.0],
+        vec![Transform::Rotate { theta: 1.25 }],
+    );
+    let bytes = wire::encode_request(&req, false);
+    for cut in 0..bytes.len() {
+        match wire::read_frame(&mut &bytes[..cut]) {
+            Ok(None) => assert_eq!(cut, 0, "only the empty stream is a clean EOF"),
+            Err(WireError::Truncated { .. }) => assert!(cut > 0),
+            other => panic!("cut at {cut}: expected truncation, got {other:?}"),
+        }
+    }
+    let mut huge = u32::MAX.to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0u8; 8]);
+    assert!((u32::MAX as usize) > MAX_FRAME);
+    match wire::read_frame(&mut &huge[..]) {
+        Err(WireError::Oversized { announced }) => assert_eq!(announced, u32::MAX as usize),
+        other => panic!("expected oversized, got {other:?}"),
+    }
+}
+
+// ── the loopback serving tier ──────────────────────────────────────────
+
+fn native_coordinator() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendChoice::Native,
+            workers: 2,
+            batcher: BatcherConfig { max_wait: Duration::from_micros(200), ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// One served round-trip with an exactly-predictable answer (small
+/// integer translate: every f32 op is exact).
+fn serve_one(client: &WireClient) {
+    let rx = client
+        .submit(
+            vec![1.0, 2.0],
+            vec![10.0, 20.0],
+            vec![Transform::Translate { tx: 1.0, ty: -1.0 }],
+            false,
+        )
+        .expect("submit over live connection");
+    let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply").expect("served");
+    assert_eq!(resp.xs, vec![2.0, 3.0]);
+    assert_eq!(resp.ys, vec![9.0, 19.0]);
+}
+
+fn length_prefixed(payload: &[u8]) -> Vec<u8> {
+    let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read the server's answer to a malformed/forbidden frame: exactly one
+/// ProtocolError frame with the expected code, then EOF — the server
+/// closed this connection and nothing else.
+fn expect_protocol_error_then_eof(stream: &mut TcpStream, code: u8) {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let payload = wire::read_frame(stream)
+        .expect("the error report frame arrives before the close")
+        .expect("error report, not bare EOF");
+    match wire::decode_frame(&payload).unwrap() {
+        Frame::ProtocolError { code: got, message } => {
+            assert_eq!(got, code, "error code (message: {message})");
+            assert!(!message.is_empty(), "the error report names the problem");
+        }
+        other => panic!("expected a protocol error frame, got {other:?}"),
+    }
+    assert!(
+        wire::read_frame(stream).unwrap().is_none(),
+        "the connection must close right after the error frame"
+    );
+}
+
+/// A connection sending garbage gets a typed ProtocolError and is
+/// dropped — while the listener and every *other* connection keep
+/// serving untouched, for each of the malformed-input classes.
+#[test]
+fn malformed_frames_poison_only_their_own_connection() {
+    let c = native_coordinator();
+    let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+    let addr = server.local_addr();
+
+    let good = WireClient::connect(addr, None).unwrap();
+    serve_one(&good);
+
+    let malformed: Vec<(&str, Vec<u8>, u8)> = vec![
+        ("unknown version", length_prefixed(&[WIRE_VERSION + 1, 1]), ERR_MALFORMED),
+        ("unknown kind", length_prefixed(&[WIRE_VERSION, 99]), ERR_MALFORMED),
+        (
+            "oversized announcement",
+            ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec(),
+            ERR_MALFORMED,
+        ),
+        (
+            // A server-only frame kind from a client: well-formed, still fatal.
+            "unexpected kind",
+            wire::encode_result(&Err(Rejection { id: 1, reason: RejectReason::QueueFull })),
+            ERR_UNEXPECTED_KIND,
+        ),
+    ];
+    for (what, bytes, code) in malformed {
+        let mut bad = TcpStream::connect(addr).expect(what);
+        bad.write_all(&bytes).unwrap();
+        expect_protocol_error_then_eof(&mut bad, code);
+        // The listener and the established connection shrug it off.
+        serve_one(&good);
+    }
+
+    // A frame cut off mid-payload by a half-close is a truncation, not a
+    // hang: the reader reports it and closes.
+    let mut bad = TcpStream::connect(addr).unwrap();
+    let mut partial = 64u32.to_le_bytes().to_vec();
+    partial.extend_from_slice(&[7u8; 8]);
+    bad.write_all(&partial).unwrap();
+    bad.shutdown(Shutdown::Write).unwrap();
+    expect_protocol_error_then_eof(&mut bad, ERR_MALFORMED);
+    serve_one(&good);
+
+    // Fresh connections are still welcome after all that abuse.
+    let late = WireClient::connect(addr, None).unwrap();
+    serve_one(&late);
+
+    drop(good);
+    drop(late);
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+}
+
+/// Graceful drain under live load: shutting the server down mid-run
+/// stops the listener (late connects refused at the OS level, accept
+/// thread joined), answers every admitted request exactly once, and
+/// turns requests racing the close into explicit ShuttingDown
+/// rejections — never silence.
+#[test]
+fn graceful_drain_under_load_answers_every_admitted_request() {
+    let c = native_coordinator();
+    let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+    let addr = server.local_addr();
+
+    // Three closed-loop connections hammer the server until the drain
+    // tears their sockets down.
+    let drivers: Vec<_> = (0..3u64)
+        .map(|t| {
+            std::thread::spawn(move || -> (u64, u64, u64) {
+                let client = WireClient::connect(addr, None).expect("connect before drain");
+                let (mut completed, mut rejected, mut unread) = (0u64, 0u64, 0u64);
+                for i in 0u64.. {
+                    let xs = vec![((t * 1009 + i) % 97) as f32; 16];
+                    let ys = vec![0.5f32; 16];
+                    let tf = vec![Transform::Translate { tx: 2.0, ty: 1.0 }];
+                    let rx = match client.submit(xs, ys, tf, false) {
+                        Ok(rx) => rx,
+                        Err(_) => break, // connection torn down: drained
+                    };
+                    match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(Ok(_)) => completed += 1,
+                        Ok(Err(rej)) => {
+                            assert_eq!(rej.reason, RejectReason::ShuttingDown);
+                            rejected += 1;
+                        }
+                        // Written but never read by the closing server:
+                        // never admitted, observed as a disconnect.
+                        Err(RecvTimeoutError::Disconnected) => {
+                            unread += 1;
+                            break;
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            panic!("request neither answered nor disconnected")
+                        }
+                    }
+                }
+                (completed, rejected, unread)
+            })
+        })
+        .collect();
+
+    // Meanwhile a pipelined client floods 16 requests before reading any
+    // reply — the demux must hand each receiver its *own* answer.
+    let pipelined = WireClient::connect(addr, None).unwrap();
+    let handles: Vec<_> = (0..16u32)
+        .map(|i| {
+            let n = 8 + (i as usize % 5) * 7;
+            pipelined
+                .submit(
+                    vec![i as f32; n],
+                    vec![1.0; n],
+                    vec![Transform::Scale { sx: 1.5, sy: 0.5 }],
+                    false,
+                )
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in handles.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("pipelined reply").expect("ok");
+        assert_eq!(resp.xs.len(), 8 + (i % 5) * 7);
+        assert_eq!(
+            resp.xs[0].to_bits(),
+            (i as f32 * 1.5).to_bits(),
+            "request {i} must get its own answer back"
+        );
+    }
+    drop(pipelined);
+
+    std::thread::sleep(Duration::from_millis(30));
+    server.shutdown(); // blocks until everything admitted is answered
+
+    // The listener is gone (and with it the accept thread — shutdown()
+    // joins it, so returning at all proves no leak).
+    assert!(TcpStream::connect(addr).is_err(), "late connects must be refused");
+
+    let (mut completed, mut rejected, mut unread) = (0u64, 0u64, 0u64);
+    for d in drivers {
+        let (c2, r, u) = d.join().unwrap();
+        completed += c2;
+        rejected += r;
+        unread += u;
+    }
+    assert!(completed > 0, "the load must actually be served before the drain");
+
+    // The server-side ledger: without TTLs nothing sheds, so exactly-one
+    // -reply means answered == admitted; door rejections and unread
+    // frames were never admitted at all.
+    let m = c.metrics();
+    assert_eq!(
+        m.responses, m.requests,
+        "every admitted request answered (rejected={rejected} unread={unread})"
+    );
+    assert_eq!(m.shed, 0);
+    assert!(m.responses >= completed, "clients can't have seen more than was sent");
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+}
