@@ -8,7 +8,7 @@
 use std::time::Duration;
 
 use morpho::benchkit::section;
-use morpho::loadgen::{self, scenario, TransportKind};
+use morpho::loadgen::{self, scenario, RouterScenario, TransportKind};
 
 fn main() {
     let mut reports = Vec::new();
@@ -49,6 +49,28 @@ fn main() {
     section("degraded capacity under seeded fault injection (chaos scenario)");
     let chaos = scenario::by_name("chaos").expect("chaos scenario");
     let r = loadgen::run_scenario(&chaos).expect("run chaos");
+    println!("{}", r.render());
+    reports.push(r);
+
+    section("router scaling (steady over TCP through the front-end, 1 vs 2 backends)");
+    // The §Scale router bar reads these rows: with backends that saturate
+    // on CPU, two of them behind the router should clear ≥1.5× the
+    // single-backend tcp steady throughput (least-depth balancing pays
+    // for the extra hop).
+    for backends in [1usize, 2] {
+        let mut steady = scenario::by_name("steady").expect("steady scenario");
+        steady.duration = Duration::from_secs(2);
+        let mut sc = steady.with_transport(TransportKind::Tcp);
+        sc.name = if backends == 1 { "steady-router1" } else { "steady-router2" };
+        sc.router = Some(RouterScenario { backends, kill_seed: None });
+        let r = loadgen::run_scenario(&sc).expect("run routed steady");
+        println!("{}", r.render());
+        reports.push(r);
+    }
+
+    section("mid-run failover (failover scenario: kill + restart one backend)");
+    let failover = scenario::by_name("failover").expect("failover scenario");
+    let r = loadgen::run_scenario(&failover).expect("run failover");
     println!("{}", r.render());
     reports.push(r);
 

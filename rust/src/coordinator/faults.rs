@@ -73,7 +73,7 @@ pub struct FaultPlan {
 
 /// SplitMix64 — the crate-standard cheap deterministic scrambler, used to
 /// derive the chaos profile's knobs from one seed.
-fn splitmix64(state: &mut u64) -> u64 {
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -220,9 +220,76 @@ impl FaultPlan {
     }
 }
 
+// ── process-level fault schedules ──────────────────────────────────────
+
+/// One scheduled backend-process failure: at `at` into the run, kill
+/// backend `backend`; bring a fresh process up on the same address
+/// `restart_after` later.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillEvent {
+    /// Offset from run start at which the backend dies.
+    pub at: Duration,
+    /// Index of the backend to kill (into the router's backend list).
+    pub backend: usize,
+    /// How long the backend stays down before restarting.
+    pub restart_after: Duration,
+}
+
+/// A seeded schedule of backend-process kills for the failover loadgen
+/// scenario — [`FaultPlan`]'s discipline lifted from shard-level to
+/// process-level: every event is a pure function of `(seed, backends,
+/// duration)`, so a failing failover run is re-executable from its seed.
+#[derive(Debug, Clone)]
+pub struct BackendKillPlan {
+    events: Vec<KillEvent>,
+}
+
+impl BackendKillPlan {
+    /// Derive the schedule: one kill at ~25% of the run aimed at a
+    /// seed-chosen backend, restarting after ~20% of the run — leaving
+    /// more than half the run for the router to heal and the revived
+    /// backend to rejoin the rotation (what the failover gate asserts).
+    pub fn seeded(seed: u64, backends: usize, duration: Duration) -> BackendKillPlan {
+        assert!(backends > 0, "a kill plan needs at least one backend");
+        let mut s = seed;
+        let victim = (splitmix64(&mut s) as usize) % backends;
+        // ±5% seeded jitter on the kill point keeps runs honest about
+        // not depending on an exact phase, while staying deterministic.
+        let jitter_pct = 20 + splitmix64(&mut s) % 11; // 20..=30 (% of run)
+        BackendKillPlan {
+            events: vec![KillEvent {
+                at: duration.mul_f64(jitter_pct as f64 / 100.0),
+                backend: victim,
+                restart_after: duration.mul_f64(0.20),
+            }],
+        }
+    }
+
+    /// The schedule, ordered by `at`.
+    pub fn events(&self) -> &[KillEvent] {
+        &self.events
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kill_plan_is_deterministic_and_leaves_time_to_heal() {
+        let a = BackendKillPlan::seeded(0xFA11, 2, Duration::from_secs(2));
+        let b = BackendKillPlan::seeded(0xFA11, 2, Duration::from_secs(2));
+        assert_eq!(a.events(), b.events(), "same seed, same schedule");
+        assert_eq!(a.events().len(), 1);
+        let e = a.events()[0];
+        assert!(e.backend < 2);
+        // Down by ~30% of the run, back by ~50%: over half the run
+        // remains for the rejoin the failover gate requires.
+        assert!(e.at + e.restart_after <= Duration::from_secs(2).mul_f64(0.55));
+        let c = BackendKillPlan::seeded(0xFA12, 2, Duration::from_secs(2));
+        let differs = c.events()[0].backend != e.backend || c.events()[0].at != e.at;
+        assert!(differs, "different seed, different schedule");
+    }
 
     #[test]
     fn panic_at_fires_exactly_once_at_the_scheduled_dispatch() {

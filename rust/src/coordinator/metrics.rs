@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use super::wire::HealthStats;
+
 const BUCKETS: usize = 32; // bucket i: [2^i, 2^(i+1)) µs
 
 /// A log₂ histogram over microseconds.
@@ -227,9 +229,143 @@ impl MetricsSnapshot {
     }
 }
 
+// ── cluster-wide aggregation (the router tier) ─────────────────────────
+
+/// One backend's row in the router's cluster snapshot.
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    /// Position in the router's backend list.
+    pub index: usize,
+    /// The backend's listen address.
+    pub addr: String,
+    /// Breaker state at snapshot time: `"healthy"`, `"suspect"` or
+    /// `"dead"`.
+    pub state: &'static str,
+    /// Requests the router dispatched to this backend.
+    pub proxied: u64,
+    /// Replies this backend delivered back through the router.
+    pub replies: u64,
+    /// Times this backend's breaker fell to dead after having served.
+    pub deaths: u64,
+    /// Times it re-entered the rotation after being dead.
+    pub rejoins: u64,
+    /// Queue depth from its most recent health report (stale unless the
+    /// breaker is healthy).
+    pub queue_depth: u64,
+}
+
+/// The router's one-consistent-read metrics view: every backend's most
+/// recent kind-5 health report summed into `health`, per-backend rows,
+/// and the router's own proxy/failover counters — so the loadgen report
+/// reads a single snapshot instead of racing N backends.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSnapshot {
+    /// Per-backend rows, in backend-list order.
+    pub backends: Vec<BackendSnapshot>,
+    /// Sum of the most recent health report from every backend that has
+    /// delivered one (cumulative counters add; `queue_depth` sums
+    /// gauges; `recovery_max_us` keeps the max).
+    pub health: HealthStats,
+    /// Requests the router accepted from clients and dispatched.
+    pub proxied: u64,
+    /// Replies the router forwarded back to clients.
+    pub replies: u64,
+    /// Requests re-dispatched to another backend after their first
+    /// backend died mid-flight.
+    pub redispatched: u64,
+    /// Requests answered with an immediate `Unavailable` rejection
+    /// because no live backend remained (or the redispatch budget ran
+    /// out).
+    pub unavailable_rejected: u64,
+    /// Backend breaker deaths observed (connection loss or health-poll
+    /// starvation on a backend that had served).
+    pub backend_deaths: u64,
+    /// Backends that healed and re-entered the rotation.
+    pub backend_rejoins: u64,
+}
+
+impl ClusterSnapshot {
+    /// Fold one backend's latest health report into the cluster totals.
+    pub(crate) fn absorb(&mut self, h: &HealthStats) {
+        let t = &mut self.health;
+        t.queue_depth += h.queue_depth;
+        t.requests += h.requests;
+        t.responses += h.responses;
+        t.shed += h.shed;
+        t.rejected += h.rejected;
+        t.closed += h.closed;
+        t.deadline_missed += h.deadline_missed;
+        t.shard_crashes += h.shard_crashes;
+        t.shard_restarts += h.shard_restarts;
+        t.tiles_redispatched += h.tiles_redispatched;
+        t.recovery_max_us = t.recovery_max_us.max(h.recovery_max_us);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "router: proxied={} replies={} redispatched={} unavailable={} \
+             deaths={} rejoins={}\n\
+             cluster: requests={} responses={} shed={} rejected={} depth={}",
+            self.proxied,
+            self.replies,
+            self.redispatched,
+            self.unavailable_rejected,
+            self.backend_deaths,
+            self.backend_rejoins,
+            self.health.requests,
+            self.health.responses,
+            self.health.shed,
+            self.health.rejected,
+            self.health.queue_depth,
+        );
+        for b in &self.backends {
+            out.push_str(&format!(
+                "\n  backend[{}] {} ({}): proxied={} replies={} deaths={} rejoins={} depth={}",
+                b.index, b.addr, b.state, b.proxied, b.replies, b.deaths, b.rejoins, b.queue_depth,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cluster_snapshot_sums_health_reports_and_renders_rows() {
+        let mut s = ClusterSnapshot::default();
+        s.absorb(&HealthStats {
+            queue_depth: 3,
+            requests: 10,
+            responses: 9,
+            recovery_max_us: 100,
+            ..Default::default()
+        });
+        s.absorb(&HealthStats {
+            queue_depth: 1,
+            requests: 5,
+            responses: 5,
+            recovery_max_us: 700,
+            ..Default::default()
+        });
+        assert_eq!(s.health.queue_depth, 4, "gauges sum");
+        assert_eq!(s.health.requests, 15, "cumulative counters add");
+        assert_eq!(s.health.recovery_max_us, 700, "maxes keep the max");
+        s.backends.push(BackendSnapshot {
+            index: 0,
+            addr: "127.0.0.1:9000".into(),
+            state: "healthy",
+            proxied: 12,
+            replies: 12,
+            deaths: 1,
+            rejoins: 1,
+            queue_depth: 3,
+        });
+        let r = s.render();
+        assert!(r.contains("requests=15"));
+        assert!(r.contains("backend[0] 127.0.0.1:9000 (healthy)"));
+    }
 
     #[test]
     fn histogram_buckets_by_log2() {

@@ -4,9 +4,20 @@
 //! library" into a deployable service:
 //!
 //! ```text
+//!  remote clients ──TCP frames──► Router (front-end, optional: one wire
+//!  (wire.rs protocol)             listener proxying to N backend
+//!                              │  coordinators; kind-5 health polls drive
+//!                              │  a per-backend Healthy→Suspect→Dead
+//!                              │  breaker; least-reported-queue-depth
+//!                              │  balancing, round-robin on ties/stale;
+//!                              │  in-flight requests of a dying backend
+//!                              │  are re-dispatched exactly once; every
+//!                              │  backend dead ⇒ immediate Unavailable)
+//!                              ▼
 //!  remote clients ──TCP frames──► WireServer (accept loop + per-connection
 //!  (wire.rs protocol)             reader/writer threads; malformed frame ⇒
 //!                                 ProtocolError + close THAT connection;
+//!                                 kind-5 health poll ⇒ inline report;
 //!                                 shutdown ⇒ stop accepting, drain admitted,
 //!                                 then close — exactly-one-reply holds)
 //!                              │
@@ -57,15 +68,17 @@ pub mod metrics;
 pub mod pool;
 pub mod queue;
 pub mod request;
+pub mod router;
 pub mod server;
 pub mod wire;
 
 pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
 pub use batcher::{Batcher, BatcherConfig};
-pub use faults::FaultPlan;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use faults::{BackendKillPlan, FaultPlan, KillEvent};
+pub use metrics::{BackendSnapshot, ClusterSnapshot, Metrics, MetricsSnapshot};
 pub use pool::{PoolHealth, RoutineSpec, TileOutcome, TilePool, TileRequest};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use request::{RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse};
+pub use router::{BreakerState, Router, RouterConfig};
 pub use server::{BackendChoice, Coordinator, CoordinatorConfig, WireServer};
-pub use wire::{Frame, WireError, MAX_FRAME, WIRE_VERSION};
+pub use wire::{Frame, HealthStats, WireError, MAX_FRAME, WIRE_VERSION};

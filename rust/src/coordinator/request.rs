@@ -90,6 +90,10 @@ pub enum RejectReason {
     DeadlineExceeded,
     /// The coordinator is shutting down.
     ShuttingDown,
+    /// No backend could take the request — the front-end router had
+    /// every coordinator marked dead (or exhausted its redispatch
+    /// budget). Clients get this immediately instead of hanging.
+    Unavailable,
 }
 
 /// An explicit negative reply: the request was admitted (or offered) but

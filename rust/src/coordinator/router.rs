@@ -1,0 +1,1049 @@
+//! The fault-tolerant front-end router (§Scale): one wire-protocol-v1
+//! listener proxying requests over loopback to N backend coordinator
+//! processes — the horizontal scale-out tier above [`super::WireServer`].
+//!
+//! ## Balancing
+//!
+//! Each backend is polled with kind-5 health frames every
+//! [`RouterConfig::health_interval`]; a request goes to the live backend
+//! with the **least reported queue depth**, falling back to round-robin
+//! when depths tie or any report is stale. Clients speak plain wire v1
+//! to the router and cannot tell it from a single coordinator.
+//!
+//! ## Breakers and failover
+//!
+//! Every backend runs a three-state breaker:
+//!
+//! ```text
+//!            poll timeout                poll timeout / conn error
+//!  Healthy ───────────────▶ Suspect ───────────────▶ Dead
+//!     ▲                        │                       │
+//!     └── health reply ────────┘      reconnect with seeded-jitter
+//!     ▲                               exponential backoff, healthy on
+//!     └───────────────────────────────the first health reply ◀───────┘
+//! ```
+//!
+//! A dying backend's in-flight requests are harvested (after its link
+//! reader is joined, so no reply can race the harvest) and re-dispatched
+//! to a live backend — safe because requests are pure functions of their
+//! payload, and **exactly-once** because a pending-map entry is removed
+//! by exactly one party: the link reader (reply arrived) or the breaker
+//! (link dead). When every backend is dead, clients get an immediate
+//! [`RejectReason::Unavailable`] rejection instead of a hang.
+//!
+//! [`Router::metrics`] aggregates the newest health report from every
+//! backend plus the router's own proxy/failover counters into one
+//! consistent [`ClusterSnapshot`] — what the failover loadgen scenario
+//! reads into `BENCH_coordinator.json`.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::faults::splitmix64;
+use super::metrics::{BackendSnapshot, ClusterSnapshot};
+use super::request::{RejectReason, Rejection, ServeResult, TransformRequest};
+use super::wire::{self, Frame, HealthStats};
+
+/// Router knobs. The defaults suit loopback backends; everything is a
+/// plain field so tests and scenarios can tighten or loosen at will.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Backend coordinator listen addresses, in index order.
+    pub backends: Vec<SocketAddr>,
+    /// How often each live backend is health-polled.
+    pub health_interval: Duration,
+    /// How long a poll may go unanswered before it counts as a strike
+    /// (Healthy → Suspect → Dead). Also the per-attempt connect timeout.
+    pub health_timeout: Duration,
+    /// First reconnect backoff step for a dead backend.
+    pub reconnect_base: Duration,
+    /// Backoff ceiling (with seeded jitter the sleep stays below this).
+    pub reconnect_max: Duration,
+    /// How many times one request may be re-dispatched after backend
+    /// deaths before it is rejected `Unavailable`.
+    pub max_redispatch: u32,
+    /// Seed for the reconnect jitter (determinism under test).
+    pub seed: u64,
+}
+
+impl RouterConfig {
+    pub fn new(backends: Vec<SocketAddr>) -> RouterConfig {
+        RouterConfig {
+            backends,
+            health_interval: Duration::from_millis(10),
+            health_timeout: Duration::from_millis(50),
+            reconnect_base: Duration::from_millis(10),
+            reconnect_max: Duration::from_millis(250),
+            max_redispatch: 3,
+            seed: 0,
+        }
+    }
+}
+
+/// A backend's breaker state (see the module docs for the transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Answering health polls; in the rotation.
+    Healthy,
+    /// Missed one poll; still in the rotation (last resort) but one more
+    /// strike kills it.
+    Suspect,
+    /// Unreachable; its manager is reconnecting with backoff.
+    Dead,
+}
+
+impl BreakerState {
+    fn label(self) -> &'static str {
+        match self {
+            BreakerState::Healthy => "healthy",
+            BreakerState::Suspect => "suspect",
+            BreakerState::Dead => "dead",
+        }
+    }
+}
+
+/// An in-flight proxied request: everything needed to answer the client
+/// or to re-dispatch to another backend. Lives in exactly one link's
+/// pending map at a time — removal is the ownership transfer that makes
+/// replies exactly-once.
+struct ProxyEntry {
+    /// The id the client sent (restored onto the reply).
+    client_id: u64,
+    /// The client connection's muxed reply channel.
+    reply: mpsc::Sender<ServeResult>,
+    req: TransformRequest,
+    fast_reject: bool,
+    /// Absolute deadline derived from the request's TTL at admission;
+    /// re-dispatch forwards only the *remaining* budget.
+    deadline: Option<Instant>,
+    /// Re-dispatch count so far (bounded by `max_redispatch`).
+    hops: u32,
+}
+
+/// The pending map plus its hearse flag: once `dead` is set (under the
+/// lock, after the link reader is joined) no dispatch may insert, so the
+/// breaker's harvest is complete and final.
+struct PendingMap {
+    dead: bool,
+    map: HashMap<u64, ProxyEntry>,
+}
+
+/// One live TCP connection to a backend.
+struct Link {
+    /// Handle for shutdown signalling.
+    stream: TcpStream,
+    /// Serialized write half (dispatchers and the health poller share it).
+    writer: Mutex<TcpStream>,
+    pending: Mutex<PendingMap>,
+    /// Highest health-report seq the reader has seen.
+    last_seq: AtomicU64,
+    /// The link received at least one health report (deaths only count
+    /// for backends that were genuinely up).
+    saw_health: AtomicBool,
+    /// The reader thread exited (EOF or error) — a connection error the
+    /// manager treats as an immediate breaker trip.
+    reader_done: AtomicBool,
+}
+
+/// Per-backend state: breaker, live link, freshest health report, and
+/// the counters behind the report's per-backend rows.
+struct BackendSlot {
+    index: usize,
+    addr: SocketAddr,
+    state: Mutex<BreakerState>,
+    link: Mutex<Option<Arc<Link>>>,
+    last_health: Mutex<Option<(Instant, HealthStats)>>,
+    proxied: AtomicU64,
+    replies: AtomicU64,
+    deaths: AtomicU64,
+    rejoins: AtomicU64,
+    /// The backend has been healthy at least once (so the *next* first
+    /// health reply is a rejoin, not a first join).
+    ever_up: AtomicBool,
+}
+
+/// State shared by the accept loop, client connections and managers.
+struct RouterCore {
+    config: RouterConfig,
+    slots: Vec<Arc<BackendSlot>>,
+    /// Stops the backend managers (the accept loop has its own flag so
+    /// shutdown can stage the two independently).
+    stop: AtomicBool,
+    /// Router-assigned wire ids (globally unique across backends, so
+    /// replies demux unambiguously; client ids are restored on forward).
+    next_id: AtomicU64,
+    /// Round-robin cursor for tie/stale fallback.
+    rr: AtomicU64,
+    proxied: AtomicU64,
+    replies: AtomicU64,
+    redispatched: AtomicU64,
+    unavailable: AtomicU64,
+}
+
+impl RouterCore {
+    /// Choose a backend: healthy pool first, suspect pool as last
+    /// resort. Within the pool, least *fresh* reported queue depth; when
+    /// depths tie or any report is stale, round-robin over the pool.
+    fn pick(&self) -> Option<Arc<BackendSlot>> {
+        let healthy: Vec<&Arc<BackendSlot>> = self
+            .slots
+            .iter()
+            .filter(|s| *s.state.lock().unwrap() == BreakerState::Healthy)
+            .collect();
+        let pool = if healthy.is_empty() {
+            let suspect: Vec<&Arc<BackendSlot>> = self
+                .slots
+                .iter()
+                .filter(|s| *s.state.lock().unwrap() == BreakerState::Suspect)
+                .collect();
+            if suspect.is_empty() {
+                return None;
+            }
+            suspect
+        } else {
+            healthy
+        };
+        let now = Instant::now();
+        let fresh_for = self.config.health_interval * 4;
+        let depths: Vec<Option<u64>> = pool
+            .iter()
+            .map(|s| {
+                s.last_health.lock().unwrap().as_ref().and_then(|(at, h)| {
+                    (now.saturating_duration_since(*at) <= fresh_for).then_some(h.queue_depth)
+                })
+            })
+            .collect();
+        let fresh: Option<Vec<u64>> = depths.into_iter().collect();
+        let candidates: Vec<&Arc<BackendSlot>> = match fresh {
+            // Every pool member has a fresh depth: least-loaded wins.
+            Some(fresh) => {
+                let min = *fresh.iter().min().unwrap();
+                pool.iter().zip(&fresh).filter(|(_, d)| **d == min).map(|(s, _)| *s).collect()
+            }
+            // Any stale report poisons the comparison: round-robin.
+            None => pool,
+        };
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) as usize % candidates.len();
+        Some(candidates[i].clone())
+    }
+
+    /// Admit one client request: dispatch it to a backend (possibly
+    /// after retries), or answer it with an immediate rejection. Always
+    /// leaves the request owned by exactly one party.
+    fn submit(&self, req: TransformRequest, fast_reject: bool, reply: mpsc::Sender<ServeResult>) {
+        let deadline = req.ttl.map(|ttl| Instant::now() + ttl);
+        let entry = ProxyEntry { client_id: req.id, reply, req, fast_reject, deadline, hops: 0 };
+        self.dispatch(entry);
+    }
+
+    /// One dispatch pass: pick a backend, register the entry in its
+    /// link's pending map, write the frame. Bounded retries over other
+    /// backends absorb pick/death races; exhaustion (or no live backend
+    /// at all) is an immediate `Unavailable` reply.
+    fn dispatch(&self, entry: ProxyEntry) {
+        let mut entry = Some(entry);
+        for _ in 0..self.slots.len() + 2 {
+            let e = entry.as_ref().unwrap();
+            if let Some(d) = e.deadline {
+                if Instant::now() >= d {
+                    let rej = Rejection {
+                        id: e.client_id,
+                        reason: RejectReason::DeadlineExceeded,
+                    };
+                    let _ = entry.take().unwrap().reply.send(Err(rej));
+                    return;
+                }
+            }
+            let Some(slot) = self.pick() else { break };
+            let Some(link) = slot.link.lock().unwrap().clone() else { continue };
+            let router_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let bytes = {
+                let e = entry.as_ref().unwrap();
+                let mut wire_req = e.req.clone();
+                wire_req.id = router_id;
+                if let Some(d) = e.deadline {
+                    wire_req.ttl = Some(d.saturating_duration_since(Instant::now()));
+                }
+                wire::encode_request(&wire_req, e.fast_reject)
+            };
+            {
+                let mut p = link.pending.lock().unwrap();
+                if p.dead {
+                    continue; // breaker tripped between pick and here
+                }
+                p.map.insert(router_id, entry.take().unwrap());
+            }
+            let wrote = {
+                let mut w = link.writer.lock().unwrap();
+                wire::write_frame(&mut *w, &bytes).is_ok()
+            };
+            if wrote {
+                slot.proxied.fetch_add(1, Ordering::Relaxed);
+                self.proxied.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            // Write failed. If the entry is still in the map it is ours
+            // again — retry elsewhere. If not, the breaker already
+            // harvested it (and owns the reply): hands off.
+            match link.pending.lock().unwrap().map.remove(&router_id) {
+                Some(back) => entry = Some(back),
+                None => return,
+            }
+        }
+        let e = entry.take().unwrap();
+        self.unavailable.fetch_add(1, Ordering::Relaxed);
+        let _ = e.reply.send(Err(Rejection { id: e.client_id, reason: RejectReason::Unavailable }));
+    }
+
+    /// Re-dispatch a request harvested from a dying backend, respecting
+    /// its remaining TTL and the hop budget.
+    fn redispatch(&self, mut entry: ProxyEntry) {
+        entry.hops += 1;
+        if entry.hops > self.config.max_redispatch {
+            self.unavailable.fetch_add(1, Ordering::Relaxed);
+            let rej = Rejection { id: entry.client_id, reason: RejectReason::Unavailable };
+            let _ = entry.reply.send(Err(rej));
+            return;
+        }
+        self.redispatched.fetch_add(1, Ordering::Relaxed);
+        self.dispatch(entry);
+    }
+
+    /// In-flight proxied requests across every live link.
+    fn inflight(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| {
+                s.link
+                    .lock()
+                    .unwrap()
+                    .as_ref()
+                    .map_or(0, |l| l.pending.lock().unwrap().map.len())
+            })
+            .sum()
+    }
+
+    fn metrics(&self) -> ClusterSnapshot {
+        let mut snap = ClusterSnapshot::default();
+        for slot in &self.slots {
+            let state = slot.state.lock().unwrap().label();
+            let last = slot.last_health.lock().unwrap().clone();
+            if let Some((_, h)) = &last {
+                snap.absorb(h);
+            }
+            let deaths = slot.deaths.load(Ordering::Relaxed);
+            let rejoins = slot.rejoins.load(Ordering::Relaxed);
+            snap.backend_deaths += deaths;
+            snap.backend_rejoins += rejoins;
+            snap.backends.push(BackendSnapshot {
+                index: slot.index,
+                addr: slot.addr.to_string(),
+                state,
+                proxied: slot.proxied.load(Ordering::Relaxed),
+                replies: slot.replies.load(Ordering::Relaxed),
+                deaths,
+                rejoins,
+                queue_depth: last.map(|(_, h)| h.queue_depth).unwrap_or(0),
+            });
+        }
+        snap.proxied = self.proxied.load(Ordering::Relaxed);
+        snap.replies = self.replies.load(Ordering::Relaxed);
+        snap.redispatched = self.redispatched.load(Ordering::Relaxed);
+        snap.unavailable_rejected = self.unavailable.load(Ordering::Relaxed);
+        snap
+    }
+}
+
+// ── the backend managers ───────────────────────────────────────────────
+
+/// Per-backend supervision thread: connect (with seeded-jitter
+/// exponential backoff), stand the link up, health-poll it, and run the
+/// breaker. On link death: harvest in-flight entries and re-dispatch.
+fn manager_loop(core: Arc<RouterCore>, slot: Arc<BackendSlot>) {
+    let cfg = &core.config;
+    let mut jitter = cfg.seed ^ (0x9E37 + slot.index as u64);
+    let mut attempt: u32 = 0;
+    while !core.stop.load(Ordering::Relaxed) {
+        let stream = match TcpStream::connect_timeout(&slot.addr, cfg.health_timeout) {
+            Ok(s) => s,
+            Err(_) => {
+                // Exponential backoff with seeded jitter: base·2^attempt
+                // capped at reconnect_max, plus up to 50% extra.
+                let shift = attempt.min(8);
+                let base = cfg.reconnect_base.saturating_mul(1u32 << shift).min(cfg.reconnect_max);
+                let extra = splitmix64(&mut jitter) % (base.as_micros() as u64 / 2 + 1);
+                let nap = (base + Duration::from_micros(extra)).min(cfg.reconnect_max);
+                attempt = attempt.saturating_add(1);
+                std::thread::sleep(nap);
+                continue;
+            }
+        };
+        attempt = 0;
+        match run_link(&core, &slot, stream) {
+            LinkEnd::Stopped => return,
+            LinkEnd::Died => {} // loop back into reconnect
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum LinkEnd {
+    /// The router is shutting down; the link was closed cleanly.
+    Stopped,
+    /// The backend stopped answering (conn error or poll starvation);
+    /// in-flight entries were harvested and re-dispatched.
+    Died,
+}
+
+/// Drive one connected link until it dies or the router stops.
+fn run_link(core: &Arc<RouterCore>, slot: &Arc<BackendSlot>, stream: TcpStream) -> LinkEnd {
+    let cfg = &core.config;
+    if stream.set_nodelay(true).is_err() {
+        return LinkEnd::Died;
+    }
+    let (read_half, write_half) = match (stream.try_clone(), stream.try_clone()) {
+        (Ok(r), Ok(w)) => (r, w),
+        _ => return LinkEnd::Died,
+    };
+    let link = Arc::new(Link {
+        stream,
+        writer: Mutex::new(write_half),
+        pending: Mutex::new(PendingMap { dead: false, map: HashMap::new() }),
+        last_seq: AtomicU64::new(0),
+        saw_health: AtomicBool::new(false),
+        reader_done: AtomicBool::new(false),
+    });
+    let reader = {
+        let core = core.clone();
+        let slot = slot.clone();
+        let link = link.clone();
+        let mut read_half = read_half;
+        std::thread::Builder::new()
+            .name(format!("morpho-router-link-{}", slot.index))
+            .spawn(move || link_reader_loop(&mut read_half, &core, &slot, &link))
+    };
+    let Ok(reader) = reader else {
+        return LinkEnd::Died;
+    };
+    *slot.link.lock().unwrap() = Some(link.clone());
+
+    // Poll / breaker loop.
+    let mut seq: u64 = 0;
+    let mut announced = false; // this link reached Healthy at least once
+    let end = 'poll: loop {
+        if core.stop.load(Ordering::Relaxed) {
+            break LinkEnd::Stopped;
+        }
+        seq += 1;
+        let poll = wire::encode_health(seq, None);
+        let sent = {
+            let mut w = link.writer.lock().unwrap();
+            wire::write_frame(&mut *w, &poll).is_ok()
+        };
+        if !sent {
+            break LinkEnd::Died;
+        }
+        // Wait for the echo (or a dead reader) up to health_timeout.
+        let deadline = Instant::now() + cfg.health_timeout;
+        let answered = loop {
+            if link.last_seq.load(Ordering::Relaxed) >= seq {
+                break true;
+            }
+            if link.reader_done.load(Ordering::Relaxed) || Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        if answered {
+            let mut st = slot.state.lock().unwrap();
+            if *st != BreakerState::Healthy {
+                *st = BreakerState::Healthy;
+            }
+            drop(st);
+            if !announced {
+                announced = true;
+                if slot.ever_up.swap(true, Ordering::Relaxed) {
+                    slot.rejoins.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Sleep out the poll interval, responsive to stop and to the
+            // reader dying under us.
+            let wake = Instant::now() + cfg.health_interval;
+            while Instant::now() < wake {
+                if core.stop.load(Ordering::Relaxed) {
+                    break 'poll LinkEnd::Stopped;
+                }
+                if link.reader_done.load(Ordering::Relaxed) {
+                    break 'poll LinkEnd::Died;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        } else if link.reader_done.load(Ordering::Relaxed) {
+            // Connection error: skip the strike ladder, the link is gone.
+            break LinkEnd::Died;
+        } else {
+            // Poll starvation: Healthy → Suspect → Dead.
+            let mut st = slot.state.lock().unwrap();
+            match *st {
+                BreakerState::Healthy => *st = BreakerState::Suspect,
+                BreakerState::Suspect | BreakerState::Dead => break LinkEnd::Died,
+            }
+        }
+    };
+
+    // Take the backend out of rotation and tear the link down. Joining
+    // the reader BEFORE harvesting is what makes replies exactly-once:
+    // after the join no reply can race the harvest.
+    *slot.state.lock().unwrap() = BreakerState::Dead;
+    *slot.link.lock().unwrap() = None;
+    let _ = link.stream.shutdown(Shutdown::Both);
+    let _ = reader.join();
+    let orphans: Vec<ProxyEntry> = {
+        let mut p = link.pending.lock().unwrap();
+        p.dead = true;
+        p.map.drain().map(|(_, e)| e).collect()
+    };
+    match end {
+        LinkEnd::Stopped => {
+            // Router shutdown: anything still in flight gets an explicit
+            // ShuttingDown, never silence.
+            for e in orphans {
+                let rej = Rejection { id: e.client_id, reason: RejectReason::ShuttingDown };
+                let _ = e.reply.send(Err(rej));
+            }
+        }
+        LinkEnd::Died => {
+            if link.saw_health.load(Ordering::Relaxed) {
+                slot.deaths.fetch_add(1, Ordering::Relaxed);
+            }
+            for e in orphans {
+                core.redispatch(e);
+            }
+        }
+    }
+    end
+}
+
+/// Backend-link reader: demux replies back to their client connections
+/// (restoring client ids — the ownership-transferring pending-map remove
+/// happens here) and record health reports.
+fn link_reader_loop(
+    stream: &mut TcpStream,
+    core: &RouterCore,
+    slot: &BackendSlot,
+    link: &Link,
+) {
+    loop {
+        let frame = match wire::read_frame(stream) {
+            Ok(Some(payload)) => wire::decode_frame(&payload),
+            Ok(None) | Err(_) => break,
+        };
+        match frame {
+            Ok(Frame::Result(mut res)) => {
+                let router_id = match &res {
+                    Ok(r) => r.id,
+                    Err(r) => r.id,
+                };
+                let entry = link.pending.lock().unwrap().map.remove(&router_id);
+                if let Some(e) = entry {
+                    match &mut res {
+                        Ok(r) => r.id = e.client_id,
+                        Err(r) => r.id = e.client_id,
+                    }
+                    slot.replies.fetch_add(1, Ordering::Relaxed);
+                    core.replies.fetch_add(1, Ordering::Relaxed);
+                    let _ = e.reply.send(res);
+                }
+            }
+            Ok(Frame::Health { seq, stats: Some(h) }) => {
+                *slot.last_health.lock().unwrap() = Some((Instant::now(), h));
+                link.saw_health.store(true, Ordering::Relaxed);
+                link.last_seq.store(seq, Ordering::Relaxed);
+            }
+            // A poll from the backend, a request, or garbage: nothing a
+            // backend should send. Tear the link down; the breaker will
+            // handle the fallout.
+            _ => break,
+        }
+    }
+    link.reader_done.store(true, Ordering::Relaxed);
+}
+
+// ── the client-facing surface ──────────────────────────────────────────
+
+/// A live client connection (mirrors `WireServer`'s per-connection
+/// reader/writer pair).
+struct ClientConn {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// The front-end router process: `Router::bind` + client connections in,
+/// [`RouterCore::dispatch`] out to the backend links. See module docs.
+pub struct Router {
+    local_addr: SocketAddr,
+    core: Arc<RouterCore>,
+    accept_stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<ClientConn>>>,
+    accept: Option<JoinHandle<()>>,
+    managers: Vec<JoinHandle<()>>,
+    down: bool,
+}
+
+impl Router {
+    /// Bind the client-facing listener and start one manager per
+    /// backend. Backends need not be up yet — their breakers start Dead
+    /// and join the rotation on their first health reply (see
+    /// [`Router::wait_healthy`]).
+    pub fn bind(addr: &str, config: RouterConfig) -> Result<Router> {
+        if config.backends.is_empty() {
+            return Err(anyhow::anyhow!("router needs at least one backend address"));
+        }
+        let slots: Vec<Arc<BackendSlot>> = config
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(index, &addr)| {
+                Arc::new(BackendSlot {
+                    index,
+                    addr,
+                    state: Mutex::new(BreakerState::Dead),
+                    link: Mutex::new(None),
+                    last_health: Mutex::new(None),
+                    proxied: AtomicU64::new(0),
+                    replies: AtomicU64::new(0),
+                    deaths: AtomicU64::new(0),
+                    rejoins: AtomicU64::new(0),
+                    ever_up: AtomicBool::new(false),
+                })
+            })
+            .collect();
+        let core = Arc::new(RouterCore {
+            config,
+            slots,
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            rr: AtomicU64::new(0),
+            proxied: AtomicU64::new(0),
+            replies: AtomicU64::new(0),
+            redispatched: AtomicU64::new(0),
+            unavailable: AtomicU64::new(0),
+        });
+        let managers = core
+            .slots
+            .iter()
+            .map(|slot| {
+                let core = core.clone();
+                let slot = slot.clone();
+                std::thread::Builder::new()
+                    .name(format!("morpho-router-mgr-{}", slot.index))
+                    .spawn(move || manager_loop(core, slot))
+            })
+            .collect::<io::Result<Vec<_>>>()?;
+
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::<ClientConn>::new()));
+        let accept = {
+            let stop = accept_stop.clone();
+            let conns = conns.clone();
+            let core = core.clone();
+            std::thread::Builder::new().name("morpho-router-accept".into()).spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => match spawn_client_conn(stream, core.clone()) {
+                            Ok(conn) => conns.lock().unwrap().push(conn),
+                            Err(e) => eprintln!("morpho-router-accept: connection setup: {e}"),
+                        },
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => {
+                            eprintln!("morpho-router-accept: {e}");
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                    }
+                    reap_finished(&conns);
+                }
+            })?
+        };
+        Ok(Router {
+            local_addr,
+            core,
+            accept_stop,
+            conns,
+            accept: Some(accept),
+            managers,
+            down: false,
+        })
+    }
+
+    /// The bound client-facing address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until at least `n` backends are Healthy, up to `timeout`.
+    /// Returns whether the quorum arrived.
+    pub fn wait_healthy(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let healthy = self
+                .core
+                .slots
+                .iter()
+                .filter(|s| *s.state.lock().unwrap() == BreakerState::Healthy)
+                .count();
+            if healthy >= n {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Cluster-wide admission-queue depth: the sum of every backend's
+    /// most recently reported gauge (the loadgen saturation signal).
+    pub fn queue_depth(&self) -> usize {
+        self.core
+            .slots
+            .iter()
+            .map(|s| {
+                s.last_health.lock().unwrap().as_ref().map_or(0, |(_, h)| h.queue_depth as usize)
+            })
+            .sum()
+    }
+
+    /// Per-backend breaker states, in backend-list order (test/ops
+    /// introspection).
+    pub fn breaker_states(&self) -> Vec<BreakerState> {
+        self.core.slots.iter().map(|s| *s.state.lock().unwrap()).collect()
+    }
+
+    /// One consistent cluster snapshot: summed backend health plus the
+    /// router's own proxy/failover counters.
+    pub fn metrics(&self) -> ClusterSnapshot {
+        self.core.metrics()
+    }
+
+    /// Graceful drain: stop accepting, let in-flight proxied requests
+    /// finish (bounded), close the backend links, join everything.
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        // 1. Stop accepting; joining drops the listener so late connects
+        //    are refused at the OS level.
+        self.accept_stop.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // 2. Half-close client readers and join them: no new dispatches
+        //    after this (a reader *is* the dispatcher for its
+        //    connection). Writers keep flushing replies.
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        let mut writers = Vec::with_capacity(conns.len());
+        for c in conns {
+            let _ = c.reader.join();
+            writers.push(c.writer);
+        }
+        // 3. Bounded drain: wait for the pending maps to empty (replies
+        //    flow back through the link readers the whole time).
+        let cap = Instant::now() + Duration::from_secs(30);
+        while self.core.inflight() > 0 && Instant::now() < cap {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // 4. Stop the managers; each closes its link, joins its reader,
+        //    and answers any straggler with ShuttingDown.
+        self.core.stop.store(true, Ordering::Relaxed);
+        for m in self.managers.drain(..) {
+            let _ = m.join();
+        }
+        // 5. Reader joins (above) + the last reply-sender drops (link
+        //    teardown) let the client writers flush their tails and exit.
+        for w in writers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Join and drop client connections whose threads have both exited.
+fn reap_finished(conns: &Mutex<Vec<ClientConn>>) {
+    let mut guard = conns.lock().unwrap();
+    let mut i = 0;
+    while i < guard.len() {
+        if guard[i].reader.is_finished() && guard[i].writer.is_finished() {
+            let c = guard.swap_remove(i);
+            let _ = c.reader.join();
+            let _ = c.writer.join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn spawn_client_conn(stream: TcpStream, core: Arc<RouterCore>) -> io::Result<ClientConn> {
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    let mut read_half = stream.try_clone()?;
+    let write_half = Arc::new(Mutex::new(stream.try_clone()?));
+    let (tx, rx) = mpsc::channel::<ServeResult>();
+    let writer = {
+        let write_half = write_half.clone();
+        std::thread::Builder::new().name("morpho-router-conn-writer".into()).spawn(move || {
+            while let Ok(res) = rx.recv() {
+                let bytes = wire::encode_result(&res);
+                let mut w = write_half.lock().unwrap();
+                if wire::write_frame(&mut *w, &bytes).is_err() {
+                    break; // client gone; remaining replies undeliverable
+                }
+            }
+        })?
+    };
+    let reader = std::thread::Builder::new().name("morpho-router-conn-reader".into()).spawn(
+        move || {
+            client_reader_loop(&mut read_half, &write_half, &core, tx);
+        },
+    )?;
+    Ok(ClientConn { stream, reader, writer })
+}
+
+/// Client-connection request pump: requests dispatch into the cluster,
+/// health polls answer with the cluster aggregate, anything else is a
+/// connection-fatal protocol error — byte-compatible with talking to a
+/// single [`super::WireServer`].
+fn client_reader_loop(
+    stream: &mut TcpStream,
+    write_half: &Mutex<TcpStream>,
+    core: &RouterCore,
+    reply: mpsc::Sender<ServeResult>,
+) {
+    let fatal = |code: u8, message: &str| {
+        let bytes = wire::encode_protocol_error(code, message);
+        let mut w = write_half.lock().unwrap();
+        let _ = wire::write_frame(&mut *w, &bytes);
+        let _ = w.shutdown(Shutdown::Both);
+    };
+    loop {
+        let payload = match wire::read_frame(stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return,
+            Err(e) => return fatal(wire::ERR_MALFORMED, &e.to_string()),
+        };
+        match wire::decode_frame(&payload) {
+            Ok(Frame::Request { req, fast_reject }) => {
+                core.submit(req, fast_reject, reply.clone());
+            }
+            Ok(Frame::Health { seq, stats: None }) => {
+                let report = wire::encode_health(seq, Some(&core.metrics().health));
+                let mut w = write_half.lock().unwrap();
+                if wire::write_frame(&mut *w, &report).is_err() {
+                    return;
+                }
+            }
+            Ok(_) => {
+                return fatal(wire::ERR_UNEXPECTED_KIND, "client sent a server-only frame kind")
+            }
+            Err(e) => return fatal(wire::ERR_MALFORMED, &e.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::server::{
+        BackendChoice, Coordinator, CoordinatorConfig, WireServer,
+    };
+    use super::super::BatcherConfig;
+    use crate::graphics::Transform;
+    use crate::loadgen::WireClient;
+
+    fn backend() -> (Arc<Coordinator>, WireServer) {
+        let c = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendChoice::Native,
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let s = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+        (c, s)
+    }
+
+    fn fast_config(backends: Vec<SocketAddr>) -> RouterConfig {
+        let mut cfg = RouterConfig::new(backends);
+        cfg.health_interval = Duration::from_millis(2);
+        cfg.health_timeout = Duration::from_millis(25);
+        cfg.reconnect_base = Duration::from_millis(2);
+        cfg.reconnect_max = Duration::from_millis(20);
+        cfg.seed = 7;
+        cfg
+    }
+
+    fn serve_one(client: &WireClient, tag: f32) {
+        let rx = client
+            .submit(
+                vec![tag, tag + 1.0],
+                vec![0.0, 1.0],
+                vec![Transform::Translate { tx: 1.0, ty: 2.0 }],
+                false,
+            )
+            .expect("submit through router");
+        let resp = rx.recv_timeout(Duration::from_secs(10)).expect("reply").expect("served");
+        assert_eq!(resp.xs, vec![tag + 1.0, tag + 2.0]);
+        assert_eq!(resp.ys, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn routes_requests_across_two_backends_and_aggregates_metrics() {
+        let (c1, s1) = backend();
+        let (c2, s2) = backend();
+        let router =
+            Router::bind("127.0.0.1:0", fast_config(vec![s1.local_addr(), s2.local_addr()]))
+                .unwrap();
+        assert!(router.wait_healthy(2, Duration::from_secs(10)), "both backends join");
+
+        let client = WireClient::connect(router.local_addr(), None).unwrap();
+        for i in 0..24 {
+            serve_one(&client, i as f32);
+        }
+        drop(client);
+
+        let m = router.metrics();
+        assert_eq!(m.proxied, 24);
+        assert_eq!(m.replies, 24);
+        assert_eq!(m.unavailable_rejected, 0);
+        assert_eq!(m.backends.len(), 2);
+        // Round-robin over tied/stale depths: both backends serve.
+        assert!(m.backends.iter().all(|b| b.proxied > 0), "both backends used: {m:?}");
+        assert_eq!(m.backends.iter().map(|b| b.proxied).sum::<u64>(), 24);
+        // The aggregate view covers both coordinators' ledgers.
+        let served = c1.metrics().responses + c2.metrics().responses;
+        assert_eq!(served, 24);
+
+        router.shutdown();
+        s1.shutdown();
+        s2.shutdown();
+        for c in [c1, c2] {
+            if let Ok(c) = Arc::try_unwrap(c) {
+                c.shutdown();
+            }
+        }
+    }
+
+    #[test]
+    fn all_backends_dead_rejects_immediately_instead_of_hanging() {
+        // A port with nothing behind it: bind, read the addr, drop.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let router = Router::bind("127.0.0.1:0", fast_config(vec![dead_addr])).unwrap();
+        let client = WireClient::connect(router.local_addr(), None).unwrap();
+        let rx = client.submit(vec![1.0], vec![2.0], vec![], false).unwrap();
+        let started = Instant::now();
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Err(rej)) => assert_eq!(rej.reason, RejectReason::Unavailable),
+            other => panic!("expected immediate Unavailable, got {other:?}"),
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "degraded mode must answer fast, not at some timeout"
+        );
+        assert!(router.metrics().unavailable_rejected >= 1);
+        drop(client);
+        router.shutdown();
+    }
+
+    #[test]
+    fn killed_backend_trips_the_breaker_and_rejoins_after_restart() {
+        let (c1, s1) = backend();
+        let (c2, s2) = backend();
+        let addr1 = s1.local_addr();
+        let router =
+            Router::bind("127.0.0.1:0", fast_config(vec![addr1, s2.local_addr()])).unwrap();
+        assert!(router.wait_healthy(2, Duration::from_secs(10)));
+        let client = WireClient::connect(router.local_addr(), None).unwrap();
+        serve_one(&client, 1.0);
+
+        // Kill backend 1 abruptly (no drain) and drop its coordinator —
+        // a process crash as far as the router can tell.
+        s1.kill();
+        drop(c1);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.metrics().backend_deaths == 0 {
+            assert!(Instant::now() < deadline, "breaker must observe the death");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Degraded but serving: backend 2 carries the traffic.
+        for i in 0..8 {
+            serve_one(&client, 100.0 + i as f32);
+        }
+
+        // Restart on the same address; the manager's backoff loop finds
+        // it and the backend rejoins the rotation.
+        let (c1b, _s1b) = {
+            let c = Arc::new(
+                Coordinator::start(CoordinatorConfig {
+                    backend: BackendChoice::Native,
+                    workers: 2,
+                    batcher: BatcherConfig {
+                        max_wait: Duration::from_micros(200),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+            let s = WireServer::bind(&addr1.to_string(), c.clone()).unwrap();
+            (c, s)
+        };
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.metrics().backend_rejoins == 0 {
+            assert!(Instant::now() < deadline, "restarted backend must rejoin");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        serve_one(&client, 500.0);
+
+        let m = router.metrics();
+        assert!(m.backend_deaths >= 1, "{m:?}");
+        assert!(m.backend_rejoins >= 1, "{m:?}");
+        drop(client);
+        router.shutdown();
+        s2.shutdown();
+        drop(c2);
+        drop(c1b);
+    }
+}

@@ -295,6 +295,26 @@ impl Coordinator {
         self.submit_q.len()
     }
 
+    /// The live admission ledger as a kind-5 wire health report — what
+    /// serving connections answer health polls with, and the front-end
+    /// router's breaker/least-loaded input.
+    pub fn health_stats(&self) -> wire::HealthStats {
+        let m = &self.metrics;
+        wire::HealthStats {
+            queue_depth: self.submit_q.len() as u64,
+            requests: m.requests.load(Ordering::Relaxed),
+            responses: m.responses.load(Ordering::Relaxed),
+            shed: m.shed.load(Ordering::Relaxed),
+            rejected: m.rejected.load(Ordering::Relaxed),
+            closed: m.closed.load(Ordering::Relaxed),
+            deadline_missed: m.deadline_missed.load(Ordering::Relaxed),
+            shard_crashes: m.shard_crashes.load(Ordering::Relaxed),
+            shard_restarts: m.shard_restarts.load(Ordering::Relaxed),
+            tiles_redispatched: m.tiles_redispatched.load(Ordering::Relaxed),
+            recovery_max_us: m.recovery_max_us.load(Ordering::Relaxed),
+        }
+    }
+
     /// Graceful shutdown without consuming the handle: new submissions
     /// fail immediately (`ShuttingDown` rejections, counted in
     /// `metrics.closed`), and `close` then **waits for every
@@ -375,6 +395,7 @@ pub struct WireServer {
     conns: Arc<Mutex<Vec<Conn>>>,
     accept: Option<JoinHandle<()>>,
     coordinator: Arc<Coordinator>,
+    killed: bool,
 }
 
 impl WireServer {
@@ -412,7 +433,7 @@ impl WireServer {
                 // the OS — the clean end-of-service signal.
             })?
         };
-        Ok(WireServer { local_addr, stop, conns, accept: Some(accept), coordinator })
+        Ok(WireServer { local_addr, stop, conns, accept: Some(accept), coordinator, killed: false })
     }
 
     /// The bound address (resolves `:0` ephemeral ports for clients).
@@ -425,7 +446,42 @@ impl WireServer {
         self.teardown();
     }
 
+    /// Park the caller until `stop` goes true, then run the graceful
+    /// drain ([`WireServer::shutdown`]). The listener serves on its own
+    /// threads the whole time — `repro serve --listen` uses this to turn
+    /// SIGINT / stdin-EOF into a drain instead of a mid-request kill.
+    pub fn serve_until(self, stop: &AtomicBool) {
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown();
+    }
+
+    /// Abrupt teardown — the failover harness's stand-in for a crashed
+    /// backend process. **No drain**: the listener stops and every live
+    /// connection's socket is shut down both ways mid-stream, so peers
+    /// observe exactly what a SIGKILL'd process would give them — dead
+    /// connections with requests still in flight. Connection threads are
+    /// detached, not joined (they exit once the sockets error and the
+    /// coordinator's in-flight reply senders drop); the coordinator
+    /// itself is untouched — the caller decides its fate, as the OS
+    /// would for a separate process.
+    pub fn kill(mut self) {
+        self.killed = true;
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // Dropping each Conn detaches its JoinHandles: no drain, no join.
+        for c in std::mem::take(&mut *self.conns.lock().unwrap()) {
+            let _ = c.stream.shutdown(Shutdown::Both);
+        }
+    }
+
     fn teardown(&mut self) {
+        if self.killed {
+            return;
+        }
         // 1. Stop accepting; joining the accept thread drops the
         //    listener, so late connects fail fast at connect().
         self.stop.store(true, Ordering::Relaxed);
@@ -536,6 +592,18 @@ fn reader_loop(
                     // Exactly one reply even when admission refuses: the
                     // rejection goes back over the same channel.
                     let _ = reply.send(Err(rej));
+                }
+            }
+            // A health poll is answered inline on the write half (same
+            // serialization as protocol errors, so a report can never
+            // tear a response frame) — polls don't ride the reply
+            // channel because they aren't requests and must keep
+            // answering while the admission path is saturated.
+            Ok(Frame::Health { seq, stats: None }) => {
+                let report = wire::encode_health(seq, Some(&coordinator.health_stats()));
+                let mut w = write_half.lock().unwrap();
+                if wire::write_frame(&mut *w, &report).is_err() {
+                    return; // peer gone mid-poll: the connection is done
                 }
             }
             Ok(_) => {
@@ -860,6 +928,92 @@ mod tests {
         assert!(m.shard_restarts > 0);
         assert_eq!(m.requests, 1);
         assert_eq!(m.responses, 1);
+    }
+
+    #[test]
+    fn health_poll_over_the_wire_reports_the_admission_ledger() {
+        let c = Arc::new(native_coordinator());
+        let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        let poll_health = |stream: &mut TcpStream, seq: u64| -> wire::HealthStats {
+            wire::write_frame(stream, &wire::encode_health(seq, None)).unwrap();
+            let payload = wire::read_frame(stream).unwrap().expect("health report");
+            match wire::decode_frame(&payload).unwrap() {
+                Frame::Health { seq: got, stats: Some(stats) } => {
+                    assert_eq!(got, seq, "the report echoes the poll's seq");
+                    stats
+                }
+                other => panic!("expected health report, got {other:?}"),
+            }
+        };
+        let before = poll_health(&mut stream, 7);
+        assert_eq!(before.requests, 0);
+
+        c.transform_blocking(
+            vec![1.0, 2.0],
+            vec![3.0, 4.0],
+            vec![Transform::Translate { tx: 1.0, ty: 1.0 }],
+        )
+        .unwrap();
+        let after = poll_health(&mut stream, 8);
+        assert_eq!(after.requests, 1);
+        assert_eq!(after.responses, 1);
+
+        drop(stream);
+        server.shutdown();
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn health_report_from_a_client_is_an_unexpected_kind() {
+        let c = Arc::new(native_coordinator());
+        let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // A *report* from a client is well-formed but nonsensical: only
+        // the server answers polls. Connection-fatal, typed.
+        let bogus = wire::encode_health(1, Some(&wire::HealthStats::default()));
+        wire::write_frame(&mut stream, &bogus).unwrap();
+        let payload = wire::read_frame(&mut stream).unwrap().expect("protocol error frame");
+        match wire::decode_frame(&payload).unwrap() {
+            Frame::ProtocolError { code, .. } => assert_eq!(code, wire::ERR_UNEXPECTED_KIND),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        drop(stream);
+        server.shutdown();
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn serve_until_drains_when_the_flag_flips() {
+        let c = Arc::new(native_coordinator());
+        let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+        let addr = server.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let waiter = {
+            let stop = stop.clone();
+            std::thread::spawn(move || server.serve_until(&stop))
+        };
+        // The listener keeps serving while the flag is down.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        wire::write_frame(&mut stream, &wire::encode_health(1, None)).unwrap();
+        assert!(wire::read_frame(&mut stream).unwrap().is_some());
+        drop(stream);
+
+        stop.store(true, Ordering::Relaxed);
+        waiter.join().unwrap();
+        // serve_until ran the graceful drain: late connects are refused.
+        assert!(TcpStream::connect(addr).is_err());
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
     }
 
     #[test]

@@ -23,10 +23,19 @@
 //!   points: count u32 | xs f32-bits × count | ys f32-bits × count
 //!
 //! kind 3 — Rejection (server → client):
-//!   id u64 | reason u8 (1 queue-full / 2 deadline-exceeded / 3 shutting-down)
+//!   id u64 | reason u8 (1 queue-full / 2 deadline-exceeded / 3 shutting-down /
+//!   4 unavailable)
 //!
 //! kind 4 — ProtocolError (server → client, then the connection closes):
 //!   code u8 | message: len u32 + UTF-8
+//!
+//! kind 5 — Health (both directions):
+//!   seq u64 | tag u8 (0 poll, empty body / 1 report + stats) |
+//!   stats: queue_depth, requests, responses, shed, rejected, closed,
+//!   deadline_missed, shard_crashes, shard_restarts, tiles_redispatched,
+//!   recovery_max_us — 11 × u64. A poll (tag 0) asks the receiver to
+//!   answer with a report (tag 1) echoing the same seq; the front-end
+//!   router drives its per-backend breakers off these round-trips.
 //! ```
 //!
 //! Every `f32` travels as its IEEE-754 bit pattern (`to_bits`), so a
@@ -60,6 +69,7 @@ const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_REJECTION: u8 = 3;
 const KIND_PROTOCOL_ERROR: u8 = 4;
+const KIND_HEALTH: u8 = 5;
 
 /// ProtocolError code: the frame could not be read or decoded.
 pub const ERR_MALFORMED: u8 = 1;
@@ -137,6 +147,44 @@ pub enum Frame {
     /// Connection-fatal protocol error report; the sender closes the
     /// connection after this frame.
     ProtocolError { code: u8, message: String },
+    /// Health poll (`stats: None`) or report (`stats: Some`). The poller
+    /// sends an empty-bodied poll; the receiver answers with a report
+    /// echoing the same `seq`, so a poller can match replies to polls
+    /// and time out the ones that never come back.
+    Health { seq: u64, stats: Option<HealthStats> },
+}
+
+/// The kind-5 health report body: a coordinator's live admission ledger
+/// plus its pool-supervision counters, all cumulative except
+/// `queue_depth` (an instantaneous gauge). The router reads
+/// `queue_depth` for least-loaded backend choice and sums the rest into
+/// the cluster-wide snapshot [`Router::metrics`] reports.
+///
+/// [`Router::metrics`]: super::Router::metrics
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HealthStats {
+    /// Requests admitted but not yet answered (gauge).
+    pub queue_depth: u64,
+    /// Requests admitted past the door, cumulative.
+    pub requests: u64,
+    /// Replies delivered (responses + shed rejections), cumulative.
+    pub responses: u64,
+    /// Admitted requests shed at their TTL deadline, cumulative.
+    pub shed: u64,
+    /// Requests refused at the door (queue full / shutting down), cumulative.
+    pub rejected: u64,
+    /// Connections the serving tier has closed, cumulative.
+    pub closed: u64,
+    /// TTL deadlines observed missed at dispatch, cumulative.
+    pub deadline_missed: u64,
+    /// Supervised shard crashes healed by the tile pool, cumulative.
+    pub shard_crashes: u64,
+    /// Shard warm-restarts performed, cumulative.
+    pub shard_restarts: u64,
+    /// Tiles re-dispatched after a shard death, cumulative.
+    pub tiles_redispatched: u64,
+    /// Slowest single shard recovery observed, microseconds (gauge).
+    pub recovery_max_us: u64,
 }
 
 // ── encoding ───────────────────────────────────────────────────────────
@@ -194,6 +242,7 @@ fn reason_tag(reason: RejectReason) -> u8 {
         RejectReason::QueueFull => 1,
         RejectReason::DeadlineExceeded => 2,
         RejectReason::ShuttingDown => 3,
+        RejectReason::Unavailable => 4,
     }
 }
 
@@ -257,6 +306,35 @@ pub fn encode_result(res: &ServeResult) -> Vec<u8> {
             p = header(KIND_REJECTION);
             p.extend_from_slice(&rej.id.to_le_bytes());
             p.push(reason_tag(rej.reason));
+        }
+    }
+    finish(p)
+}
+
+/// Encode a health frame (length prefix included): a poll when `stats`
+/// is `None`, a report when `Some`.
+pub fn encode_health(seq: u64, stats: Option<&HealthStats>) -> Vec<u8> {
+    let mut p = header(KIND_HEALTH);
+    p.extend_from_slice(&seq.to_le_bytes());
+    match stats {
+        None => p.push(0),
+        Some(s) => {
+            p.push(1);
+            for v in [
+                s.queue_depth,
+                s.requests,
+                s.responses,
+                s.shed,
+                s.rejected,
+                s.closed,
+                s.deadline_missed,
+                s.shard_crashes,
+                s.shard_restarts,
+                s.tiles_redispatched,
+                s.recovery_max_us,
+            ] {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
         }
     }
     finish(p)
@@ -413,6 +491,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, WireError> {
                 1 => RejectReason::QueueFull,
                 2 => RejectReason::DeadlineExceeded,
                 3 => RejectReason::ShuttingDown,
+                4 => RejectReason::Unavailable,
                 found => return Err(WireError::BadTag { what: "rejection reason", found }),
             };
             Frame::Result(Err(Rejection { id, reason }))
@@ -424,6 +503,27 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, WireError> {
                 .map_err(|_| WireError::BadUtf8)?
                 .to_string();
             Frame::ProtocolError { code, message }
+        }
+        KIND_HEALTH => {
+            let seq = c.u64("health seq")?;
+            let stats = match c.u8("health tag")? {
+                0 => None,
+                1 => Some(HealthStats {
+                    queue_depth: c.u64("queue_depth")?,
+                    requests: c.u64("requests")?,
+                    responses: c.u64("responses")?,
+                    shed: c.u64("shed")?,
+                    rejected: c.u64("rejected")?,
+                    closed: c.u64("closed")?,
+                    deadline_missed: c.u64("deadline_missed")?,
+                    shard_crashes: c.u64("shard_crashes")?,
+                    shard_restarts: c.u64("shard_restarts")?,
+                    tiles_redispatched: c.u64("tiles_redispatched")?,
+                    recovery_max_us: c.u64("recovery_max_us")?,
+                }),
+                found => return Err(WireError::BadTag { what: "health", found }),
+            };
+            Frame::Health { seq, stats }
         }
         found => return Err(WireError::BadKind { found }),
     };
@@ -442,6 +542,7 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
         Frame::Request { req, fast_reject } => encode_request(req, *fast_reject),
         Frame::Result(res) => encode_result(res),
         Frame::ProtocolError { code, message } => encode_protocol_error(*code, message),
+        Frame::Health { seq, stats } => encode_health(*seq, stats.as_ref()),
     }
 }
 
@@ -608,6 +709,68 @@ mod tests {
             decode_frame(&q),
             Err(WireError::BadTag { what: "request flags", found: 2 })
         ));
+    }
+
+    #[test]
+    fn health_poll_and_report_roundtrip_canonically() {
+        let poll = encode_health(17, None);
+        let payload = read_frame(&mut &poll[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::Health { seq: 17, stats: None } => {}
+            other => panic!("expected health poll, got {other:?}"),
+        }
+        assert_eq!(encode_frame(&decode_frame(&payload).unwrap()), poll);
+
+        let stats = HealthStats {
+            queue_depth: 3,
+            requests: 100,
+            responses: 97,
+            shed: 2,
+            rejected: 5,
+            closed: 1,
+            deadline_missed: 2,
+            shard_crashes: 4,
+            shard_restarts: 4,
+            tiles_redispatched: 9,
+            recovery_max_us: 1234,
+        };
+        let report = encode_health(18, Some(&stats));
+        let payload = read_frame(&mut &report[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::Health { seq: 18, stats: Some(back) } => assert_eq!(back, stats),
+            other => panic!("expected health report, got {other:?}"),
+        }
+        assert_eq!(encode_frame(&decode_frame(&payload).unwrap()), report);
+    }
+
+    #[test]
+    fn health_report_with_bad_tag_or_truncated_stats_is_rejected() {
+        let mut p = vec![WIRE_VERSION, KIND_HEALTH];
+        p.extend_from_slice(&9u64.to_le_bytes());
+        p.push(7); // unknown health tag
+        assert!(matches!(decode_frame(&p), Err(WireError::BadTag { what: "health", found: 7 })));
+
+        let full = encode_health(9, Some(&HealthStats::default()));
+        let payload = read_frame(&mut &full[..]).unwrap().unwrap();
+        // Cutting any suffix off the stats block is a typed truncation.
+        assert!(matches!(
+            decode_frame(&payload[..payload.len() - 1]),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn unavailable_rejection_roundtrips() {
+        let bytes = encode_result(&Err(Rejection { id: 12, reason: RejectReason::Unavailable }));
+        let payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::Result(Err(rej)) => {
+                assert_eq!(rej.reason, RejectReason::Unavailable);
+                assert_eq!(rej.id, 12);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(encode_frame(&decode_frame(&payload).unwrap()), bytes);
     }
 
     #[test]

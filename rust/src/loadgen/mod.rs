@@ -61,6 +61,6 @@ pub mod workload;
 
 pub use report::CapacityReport;
 pub use runner::run_scenario;
-pub use scenario::{ArrivalProfile, Scenario, TransformKind, WorkloadMix};
-pub use transport::{TransportKind, WireClient};
+pub use scenario::{ArrivalProfile, RouterScenario, Scenario, TransformKind, WorkloadMix};
+pub use transport::{ReconnectPolicy, TransportKind, WireClient};
 pub use workload::RequestFactory;

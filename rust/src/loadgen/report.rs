@@ -5,6 +5,7 @@
 use std::time::Duration;
 
 use crate::benchkit::write_atomic;
+use crate::coordinator::BackendSnapshot;
 
 /// Everything a scenario run measured. All rates are per wall-clock
 /// second of the measured run; latency is submit → response receipt.
@@ -61,6 +62,22 @@ pub struct CapacityReport {
     pub mean_batch_points: f64,
     /// Simulated M1 cycles per executed point (M1Sim backend).
     pub sim_cycles_per_point: f64,
+    /// Backend coordinator count behind the front-end router (`0` = no
+    /// router — the single-coordinator layout of every other scenario).
+    pub router_backends: usize,
+    /// Backend links the router's breaker declared dead mid-run.
+    pub backend_deaths: u64,
+    /// Backends that rejoined the rotation after a death (reconnect +
+    /// first health reply).
+    pub backend_rejoins: u64,
+    /// In-flight requests harvested from dying backends and re-dispatched
+    /// to a live one (each still answered exactly once).
+    pub redispatched_requests: u64,
+    /// Requests rejected `Unavailable`: every backend dead, or the
+    /// redispatch hop budget exhausted.
+    pub unavailable_rejected: u64,
+    /// Per-backend rows (router runs only; empty otherwise).
+    pub backends: Vec<BackendSnapshot>,
 }
 
 /// Exact percentile over pre-sorted latency samples (nearest-rank on the
@@ -85,6 +102,25 @@ fn json_f64(v: f64) -> String {
 impl CapacityReport {
     /// One JSON object (no trailing newline).
     pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .backends
+            .iter()
+            .map(|b| {
+                format!(
+                    "{{\"index\": {}, \"addr\": \"{}\", \"state\": \"{}\", \
+                     \"proxied\": {}, \"replies\": {}, \"deaths\": {}, \
+                     \"rejoins\": {}, \"queue_depth\": {}}}",
+                    b.index,
+                    b.addr.replace('"', "'"),
+                    b.state,
+                    b.proxied,
+                    b.replies,
+                    b.deaths,
+                    b.rejoins,
+                    b.queue_depth,
+                )
+            })
+            .collect();
         format!(
             "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"transport\": \"{}\", \
              \"backend\": \"{}\", \
@@ -97,7 +133,10 @@ impl CapacityReport {
              \"points_per_s\": {}, \"latency_mean_us\": {}, \"latency_p50_us\": {}, \
              \"latency_p95_us\": {}, \"latency_p99_us\": {}, \"queue_depth_mean\": {}, \
              \"queue_depth_max\": {}, \"mean_batch_points\": {}, \
-             \"sim_cycles_per_point\": {}}}",
+             \"sim_cycles_per_point\": {}, \"router_backends\": {}, \
+             \"backend_deaths\": {}, \"backend_rejoins\": {}, \
+             \"redispatched_requests\": {}, \"unavailable_rejected\": {}, \
+             \"backends\": [{}]}}",
             self.scenario.replace('"', "'"),
             self.profile.replace('"', "'"),
             self.transport,
@@ -128,6 +167,12 @@ impl CapacityReport {
             self.queue_depth_max,
             json_f64(self.mean_batch_points),
             json_f64(self.sim_cycles_per_point),
+            self.router_backends,
+            self.backend_deaths,
+            self.backend_rejoins,
+            self.redispatched_requests,
+            self.unavailable_rejected,
+            rows.join(", "),
         )
     }
 
@@ -174,6 +219,23 @@ impl CapacityReport {
                 self.tiles_redispatched,
                 self.recovery_max_us,
             ));
+        }
+        if self.router_backends > 0 {
+            out.push_str(&format!(
+                "\nrouter over {} backends: deaths={} rejoins={} \
+                 redispatched={} unavailable={}",
+                self.router_backends,
+                self.backend_deaths,
+                self.backend_rejoins,
+                self.redispatched_requests,
+                self.unavailable_rejected,
+            ));
+            for b in &self.backends {
+                out.push_str(&format!(
+                    "\n  backend[{}] {} ({}): proxied={} replies={} deaths={} rejoins={}",
+                    b.index, b.addr, b.state, b.proxied, b.replies, b.deaths, b.rejoins,
+                ));
+            }
         }
         out
     }
@@ -234,7 +296,46 @@ mod tests {
             queue_depth_max: 4,
             mean_batch_points: 128.0,
             sim_cycles_per_point: 1.62,
+            router_backends: 0,
+            backend_deaths: 0,
+            backend_rejoins: 0,
+            redispatched_requests: 0,
+            unavailable_rejected: 0,
+            backends: Vec::new(),
         }
+    }
+
+    fn router_sample() -> CapacityReport {
+        let mut r = sample();
+        r.scenario = "failover".into();
+        r.transport = "tcp";
+        r.router_backends = 2;
+        r.backend_deaths = 1;
+        r.backend_rejoins = 1;
+        r.redispatched_requests = 3;
+        r.backends = vec![
+            BackendSnapshot {
+                index: 0,
+                addr: "127.0.0.1:9000".into(),
+                state: "healthy",
+                proxied: 60,
+                replies: 60,
+                deaths: 1,
+                rejoins: 1,
+                queue_depth: 2,
+            },
+            BackendSnapshot {
+                index: 1,
+                addr: "127.0.0.1:9001".into(),
+                state: "healthy",
+                proxied: 40,
+                replies: 40,
+                deaths: 0,
+                rejoins: 0,
+                queue_depth: 0,
+            },
+        ];
+        r
     }
 
     #[test]
@@ -252,6 +353,8 @@ mod tests {
             "recovery_max_us", "throughput_rps", "points_per_s", "latency_mean_us",
             "latency_p50_us", "latency_p95_us", "latency_p99_us", "queue_depth_mean",
             "queue_depth_max", "mean_batch_points", "sim_cycles_per_point",
+            "router_backends", "backend_deaths", "backend_rejoins",
+            "redispatched_requests", "unavailable_rejected", "backends",
         ] {
             assert_eq!(j.matches(&format!("\"{key}\":")).count(), 1, "key {key}");
         }
@@ -279,6 +382,26 @@ mod tests {
         assert!(text.contains("crashes=4 restarts=4 redispatched=2 recovery_max=800us"));
         // Fault-free reports keep the human block clean.
         assert!(!sample().render().contains("fault injection"));
+    }
+
+    #[test]
+    fn router_report_nests_one_object_per_backend() {
+        let r = router_sample();
+        let j = r.to_json();
+        // Outer object plus one nested object per backend row.
+        assert_eq!(j.matches('{').count(), 3);
+        assert_eq!(j.matches('}').count(), 3);
+        assert_eq!(j.matches("\"addr\":").count(), 2);
+        assert_eq!(j.matches("\"state\": \"healthy\"").count(), 2);
+        assert!(j.contains("\"router_backends\": 2"));
+        assert!(j.contains("\"backend_deaths\": 1"));
+        assert!(j.contains("\"redispatched_requests\": 3"));
+        let text = r.render();
+        assert!(text.contains("router over 2 backends: deaths=1 rejoins=1"));
+        assert!(text.contains("backend[0] 127.0.0.1:9000 (healthy): proxied=60"));
+        assert!(text.contains("backend[1] 127.0.0.1:9001"));
+        // Non-router reports keep the human block free of router noise.
+        assert!(!sample().render().contains("router over"));
     }
 
     #[test]

@@ -11,11 +11,12 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    BackendChoice, Coordinator, CoordinatorConfig, FaultPlan, ServeResult, WireServer,
+    BackendChoice, BackendKillPlan, Coordinator, CoordinatorConfig, FaultPlan, Router,
+    RouterConfig, ServeResult, WireServer,
 };
 
 use super::report::{percentile_us, CapacityReport};
-use super::scenario::{ArrivalProfile, Scenario};
+use super::scenario::{ArrivalProfile, RouterScenario, Scenario};
 use super::transport::{Submitted, TransportCtx, TransportKind};
 use super::workload::RequestFactory;
 
@@ -87,6 +88,9 @@ impl Arrivals {
 /// loopback [`WireServer`] in front of it) and fully shut down before
 /// returning.
 pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
+    if let Some(rs) = sc.router {
+        return run_router_scenario(sc, rs);
+    }
     let c = Arc::new(Coordinator::start(CoordinatorConfig {
         backend: sc.backend,
         queue_capacity: sc.queue_capacity,
@@ -195,6 +199,198 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         } else {
             0.0
         },
+        router_backends: 0,
+        backend_deaths: 0,
+        backend_rejoins: 0,
+        redispatched_requests: 0,
+        unavailable_rejected: 0,
+        backends: Vec::new(),
+    })
+}
+
+/// One backend of the router rack: a coordinator plus its wire listener.
+fn start_backend(
+    config: &CoordinatorConfig,
+    addr: &str,
+) -> crate::Result<(Arc<Coordinator>, WireServer)> {
+    let c = Arc::new(Coordinator::start(config.clone())?);
+    let server = WireServer::bind(addr, c.clone())?;
+    Ok((c, server))
+}
+
+/// Run a router-fronted scenario: `rs.backends` coordinators behind one
+/// front-end [`Router`], all traffic over the wire through the router,
+/// and — when `rs.kill_seed` is armed — a seeded [`BackendKillPlan`]
+/// that kills one backend process mid-run and restarts it on the same
+/// address. The failover gate reads the resulting report: `failed == 0`
+/// (every admitted request answered exactly once across the death),
+/// `backend_deaths ≥ 1` and `backend_rejoins ≥ 1` (the breaker fired and
+/// the revived backend healed back into the rotation).
+fn run_router_scenario(sc: &Scenario, rs: RouterScenario) -> crate::Result<CapacityReport> {
+    let base = CoordinatorConfig {
+        backend: sc.backend,
+        queue_capacity: sc.queue_capacity,
+        workers: sc.workers.max(1),
+        m1_shards: sc.shards.max(1),
+        default_ttl: sc.ttl,
+        fault_plan: sc.fault_seed.map(FaultPlan::chaos),
+        ..Default::default()
+    };
+    let n = rs.backends.max(1);
+    let mut backends: Vec<Option<(Arc<Coordinator>, WireServer)>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        backends.push(Some(start_backend(&base, "127.0.0.1:0")?));
+    }
+    let addrs: Vec<_> =
+        backends.iter().map(|b| b.as_ref().expect("just racked").1.local_addr()).collect();
+    let mut config = RouterConfig::new(addrs.clone());
+    config.seed = sc.seed;
+    let router = Arc::new(Router::bind("127.0.0.1:0", config)?);
+    if !router.wait_healthy(n, Duration::from_secs(10)) {
+        anyhow::bail!("router: {n} backends did not report healthy in time");
+    }
+    let ctx = TransportCtx::Tcp { addr: router.local_addr(), ttl: sc.ttl };
+    let factory = Arc::new(RequestFactory::new(sc.seed, sc.mix.clone()));
+    let tally = Arc::new(Tally::default());
+
+    // Queue-depth sampler over the cluster gauge (summed most-recent
+    // health reports), same 1ms cadence as the single-coordinator path.
+    let sampler_stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let router = router.clone();
+        let stop = sampler_stop.clone();
+        thread::spawn(move || {
+            let (mut sum, mut n, mut max) = (0u64, 0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                let d = router.queue_depth() as u64;
+                sum += d;
+                n += 1;
+                max = max.max(d);
+                thread::sleep(Duration::from_millis(1));
+            }
+            (sum, n, max)
+        })
+    };
+
+    let t0 = Instant::now();
+    // The seeded mid-run kill: pull the victim pair out of the rack and
+    // let the killer thread execute the schedule — abrupt kill, pause,
+    // restart on the SAME address — while clients keep hammering the
+    // router.
+    let killer = rs.kill_seed.map(|seed| {
+        let plan = BackendKillPlan::seeded(seed, n, sc.duration);
+        let e = plan.events()[0];
+        let victim = backends[e.backend].take().expect("victim backend is racked");
+        let addr = addrs[e.backend].to_string();
+        let base = base.clone();
+        thread::spawn(move || {
+            let (c, server) = victim;
+            if let Some(wait) = (t0 + e.at).checked_duration_since(Instant::now()) {
+                thread::sleep(wait);
+            }
+            // Abrupt process death: listener closed, sockets severed, no
+            // draining — and the coordinator handle simply dropped, as a
+            // dead process flushes nothing.
+            server.kill();
+            drop(c);
+            thread::sleep(e.restart_after);
+            // Rebind the same address (bounded retry while the old
+            // socket finishes dying).
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                match start_backend(&base, &addr) {
+                    Ok(pair) => return (e.backend, Some(pair)),
+                    Err(_) if Instant::now() < deadline => {
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(err) => {
+                        eprintln!("failover: backend {} restart failed: {err}", e.backend);
+                        return (e.backend, None);
+                    }
+                }
+            }
+        })
+    });
+
+    let mut latencies = match sc.profile {
+        ArrivalProfile::ClosedLoop { clients } => {
+            closed_loop(&ctx, &factory, &tally, clients.max(1), t0 + sc.duration)
+        }
+        _ => open_loop(&ctx, &factory, &tally, sc, t0),
+    };
+    let elapsed = t0.elapsed();
+
+    sampler_stop.store(true, Ordering::Relaxed);
+    let (depth_sum, depth_n, depth_max) = sampler.join().expect("sampler thread");
+    if let Some(killer) = killer {
+        let (index, pair) = killer.join().expect("killer thread");
+        backends[index] = pair;
+    }
+    // Let one more health interval elapse so the revived backend's final
+    // report lands before the snapshot.
+    thread::sleep(Duration::from_millis(50));
+    let cluster = router.metrics();
+    drop(ctx);
+    // Sampler and killer are joined, so the router handle is unique
+    // again; `Drop` covers the unexpected case.
+    if let Ok(router) = Arc::try_unwrap(router) {
+        router.shutdown();
+    }
+    for (c, server) in backends.into_iter().flatten() {
+        server.shutdown();
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    latencies.sort_unstable();
+    let elapsed_s = elapsed.as_secs_f64().max(1e-9);
+    let completed = tally.completed.load(Ordering::Relaxed);
+    let sum_us: u128 = latencies.iter().map(|d| d.as_micros()).sum();
+    let h = &cluster.health;
+    Ok(CapacityReport {
+        scenario: sc.name.to_string(),
+        profile: sc.profile.label(),
+        transport: sc.transport.label(),
+        backend: backend_name(sc.backend),
+        workers: sc.workers.max(1),
+        shards: sc.shards.max(1),
+        seed: sc.seed,
+        duration_s: elapsed_s,
+        submitted: tally.submitted.load(Ordering::Relaxed),
+        completed,
+        shed: h.shed,
+        rejected: h.rejected,
+        deadline_missed: h.deadline_missed,
+        closed: h.closed,
+        failed: tally.failed.load(Ordering::Relaxed),
+        fault_seed: sc.fault_seed,
+        shard_crashes: h.shard_crashes,
+        shard_restarts: h.shard_restarts,
+        tiles_redispatched: h.tiles_redispatched,
+        recovery_max_us: h.recovery_max_us,
+        throughput_rps: completed as f64 / elapsed_s,
+        points_per_s: tally.completed_points.load(Ordering::Relaxed) as f64 / elapsed_s,
+        latency_mean_us: if latencies.is_empty() {
+            0.0
+        } else {
+            sum_us as f64 / latencies.len() as f64
+        },
+        latency_p50_us: percentile_us(&latencies, 0.50),
+        latency_p95_us: percentile_us(&latencies, 0.95),
+        latency_p99_us: percentile_us(&latencies, 0.99),
+        queue_depth_mean: if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 },
+        queue_depth_max: depth_max,
+        // Health frames carry admission/queue counters, not batch
+        // composition — a router report leaves the batching columns zero.
+        mean_batch_points: 0.0,
+        sim_cycles_per_point: 0.0,
+        router_backends: n,
+        backend_deaths: cluster.backend_deaths,
+        backend_rejoins: cluster.backend_rejoins,
+        redispatched_requests: cluster.redispatched,
+        unavailable_rejected: cluster.unavailable_rejected,
+        backends: cluster.backends,
     })
 }
 
@@ -411,6 +607,7 @@ mod tests {
             fast_reject: false,
             fault_seed: None,
             transport: TransportKind::InProcess,
+            router: None,
         };
         let r = run_scenario(&sc).unwrap();
         assert!(r.completed > 0, "closed loop must complete requests");
@@ -440,6 +637,7 @@ mod tests {
             fast_reject: false,
             fault_seed: None,
             transport: TransportKind::Tcp,
+            router: None,
         };
         let r = run_scenario(&sc).unwrap();
         assert!(r.completed > 0, "wire clients must complete requests");
@@ -465,6 +663,7 @@ mod tests {
             fast_reject: true,
             fault_seed: None,
             transport: TransportKind::InProcess,
+            router: None,
         };
         let r = run_scenario(&sc).unwrap();
         assert_eq!(r.failed, 0);
@@ -499,6 +698,7 @@ mod tests {
             fast_reject: false,
             fault_seed: Some(7),
             transport: TransportKind::InProcess,
+            router: None,
         };
         let r = run_scenario(&sc).unwrap();
         // The whole point of supervision: injected crashes/deaths/dropped
@@ -509,5 +709,40 @@ mod tests {
         let j = r.to_json();
         assert!(j.contains("\"fault_seed\": 7"));
         assert!(j.contains("\"shard_crashes\""));
+    }
+
+    #[test]
+    fn tiny_router_run_without_kills_balances_two_backends() {
+        let sc = Scenario {
+            name: "test-router",
+            summary: "unit",
+            profile: ArrivalProfile::ClosedLoop { clients: 2 },
+            duration: Duration::from_millis(300),
+            mix: WorkloadMix::standard(),
+            seed: 5,
+            backend: BackendChoice::Native,
+            workers: 1,
+            shards: 1,
+            queue_capacity: 64,
+            ttl: None,
+            fast_reject: false,
+            fault_seed: None,
+            transport: TransportKind::Tcp,
+            router: Some(RouterScenario { backends: 2, kill_seed: None }),
+        };
+        let r = run_scenario(&sc).unwrap();
+        assert!(r.completed > 0, "routed clients must complete requests");
+        assert_eq!(r.failed, 0, "no reply may be lost crossing the router");
+        assert_eq!(r.router_backends, 2);
+        assert_eq!(r.backends.len(), 2, "one report row per backend");
+        assert_eq!((r.backend_deaths, r.backend_rejoins), (0, 0), "nobody died");
+        let proxied: u64 = r.backends.iter().map(|b| b.proxied).sum();
+        assert!(proxied >= r.completed, "every completed request was proxied");
+        assert!(
+            r.backends.iter().all(|b| b.proxied > 0),
+            "least-depth/round-robin must exercise both backends: {:?}",
+            r.backends
+        );
+        assert!(r.to_json().contains("\"router_backends\": 2"));
     }
 }

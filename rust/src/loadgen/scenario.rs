@@ -94,6 +94,23 @@ impl WorkloadMix {
     }
 }
 
+/// Scale-out topology for a scenario: run `backends` independent
+/// coordinators behind the front-end [`crate::coordinator::Router`]
+/// instead of one coordinator, with clients dialing the router. Implies
+/// the wire transport — the router *is* a wire listener.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterScenario {
+    /// Backend coordinator count (each gets the scenario's
+    /// workers/shards/queue knobs).
+    pub backends: usize,
+    /// `Some(seed)` arms the failover harness: a seeded
+    /// [`crate::coordinator::BackendKillPlan`] kills one backend mid-run
+    /// (abruptly, in-flight requests and all) and restarts it on the
+    /// same address — measuring degraded capacity, breaker behaviour and
+    /// healing rather than the fault-free ceiling.
+    pub kill_seed: Option<u64>,
+}
+
 /// A complete, reproducible load-test description.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -125,6 +142,10 @@ pub struct Scenario {
     /// protocol over a loopback listener the runner stands up. Same
     /// seeded streams either way — the report rows are comparable.
     pub transport: TransportKind,
+    /// `Some` runs N coordinators behind the front-end router (scale-out
+    /// topology, wire transport only); `None` is the single-coordinator
+    /// layout of every pre-router scenario.
+    pub router: Option<RouterScenario>,
 }
 
 impl Scenario {
@@ -151,6 +172,7 @@ fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> S
         fast_reject: false,
         fault_seed: None,
         transport: TransportKind::InProcess,
+        router: None,
     }
 }
 
@@ -216,6 +238,18 @@ pub fn all() -> Vec<Scenario> {
                 ArrivalProfile::ClosedLoop { clients: 4 },
             )
         },
+        Scenario {
+            duration: Duration::from_secs(2),
+            workers: 1,
+            transport: TransportKind::Tcp,
+            router: Some(RouterScenario { backends: 2, kill_seed: Some(0xFA11) }),
+            ..base(
+                "failover",
+                "2s closed-loop through the router over 2 backends; one is killed \
+                 mid-run and restarted — failover, redispatch and healing",
+                ArrivalProfile::ClosedLoop { clients: 4 },
+            )
+        },
     ]
 }
 
@@ -240,16 +274,45 @@ mod tests {
             assert_eq!(found.backend, BackendChoice::M1Sim);
             assert!(found.shards >= 2, "{}: shards must be ≥ 2", s.name);
             assert!(!found.mix.sizes.is_empty() && !found.mix.transforms.is_empty());
-            // Transport is an orthogonal axis, not a per-scenario knob:
-            // every named scenario defaults in-process and can be
-            // re-driven over the wire.
-            assert_eq!(found.transport, TransportKind::InProcess);
-            assert_eq!(
-                found.with_transport(TransportKind::Tcp).transport,
-                TransportKind::Tcp
-            );
+            // Transport is an orthogonal axis, not a per-scenario knob —
+            // except for router topologies, where the front-end router
+            // *is* a wire listener and the transport is pinned to Tcp.
+            match found.router {
+                None => {
+                    assert_eq!(found.transport, TransportKind::InProcess);
+                    assert_eq!(
+                        found.with_transport(TransportKind::Tcp).transport,
+                        TransportKind::Tcp
+                    );
+                }
+                Some(r) => {
+                    assert_eq!(found.transport, TransportKind::Tcp, "{}", s.name);
+                    assert!(r.backends >= 2, "{}: a router over <2 backends is pointless", s.name);
+                }
+            }
         }
         assert!(by_name("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn failover_is_the_only_router_scenario_and_arms_the_kill_plan() {
+        for s in all() {
+            assert_eq!(
+                s.router.is_some(),
+                s.name == "failover",
+                "{}: router topology must stay opt-in per scenario",
+                s.name
+            );
+        }
+        let failover = by_name("failover").expect("failover scenario listed");
+        let router = failover.router.unwrap();
+        assert_eq!(router.backends, 2);
+        assert!(router.kill_seed.is_some(), "failover must kill a backend mid-run");
+        assert!(failover.fault_seed.is_none(), "backend kills, not shard faults");
+        assert!(
+            failover.ttl.is_none() && !failover.fast_reject,
+            "every admitted request must be answerable after redispatch"
+        );
     }
 
     #[test]

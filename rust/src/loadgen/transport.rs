@@ -22,6 +22,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::coordinator::faults::splitmix64;
 use crate::coordinator::wire::{self, Frame};
 use crate::coordinator::{Coordinator, RejectReason, ServeResult, TransformRequest};
 use crate::graphics::Transform;
@@ -54,65 +55,139 @@ impl TransportKind {
     }
 }
 
+/// How a [`WireClient`] behaves when its connection dies mid-session:
+/// bounded reconnect attempts with seeded-jitter exponential backoff.
+/// Requests in flight when the connection died are NOT replayed — their
+/// receivers observe a disconnect (a typed error, never a hang); only
+/// the submission that hit the dead socket rides the new connection.
+#[derive(Debug, Clone, Copy)]
+pub struct ReconnectPolicy {
+    /// Reconnect attempts per failing submission before giving up.
+    pub max_attempts: u32,
+    /// First backoff step (doubles per attempt).
+    pub base: Duration,
+    /// Backoff ceiling, jitter included.
+    pub max: Duration,
+    /// Seed for the jitter (determinism under test).
+    pub seed: u64,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            max_attempts: 5,
+            base: Duration::from_millis(10),
+            max: Duration::from_millis(250),
+            seed: 0,
+        }
+    }
+}
+
+/// One live connection: the write half plus the reply-demux reader.
+struct ClientLink {
+    writer: TcpStream,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// Open a connection and start its reply-demux reader over the shared
+/// pending map.
+fn open_link(
+    addr: SocketAddr,
+    pending: Arc<Mutex<HashMap<u64, mpsc::Sender<ServeResult>>>>,
+) -> io::Result<ClientLink> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let writer = stream.try_clone()?;
+    let mut read_half = stream;
+    let reader = std::thread::Builder::new().name("wire-client-reader".into()).spawn(move || {
+        loop {
+            let payload = match wire::read_frame(&mut read_half) {
+                Ok(Some(p)) => p,
+                Ok(None) | Err(_) => break, // server closed / stream died
+            };
+            match wire::decode_frame(&payload) {
+                Ok(Frame::Result(res)) => {
+                    let id = match &res {
+                        Ok(resp) => resp.id,
+                        Err(rej) => rej.id,
+                    };
+                    if let Some(tx) = pending.lock().unwrap().remove(&id) {
+                        let _ = tx.send(res);
+                    }
+                }
+                Ok(Frame::ProtocolError { code, message }) => {
+                    eprintln!("wire client: server protocol error {code}: {message}");
+                    break;
+                }
+                // This client never polls, so a health frame here is
+                // unsolicited — but it is well-formed and harmless, so
+                // tolerate it rather than tearing the connection down.
+                Ok(Frame::Health { .. }) => {}
+                // A request frame from the server, or garbage:
+                // nothing sane continues from here.
+                Ok(Frame::Request { .. }) | Err(_) => break,
+            }
+        }
+        // Orphan every outstanding request so waiting receivers
+        // observe a disconnect instead of hanging.
+        pending.lock().unwrap().clear();
+    })?;
+    Ok(ClientLink { writer, reader: Some(reader) })
+}
+
 /// A client connection speaking the [`wire`] protocol: submissions write
 /// request frames (client-assigned ids), a background reader thread
 /// routes each result frame to its request's channel. Dropping the
 /// client closes the connection and disconnects any still-pending
 /// receivers (observed as `failed` by the runner — never the case on a
-/// clean server).
+/// clean server). With a [`ReconnectPolicy`], a submission that finds
+/// the connection dead re-dials with backoff instead of failing
+/// immediately.
 pub struct WireClient {
-    writer: Mutex<TcpStream>,
+    addr: SocketAddr,
+    link: Mutex<ClientLink>,
     pending: Arc<Mutex<HashMap<u64, mpsc::Sender<ServeResult>>>>,
     next_id: AtomicU64,
     /// TTL stamped on every outgoing request (the wire carries it
     /// explicitly; `None` defers to the server's default).
     ttl: Option<Duration>,
-    reader: Option<JoinHandle<()>>,
+    policy: Option<ReconnectPolicy>,
 }
 
 impl WireClient {
     /// Connect to a [`crate::coordinator::WireServer`] and start the
-    /// reply-demux reader.
+    /// reply-demux reader. No reconnection: a dead connection fails
+    /// submissions immediately (see [`WireClient::connect_with`]).
     pub fn connect(addr: SocketAddr, ttl: Option<Duration>) -> io::Result<WireClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        let writer = Mutex::new(stream.try_clone()?);
-        let mut read_half = stream;
+        WireClient::dial(addr, ttl, None)
+    }
+
+    /// [`WireClient::connect`] plus mid-session resilience: submissions
+    /// that hit a dead connection re-dial under `policy`.
+    pub fn connect_with(
+        addr: SocketAddr,
+        ttl: Option<Duration>,
+        policy: ReconnectPolicy,
+    ) -> io::Result<WireClient> {
+        WireClient::dial(addr, ttl, Some(policy))
+    }
+
+    fn dial(
+        addr: SocketAddr,
+        ttl: Option<Duration>,
+        policy: Option<ReconnectPolicy>,
+    ) -> io::Result<WireClient> {
         let pending: Arc<Mutex<HashMap<u64, mpsc::Sender<ServeResult>>>> =
             Arc::new(Mutex::new(HashMap::new()));
-        let reader = {
-            let pending = pending.clone();
-            std::thread::Builder::new().name("wire-client-reader".into()).spawn(move || {
-                loop {
-                    let payload = match wire::read_frame(&mut read_half) {
-                        Ok(Some(p)) => p,
-                        Ok(None) | Err(_) => break, // server closed / stream died
-                    };
-                    match wire::decode_frame(&payload) {
-                        Ok(Frame::Result(res)) => {
-                            let id = match &res {
-                                Ok(resp) => resp.id,
-                                Err(rej) => rej.id,
-                            };
-                            if let Some(tx) = pending.lock().unwrap().remove(&id) {
-                                let _ = tx.send(res);
-                            }
-                        }
-                        Ok(Frame::ProtocolError { code, message }) => {
-                            eprintln!("wire client: server protocol error {code}: {message}");
-                            break;
-                        }
-                        // A request frame from the server, or garbage:
-                        // nothing sane continues from here.
-                        Ok(Frame::Request { .. }) | Err(_) => break,
-                    }
-                }
-                // Orphan every outstanding request so waiting receivers
-                // observe a disconnect instead of hanging.
-                pending.lock().unwrap().clear();
-            })?
-        };
-        Ok(WireClient { writer, pending, next_id: AtomicU64::new(1), ttl, reader: Some(reader) })
+        let link = open_link(addr, pending.clone())?;
+        Ok(WireClient {
+            addr,
+            link: Mutex::new(link),
+            pending,
+            next_id: AtomicU64::new(1),
+            ttl,
+            policy,
+        })
     }
 
     /// Send one request; the reply (response or rejection) arrives on the
@@ -139,18 +214,61 @@ impl WireClient {
     ) -> io::Result<mpsc::Receiver<ServeResult>> {
         let (tx, rx) = mpsc::channel();
         let bytes = wire::encode_request(&req, fast_reject);
-        // Register before writing: the reply can race back before the
-        // writer lock is even released.
-        self.pending.lock().unwrap().insert(req.id, tx);
-        let res = {
-            let mut w = self.writer.lock().unwrap();
-            wire::write_frame(&mut *w, &bytes)
-        };
-        if let Err(e) = res {
-            self.pending.lock().unwrap().remove(&req.id);
-            return Err(e);
-        }
+        self.send_registered(req.id, &tx, &bytes)?;
         Ok(rx)
+    }
+
+    /// Register the reply sender and write the frame, re-dialing under
+    /// the reconnect policy (if any) when the connection is dead. The
+    /// registration happens under the link lock and *before* the write —
+    /// the reply can race back before the lock is even released — and is
+    /// redone after every re-dial, because tearing the old link down
+    /// clears the whole pending map (that disconnect is exactly how
+    /// other in-flight requests learn their connection died).
+    fn send_registered(
+        &self,
+        id: u64,
+        tx: &mpsc::Sender<ServeResult>,
+        bytes: &[u8],
+    ) -> io::Result<()> {
+        let mut link = self.link.lock().unwrap();
+        self.pending.lock().unwrap().insert(id, tx.clone());
+        let mut last_err = match wire::write_frame(&mut link.writer, bytes) {
+            Ok(()) => return Ok(()),
+            Err(e) => e,
+        };
+        let Some(policy) = self.policy else {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(last_err);
+        };
+        let mut jitter = policy.seed;
+        for attempt in 0..policy.max_attempts {
+            // Tear the dead link down first: joining the old reader both
+            // guarantees its pending-map clear cannot race our re-insert
+            // and surfaces the disconnect to every other in-flight
+            // request on this connection.
+            let _ = link.writer.shutdown(Shutdown::Both);
+            if let Some(r) = link.reader.take() {
+                let _ = r.join();
+            }
+            let shift = attempt.min(8);
+            let base = policy.base.saturating_mul(1u32 << shift).min(policy.max);
+            let extra = splitmix64(&mut jitter) % (base.as_micros() as u64 / 2 + 1);
+            std::thread::sleep((base + Duration::from_micros(extra)).min(policy.max));
+            match open_link(self.addr, self.pending.clone()) {
+                Ok(l) => {
+                    *link = l;
+                    self.pending.lock().unwrap().insert(id, tx.clone());
+                    match wire::write_frame(&mut link.writer, bytes) {
+                        Ok(()) => return Ok(()),
+                        Err(e) => last_err = e,
+                    }
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        self.pending.lock().unwrap().remove(&id);
+        Err(last_err)
     }
 }
 
@@ -158,10 +276,9 @@ impl Drop for WireClient {
     fn drop(&mut self) {
         // Half-close: the server reader sees EOF and stops accepting our
         // requests; in-flight replies still flush before the reader ends.
-        if let Ok(w) = self.writer.lock() {
-            let _ = w.shutdown(Shutdown::Write);
-        }
-        if let Some(r) = self.reader.take() {
+        let mut link = self.link.lock().unwrap();
+        let _ = link.writer.shutdown(Shutdown::Write);
+        if let Some(r) = link.reader.take() {
             let _ = r.join();
         }
     }
@@ -242,6 +359,103 @@ impl ClientConn {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{BackendChoice, BatcherConfig, CoordinatorConfig, WireServer};
+    use std::net::TcpListener;
+    use std::time::Instant;
+
+    fn quick_coordinator() -> Arc<Coordinator> {
+        Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendChoice::Native,
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn server_dying_mid_stream_disconnects_in_flight_requests_not_hangs() {
+        // A raw listener standing in for a server that accepts the
+        // connection, takes the request, and then dies without replying.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = WireClient::connect(addr, None).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let rx = client
+            .submit(vec![1.0, 2.0], vec![3.0, 4.0], vec![], false)
+            .expect("write lands in the socket buffer");
+        // The "crash": both halves die with the request still in flight.
+        server_side.shutdown(Shutdown::Both).unwrap();
+        drop(server_side);
+        // The reply channel must observe a disconnect — a typed error the
+        // runner counts as failed — and must never hang.
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Err(mpsc::RecvTimeoutError::Disconnected) => {}
+            other => panic!("expected disconnect, got {other:?}"),
+        }
+        // Without a reconnect policy, later submissions fail immediately
+        // with an io error instead of pretending the connection is fine.
+        let dead = (0..10).any(|_| client.submit(vec![1.0], vec![2.0], vec![], false).is_err());
+        assert!(dead, "writes to a dead connection must surface an error");
+    }
+
+    #[test]
+    fn reconnect_policy_heals_the_client_across_a_server_restart() {
+        let c = quick_coordinator();
+        let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+        let addr = server.local_addr();
+        let client = WireClient::connect_with(
+            addr,
+            None,
+            ReconnectPolicy {
+                max_attempts: 8,
+                base: Duration::from_millis(1),
+                max: Duration::from_millis(20),
+                seed: 9,
+            },
+        )
+        .unwrap();
+        let rx = client.submit(vec![1.0], vec![2.0], vec![], false).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+
+        // Crash the serving tier (abrupt: no drain) and restart it on the
+        // same address, same coordinator.
+        server.kill();
+        let server2 = WireServer::bind(&addr.to_string(), c.clone()).unwrap();
+
+        // The next submissions find the dead socket, re-dial under the
+        // policy, and complete on the restarted server. (A write racing
+        // the kill can land in the dead socket's buffer and "succeed";
+        // its receiver then observes a disconnect — loop past those.)
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let healed = loop {
+            if Instant::now() >= deadline {
+                break false;
+            }
+            match client.submit(vec![5.0], vec![6.0], vec![], false) {
+                Ok(rx) => match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(Ok(resp)) => {
+                        assert_eq!(resp.xs, vec![5.0]);
+                        break true;
+                    }
+                    _ => continue,
+                },
+                Err(_) => continue,
+            }
+        };
+        assert!(healed, "reconnect policy must heal across the restart");
+
+        drop(client);
+        server2.shutdown();
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
 
     #[test]
     fn transport_labels_and_parsing_roundtrip() {

@@ -1,9 +1,12 @@
 //! `repro` — the reproduction CLI. Run `repro help` (or any unknown
 //! verb) for the authoritative verb listing in [`USAGE`].
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use morpho::coordinator::{BackendChoice, Coordinator, CoordinatorConfig, WireServer, WIRE_VERSION};
+use morpho::coordinator::{
+    BackendChoice, Coordinator, CoordinatorConfig, Router, RouterConfig, WireServer, WIRE_VERSION,
+};
 use morpho::graphics::Transform;
 use morpho::loadgen;
 use morpho::loadgen::TransportKind;
@@ -37,8 +40,17 @@ verbs:
   serve --listen <addr> [native|xla|m1sim] [shards] [sync|async]
                             bind the wire-protocol TCP listener on <addr>
                             (e.g. 127.0.0.1:7070) and serve until stdin
-                            closes / Ctrl-C, then drain gracefully (every
-                            admitted request is answered before exit)
+                            closes or Ctrl-C/SIGTERM, then drain
+                            gracefully (every admitted request is
+                            answered before exit)
+  route --listen <addr> <backend-addr>...
+                            fault-tolerant front-end: accept wire-protocol
+                            clients on <addr> and balance them across the
+                            given backend coordinators by least reported
+                            queue depth; per-backend health-checked
+                            breaker, mid-run failover with exactly-once
+                            replies, immediate Unavailable when every
+                            backend is dead; stdin-EOF/Ctrl-C drains
   loadtest <scenario|list> [--transport tcp|in-process] [shards] [seconds]
                             run a named load-generation scenario against
                             the coordinator (M1Sim backend) and write
@@ -233,9 +245,45 @@ fn serve(requests: usize, backend: BackendChoice, m1_shards: usize, m1_async_dma
     c.shutdown();
 }
 
+/// Flipped by the SIGINT/SIGTERM handler and the stdin-EOF watcher:
+/// tells `serve --listen` and `route` to drain and exit instead of dying
+/// mid-request.
+static DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Turn Ctrl-C (and SIGTERM) into a graceful drain by flipping [`DRAIN`].
+/// Dependency-free: the raw `signal(2)` the binary already links. The
+/// handler does only async-signal-safe work — a single atomic store.
+fn install_ctrl_c_drain() {
+    extern "C" fn on_signal(_sig: i32) {
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+    #[cfg(unix)]
+    unsafe {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        let _ = signal(2, on_signal as usize); // SIGINT
+        let _ = signal(15, on_signal as usize); // SIGTERM
+    }
+    #[cfg(not(unix))]
+    let _ = on_signal; // stdin-EOF still drains
+}
+
+/// Watch stdin on a helper thread and flip [`DRAIN`] when the operator
+/// closes it (Ctrl-D / pipe end).
+fn drain_on_stdin_eof() {
+    std::thread::spawn(|| {
+        let mut line = String::new();
+        while matches!(std::io::stdin().read_line(&mut line), Ok(n) if n > 0) {
+            line.clear();
+        }
+        DRAIN.store(true, Ordering::SeqCst);
+    });
+}
+
 /// `repro serve --listen <addr>`: put the coordinator on the wire and
-/// serve remote clients until the operator closes stdin (or Ctrl-C kills
-/// the process outright), then drain gracefully — stop accepting, answer
+/// serve remote clients until the operator closes stdin or sends
+/// SIGINT/SIGTERM, then drain gracefully — stop accepting, answer
 /// everything admitted, report, exit.
 fn serve_listen(addr: &str, backend: BackendChoice, m1_shards: usize, m1_async_dma: bool) {
     let c = Arc::new(
@@ -258,17 +306,50 @@ fn serve_listen(addr: &str, backend: BackendChoice, m1_shards: usize, m1_async_d
         backend,
         m1_shards
     );
-    println!("close stdin (Ctrl-D) to drain and stop");
-    let mut line = String::new();
-    while matches!(std::io::stdin().read_line(&mut line), Ok(n) if n > 0) {
-        line.clear();
-    }
-    println!("draining…");
-    server.shutdown();
+    println!("close stdin (Ctrl-D) or Ctrl-C to drain and stop");
+    install_ctrl_c_drain();
+    drain_on_stdin_eof();
+    server.serve_until(&DRAIN);
     println!("{}", c.metrics().render());
     if let Ok(c) = Arc::try_unwrap(c) {
         c.shutdown();
     }
+}
+
+/// `repro route --listen <addr> <backend-addr>...`: the fault-tolerant
+/// front-end as its own process — clients speak wire protocol v1 to the
+/// router exactly as they would to a single coordinator; the backends
+/// are `repro serve --listen` processes (or anything serving the same
+/// protocol). Drains on stdin-EOF or SIGINT/SIGTERM.
+fn route(listen: &str, backend_addrs: &[&str]) {
+    let mut backends = Vec::new();
+    for a in backend_addrs {
+        match a.parse::<std::net::SocketAddr>() {
+            Ok(sa) => backends.push(sa),
+            Err(e) => {
+                eprintln!("bad backend address `{a}`: {e}");
+                std::process::exit(2)
+            }
+        }
+    }
+    let n = backends.len();
+    let router = Router::bind(listen, RouterConfig::new(backends)).unwrap_or_else(|e| {
+        eprintln!("failed to bind router on {listen}: {e:#}");
+        std::process::exit(1)
+    });
+    println!(
+        "routing wire protocol v{WIRE_VERSION} on {} across {n} backends",
+        router.local_addr()
+    );
+    println!("close stdin (Ctrl-D) or Ctrl-C to drain and stop");
+    install_ctrl_c_drain();
+    drain_on_stdin_eof();
+    while !DRAIN.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("draining…");
+    println!("{}", router.metrics().render());
+    router.shutdown();
 }
 
 fn main() {
@@ -355,6 +436,17 @@ fn main() {
                 Some(addr) => serve_listen(addr, backend, shards, async_dma),
                 None => serve(n, backend, shards, async_dma),
             }
+        }
+        Some("route") => {
+            if it.next() != Some("--listen") {
+                usage();
+            }
+            let listen = it.next().unwrap_or_else(|| usage());
+            let backends: Vec<&str> = it.collect();
+            if backends.is_empty() {
+                usage();
+            }
+            route(listen, &backends);
         }
         Some("loadtest") => {
             let name = it.next().unwrap_or_else(|| usage());

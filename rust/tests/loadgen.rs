@@ -75,6 +75,7 @@ fn burst_profile_with_fast_reject_accounts_for_every_request() {
         fast_reject: true,
         fault_seed: None,
         transport: TransportKind::InProcess,
+        router: None,
     };
     let r = loadgen::run_scenario(&sc).unwrap();
     assert_eq!(r.failed, 0);
@@ -239,6 +240,103 @@ fn chaos_responses_are_bit_identical_to_fault_free_serving() {
             assert_eq!(a.to_bits(), b.to_bits(), "request {i} ys[{j}]");
         }
     }
+}
+
+/// The router differential: the same seeded requests served through the
+/// front-end router over two backends are bit-identical to a
+/// single-coordinator wire run. Responses are pure functions of the
+/// request payload, so *which* backend served each request is
+/// unobservable — the property mid-run failover relies on when it
+/// redispatches in-flight requests to a different backend.
+#[test]
+fn routed_responses_are_bit_identical_to_a_single_backend_run() {
+    use morpho::coordinator::{Router, RouterConfig};
+    let factory = RequestFactory::new(0xB17_F11E, WorkloadMix::standard());
+    let requests: Vec<_> = (0..24u64).map(|i| factory.request(i % 3, i / 3)).collect();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    let config = || CoordinatorConfig {
+        backend: BackendChoice::M1Sim,
+        m1_shards: 2,
+        workers: 2,
+        batcher: BatcherConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+        ..Default::default()
+    };
+    let drain = |client: &WireClient| -> Vec<(Vec<u32>, Vec<u32>)> {
+        let rxs: Vec<_> = requests
+            .iter()
+            .map(|g| {
+                client.submit(g.xs.clone(), g.ys.clone(), g.transforms.clone(), false).unwrap()
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| {
+                let r = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+                (bits(&r.xs), bits(&r.ys))
+            })
+            .collect()
+    };
+
+    // One coordinator, straight over the wire.
+    let c = Arc::new(Coordinator::start(config()).unwrap());
+    let server = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+    let client = WireClient::connect(server.local_addr(), None).unwrap();
+    let single = drain(&client);
+    drop(client);
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+
+    // Two coordinators behind the router, same wire protocol in front.
+    let racks: Vec<_> = (0..2)
+        .map(|_| {
+            let c = Arc::new(Coordinator::start(config()).unwrap());
+            let s = WireServer::bind("127.0.0.1:0", c.clone()).unwrap();
+            (c, s)
+        })
+        .collect();
+    let cfg = RouterConfig::new(racks.iter().map(|(_, s)| s.local_addr()).collect());
+    let router = Router::bind("127.0.0.1:0", cfg).unwrap();
+    assert!(router.wait_healthy(2, Duration::from_secs(10)), "both backends report healthy");
+    let client = WireClient::connect(router.local_addr(), None).unwrap();
+    let routed = drain(&client);
+    let m = router.metrics();
+    assert!(m.backends.iter().all(|b| b.proxied > 0), "both backends took traffic: {m:?}");
+    assert_eq!(m.proxied, requests.len() as u64);
+    assert_eq!(m.replies, requests.len() as u64, "exactly one reply per proxied request");
+    drop(client);
+    router.shutdown();
+    for (c, s) in racks {
+        s.shutdown();
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    assert_eq!(single, routed, "the router must be payload-invisible");
+}
+
+/// The failover scenario end to end: a seeded kill plan takes one
+/// backend down mid-run and restarts it on the same address. The gate:
+/// the breaker fires (≥1 death), the revived backend heals back into
+/// the rotation (≥1 rejoin), and no admitted request goes unanswered —
+/// `failed == 0` across the whole outage.
+#[test]
+fn failover_scenario_heals_and_loses_nothing() {
+    let mut sc = loadgen::scenario::by_name("failover").expect("failover scenario exists");
+    sc.duration = Duration::from_millis(1500);
+    let rs = sc.router.expect("failover runs through the router");
+    assert_eq!(rs.backends, 2);
+    assert!(rs.kill_seed.is_some(), "failover must arm the kill plan");
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert_eq!(r.failed, 0, "failover may not lose replies: {}", r.render());
+    assert!(r.completed > 0, "service must keep serving through the outage: {}", r.render());
+    assert!(r.backend_deaths >= 1, "the breaker must see the kill: {}", r.render());
+    assert!(r.backend_rejoins >= 1, "the revived backend must rejoin: {}", r.render());
+    assert_eq!(r.router_backends, 2);
+    assert_eq!(r.backends.len(), 2, "one report row per backend");
+    assert!(r.render().contains("router over 2 backends"));
+    assert!(r.to_json().contains("\"backend_deaths\""));
 }
 
 type Receivers = Arc<Mutex<Vec<mpsc::Receiver<ServeResult>>>>;

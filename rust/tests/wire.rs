@@ -14,9 +14,9 @@ use std::time::Duration;
 use morpho::coordinator::request::RequestTiming;
 use morpho::coordinator::wire::{self, ERR_MALFORMED, ERR_UNEXPECTED_KIND};
 use morpho::coordinator::{
-    BackendChoice, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, Frame, RejectReason,
-    Rejection, ServeResult, TransformRequest, TransformResponse, WireError, WireServer, MAX_FRAME,
-    WIRE_VERSION,
+    BackendChoice, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, Frame, HealthStats,
+    RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse, WireError,
+    WireServer, MAX_FRAME, WIRE_VERSION,
 };
 use morpho::graphics::Transform;
 use morpho::loadgen::WireClient;
@@ -81,6 +81,24 @@ fn random_result(rng: &mut Rng) -> ServeResult {
     }
 }
 
+fn random_health(rng: &mut Rng) -> (u64, HealthStats) {
+    let seq = rng.next_u64();
+    let stats = HealthStats {
+        queue_depth: rng.next_u64(),
+        requests: rng.next_u64(),
+        responses: rng.next_u64(),
+        shed: rng.next_u64(),
+        rejected: rng.next_u64(),
+        closed: rng.next_u64(),
+        deadline_missed: rng.next_u64(),
+        shard_crashes: rng.next_u64(),
+        shard_restarts: rng.next_u64(),
+        tiles_redispatched: rng.next_u64(),
+        recovery_max_us: rng.next_u64(),
+    };
+    (seq, stats)
+}
+
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
@@ -129,6 +147,22 @@ fn seeded_random_frames_roundtrip_bit_identically() {
             (Frame::Result(Err(b)), Err(a)) => assert_eq!(a, b),
             (frame, res) => panic!("variant flipped in transit: {frame:?} vs {res:?}"),
         }
+
+        // Kind-5 health: polls (empty body) and full-entropy reports
+        // round-trip under the same canonical-encoding contract.
+        let (seq, stats) = random_health(rng);
+        let stats = rng.bool().then_some(stats);
+        let bytes = wire::encode_health(seq, stats.as_ref());
+        let payload = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
+        let frame = wire::decode_frame(&payload).unwrap();
+        assert_eq!(wire::encode_frame(&frame), bytes, "health re-encode is bit-identical");
+        match frame {
+            Frame::Health { seq: back_seq, stats: back } => {
+                assert_eq!(back_seq, seq);
+                assert_eq!(back, stats);
+            }
+            other => panic!("expected health frame, got {other:?}"),
+        }
     });
 }
 
@@ -150,6 +184,12 @@ fn every_bit_flip_fails_decode_or_reencodes_to_the_flipped_bytes() {
         frames.push(wire::encode_request(&req, rng.bool()));
         frames.push(wire::encode_result(&random_result(&mut rng)));
     }
+    // Health frames obey the same no-alias discipline: a poll and a
+    // full-entropy report (flips in the tag, seq or any counter either
+    // fail typed or re-encode to exactly the flipped bytes).
+    let (seq, report) = random_health(&mut rng);
+    frames.push(wire::encode_health(seq, None));
+    frames.push(wire::encode_health(seq, Some(&report)));
     for bytes in frames {
         let payload = wire::read_frame(&mut &bytes[..]).unwrap().unwrap();
         for bit in 0..payload.len() * 8 {
@@ -185,6 +225,23 @@ fn truncated_and_oversized_streams_are_rejected_at_the_frame_layer() {
             Ok(None) => assert_eq!(cut, 0, "only the empty stream is a clean EOF"),
             Err(WireError::Truncated { .. }) => assert!(cut > 0),
             other => panic!("cut at {cut}: expected truncation, got {other:?}"),
+        }
+    }
+    // Same sweep over a kind-5 health report: every prefix of the frame
+    // is a typed truncation at the stream layer, never a short decode.
+    let report = HealthStats {
+        queue_depth: 2,
+        requests: 9,
+        responses: 7,
+        recovery_max_us: 450,
+        ..Default::default()
+    };
+    let bytes = wire::encode_health(21, Some(&report));
+    for cut in 0..bytes.len() {
+        match wire::read_frame(&mut &bytes[..cut]) {
+            Ok(None) => assert_eq!(cut, 0, "only the empty stream is a clean EOF"),
+            Err(WireError::Truncated { .. }) => assert!(cut > 0),
+            other => panic!("health cut at {cut}: expected truncation, got {other:?}"),
         }
     }
     let mut huge = u32::MAX.to_le_bytes().to_vec();
