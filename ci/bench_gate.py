@@ -1,17 +1,31 @@
 #!/usr/bin/env python3
 """Bench-regression gate.
 
-Compares the current BENCH_simulator.json against a baseline (the previous
-successful CI run's artifact when available, else the committed
-ci/bench-baseline.json floors) and fails if any row present in BOTH files
-has regressed in throughput by more than the allowed fraction.
+Compares a current bench report against a baseline (the previous
+successful CI run's artifact when available, else the committed floors in
+ci/) and fails if any row present in BOTH files has regressed in
+throughput by more than the allowed fraction.
 
-Rows are keyed by their "bench" name; rows present on only one side are
-reported and skipped (new benches appear, old ones retire — that is not a
-regression). Throughputs of 0 on either side are skipped too (a unit-less
-placeholder row carries no signal).
+Two report shapes, selected with --mode:
+
+* ``simulator`` (default): BENCH_simulator.json — rows keyed by their
+  "bench" name, throughput read from "throughput". Committed floors live
+  in ci/bench-baseline.json.
+* ``coordinator``: BENCH_coordinator.json (the loadgen bench) — rows
+  keyed by "scenario [transport]", throughput read from
+  "throughput_rps". Committed floors live in ci/coordinator-baseline.json.
+  Pass ``--only steady`` (comma-separated scenario names) to gate just
+  the steady-state rows: the burst/chaos/failover scenarios shed load by
+  design, so their req/s is a property of the shedding policy, not a
+  regression signal.
+
+Rows present on only one side are reported and skipped (new benches
+appear, old ones retire — that is not a regression). Throughputs of 0 on
+either side are skipped too (a unit-less placeholder row carries no
+signal).
 
 Usage: bench_gate.py BASELINE CURRENT [--max-regression 0.25]
+                     [--mode coordinator] [--only steady]
 """
 
 import argparse
@@ -19,16 +33,23 @@ import json
 import sys
 
 
-def load_rows(path):
+def load_rows(path, mode="simulator", only=None):
     with open(path) as f:
         rows = json.load(f)
     if not isinstance(rows, list):
         raise SystemExit(f"{path}: expected a JSON array of bench rows")
     out = {}
     for row in rows:
-        name = row.get("bench")
-        if name:
-            out[name] = float(row.get("throughput", 0.0))
+        if mode == "coordinator":
+            scenario = row.get("scenario")
+            if not scenario or (only and scenario not in only):
+                continue
+            name = f"{scenario} [{row.get('transport', '?')}]"
+            out[name] = float(row.get("throughput_rps", 0.0))
+        else:
+            name = row.get("bench")
+            if name:
+                out[name] = float(row.get("throughput", 0.0))
     return out
 
 
@@ -38,10 +59,18 @@ def main():
     ap.add_argument("current")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="maximum allowed fractional throughput drop (default 0.25)")
+    ap.add_argument("--mode", choices=["simulator", "coordinator"],
+                    default="simulator",
+                    help="report shape: simulator bench rows (default) or "
+                         "coordinator capacity-report rows")
+    ap.add_argument("--only", default=None,
+                    help="coordinator mode: comma-separated scenario names to "
+                         "gate (default: every scenario in both files)")
     args = ap.parse_args()
 
-    base = load_rows(args.baseline)
-    cur = load_rows(args.current)
+    only = set(args.only.split(",")) if args.only else None
+    base = load_rows(args.baseline, args.mode, only)
+    cur = load_rows(args.current, args.mode, only)
     shared = sorted(set(base) & set(cur))
     if not shared:
         raise SystemExit("bench gate: no shared rows between baseline and current")

@@ -1,0 +1,214 @@
+#!/usr/bin/env python3
+"""Shared capacity-report checker for the serving-layer CI jobs.
+
+Every loadgen smoke job ends the same way: run a `repro` verb, assert the
+emitted JSON report satisfies the job's invariants, upload the artifact.
+This script is the shared "assert" half; the `.github/actions/loadtest-check`
+composite action wires it between the run and the upload.
+
+Three modes, each reading one or more report files:
+
+  rows        BENCH_coordinator.json rows (a JSON array of capacity
+              reports). Select rows with --scenario/--transport, then
+              evaluate every --require expression against each selected
+              row with the row's columns bound as variables:
+
+                check_report.py rows R.json --scenario chaos \\
+                    --require "failed == 0" --require "shard_crashes > 0"
+
+  ab          Adaptive-batching A/B: the adaptive row's throughput_rps
+              must be >= --tolerance x each static-extreme row's:
+
+                check_report.py ab min.json max.json adaptive.json \\
+                    --adaptive mixed-adaptive \\
+                    --extremes mixed-window-min mixed-window-max
+
+  saturation  BENCH_saturation.json (the `repro sweep` surface): every
+              grid cell must be populated — knee_rps > 0, submitted > 0,
+              failed == 0 — and the cell count must reach --min-cells.
+
+Multiple report files are merged (rows concatenated) before checking, so
+jobs that write one file per run can still be gated as a set. Exits
+nonzero with a per-row diagnosis on the first unsatisfied invariant.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(paths):
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            data = json.load(f)
+        if not isinstance(data, list):
+            raise SystemExit(f"{path}: expected a JSON array of capacity reports")
+        if not data:
+            raise SystemExit(f"{path}: no scenario rows")
+        rows.extend(data)
+    return rows
+
+
+def describe(row):
+    return (f"{row.get('scenario', '?')} [{row.get('transport', '?')}"
+            f", window={row.get('batch_window', '?')}]")
+
+
+def check_rows(args):
+    rows = load_rows(args.reports)
+    if args.scenario:
+        rows = [r for r in rows if r.get("scenario") == args.scenario]
+    if args.transport:
+        rows = [r for r in rows if r.get("transport") == args.transport]
+    if not rows:
+        raise SystemExit(
+            f"no rows match scenario={args.scenario!r} transport={args.transport!r}")
+
+    failures = []
+    for row in rows:
+        print(f"{describe(row)}: {row.get('completed')} completed, "
+              f"{row.get('failed')} failed, {row.get('shed')} shed, "
+              f"{row.get('throughput_rps', 0):.0f} req/s, "
+              f"p99 {row.get('latency_p99_us')}us")
+        if row.get("bulk_completed", 0) or row.get("bulk_shed", 0):
+            print(f"  lanes: interactive completed={row.get('interactive_completed')} "
+                  f"deadline_missed={row.get('interactive_deadline_missed')} "
+                  f"p99={row.get('interactive_p99_us')}us | "
+                  f"bulk completed={row.get('bulk_completed')} "
+                  f"shed={row.get('bulk_shed')}")
+        for expr in args.require:
+            try:
+                scope = {"__builtins__": {}, "len": len, "min": min,
+                         "max": max, "abs": abs}
+                ok = eval(expr, scope, dict(row))  # noqa: S307
+            except Exception as e:
+                raise SystemExit(f"{describe(row)}: cannot evaluate {expr!r}: {e}")
+            mark = "ok" if ok else "FAIL"
+            print(f"  require {expr!r}: {mark}")
+            if not ok:
+                failures.append((describe(row), expr))
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} unsatisfied invariant(s):", file=sys.stderr)
+        for where, expr in failures:
+            print(f"  {where}: {expr}", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(rows)} row(s) satisfy {len(args.require)} invariant(s)")
+    return 0
+
+
+def check_ab(args):
+    rows = {r.get("scenario"): r for r in load_rows(args.reports)}
+    missing = [n for n in [args.adaptive, *args.extremes] if n not in rows]
+    if missing:
+        raise SystemExit(f"A/B rows missing from reports: {', '.join(missing)}")
+
+    adaptive = rows[args.adaptive]
+    a_rps = float(adaptive.get("throughput_rps", 0.0))
+    if adaptive.get("batch_window") != "adaptive":
+        raise SystemExit(
+            f"{args.adaptive}: batch_window is {adaptive.get('batch_window')!r}, "
+            "not 'adaptive' — the controller never ran")
+    print(f"{args.adaptive:<20} {a_rps:>10.1f} req/s (window=adaptive)")
+
+    failures = []
+    for name in args.extremes:
+        e_rps = float(rows[name].get("throughput_rps", 0.0))
+        if e_rps <= 0.0:
+            raise SystemExit(f"{name}: zero throughput — the extreme never served")
+        ratio = a_rps / e_rps
+        verdict = "OK" if ratio >= args.tolerance else "REGRESSED"
+        print(f"{name:<20} {e_rps:>10.1f} req/s "
+              f"(window={rows[name].get('batch_window')}) "
+              f"adaptive/static = {ratio:.2f}x  {verdict}")
+        if ratio < args.tolerance:
+            failures.append((name, ratio))
+
+    if failures:
+        print(f"\nFAIL: adaptive window lost to {len(failures)} static extreme(s) "
+              f"(tolerance {args.tolerance:.2f}x):", file=sys.stderr)
+        for name, ratio in failures:
+            print(f"  vs {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print(f"\nOK: adaptive window >= {args.tolerance:.2f}x both static extremes")
+    return 0
+
+
+def check_saturation(args):
+    if len(args.reports) != 1:
+        raise SystemExit("saturation mode takes exactly one BENCH_saturation.json")
+    with open(args.reports[0]) as f:
+        surface = json.load(f)
+    cells = surface.get("cells")
+    if not isinstance(cells, list) or not cells:
+        raise SystemExit(f"{args.reports[0]}: no cells in surface")
+
+    failures = []
+    for c in cells:
+        label = (f"workers={c.get('workers')} shards={c.get('shards')} "
+                 f"window={c.get('window_us')}us")
+        problems = []
+        if not c.get("knee_rps", 0) > 0:
+            problems.append(f"knee_rps={c.get('knee_rps')}")
+        if not c.get("submitted", 0) > 0:
+            problems.append(f"submitted={c.get('submitted')}")
+        if c.get("failed", 1) != 0:
+            problems.append(f"failed={c.get('failed')}")
+        status = "FAIL " + ", ".join(problems) if problems else "ok"
+        print(f"{label:<40} knee {c.get('knee_rps', 0):>10.1f} req/s, "
+              f"p99 {c.get('p99_at_knee_us')}us, "
+              f"shed {c.get('shed_fraction', 0):.1%}  {status}")
+        if problems:
+            failures.append((label, problems))
+
+    if len(cells) < args.min_cells:
+        print(f"\nFAIL: only {len(cells)} cell(s), expected >= {args.min_cells}",
+              file=sys.stderr)
+        return 1
+    if failures:
+        print(f"\nFAIL: {len(failures)} unpopulated cell(s):", file=sys.stderr)
+        for label, problems in failures:
+            print(f"  {label}: {', '.join(problems)}", file=sys.stderr)
+        return 1
+    print(f"\nOK: all {len(cells)} cells populated (seed {surface.get('seed')}, "
+          f"{surface.get('cell_seconds')}s per cell)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    rows = sub.add_parser("rows", help="assert invariants on capacity-report rows")
+    rows.add_argument("reports", nargs="+")
+    rows.add_argument("--scenario", help="only rows with this scenario name")
+    rows.add_argument("--transport", help="only rows with this transport")
+    rows.add_argument("--require", action="append", default=[],
+                      help="expression over row columns that must be true "
+                           "(repeatable)")
+    rows.set_defaults(run=check_rows)
+
+    ab = sub.add_parser("ab", help="adaptive batching vs static extremes")
+    ab.add_argument("reports", nargs="+")
+    ab.add_argument("--adaptive", required=True,
+                    help="scenario name of the adaptive-window row")
+    ab.add_argument("--extremes", nargs="+", required=True,
+                    help="scenario names of the static-extreme rows")
+    ab.add_argument("--tolerance", type=float, default=0.9,
+                    help="minimum adaptive/static throughput ratio (default 0.9, "
+                         "i.e. adaptive may trail an extreme by CI noise only)")
+    ab.set_defaults(run=check_ab)
+
+    sat = sub.add_parser("saturation", help="assert the sweep surface is populated")
+    sat.add_argument("reports", nargs="+")
+    sat.add_argument("--min-cells", type=int, default=8,
+                     help="minimum number of grid cells (default 8)")
+    sat.set_defaults(run=check_saturation)
+
+    args = ap.parse_args()
+    return args.run(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

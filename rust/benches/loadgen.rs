@@ -46,6 +46,25 @@ fn main() {
     println!("{}", r.render());
     reports.push(r);
 
+    section("batch-window A/B (mixed workload: static extremes vs adaptive)");
+    // The adaptive-batching bar reads these three rows plus the `mixed`
+    // row above: the adaptive controller's throughput should be no worse
+    // than either static extreme of its own band.
+    for name in ["mixed-window-min", "mixed-window-max", "mixed-adaptive"] {
+        let mut sc = scenario::by_name(name).expect("A/B scenario");
+        sc.duration = Duration::from_secs(2);
+        let r = loadgen::run_scenario(&sc).expect("run A/B scenario");
+        println!("{}", r.render());
+        reports.push(r);
+    }
+
+    section("two-lane priority serving (lanes scenario: bulk bursts vs interactive TTLs)");
+    let mut lanes = scenario::by_name("lanes").expect("lanes scenario");
+    lanes.duration = Duration::from_secs(2);
+    let r = loadgen::run_scenario(&lanes).expect("run lanes");
+    println!("{}", r.render());
+    reports.push(r);
+
     section("degraded capacity under seeded fault injection (chaos scenario)");
     let chaos = scenario::by_name("chaos").expect("chaos scenario");
     let r = loadgen::run_scenario(&chaos).expect("run chaos");

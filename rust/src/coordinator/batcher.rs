@@ -13,15 +13,23 @@ use crate::mapping::streamed::TILE as M1_TILE;
 use super::backend::BackendKind;
 use super::metrics::Metrics;
 use super::request::{
-    PendingRequest, RejectReason, Rejection, RequestTiming, ServeResult, TransformResponse,
+    PendingRequest, Priority, RejectReason, Rejection, RequestTiming, ServeResult,
+    TransformResponse,
 };
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// Max time the first request of a batch window waits for company.
+    /// When `adaptive` is set this is only the *initial* window; the
+    /// controller then re-sizes it every window from the queue-depth
+    /// gauge.
     pub max_wait: Duration,
-    /// Flush the window once this many points are pending.
+    /// Flush the window once this many points are pending. Also the
+    /// congestion threshold of the weighted shed path: a window carrying
+    /// more points than this is congested, and near-deadline bulk
+    /// requests are shed preemptively instead of clogging the tile jobs
+    /// ahead of interactive traffic.
     pub flush_points: usize,
     /// Largest tile a single backend job may carry (points). A value
     /// that is not a multiple of the M1 tile size (64) is rounded **down**
@@ -29,6 +37,11 @@ pub struct BatcherConfig {
     /// so backend jobs never carry a ragged tail the simulator would pad
     /// on every job instead of only on the final one.
     pub max_tile: usize,
+    /// Adaptive window sizing. `None` keeps the static `max_wait`;
+    /// `Some` lets an [`AdaptiveWindow`] controller widen the window
+    /// under queue pressure (batch greedily for throughput) and shrink
+    /// it when the queue is empty (cut the window for latency).
+    pub adaptive: Option<AdaptiveWindowConfig>,
 }
 
 impl Default for BatcherConfig {
@@ -37,7 +50,70 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(2),
             flush_points: 4096,
             max_tile: 4096,
+            adaptive: None,
         }
+    }
+}
+
+/// Bounds and thresholds of the adaptive batch-window controller.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveWindowConfig {
+    /// Floor: the window when the queue is drained (latency mode).
+    pub min_wait: Duration,
+    /// Ceiling: the window under sustained queue pressure (throughput
+    /// mode).
+    pub max_wait: Duration,
+    /// Queue depth at or below which the window halves.
+    pub low_depth: usize,
+    /// Queue depth at or above which the window doubles.
+    pub high_depth: usize,
+}
+
+impl Default for AdaptiveWindowConfig {
+    fn default() -> Self {
+        AdaptiveWindowConfig {
+            min_wait: Duration::from_micros(100),
+            max_wait: Duration::from_millis(5),
+            low_depth: 2,
+            high_depth: 16,
+        }
+    }
+}
+
+/// The adaptive batch-window controller: multiplicative
+/// increase/decrease of the window between the configured bounds, driven
+/// purely by the observed queue-depth gauge. Pure state machine — the
+/// window sequence is a deterministic function of the gauge trace, so
+/// fixed-seed scenarios stay bit-reproducible.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWindow {
+    cfg: AdaptiveWindowConfig,
+    current: Duration,
+}
+
+impl AdaptiveWindow {
+    pub fn new(cfg: AdaptiveWindowConfig) -> AdaptiveWindow {
+        assert!(cfg.min_wait <= cfg.max_wait, "window bounds inverted");
+        assert!(cfg.low_depth < cfg.high_depth, "depth thresholds inverted");
+        AdaptiveWindow { cfg, current: cfg.min_wait }
+    }
+
+    pub fn current(&self) -> Duration {
+        self.current
+    }
+
+    /// Feed one queue-depth observation; returns the window to use for
+    /// the next batch. Deep queue → double (clamped to `max_wait`);
+    /// drained queue → halve (clamped to `min_wait`); in between → hold.
+    pub fn observe(&mut self, queue_depth: usize) -> Duration {
+        if queue_depth >= self.cfg.high_depth {
+            // A zero floor must still be escapable under pressure.
+            let base = self.current.max(Duration::from_micros(1));
+            self.current = (base * 2).min(self.cfg.max_wait);
+        } else if queue_depth <= self.cfg.low_depth {
+            self.current = (self.current / 2).max(self.cfg.min_wait);
+        }
+        self.current
     }
 }
 
@@ -115,6 +191,10 @@ pub struct TileJob {
     pub params: [f32; 6],
     pub xs: Vec<f32>,
     pub ys: Vec<f32>,
+    /// True if any request in this job is interactive: the job rides the
+    /// express lane of the job queue so a backlog of bulk jobs cannot
+    /// delay it.
+    pub express: bool,
     /// Scatter list: `(assembly, dst_offset_in_job, src_offset_in_request,
     /// len)`.
     pub(crate) parts: Vec<(Arc<Assembly>, usize, usize, usize)>,
@@ -165,25 +245,53 @@ impl Batcher {
     }
 
     /// Turn a window of pending requests into tile jobs: group by
-    /// transform key (arrival order preserved), concatenate each group's
-    /// points, cut at `max_tile` boundaries.
+    /// transform key (first-arrival order of keys, interactive lane
+    /// first), concatenate each group's points, cut at `max_tile`
+    /// boundaries.
     ///
-    /// Admission control happens here: a request whose deadline has
-    /// already passed at plan time is **shed** — its client receives an
-    /// explicit [`Rejection`] instead of stale (and still-costly) results,
-    /// and `metrics.shed` counts it. Requests that make it into a job but
+    /// Admission control happens here, and it is **lane-weighted**:
+    ///
+    /// - A request whose deadline has already passed at plan time is shed
+    ///   (either lane) — its client receives an explicit [`Rejection`]
+    ///   instead of stale (and still-costly) results.
+    /// - When the window is *congested* (more points than
+    ///   `flush_points`), bulk requests whose deadline falls inside the
+    ///   current batch window (`now + max_wait`) are shed preemptively:
+    ///   they would expire in the backlog anyway, and planning them would
+    ///   only delay the interactive lane. Interactive requests are never
+    ///   shed while that rule is the only one firing — bulk always sheds
+    ///   first at equal deadlines.
+    ///
+    /// `metrics.shed` counts every shed request; `metrics.shed_bulk`
+    /// counts the bulk subset. Requests that make it into a job but
     /// finish late are counted as `deadline_missed` on completion.
     pub(crate) fn plan(
         &self,
-        window: Vec<PendingRequest>,
+        mut window: Vec<PendingRequest>,
         now: Instant,
         metrics: &Arc<Metrics>,
     ) -> Vec<TileJob> {
-        // Group preserving first-arrival order of keys.
+        // Interactive lane plans (and thus executes) first; stable sort
+        // preserves arrival order within each lane.
+        window.sort_by_key(|p| p.req.priority);
+        let window_points: usize = window.iter().map(|p| p.req.points()).sum();
+        let congested = window_points > self.config.flush_points;
+        let horizon = now + self.config.max_wait;
+
+        // Group preserving first-arrival order of keys (per lane order).
         let mut groups: Vec<(u64, [f32; 6], Vec<PendingRequest>)> = Vec::new();
         for p in window {
-            if matches!(p.deadline, Some(d) if now > d) {
+            let expired = matches!(p.deadline, Some(d) if now > d);
+            // Weighted shed: under congestion a near-deadline bulk
+            // request is shed before any interactive one is touched.
+            let bulk_doomed = congested
+                && p.req.priority == Priority::Bulk
+                && matches!(p.deadline, Some(d) if d <= horizon);
+            if expired || bulk_doomed {
                 metrics.shed.fetch_add(1, Ordering::Relaxed);
+                if p.req.priority == Priority::Bulk {
+                    metrics.shed_bulk.fetch_add(1, Ordering::Relaxed);
+                }
                 metrics.responses.fetch_add(1, Ordering::Relaxed);
                 let _ = p.reply.send(Err(Rejection {
                     id: p.req.id,
@@ -203,6 +311,8 @@ impl Batcher {
 
         let mut jobs = Vec::new();
         for (_, params, pendings) in groups {
+            let express =
+                pendings.iter().any(|p| p.req.priority == Priority::Interactive);
             let mut job_xs: Vec<f32> = Vec::new();
             let mut job_ys: Vec<f32> = Vec::new();
             let mut parts: Vec<(Arc<Assembly>, usize, usize, usize)> = Vec::new();
@@ -246,6 +356,7 @@ impl Batcher {
                             params,
                             xs: std::mem::take(&mut job_xs),
                             ys: std::mem::take(&mut job_ys),
+                            express,
                             parts: std::mem::take(&mut parts),
                         });
                         continue;
@@ -261,7 +372,7 @@ impl Batcher {
                 assembly.state.lock().unwrap().remaining = n_parts;
             }
             if !job_xs.is_empty() {
-                jobs.push(TileJob { params, xs: job_xs, ys: job_ys, parts });
+                jobs.push(TileJob { params, xs: job_xs, ys: job_ys, express, parts });
             }
         }
         jobs
@@ -290,6 +401,16 @@ mod tests {
             deadline: None,
             reply: tx,
         };
+        (p, rx)
+    }
+
+    fn pending_bulk(
+        id: u64,
+        n: usize,
+        t: Vec<Transform>,
+    ) -> (PendingRequest, mpsc::Receiver<ServeResult>) {
+        let (mut p, rx) = pending(id, n, t);
+        p.req.priority = Priority::Bulk;
         (p, rx)
     }
 
@@ -466,6 +587,169 @@ mod tests {
         assert!(rx.try_recv().unwrap().is_ok(), "late requests are served, not dropped");
         assert_eq!(m.shed.load(Ordering::Relaxed), 0);
         assert_eq!(m.deadline_missed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn bulk_sheds_first_at_equal_deadline() {
+        // Congested window (more points than flush_points), one request
+        // per lane, *identical* deadlines inside the batch horizon: the
+        // bulk request is shed, the interactive one is planned.
+        let b = Batcher::new(BatcherConfig {
+            flush_points: 64,
+            max_tile: 64,
+            ..Default::default()
+        });
+        let m = metrics();
+        let now = Instant::now();
+        let deadline = Some(now + Duration::from_millis(1)); // < max_wait (2ms)
+        let t = vec![Transform::Translate { tx: 1.0, ty: 0.0 }];
+        let (mut inter, inter_rx) = pending(1, 64, t.clone());
+        inter.deadline = deadline;
+        let (mut bulk, bulk_rx) = pending_bulk(2, 64, t);
+        bulk.deadline = deadline;
+        // Bulk arrived *first* — lane weighting, not arrival order, must
+        // pick the victim.
+        let jobs = b.plan(vec![bulk, inter], now, &m);
+        let total: usize = jobs.iter().map(|j| j.points()).sum();
+        assert_eq!(total, 64, "only the interactive request is planned");
+        for j in jobs {
+            drain(j);
+        }
+        assert!(inter_rx.try_recv().unwrap().is_ok(), "interactive served");
+        match bulk_rx.try_recv().expect("bulk still gets a reply") {
+            Err(Rejection { id: 2, reason: RejectReason::DeadlineExceeded }) => {}
+            other => panic!("expected bulk shed, got {other:?}"),
+        }
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed_bulk.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn interactive_never_shed_while_bulk_remains() {
+        // Heavily congested window, every deadline equally near: the
+        // weighted shed may only ever pick bulk victims — all interactive
+        // requests are planned and served.
+        let b = Batcher::new(BatcherConfig {
+            flush_points: 64,
+            max_tile: 64,
+            ..Default::default()
+        });
+        let m = metrics();
+        let now = Instant::now();
+        let deadline = Some(now + Duration::from_millis(1));
+        let t = vec![Transform::Translate { tx: 1.0, ty: 0.0 }];
+        let mut window = Vec::new();
+        let mut inter_rx = Vec::new();
+        let mut bulk_rx = Vec::new();
+        for id in 0..4u64 {
+            let (mut p, rx) = pending_bulk(id, 64, t.clone());
+            p.deadline = deadline;
+            window.push(p);
+            bulk_rx.push(rx);
+        }
+        for id in 4..8u64 {
+            let (mut p, rx) = pending(id, 64, t.clone());
+            p.deadline = deadline;
+            window.push(p);
+            inter_rx.push(rx);
+        }
+        let jobs = b.plan(window, now, &m);
+        for j in jobs {
+            drain(j);
+        }
+        for rx in &inter_rx {
+            assert!(
+                rx.try_recv().expect("interactive always answered").is_ok(),
+                "interactive must never be shed while bulk remains"
+            );
+        }
+        for rx in &bulk_rx {
+            match rx.try_recv().expect("bulk answered") {
+                Err(Rejection { reason: RejectReason::DeadlineExceeded, .. }) => {}
+                other => panic!("expected bulk shed, got {other:?}"),
+            }
+        }
+        assert_eq!(m.shed.load(Ordering::Relaxed), 4);
+        assert_eq!(m.shed_bulk.load(Ordering::Relaxed), 4, "every victim was bulk");
+    }
+
+    #[test]
+    fn interactive_jobs_plan_ahead_of_bulk_and_ride_express() {
+        // Distinct transforms so the lanes land in distinct jobs: the
+        // interactive job comes first in the plan and is marked express.
+        let b = Batcher::new(BatcherConfig { max_tile: 64, ..Default::default() });
+        let (bulk, _b_rx) = pending_bulk(1, 8, vec![Transform::Translate { tx: 1.0, ty: 0.0 }]);
+        let (inter, _i_rx) = pending(2, 8, vec![Transform::Translate { tx: 2.0, ty: 0.0 }]);
+        let jobs = b.plan(vec![bulk, inter], Instant::now(), &metrics());
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs[0].express, "interactive job plans first");
+        assert!(!jobs[1].express, "pure-bulk job rides the standard lane");
+        assert_eq!(jobs[0].parts[0].0.id, 2);
+    }
+
+    #[test]
+    fn uncongested_window_never_sheds_live_bulk() {
+        // The preemptive bulk shed only fires under congestion; a window
+        // within flush_points plans both lanes.
+        let b = Batcher::new(BatcherConfig::default()); // flush_points 4096
+        let m = metrics();
+        let now = Instant::now();
+        let t = vec![Transform::Translate { tx: 1.0, ty: 0.0 }];
+        let (mut bulk, bulk_rx) = pending_bulk(1, 64, t.clone());
+        bulk.deadline = Some(now + Duration::from_millis(1));
+        let (inter, inter_rx) = pending(2, 64, t);
+        let jobs = b.plan(vec![bulk, inter], now, &m);
+        for j in jobs {
+            drain(j);
+        }
+        assert!(bulk_rx.try_recv().unwrap().is_ok());
+        assert!(inter_rx.try_recv().unwrap().is_ok());
+        assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn adaptive_window_is_deterministic_for_a_gauge_trace() {
+        // Same seed → same gauge trace → bit-identical window sequence.
+        let cfg = AdaptiveWindowConfig::default();
+        let trace = |seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::new(seed);
+            let mut w = AdaptiveWindow::new(cfg);
+            (0..200).map(|_| w.observe(rng.below(64) as usize)).collect()
+        };
+        assert_eq!(trace(7), trace(7), "same seed, same window sequence");
+        assert_ne!(
+            trace(7),
+            trace(8),
+            "different gauge traces actually steer the controller"
+        );
+    }
+
+    #[test]
+    fn adaptive_window_tracks_pressure_within_bounds() {
+        let cfg = AdaptiveWindowConfig {
+            min_wait: Duration::from_micros(100),
+            max_wait: Duration::from_millis(4),
+            low_depth: 2,
+            high_depth: 16,
+        };
+        let mut w = AdaptiveWindow::new(cfg);
+        assert_eq!(w.current(), cfg.min_wait, "starts at the latency floor");
+        // Sustained pressure: doubles every window, clamps at the ceiling.
+        let mut last = w.current();
+        for _ in 0..10 {
+            let next = w.observe(64);
+            assert!(next >= last);
+            assert!(next <= cfg.max_wait);
+            last = next;
+        }
+        assert_eq!(w.current(), cfg.max_wait);
+        // Mid-band depth holds the window steady.
+        assert_eq!(w.observe(8), cfg.max_wait);
+        // Drained queue: halves back down, clamps at the floor.
+        for _ in 0..10 {
+            w.observe(0);
+        }
+        assert_eq!(w.current(), cfg.min_wait);
     }
 
     #[test]

@@ -71,8 +71,13 @@ pub struct Metrics {
     /// instant and equality at quiescence.
     pub responses: AtomicU64,
     /// Requests shed by the batcher because their deadline expired while
-    /// they waited in the admission queue (admission control).
+    /// they waited in the admission queue (admission control), plus
+    /// near-deadline bulk requests shed preemptively under congestion.
     pub shed: AtomicU64,
+    /// The bulk-lane subset of `shed` — the weighted shed path's victims.
+    /// Kept out of the wire health frame (its 11-field stats block is
+    /// pinned); capacity reports read it straight from the snapshot.
+    pub shed_bulk: AtomicU64,
     /// Requests fast-rejected at `try_submit` because the admission queue
     /// was full.
     pub rejected: AtomicU64,
@@ -109,6 +114,7 @@ pub struct MetricsSnapshot {
     pub simulated_cycles: u64,
     pub responses: u64,
     pub shed: u64,
+    pub shed_bulk: u64,
     pub rejected: u64,
     pub closed: u64,
     pub deadline_missed: u64,
@@ -171,6 +177,7 @@ impl Metrics {
             simulated_cycles: self.simulated_cycles.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            shed_bulk: self.shed_bulk.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             closed: self.closed.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
@@ -200,7 +207,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} responses={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
-             admission:  shed={} rejected={} deadline_missed={} closed={}\n\
+             admission:  shed={} (bulk={}) rejected={} deadline_missed={} closed={}\n\
              supervision: crashes={} restarts={} redispatched={} recovery_max={}us\n\
              queue_wait: mean={:.1}us p99<={}us\n\
              execute:    mean={:.1}us p50<={}us p99<={}us\n\
@@ -212,6 +219,7 @@ impl MetricsSnapshot {
             self.mean_batch_points(),
             self.backend_errors,
             self.shed,
+            self.shed_bulk,
             self.rejected,
             self.deadline_missed,
             self.closed,
@@ -406,11 +414,12 @@ mod tests {
     fn admission_counters_flow_to_snapshot_and_render() {
         let m = Metrics::default();
         m.shed.fetch_add(3, Ordering::Relaxed);
+        m.shed_bulk.fetch_add(2, Ordering::Relaxed);
         m.rejected.fetch_add(2, Ordering::Relaxed);
         m.deadline_missed.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
-        assert_eq!((s.shed, s.rejected, s.deadline_missed), (3, 2, 1));
-        assert!(s.render().contains("shed=3 rejected=2 deadline_missed=1"));
+        assert_eq!((s.shed, s.shed_bulk, s.rejected, s.deadline_missed), (3, 2, 2, 1));
+        assert!(s.render().contains("shed=3 (bulk=2) rejected=2 deadline_missed=1"));
     }
 
     #[test]

@@ -21,15 +21,23 @@
 //!                                 shutdown ⇒ stop accepting, drain admitted,
 //!                                 then close — exactly-one-reply holds)
 //!                              │
-//!  clients ──submit()───────► bounded queue (backpressure: full ⇒ block)
-//!          ──try_submit()──►   │    admission control: full ⇒ instant
-//!          ◄─QueueFull reject──┘    rejection, no queue growth
+//!  clients ──submit()───────► bounded two-lane queue (interactive rides
+//!          ──try_submit()──►   │  the express lane, bulk the standard
+//!          ◄─QueueFull reject──┘  lane, one shared capacity; full ⇒
+//!                              │  block / instant rejection)
 //!                              │
 //!                        batcher thread: shed requests whose deadline
 //!                        (TTL) expired while queued ──► Rejection to the
-//!                        client; group the rest by transform, pack into
-//!                        tiles (64 points — the M1's natural unit — up to
-//!                        4096 for bulk), deadline-bounded window
+//!                        client (lane-weighted: congested windows shed
+//!                        near-deadline BULK first — interactive is never
+//!                        preempted while bulk remains); group the rest by
+//!                        transform, pack into tiles (64 points — the M1's
+//!                        natural unit — up to 4096 for bulk); the batch
+//!                        window is deadline-bounded, either static
+//!                        (`max_wait`) or sized per-window by the
+//!                        `AdaptiveWindow` controller from the queue-depth
+//!                        gauge (deep ⇒ widen for throughput, drained ⇒
+//!                        shrink for latency)
 //!                              │
 //!                        worker threads: each owns ONE backend instance
 //!                        (PJRT executors are thread-pinned) and executes
@@ -73,12 +81,14 @@ pub mod server;
 pub mod wire;
 
 pub use backend::{Backend, BackendKind, M1SimBackend, NativeBackend, XlaBackend};
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{AdaptiveWindow, AdaptiveWindowConfig, Batcher, BatcherConfig};
 pub use faults::{BackendKillPlan, FaultPlan, KillEvent};
 pub use metrics::{BackendSnapshot, ClusterSnapshot, Metrics, MetricsSnapshot};
 pub use pool::{PoolHealth, RoutineSpec, TileOutcome, TilePool, TileRequest};
-pub use queue::{BoundedQueue, PopResult, PushError};
-pub use request::{RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse};
+pub use queue::{BoundedQueue, Lane, PopResult, PushError};
+pub use request::{
+    Priority, RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse,
+};
 pub use router::{BreakerState, Router, RouterConfig};
 pub use server::{BackendChoice, Coordinator, CoordinatorConfig, WireServer};
 pub use wire::{Frame, HealthStats, WireError, MAX_FRAME, WIRE_VERSION};

@@ -1,5 +1,10 @@
-//! A bounded MPMC queue with blocking push (backpressure) and
-//! deadline-aware pop — the admission point of the coordinator.
+//! A bounded MPMC queue with blocking push (backpressure), deadline-aware
+//! pop, and two service lanes — the admission point of the coordinator.
+//!
+//! The queue carries an **express** lane and a **standard** lane under one
+//! shared capacity: pops drain express first (FIFO within each lane), so
+//! latency-sensitive work never waits behind a backlog of bulk work, while
+//! the single capacity bound keeps backpressure semantics unchanged.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -10,6 +15,14 @@ use std::time::Instant;
 pub enum PushError {
     Full,
     Closed,
+}
+
+/// Which service lane a push lands in. Express drains strictly before
+/// standard; both lanes share one capacity bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    Express,
+    Standard,
 }
 
 /// Outcome of a deadline-bounded pop. A dedicated enum rather than
@@ -34,30 +47,58 @@ pub struct BoundedQueue<T> {
 }
 
 struct Inner<T> {
-    items: VecDeque<T>,
+    express: VecDeque<T>,
+    standard: VecDeque<T>,
     closed: bool,
+}
+
+impl<T> Inner<T> {
+    fn len(&self) -> usize {
+        self.express.len() + self.standard.len()
+    }
+
+    fn pop_next(&mut self) -> Option<T> {
+        self.express.pop_front().or_else(|| self.standard.pop_front())
+    }
+
+    fn lane_mut(&mut self, lane: Lane) -> &mut VecDeque<T> {
+        match lane {
+            Lane::Express => &mut self.express,
+            Lane::Standard => &mut self.standard,
+        }
+    }
 }
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> BoundedQueue<T> {
         assert!(capacity > 0);
         BoundedQueue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                express: VecDeque::new(),
+                standard: VecDeque::new(),
+                closed: false,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
         }
     }
 
-    /// Blocking push; waits while full (backpressure). Errors if closed.
+    /// Blocking push into the standard lane; waits while full
+    /// (backpressure). Errors if closed.
     pub fn push(&self, item: T) -> Result<(), PushError> {
+        self.push_lane(item, Lane::Standard)
+    }
+
+    /// Blocking push into an explicit lane.
+    pub fn push_lane(&self, item: T, lane: Lane) -> Result<(), PushError> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
                 return Err(PushError::Closed);
             }
-            if g.items.len() < self.capacity {
-                g.items.push_back(item);
+            if g.len() < self.capacity {
+                g.lane_mut(lane).push_back(item);
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -65,25 +106,31 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Non-blocking push.
+    /// Non-blocking push into the standard lane.
     pub fn try_push(&self, item: T) -> Result<(), (T, PushError)> {
+        self.try_push_lane(item, Lane::Standard)
+    }
+
+    /// Non-blocking push into an explicit lane.
+    pub fn try_push_lane(&self, item: T, lane: Lane) -> Result<(), (T, PushError)> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err((item, PushError::Closed));
         }
-        if g.items.len() >= self.capacity {
+        if g.len() >= self.capacity {
             return Err((item, PushError::Full));
         }
-        g.items.push_back(item);
+        g.lane_mut(lane).push_back(item);
         self.not_empty.notify_one();
         Ok(())
     }
 
-    /// Blocking pop; `None` once closed and drained.
+    /// Blocking pop; `None` once closed and drained. Express lane drains
+    /// first.
     pub fn pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(item) = g.items.pop_front() {
+            if let Some(item) = g.pop_next() {
                 self.not_full.notify_one();
                 return Some(item);
             }
@@ -95,10 +142,11 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Pop with a deadline; see [`PopResult`] for the three outcomes.
+    /// Express lane drains first.
     pub fn pop_until(&self, deadline: Instant) -> PopResult<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(item) = g.items.pop_front() {
+            if let Some(item) = g.pop_next() {
                 self.not_full.notify_one();
                 return PopResult::Item(item);
             }
@@ -111,7 +159,7 @@ impl<T> BoundedQueue<T> {
             }
             let (guard, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
             g = guard;
-            if timeout.timed_out() && g.items.is_empty() {
+            if timeout.timed_out() && g.len() == 0 {
                 if g.closed {
                     return PopResult::Closed;
                 }
@@ -129,7 +177,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.inner.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -153,6 +201,45 @@ mod tests {
         for i in 0..5 {
             assert_eq!(q.pop(), Some(i));
         }
+    }
+
+    #[test]
+    fn express_lane_drains_before_standard() {
+        let q = BoundedQueue::new(8);
+        q.push_lane(1, Lane::Standard).unwrap();
+        q.push_lane(2, Lane::Standard).unwrap();
+        q.push_lane(10, Lane::Express).unwrap();
+        q.push_lane(11, Lane::Express).unwrap();
+        // Express first (FIFO within the lane), then standard (FIFO).
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn lanes_share_one_capacity_bound() {
+        let q = BoundedQueue::new(2);
+        q.try_push_lane(1, Lane::Standard).unwrap();
+        q.try_push_lane(2, Lane::Express).unwrap();
+        match q.try_push_lane(3, Lane::Express) {
+            Err((3, PushError::Full)) => {}
+            other => panic!("shared capacity must bound both lanes, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // Draining the express item frees capacity for either lane.
+        assert_eq!(q.pop(), Some(2));
+        q.try_push_lane(3, Lane::Standard).unwrap();
+    }
+
+    #[test]
+    fn pop_until_prefers_express() {
+        let q = BoundedQueue::new(4);
+        q.push_lane(1, Lane::Standard).unwrap();
+        q.push_lane(9, Lane::Express).unwrap();
+        let d = Instant::now() + Duration::from_secs(1);
+        assert_eq!(q.pop_until(d), PopResult::Item(9));
+        assert_eq!(q.pop_until(d), PopResult::Item(1));
     }
 
     #[test]

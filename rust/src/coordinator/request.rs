@@ -6,6 +6,21 @@ use crate::graphics::{Transform, TransformPipeline};
 
 use super::backend::BackendKind;
 
+/// Serving lane of a request. Interactive traffic rides the express lane
+/// end to end — admission queue, batch planning order, job dispatch —
+/// and is the last to be shed; bulk traffic yields at every one of those
+/// points, so a burst of bulk work cannot push interactive requests past
+/// their TTLs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default): planned first, shed last.
+    Interactive,
+    /// Throughput traffic: yields the admission queue and the batch
+    /// window to interactive requests, and is the first lane shed under
+    /// congestion.
+    Bulk,
+}
+
 /// A client request: apply a transform sequence to a point set.
 #[derive(Debug, Clone)]
 pub struct TransformRequest {
@@ -20,17 +35,25 @@ pub struct TransformRequest {
     /// results). `None` falls back to the coordinator's configured
     /// default, if any.
     pub ttl: Option<Duration>,
+    /// Serving lane; [`Priority::Interactive`] unless tagged otherwise.
+    pub priority: Priority,
 }
 
 impl TransformRequest {
     pub fn new(id: u64, xs: Vec<f32>, ys: Vec<f32>, transforms: Vec<Transform>) -> Self {
         assert_eq!(xs.len(), ys.len(), "xs/ys must be parallel");
-        TransformRequest { id, xs, ys, transforms, ttl: None }
+        TransformRequest { id, xs, ys, transforms, ttl: None, priority: Priority::Interactive }
     }
 
     /// Attach a per-request deadline budget (see [`TransformRequest::ttl`]).
     pub fn with_ttl(mut self, ttl: Duration) -> Self {
         self.ttl = Some(ttl);
+        self
+    }
+
+    /// Tag the request's serving lane (see [`Priority`]).
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
         self
     }
 
@@ -162,5 +185,17 @@ mod tests {
         assert_eq!(r.ttl, None);
         let r = r.with_ttl(Duration::from_millis(5));
         assert_eq!(r.ttl, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn priority_defaults_to_interactive_and_builds() {
+        let r = TransformRequest::new(1, vec![0.0], vec![0.0], vec![]);
+        assert_eq!(r.priority, Priority::Interactive);
+        let r = r.with_priority(Priority::Bulk);
+        assert_eq!(r.priority, Priority::Bulk);
+        // Priority does not change the batching key: a bulk request with
+        // the same transform can still share an interactive request's tile.
+        let a = TransformRequest::new(2, vec![0.0], vec![0.0], vec![]);
+        assert_eq!(r.batch_key(), a.batch_key());
     }
 }

@@ -15,12 +15,13 @@ use anyhow::Result;
 use crate::graphics::Transform;
 
 use super::backend::{apply_native, Backend, M1SimBackend, NativeBackend, XlaBackend};
-use super::batcher::{Batcher, BatcherConfig, TileJob};
+use super::batcher::{AdaptiveWindow, Batcher, BatcherConfig, TileJob};
 use super::faults::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::queue::{BoundedQueue, PopResult, PushError};
+use super::queue::{BoundedQueue, Lane, PopResult, PushError};
 use super::request::{
-    PendingRequest, RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse,
+    PendingRequest, Priority, RejectReason, Rejection, ServeResult, TransformRequest,
+    TransformResponse,
 };
 use super::wire::{self, Frame};
 
@@ -172,8 +173,20 @@ impl Coordinator {
         ys: Vec<f32>,
         transforms: Vec<Transform>,
     ) -> Result<mpsc::Receiver<ServeResult>> {
+        self.submit_with_priority(xs, ys, transforms, Priority::Interactive)
+    }
+
+    /// [`Coordinator::submit`] with an explicit lane: interactive rides
+    /// the express admission lane, bulk the standard one.
+    pub fn submit_with_priority(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+        priority: Priority,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_request(TransformRequest::new(id, xs, ys, transforms))
+        self.submit_request(TransformRequest::new(id, xs, ys, transforms).with_priority(priority))
     }
 
     /// Submit a pre-built request.
@@ -197,7 +210,8 @@ impl Coordinator {
     ) -> std::result::Result<(), Rejection> {
         let id = req.id;
         let points = req.points();
-        match self.submit_q.push(self.pending(req, reply)) {
+        let lane = lane_for(req.priority);
+        match self.submit_q.push_lane(self.pending(req, reply), lane) {
             Ok(()) => {
                 self.metrics.record_request(points);
                 Ok(())
@@ -221,8 +235,19 @@ impl Coordinator {
         ys: Vec<f32>,
         transforms: Vec<Transform>,
     ) -> std::result::Result<mpsc::Receiver<ServeResult>, Rejection> {
+        self.try_submit_with_priority(xs, ys, transforms, Priority::Interactive)
+    }
+
+    /// [`Coordinator::try_submit`] with an explicit lane.
+    pub fn try_submit_with_priority(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+        priority: Priority,
+    ) -> std::result::Result<mpsc::Receiver<ServeResult>, Rejection> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.try_submit_request(TransformRequest::new(id, xs, ys, transforms))
+        self.try_submit_request(TransformRequest::new(id, xs, ys, transforms).with_priority(priority))
     }
 
     /// Non-blocking submit of a pre-built request (see
@@ -246,7 +271,8 @@ impl Coordinator {
     ) -> std::result::Result<(), Rejection> {
         let id = req.id;
         let points = req.points();
-        match self.submit_q.try_push(self.pending(req, reply)) {
+        let lane = lane_for(req.priority);
+        match self.submit_q.try_push_lane(self.pending(req, reply), lane) {
             Ok(()) => {
                 self.metrics.record_request(points);
                 Ok(())
@@ -614,10 +640,21 @@ fn reader_loop(
     }
 }
 
+/// Map a request's serving lane onto the queue lanes (interactive =
+/// express, end to end: admission queue here, job queue in the pump).
+fn lane_for(priority: Priority) -> Lane {
+    match priority {
+        Priority::Interactive => Lane::Express,
+        Priority::Bulk => Lane::Standard,
+    }
+}
+
 /// Batch-window loop: wait for a first request, give it `max_wait` to
 /// attract company (or until `flush_points` accumulate), then plan jobs.
-/// `stall` is the injected per-window upstream delay of a chaos run
-/// (`None` on every production path).
+/// With `BatcherConfig::adaptive` set, the window is re-sized every
+/// iteration by an [`AdaptiveWindow`] controller fed the queue-depth
+/// gauge observed at window start. `stall` is the injected per-window
+/// upstream delay of a chaos run (`None` on every production path).
 fn pump_loop(
     submit_q: &BoundedQueue<PendingRequest>,
     job_q: &BoundedQueue<TileJob>,
@@ -625,13 +662,19 @@ fn pump_loop(
     batcher: &Batcher,
     stall: Option<Duration>,
 ) {
+    let mut adaptive = batcher.config.adaptive.map(AdaptiveWindow::new);
     while let Some(first) = submit_q.pop() {
         if let Some(d) = stall {
             std::thread::sleep(d); // injected stalled-upstream-queue fault
         }
+        let max_wait = match adaptive.as_mut() {
+            // +1: the popped first request is part of the observed load.
+            Some(ctl) => ctl.observe(submit_q.len() + 1),
+            None => batcher.config.max_wait,
+        };
         let mut window = vec![first];
         let mut points = window[0].req.points();
-        let deadline = Instant::now() + batcher.config.max_wait;
+        let deadline = Instant::now() + max_wait;
         while points < batcher.config.flush_points {
             match submit_q.pop_until(deadline) {
                 PopResult::Item(p) => {
@@ -648,7 +691,8 @@ fn pump_loop(
             metrics.queue_wait.record(now.saturating_duration_since(p.submitted));
         }
         for job in batcher.plan(window, now, metrics) {
-            if job_q.push(job).is_err() {
+            let lane = if job.express { Lane::Express } else { Lane::Standard };
+            if job_q.push_lane(job, lane).is_err() {
                 return; // shutting down
             }
         }

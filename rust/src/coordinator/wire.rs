@@ -10,7 +10,8 @@
 //! payload := version u8 (=1) | kind u8 | body
 //!
 //! kind 1 — Request (client → server):
-//!   id u64 | flags u8 (bit0: fast-reject admission; other bits must be 0) |
+//!   id u64 | flags u8 (bit0: fast-reject admission; bit1: bulk priority
+//!   lane; other bits must be 0) |
 //!   ttl: tag u8 (0 none / 1 some) [+ nanos u64] |
 //!   transforms: count u32, each tag u8 + f32-bit params
 //!     (1 Translate: tx ty · 2 Scale: sx sy · 3 Rotate: theta ·
@@ -54,7 +55,8 @@ use crate::graphics::Transform;
 
 use super::backend::BackendKind;
 use super::request::{
-    RejectReason, Rejection, RequestTiming, ServeResult, TransformRequest, TransformResponse,
+    Priority, RejectReason, Rejection, RequestTiming, ServeResult, TransformRequest,
+    TransformResponse,
 };
 
 /// Wire protocol version carried in every frame.
@@ -267,7 +269,11 @@ fn header(kind: u8) -> Vec<u8> {
 pub fn encode_request(req: &TransformRequest, fast_reject: bool) -> Vec<u8> {
     let mut p = header(KIND_REQUEST);
     p.extend_from_slice(&req.id.to_le_bytes());
-    p.push(fast_reject as u8);
+    let mut flags = fast_reject as u8;
+    if req.priority == Priority::Bulk {
+        flags |= 2;
+    }
+    p.push(flags);
     match req.ttl {
         None => p.push(0),
         Some(ttl) => {
@@ -443,7 +449,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, WireError> {
         KIND_REQUEST => {
             let id = c.u64("id")?;
             let flags = c.u8("flags")?;
-            if flags & !1 != 0 {
+            if flags & !3 != 0 {
                 return Err(WireError::BadTag { what: "request flags", found: flags });
             }
             let ttl = match c.u8("ttl tag")? {
@@ -457,8 +463,10 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame, WireError> {
                 transforms.push(read_transform(&mut c)?);
             }
             let (xs, ys) = read_points(&mut c)?;
+            let priority =
+                if flags & 2 != 0 { Priority::Bulk } else { Priority::Interactive };
             Frame::Request {
-                req: TransformRequest { id, xs, ys, transforms, ttl },
+                req: TransformRequest { id, xs, ys, transforms, ttl, priority },
                 fast_reject: flags & 1 != 0,
             }
         }
@@ -599,6 +607,7 @@ mod tests {
                 Transform::RotateAbout { theta: 0.5, cx: 3.0, cy: 4.0 },
             ],
             ttl: Some(Duration::from_micros(1500)),
+            priority: Priority::Interactive,
         }
     }
 
@@ -612,6 +621,7 @@ mod tests {
                 assert!(fast_reject);
                 assert_eq!(back.id, req.id);
                 assert_eq!(back.ttl, req.ttl);
+                assert_eq!(back.priority, req.priority);
                 assert_eq!(back.transforms, req.transforms);
                 let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
                 assert_eq!(bits(&back.xs), bits(&req.xs));
@@ -622,6 +632,28 @@ mod tests {
         // Canonical: re-encoding reproduces the wire bytes exactly.
         let payload2 = read_frame(&mut &bytes[..]).unwrap().unwrap();
         assert_eq!(encode_frame(&decode_frame(&payload2).unwrap()), bytes);
+    }
+
+    #[test]
+    fn bulk_priority_rides_flags_bit1_and_roundtrips() {
+        let req = sample_request().with_priority(Priority::Bulk);
+        let bytes = encode_request(&req, false);
+        // Payload layout: len u32 | version | kind | id u64 | flags — the
+        // flags byte sits at offset 4 + 2 + 8.
+        assert_eq!(bytes[14], 2, "bulk priority is flags bit 1");
+        let payload = read_frame(&mut &bytes[..]).unwrap().unwrap();
+        match decode_frame(&payload).unwrap() {
+            Frame::Request { req: back, fast_reject } => {
+                assert!(!fast_reject);
+                assert_eq!(back.priority, Priority::Bulk);
+            }
+            other => panic!("expected request frame, got {other:?}"),
+        }
+        // Both bits together stay canonical.
+        let both = encode_request(&req, true);
+        assert_eq!(both[14], 3);
+        let payload = read_frame(&mut &both[..]).unwrap().unwrap();
+        assert_eq!(encode_frame(&decode_frame(&payload).unwrap()), both);
     }
 
     #[test]
@@ -702,12 +734,13 @@ mod tests {
         assert!(matches!(decode_frame(&p), Err(WireError::BadTag { .. })));
         // Undefined request-flag bits are rejected, not ignored — ignoring
         // them would let a flipped bit alias the canonical encoding.
+        // (Bits 0 and 1 are defined: fast-reject and bulk priority.)
         let mut q = vec![WIRE_VERSION, KIND_REQUEST];
         q.extend_from_slice(&5u64.to_le_bytes());
-        q.push(2); // flags: undefined bit 1
+        q.push(4); // flags: undefined bit 2
         assert!(matches!(
             decode_frame(&q),
-            Err(WireError::BadTag { what: "request flags", found: 2 })
+            Err(WireError::BadTag { what: "request flags", found: 4 })
         ));
     }
 

@@ -51,16 +51,23 @@
 //! stream observes, which is what batching/conformance comparisons need.
 //!
 //! Run scenarios with `repro loadtest <name>` (see `repro loadtest list`),
-//! the `loadgen` bench target, or [`run_scenario`] directly.
+//! the `loadgen` bench target, or [`run_scenario`] directly. The
+//! [`saturation`] module sweeps the `ramp` scenario across a
+//! workers × shards × batch-window grid (`repro sweep`) and writes the
+//! measured surface to `BENCH_saturation.json`.
 
 pub mod report;
 pub mod runner;
+pub mod saturation;
 pub mod scenario;
 pub mod transport;
 pub mod workload;
 
 pub use report::CapacityReport;
 pub use runner::run_scenario;
-pub use scenario::{ArrivalProfile, RouterScenario, Scenario, TransformKind, WorkloadMix};
+pub use saturation::{run_sweep, SaturationCell, SweepConfig};
+pub use scenario::{
+    ArrivalProfile, BatchWindow, RouterScenario, Scenario, TransformKind, WorkloadMix,
+};
 pub use transport::{ReconnectPolicy, TransportKind, WireClient};
 pub use workload::RequestFactory;

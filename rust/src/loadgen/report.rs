@@ -18,6 +18,9 @@ pub struct CapacityReport {
     /// §Scale's acceptance bar compares the two rows.
     pub transport: &'static str,
     pub backend: &'static str,
+    /// Batch-window policy the run used: `default`, `fixed(<N>us)`, or
+    /// `adaptive` — the A/B gate keys on this column.
+    pub batch_window: String,
     pub workers: usize,
     pub shards: usize,
     pub seed: u64,
@@ -56,6 +59,18 @@ pub struct CapacityReport {
     pub latency_p50_us: u64,
     pub latency_p95_us: u64,
     pub latency_p99_us: u64,
+    /// Interactive-lane completions (client-observed; equals `completed`
+    /// for single-lane scenarios).
+    pub interactive_completed: u64,
+    /// Interactive requests rejected `DeadlineExceeded` — the two-lane
+    /// gate asserts 0 while bulk is being shed.
+    pub interactive_deadline_missed: u64,
+    /// p99 latency over interactive-lane completions only.
+    pub interactive_p99_us: u64,
+    /// Bulk-lane completions.
+    pub bulk_completed: u64,
+    /// Bulk requests rejected `DeadlineExceeded` (lane-weighted shed).
+    pub bulk_shed: u64,
     pub queue_depth_mean: f64,
     pub queue_depth_max: u64,
     /// Mean points per backend job — batching efficiency.
@@ -123,7 +138,7 @@ impl CapacityReport {
             .collect();
         format!(
             "{{\"scenario\": \"{}\", \"profile\": \"{}\", \"transport\": \"{}\", \
-             \"backend\": \"{}\", \
+             \"backend\": \"{}\", \"batch_window\": \"{}\", \
              \"workers\": {}, \"shards\": {}, \"seed\": {}, \"duration_s\": {}, \
              \"submitted\": {}, \"completed\": {}, \"shed\": {}, \"rejected\": {}, \
              \"deadline_missed\": {}, \"closed\": {}, \"failed\": {}, \
@@ -131,7 +146,10 @@ impl CapacityReport {
              \"tiles_redispatched\": {}, \"recovery_max_us\": {}, \
              \"throughput_rps\": {}, \
              \"points_per_s\": {}, \"latency_mean_us\": {}, \"latency_p50_us\": {}, \
-             \"latency_p95_us\": {}, \"latency_p99_us\": {}, \"queue_depth_mean\": {}, \
+             \"latency_p95_us\": {}, \"latency_p99_us\": {}, \
+             \"interactive_completed\": {}, \"interactive_deadline_missed\": {}, \
+             \"interactive_p99_us\": {}, \"bulk_completed\": {}, \"bulk_shed\": {}, \
+             \"queue_depth_mean\": {}, \
              \"queue_depth_max\": {}, \"mean_batch_points\": {}, \
              \"sim_cycles_per_point\": {}, \"router_backends\": {}, \
              \"backend_deaths\": {}, \"backend_rejoins\": {}, \
@@ -141,6 +159,7 @@ impl CapacityReport {
             self.profile.replace('"', "'"),
             self.transport,
             self.backend,
+            self.batch_window.replace('"', "'"),
             self.workers,
             self.shards,
             self.seed,
@@ -163,6 +182,11 @@ impl CapacityReport {
             self.latency_p50_us,
             self.latency_p95_us,
             self.latency_p99_us,
+            self.interactive_completed,
+            self.interactive_deadline_missed,
+            self.interactive_p99_us,
+            self.bulk_completed,
+            self.bulk_shed,
             json_f64(self.queue_depth_mean),
             self.queue_depth_max,
             json_f64(self.mean_batch_points),
@@ -179,7 +203,7 @@ impl CapacityReport {
     /// Human-readable summary block.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "scenario {} [{}] via {} on {} (workers={} shards={} seed={}) over {:.2}s\n\
+            "scenario {} [{}] via {} on {} (workers={} shards={} seed={} window={}) over {:.2}s\n\
              offered={} completed={} shed={} rejected={} deadline_missed={} closed={} failed={}\n\
              throughput: {:.1} req/s, {:.2} M points/s   mean batch {:.1} pts\n\
              latency: mean={:.0}us p50={}us p95={}us p99={}us\n\
@@ -191,6 +215,7 @@ impl CapacityReport {
             self.workers,
             self.shards,
             self.seed,
+            self.batch_window,
             self.duration_s,
             self.submitted,
             self.completed,
@@ -210,6 +235,17 @@ impl CapacityReport {
             self.queue_depth_max,
             self.sim_cycles_per_point,
         );
+        if self.bulk_completed > 0 || self.bulk_shed > 0 {
+            out.push_str(&format!(
+                "\nlanes: interactive completed={} deadline_missed={} p99={}us | \
+                 bulk completed={} shed={}",
+                self.interactive_completed,
+                self.interactive_deadline_missed,
+                self.interactive_p99_us,
+                self.bulk_completed,
+                self.bulk_shed,
+            ));
+        }
         if let Some(seed) = self.fault_seed {
             out.push_str(&format!(
                 "\nfault injection (seed {seed}): crashes={} restarts={} \
@@ -270,6 +306,7 @@ mod tests {
             profile: "closed-loop(4)".into(),
             transport: "in-process",
             backend: "m1sim",
+            batch_window: "default".into(),
             workers: 1,
             shards: 2,
             seed: 42,
@@ -292,6 +329,11 @@ mod tests {
             latency_p50_us: 800,
             latency_p95_us: 1500,
             latency_p99_us: 2000,
+            interactive_completed: 100,
+            interactive_deadline_missed: 0,
+            interactive_p99_us: 2000,
+            bulk_completed: 0,
+            bulk_shed: 0,
             queue_depth_mean: 1.5,
             queue_depth_max: 4,
             mean_batch_points: 128.0,
@@ -346,12 +388,14 @@ mod tests {
         assert_eq!(j.matches('}').count(), 1);
         // Every key present exactly once.
         for key in [
-            "scenario", "profile", "transport", "backend", "workers", "shards", "seed",
-            "duration_s",
+            "scenario", "profile", "transport", "backend", "batch_window", "workers",
+            "shards", "seed", "duration_s",
             "submitted", "completed", "shed", "rejected", "deadline_missed", "closed",
             "failed", "fault_seed", "shard_crashes", "shard_restarts", "tiles_redispatched",
             "recovery_max_us", "throughput_rps", "points_per_s", "latency_mean_us",
-            "latency_p50_us", "latency_p95_us", "latency_p99_us", "queue_depth_mean",
+            "latency_p50_us", "latency_p95_us", "latency_p99_us",
+            "interactive_completed", "interactive_deadline_missed", "interactive_p99_us",
+            "bulk_completed", "bulk_shed", "queue_depth_mean",
             "queue_depth_max", "mean_batch_points", "sim_cycles_per_point",
             "router_backends", "backend_deaths", "backend_rejoins",
             "redispatched_requests", "unavailable_rejected", "backends",
@@ -402,6 +446,27 @@ mod tests {
         assert!(text.contains("backend[1] 127.0.0.1:9001"));
         // Non-router reports keep the human block free of router noise.
         assert!(!sample().render().contains("router over"));
+    }
+
+    #[test]
+    fn two_lane_report_carries_the_lane_breakdown() {
+        let mut r = sample();
+        r.scenario = "lanes".into();
+        r.batch_window = "adaptive".into();
+        r.interactive_completed = 80;
+        r.interactive_p99_us = 1500;
+        r.bulk_completed = 15;
+        r.bulk_shed = 5;
+        let j = r.to_json();
+        assert!(j.contains("\"batch_window\": \"adaptive\""));
+        assert!(j.contains("\"interactive_completed\": 80"));
+        assert!(j.contains("\"bulk_shed\": 5"));
+        let text = r.render();
+        assert!(text.contains("window=adaptive"));
+        assert!(text.contains("lanes: interactive completed=80 deadline_missed=0 p99=1500us"));
+        assert!(text.contains("bulk completed=15 shed=5"));
+        // Single-lane reports keep the human block free of lane noise.
+        assert!(!sample().render().contains("lanes:"));
     }
 
     #[test]

@@ -11,8 +11,8 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    BackendChoice, BackendKillPlan, Coordinator, CoordinatorConfig, FaultPlan, Router,
-    RouterConfig, ServeResult, WireServer,
+    BackendChoice, BackendKillPlan, Coordinator, CoordinatorConfig, FaultPlan, Priority,
+    RejectReason, Router, RouterConfig, ServeResult, WireServer,
 };
 
 use super::report::{percentile_us, CapacityReport};
@@ -29,10 +29,66 @@ struct Tally {
     /// Reply channels that disconnected without a message — a
     /// coordinator bug if ever nonzero (CI asserts 0).
     failed: AtomicU64,
+    /// Per-lane accounting, all observed client-side so the columns mean
+    /// the same thing on every transport.
+    interactive_completed: AtomicU64,
+    /// Interactive requests rejected with `DeadlineExceeded` — the
+    /// two-lane gate asserts this stays 0 while bulk is being shed.
+    interactive_deadline_missed: AtomicU64,
+    bulk_completed: AtomicU64,
+    /// Bulk requests rejected with `DeadlineExceeded` (the lane-weighted
+    /// shed path).
+    bulk_shed: AtomicU64,
+}
+
+impl Tally {
+    /// Route one served-or-rejected outcome into the per-lane counters.
+    fn record_lane_outcome(&self, priority: Priority, outcome: &ServeResult) {
+        match (priority, outcome) {
+            (Priority::Interactive, Ok(_)) => {
+                self.interactive_completed.fetch_add(1, Ordering::Relaxed);
+            }
+            (Priority::Interactive, Err(rej)) => {
+                if rej.reason == RejectReason::DeadlineExceeded {
+                    self.interactive_deadline_missed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            (Priority::Bulk, Ok(_)) => {
+                self.bulk_completed.fetch_add(1, Ordering::Relaxed);
+            }
+            (Priority::Bulk, Err(rej)) => {
+                if rej.reason == RejectReason::DeadlineExceeded {
+                    self.bulk_shed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Client-observed latencies, whole-run and interactive-lane-only (the
+/// two-lane gate reads interactive p99 against the TTL).
+#[derive(Debug, Default)]
+struct LatencyLog {
+    all: Vec<Duration>,
+    interactive: Vec<Duration>,
+}
+
+impl LatencyLog {
+    fn push(&mut self, priority: Priority, latency: Duration) {
+        self.all.push(latency);
+        if priority == Priority::Interactive {
+            self.interactive.push(latency);
+        }
+    }
+
+    fn merge(&mut self, mut other: LatencyLog) {
+        self.all.append(&mut other.all);
+        self.interactive.append(&mut other.interactive);
+    }
 }
 
 /// In-flight open-loop requests awaiting a response.
-type Outstanding = Arc<Mutex<Vec<(Instant, mpsc::Receiver<ServeResult>)>>>;
+type Outstanding = Arc<Mutex<Vec<(Instant, Priority, mpsc::Receiver<ServeResult>)>>>;
 
 fn backend_name(b: BackendChoice) -> &'static str {
     match b {
@@ -98,6 +154,7 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         m1_shards: sc.shards.max(1),
         default_ttl: sc.ttl,
         fault_plan: sc.fault_seed.map(FaultPlan::chaos),
+        batcher: sc.batch_window.batcher_config(),
         ..Default::default()
     })?);
     let (server, ctx) = match sc.transport {
@@ -133,7 +190,7 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
     };
 
     let t0 = Instant::now();
-    let mut latencies = match sc.profile {
+    let mut log = match sc.profile {
         ArrivalProfile::ClosedLoop { clients } => {
             closed_loop(&ctx, &factory, &tally, clients.max(1), t0 + sc.duration)
         }
@@ -156,15 +213,17 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         c.shutdown();
     }
 
-    latencies.sort_unstable();
+    log.all.sort_unstable();
+    log.interactive.sort_unstable();
     let elapsed_s = elapsed.as_secs_f64().max(1e-9);
     let completed = tally.completed.load(Ordering::Relaxed);
-    let sum_us: u128 = latencies.iter().map(|d| d.as_micros()).sum();
+    let sum_us: u128 = log.all.iter().map(|d| d.as_micros()).sum();
     Ok(CapacityReport {
         scenario: sc.name.to_string(),
         profile: sc.profile.label(),
         transport: sc.transport.label(),
         backend: backend_name(sc.backend),
+        batch_window: sc.batch_window.label(),
         workers: sc.workers.max(1),
         shards: sc.shards.max(1),
         seed: sc.seed,
@@ -183,14 +242,19 @@ pub fn run_scenario(sc: &Scenario) -> crate::Result<CapacityReport> {
         recovery_max_us: m.recovery_max_us,
         throughput_rps: completed as f64 / elapsed_s,
         points_per_s: tally.completed_points.load(Ordering::Relaxed) as f64 / elapsed_s,
-        latency_mean_us: if latencies.is_empty() {
+        latency_mean_us: if log.all.is_empty() {
             0.0
         } else {
-            sum_us as f64 / latencies.len() as f64
+            sum_us as f64 / log.all.len() as f64
         },
-        latency_p50_us: percentile_us(&latencies, 0.50),
-        latency_p95_us: percentile_us(&latencies, 0.95),
-        latency_p99_us: percentile_us(&latencies, 0.99),
+        latency_p50_us: percentile_us(&log.all, 0.50),
+        latency_p95_us: percentile_us(&log.all, 0.95),
+        latency_p99_us: percentile_us(&log.all, 0.99),
+        interactive_completed: tally.interactive_completed.load(Ordering::Relaxed),
+        interactive_deadline_missed: tally.interactive_deadline_missed.load(Ordering::Relaxed),
+        interactive_p99_us: percentile_us(&log.interactive, 0.99),
+        bulk_completed: tally.bulk_completed.load(Ordering::Relaxed),
+        bulk_shed: tally.bulk_shed.load(Ordering::Relaxed),
         queue_depth_mean: if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 },
         queue_depth_max: depth_max,
         mean_batch_points: m.mean_batch_points(),
@@ -234,6 +298,7 @@ fn run_router_scenario(sc: &Scenario, rs: RouterScenario) -> crate::Result<Capac
         m1_shards: sc.shards.max(1),
         default_ttl: sc.ttl,
         fault_plan: sc.fault_seed.map(FaultPlan::chaos),
+        batcher: sc.batch_window.batcher_config(),
         ..Default::default()
     };
     let n = rs.backends.max(1);
@@ -312,7 +377,7 @@ fn run_router_scenario(sc: &Scenario, rs: RouterScenario) -> crate::Result<Capac
         })
     });
 
-    let mut latencies = match sc.profile {
+    let mut log = match sc.profile {
         ArrivalProfile::ClosedLoop { clients } => {
             closed_loop(&ctx, &factory, &tally, clients.max(1), t0 + sc.duration)
         }
@@ -343,16 +408,18 @@ fn run_router_scenario(sc: &Scenario, rs: RouterScenario) -> crate::Result<Capac
         }
     }
 
-    latencies.sort_unstable();
+    log.all.sort_unstable();
+    log.interactive.sort_unstable();
     let elapsed_s = elapsed.as_secs_f64().max(1e-9);
     let completed = tally.completed.load(Ordering::Relaxed);
-    let sum_us: u128 = latencies.iter().map(|d| d.as_micros()).sum();
+    let sum_us: u128 = log.all.iter().map(|d| d.as_micros()).sum();
     let h = &cluster.health;
     Ok(CapacityReport {
         scenario: sc.name.to_string(),
         profile: sc.profile.label(),
         transport: sc.transport.label(),
         backend: backend_name(sc.backend),
+        batch_window: sc.batch_window.label(),
         workers: sc.workers.max(1),
         shards: sc.shards.max(1),
         seed: sc.seed,
@@ -371,14 +438,19 @@ fn run_router_scenario(sc: &Scenario, rs: RouterScenario) -> crate::Result<Capac
         recovery_max_us: h.recovery_max_us,
         throughput_rps: completed as f64 / elapsed_s,
         points_per_s: tally.completed_points.load(Ordering::Relaxed) as f64 / elapsed_s,
-        latency_mean_us: if latencies.is_empty() {
+        latency_mean_us: if log.all.is_empty() {
             0.0
         } else {
-            sum_us as f64 / latencies.len() as f64
+            sum_us as f64 / log.all.len() as f64
         },
-        latency_p50_us: percentile_us(&latencies, 0.50),
-        latency_p95_us: percentile_us(&latencies, 0.95),
-        latency_p99_us: percentile_us(&latencies, 0.99),
+        latency_p50_us: percentile_us(&log.all, 0.50),
+        latency_p95_us: percentile_us(&log.all, 0.95),
+        latency_p99_us: percentile_us(&log.all, 0.99),
+        interactive_completed: tally.interactive_completed.load(Ordering::Relaxed),
+        interactive_deadline_missed: tally.interactive_deadline_missed.load(Ordering::Relaxed),
+        interactive_p99_us: percentile_us(&log.interactive, 0.99),
+        bulk_completed: tally.bulk_completed.load(Ordering::Relaxed),
+        bulk_shed: tally.bulk_shed.load(Ordering::Relaxed),
         queue_depth_mean: if depth_n == 0 { 0.0 } else { depth_sum as f64 / depth_n as f64 },
         queue_depth_max: depth_max,
         // Health frames carry admission/queue counters, not batch
@@ -405,7 +477,7 @@ fn closed_loop(
     tally: &Arc<Tally>,
     clients: usize,
     t_end: Instant,
-) -> Vec<Duration> {
+) -> LatencyLog {
     let handles: Vec<_> = (0..clients)
         .map(|client| {
             let conn = ctx.connect();
@@ -417,28 +489,31 @@ fn closed_loop(
                     Err(e) => {
                         eprintln!("loadgen client {client}: connect failed: {e}");
                         tally.failed.fetch_add(1, Ordering::Relaxed);
-                        return Vec::new();
+                        return LatencyLog::default();
                     }
                 };
-                let mut latencies = Vec::new();
+                let mut log = LatencyLog::default();
                 let mut index = 0u64;
                 while Instant::now() < t_end {
                     let gr = factory.request(client as u64, index);
+                    let priority = gr.priority;
                     index += 1;
                     tally.submitted.fetch_add(1, Ordering::Relaxed);
                     let t = Instant::now();
-                    match conn.submit(gr.xs, gr.ys, gr.transforms, false) {
+                    match conn.submit(gr.xs, gr.ys, gr.transforms, false, priority) {
                         Submitted::Handle(rx) => match rx.recv() {
-                            Ok(Ok(resp)) => {
-                                latencies.push(t.elapsed());
-                                tally.completed.fetch_add(1, Ordering::Relaxed);
-                                tally
-                                    .completed_points
-                                    .fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+                            Ok(outcome) => {
+                                tally.record_lane_outcome(priority, &outcome);
+                                if let Ok(resp) = outcome {
+                                    log.push(priority, t.elapsed());
+                                    tally.completed.fetch_add(1, Ordering::Relaxed);
+                                    tally
+                                        .completed_points
+                                        .fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+                                }
+                                // Shed — the coordinator's metrics carry
+                                // the reason; the client just moves on.
                             }
-                            // Shed — the coordinator's metrics carry the
-                            // reason; the client just moves on.
-                            Ok(Err(_)) => {}
                             Err(_) => {
                                 tally.failed.fetch_add(1, Ordering::Relaxed);
                             }
@@ -447,11 +522,15 @@ fn closed_loop(
                         Submitted::Down => break, // coordinator shut down
                     }
                 }
-                latencies
+                log
             })
         })
         .collect();
-    handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    let mut merged = LatencyLog::default();
+    for h in handles {
+        merged.merge(h.join().expect("client thread"));
+    }
+    merged
 }
 
 /// Deterministic-timetable submitter plus a polling collector. Latency is
@@ -465,13 +544,13 @@ fn open_loop(
     tally: &Arc<Tally>,
     sc: &Scenario,
     t0: Instant,
-) -> Vec<Duration> {
+) -> LatencyLog {
     let conn = match ctx.connect() {
         Ok(conn) => conn,
         Err(e) => {
             eprintln!("loadgen open-loop: connect failed: {e}");
             tally.failed.fetch_add(1, Ordering::Relaxed);
-            return Vec::new();
+            return LatencyLog::default();
         }
     };
     let outstanding: Outstanding = Arc::new(Mutex::new(Vec::new()));
@@ -493,6 +572,7 @@ fn open_loop(
             }
         }
         let gr = factory.request(0, index);
+        let priority = gr.priority;
         index += 1;
         tally.submitted.fetch_add(1, Ordering::Relaxed);
         let submitted_at = Instant::now();
@@ -500,9 +580,9 @@ fn open_loop(
         // (metrics.rejected counts it — in-process as a returned
         // rejection, over the wire as a rejection frame on the handle)
         // and the timetable never blocks.
-        match conn.submit(gr.xs, gr.ys, gr.transforms, sc.fast_reject) {
+        match conn.submit(gr.xs, gr.ys, gr.transforms, sc.fast_reject, priority) {
             Submitted::Handle(rx) => {
-                outstanding.lock().unwrap().push((submitted_at, rx));
+                outstanding.lock().unwrap().push((submitted_at, priority, rx));
             }
             Submitted::Rejected | Submitted::Down => {}
         }
@@ -511,9 +591,9 @@ fn open_loop(
     collector.join().expect("collector thread")
 }
 
-fn collect(outstanding: &Outstanding, done: &AtomicBool, tally: &Tally) -> Vec<Duration> {
-    let mut local: Vec<(Instant, mpsc::Receiver<ServeResult>)> = Vec::new();
-    let mut latencies = Vec::new();
+fn collect(outstanding: &Outstanding, done: &AtomicBool, tally: &Tally) -> LatencyLog {
+    let mut local: Vec<(Instant, Priority, mpsc::Receiver<ServeResult>)> = Vec::new();
+    let mut log = LatencyLog::default();
     loop {
         {
             let mut g = outstanding.lock().unwrap();
@@ -521,16 +601,17 @@ fn collect(outstanding: &Outstanding, done: &AtomicBool, tally: &Tally) -> Vec<D
         }
         let mut i = 0;
         while i < local.len() {
-            let submitted_at = local[i].0;
-            match local[i].1.try_recv() {
-                Ok(Ok(resp)) => {
-                    latencies.push(submitted_at.elapsed());
-                    tally.completed.fetch_add(1, Ordering::Relaxed);
-                    tally.completed_points.fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+            let (submitted_at, priority) = (local[i].0, local[i].1);
+            match local[i].2.try_recv() {
+                Ok(outcome) => {
+                    tally.record_lane_outcome(priority, &outcome);
+                    if let Ok(resp) = outcome {
+                        log.push(priority, submitted_at.elapsed());
+                        tally.completed.fetch_add(1, Ordering::Relaxed);
+                        tally.completed_points.fetch_add(resp.xs.len() as u64, Ordering::Relaxed);
+                    }
+                    // Shed outcomes: server metrics count the reason.
                     local.swap_remove(i);
-                }
-                Ok(Err(_)) => {
-                    local.swap_remove(i); // shed; server metrics count it
                 }
                 Err(mpsc::TryRecvError::Empty) => i += 1,
                 Err(mpsc::TryRecvError::Disconnected) => {
@@ -547,13 +628,13 @@ fn collect(outstanding: &Outstanding, done: &AtomicBool, tally: &Tally) -> Vec<D
         }
         thread::sleep(Duration::from_micros(100));
     }
-    latencies
+    log
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::loadgen::scenario::WorkloadMix;
+    use crate::loadgen::scenario::{BatchWindow, WorkloadMix};
 
     #[test]
     fn open_loop_arrivals_are_deterministic_and_monotonic() {
@@ -606,6 +687,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: None,
+            batch_window: BatchWindow::Default,
             transport: TransportKind::InProcess,
             router: None,
         };
@@ -636,6 +718,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: None,
+            batch_window: BatchWindow::Default,
             transport: TransportKind::Tcp,
             router: None,
         };
@@ -662,6 +745,7 @@ mod tests {
             ttl: Some(Duration::from_millis(100)),
             fast_reject: true,
             fault_seed: None,
+            batch_window: BatchWindow::Default,
             transport: TransportKind::InProcess,
             router: None,
         };
@@ -697,6 +781,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: Some(7),
+            batch_window: BatchWindow::Default,
             transport: TransportKind::InProcess,
             router: None,
         };
@@ -727,6 +812,7 @@ mod tests {
             ttl: None,
             fast_reject: false,
             fault_seed: None,
+            batch_window: BatchWindow::Default,
             transport: TransportKind::Tcp,
             router: Some(RouterScenario { backends: 2, kill_seed: None }),
         };

@@ -3,7 +3,7 @@
 
 use std::time::Duration;
 
-use crate::coordinator::BackendChoice;
+use crate::coordinator::{AdaptiveWindowConfig, BackendChoice, BatcherConfig};
 
 use super::transport::TransportKind;
 
@@ -56,7 +56,8 @@ pub enum TransformKind {
     Composite,
 }
 
-/// Weighted workload mix: request point counts and transform kinds.
+/// Weighted workload mix: request point counts and transform kinds, plus
+/// the (optional) bulk lane blended into the stream.
 #[derive(Debug, Clone)]
 pub struct WorkloadMix {
     /// `(weight, points)` — the paper's tile-interesting sizes are
@@ -64,6 +65,16 @@ pub struct WorkloadMix {
     pub sizes: Vec<(u32, usize)>,
     /// `(weight, kind)`.
     pub transforms: Vec<(u32, TransformKind)>,
+    /// Fraction of requests tagged [`crate::coordinator::Priority::Bulk`]
+    /// (drawn per request from the seeded stream). `0.0` — the
+    /// single-lane mixes — generates *exactly* the pre-lane request
+    /// streams: no extra random draw is burned, so existing scenarios
+    /// stay bit-identical.
+    pub bulk_share: f32,
+    /// `(weight, points)` for bulk-lane requests (ignored when
+    /// `bulk_share == 0.0`). Bulk traffic is the big-batch tail of the
+    /// size ladder.
+    pub bulk_sizes: Vec<(u32, usize)>,
 }
 
 impl WorkloadMix {
@@ -76,6 +87,8 @@ impl WorkloadMix {
                 (1, TransformKind::Scale),
                 (1, TransformKind::Rotate),
             ],
+            bulk_share: 0.0,
+            bulk_sizes: vec![],
         }
     }
 
@@ -90,8 +103,73 @@ impl WorkloadMix {
                 (1, TransformKind::Rotate),
                 (2, TransformKind::Composite),
             ],
+            bulk_share: 0.0,
+            bulk_sizes: vec![],
         }
     }
+
+    /// Two lanes in one stream: small interactive requests (which must
+    /// hold their TTLs) blended half-and-half with big-batch bulk
+    /// requests (which may be shed under pressure).
+    pub fn two_lane() -> WorkloadMix {
+        WorkloadMix {
+            sizes: vec![(3, 8), (4, 64), (2, 500)],
+            transforms: vec![
+                (2, TransformKind::Translate),
+                (1, TransformKind::Scale),
+                (1, TransformKind::Rotate),
+            ],
+            bulk_share: 0.5,
+            bulk_sizes: vec![(1, 1024), (2, 2048), (1, 4096)],
+        }
+    }
+}
+
+/// The batch-window policy of a scenario's coordinator — the A/B axis of
+/// the adaptive-batching experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchWindow {
+    /// The coordinator's stock static window
+    /// ([`BatcherConfig::default`], 2ms).
+    Default,
+    /// A pinned static window.
+    Fixed(Duration),
+    /// The [`crate::coordinator::AdaptiveWindow`] controller with its
+    /// default bounds: the window roams
+    /// [`AdaptiveWindowConfig::default`]'s `[min_wait, max_wait]` band,
+    /// steered by the queue-depth gauge.
+    Adaptive,
+}
+
+impl BatchWindow {
+    /// Human/JSON label, e.g. `fixed(100us)` or `adaptive`.
+    pub fn label(&self) -> String {
+        match *self {
+            BatchWindow::Default => "default".to_string(),
+            BatchWindow::Fixed(d) => format!("fixed({}us)", d.as_micros()),
+            BatchWindow::Adaptive => "adaptive".to_string(),
+        }
+    }
+
+    /// The coordinator batcher config this policy stands for.
+    pub fn batcher_config(&self) -> BatcherConfig {
+        match *self {
+            BatchWindow::Default => BatcherConfig::default(),
+            BatchWindow::Fixed(d) => BatcherConfig { max_wait: d, ..BatcherConfig::default() },
+            BatchWindow::Adaptive => BatcherConfig {
+                adaptive: Some(AdaptiveWindowConfig::default()),
+                ..BatcherConfig::default()
+            },
+        }
+    }
+}
+
+/// The static extremes the adaptive window is A/B'd against: exactly the
+/// band the controller roams, so "adaptive ≥ both extremes" means the
+/// controller finds the right operating point without being told.
+pub fn window_extremes() -> (Duration, Duration) {
+    let cfg = AdaptiveWindowConfig::default();
+    (cfg.min_wait, cfg.max_wait)
 }
 
 /// Scale-out topology for a scenario: run `backends` independent
@@ -129,6 +207,9 @@ pub struct Scenario {
     pub queue_capacity: usize,
     /// Default request TTL (deadline shedding) — `None` disables.
     pub ttl: Option<Duration>,
+    /// Batch-window policy of the coordinator under test (static default,
+    /// pinned static, or adaptive).
+    pub batch_window: BatchWindow,
     /// Open-loop admission: `try_submit` fast-reject instead of blocking
     /// the submitter on a full queue.
     pub fast_reject: bool,
@@ -169,10 +250,24 @@ fn base(name: &'static str, summary: &'static str, profile: ArrivalProfile) -> S
         shards: 2,
         queue_capacity: 1024,
         ttl: None,
+        batch_window: BatchWindow::Default,
         fast_reject: false,
         fault_seed: None,
         transport: TransportKind::InProcess,
         router: None,
+    }
+}
+
+/// The `mixed` scenario body shared by the plain row and the three
+/// batch-window A/B rows (identical in everything but the window policy,
+/// so the A/B comparison is apples-to-apples).
+fn mixed_base(name: &'static str, summary: &'static str) -> Scenario {
+    Scenario {
+        duration: Duration::from_secs(4),
+        mix: WorkloadMix::mixed(),
+        shards: 4,
+        seed: 20190412,
+        ..base(name, summary, ArrivalProfile::ClosedLoop { clients: 8 })
     }
 }
 
@@ -217,15 +312,44 @@ pub fn all() -> Vec<Scenario> {
                 ArrivalProfile::Ramp { from: 200, to: 6000 },
             )
         },
+        mixed_base(
+            "mixed",
+            "4s closed-loop (8 clients, shards=4): full size ladder + composites",
+        ),
+        Scenario {
+            batch_window: BatchWindow::Fixed(window_extremes().0),
+            ..mixed_base(
+                "mixed-window-min",
+                "the mixed workload pinned to the minimum static batch window (A/B floor)",
+            )
+        },
+        Scenario {
+            batch_window: BatchWindow::Fixed(window_extremes().1),
+            ..mixed_base(
+                "mixed-window-max",
+                "the mixed workload pinned to the maximum static batch window (A/B ceiling)",
+            )
+        },
+        Scenario {
+            batch_window: BatchWindow::Adaptive,
+            ..mixed_base(
+                "mixed-adaptive",
+                "the mixed workload under the adaptive batch window — must match or beat \
+                 both static extremes",
+            )
+        },
         Scenario {
             duration: Duration::from_secs(4),
-            mix: WorkloadMix::mixed(),
+            mix: WorkloadMix::two_lane(),
             shards: 4,
-            seed: 20190412,
+            queue_capacity: 512,
+            ttl: Some(Duration::from_millis(60)),
+            fast_reject: true,
             ..base(
-                "mixed",
-                "4s closed-loop (8 clients, shards=4): full size ladder + composites",
-                ArrivalProfile::ClosedLoop { clients: 8 },
+                "lanes",
+                "4s of 64-request two-lane bursts every 100ms: bulk floods the service \
+                 and is shed; interactive must hold its TTL with zero deadline misses",
+                ArrivalProfile::Burst { burst: 64, period: Duration::from_millis(100) },
             )
         },
         Scenario {
@@ -328,6 +452,63 @@ mod tests {
         let chaos = by_name("chaos").expect("chaos scenario listed");
         assert_eq!(chaos.backend, BackendChoice::M1Sim, "faults live in the M1 pool");
         assert!(chaos.shards >= 2, "chaos needs shards to kill");
+    }
+
+    #[test]
+    fn window_ab_rows_differ_only_in_window_policy() {
+        let (lo, hi) = window_extremes();
+        assert!(lo < hi);
+        let base = by_name("mixed").unwrap();
+        let min = by_name("mixed-window-min").unwrap();
+        let max = by_name("mixed-window-max").unwrap();
+        let ada = by_name("mixed-adaptive").unwrap();
+        assert_eq!(base.batch_window, BatchWindow::Default);
+        assert_eq!(min.batch_window, BatchWindow::Fixed(lo));
+        assert_eq!(max.batch_window, BatchWindow::Fixed(hi));
+        assert_eq!(ada.batch_window, BatchWindow::Adaptive);
+        for s in [&min, &max, &ada] {
+            // Identical in everything that shapes the offered load.
+            assert_eq!(s.seed, base.seed, "{}", s.name);
+            assert_eq!(s.duration, base.duration, "{}", s.name);
+            assert_eq!(s.profile, base.profile, "{}", s.name);
+            assert_eq!(s.workers, base.workers, "{}", s.name);
+            assert_eq!(s.shards, base.shards, "{}", s.name);
+            assert_eq!(s.mix.sizes, base.mix.sizes, "{}", s.name);
+            assert_eq!(s.mix.transforms, base.mix.transforms, "{}", s.name);
+        }
+        // The adaptive policy's batcher config really arms the controller;
+        // the fixed policies pin max_wait.
+        assert!(ada.batch_window.batcher_config().adaptive.is_some());
+        assert_eq!(min.batch_window.batcher_config().max_wait, lo);
+        assert!(min.batch_window.batcher_config().adaptive.is_none());
+    }
+
+    #[test]
+    fn lanes_is_the_only_two_lane_scenario_and_has_teeth() {
+        for s in all() {
+            assert_eq!(
+                s.mix.bulk_share > 0.0,
+                s.name == "lanes",
+                "{}: the bulk lane must stay opt-in per scenario",
+                s.name
+            );
+        }
+        let lanes = by_name("lanes").expect("lanes scenario listed");
+        assert!(lanes.ttl.is_some(), "lane guarantees are stated against a TTL");
+        assert!(lanes.fast_reject, "overload must shed, not block the generator");
+        assert!(!lanes.mix.bulk_sizes.is_empty());
+        assert!(
+            lanes.mix.bulk_sizes.iter().all(|&(_, n)| n >= 1024),
+            "bulk is the big-batch lane"
+        );
+        assert!(lanes.fault_seed.is_none() && lanes.router.is_none());
+    }
+
+    #[test]
+    fn batch_window_labels_render() {
+        assert_eq!(BatchWindow::Default.label(), "default");
+        assert_eq!(BatchWindow::Fixed(Duration::from_micros(100)).label(), "fixed(100us)");
+        assert_eq!(BatchWindow::Adaptive.label(), "adaptive");
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::time::Duration;
 
 use crate::coordinator::faults::splitmix64;
 use crate::coordinator::wire::{self, Frame};
-use crate::coordinator::{Coordinator, RejectReason, ServeResult, TransformRequest};
+use crate::coordinator::{Coordinator, Priority, RejectReason, ServeResult, TransformRequest};
 use crate::graphics::Transform;
 
 /// Which path a scenario's traffic takes to the coordinator.
@@ -200,8 +200,22 @@ impl WireClient {
         transforms: Vec<Transform>,
         fast_reject: bool,
     ) -> io::Result<mpsc::Receiver<ServeResult>> {
+        self.submit_with_priority(xs, ys, transforms, fast_reject, Priority::Interactive)
+    }
+
+    /// [`WireClient::submit`] with an explicit lane — bulk requests ride
+    /// the wire with flags bit 1 set and land on the server's standard
+    /// admission lane.
+    pub fn submit_with_priority(
+        &self,
+        xs: Vec<f32>,
+        ys: Vec<f32>,
+        transforms: Vec<Transform>,
+        fast_reject: bool,
+        priority: Priority,
+    ) -> io::Result<mpsc::Receiver<ServeResult>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = TransformRequest::new(id, xs, ys, transforms);
+        let mut req = TransformRequest::new(id, xs, ys, transforms).with_priority(priority);
         req.ttl = self.ttl;
         self.submit_request(req, fast_reject)
     }
@@ -332,26 +346,29 @@ impl ClientConn {
         ys: Vec<f32>,
         transforms: Vec<Transform>,
         fast_reject: bool,
+        priority: Priority,
     ) -> Submitted {
         match self {
             ClientConn::InProcess(c) => {
                 if fast_reject {
-                    match c.try_submit(xs, ys, transforms) {
+                    match c.try_submit_with_priority(xs, ys, transforms, priority) {
                         Ok(rx) => Submitted::Handle(rx),
                         Err(rej) if rej.reason == RejectReason::ShuttingDown => Submitted::Down,
                         Err(_) => Submitted::Rejected,
                     }
                 } else {
-                    match c.submit(xs, ys, transforms) {
+                    match c.submit_with_priority(xs, ys, transforms, priority) {
                         Ok(rx) => Submitted::Handle(rx),
                         Err(_) => Submitted::Down,
                     }
                 }
             }
-            ClientConn::Tcp(wc) => match wc.submit(xs, ys, transforms, fast_reject) {
-                Ok(rx) => Submitted::Handle(rx),
-                Err(_) => Submitted::Down,
-            },
+            ClientConn::Tcp(wc) => {
+                match wc.submit_with_priority(xs, ys, transforms, fast_reject, priority) {
+                    Ok(rx) => Submitted::Handle(rx),
+                    Err(_) => Submitted::Down,
+                }
+            }
         }
     }
 }

@@ -4,6 +4,7 @@
 //! runs reproducible: a closed-loop client replays the identical request
 //! sequence on every run with the same seed.
 
+use crate::coordinator::Priority;
 use crate::graphics::Transform;
 use crate::testkit::Rng;
 
@@ -15,6 +16,7 @@ pub struct GeneratedRequest {
     pub xs: Vec<f32>,
     pub ys: Vec<f32>,
     pub transforms: Vec<Transform>,
+    pub priority: Priority,
 }
 
 /// Stateless request generator over a [`WorkloadMix`].
@@ -64,8 +66,19 @@ impl RequestFactory {
     /// the backend's ±8192 i16 headroom.
     pub fn request(&self, stream: u64, index: u64) -> GeneratedRequest {
         let mut rng = Rng::new(arrival_seed(self.seed, stream, index));
-        let n = *weighted(&mut rng, &self.mix.sizes);
+        let mut n = *weighted(&mut rng, &self.mix.sizes);
         let kind = *weighted(&mut rng, &self.mix.transforms);
+        // The bulk-lane draw happens only for two-lane mixes: when
+        // `bulk_share == 0.0` no extra random number is consumed, so the
+        // request streams of every single-lane scenario stay bit-identical
+        // to what they were before lanes existed.
+        let mut priority = Priority::Interactive;
+        if self.mix.bulk_share > 0.0
+            && (rng.below(1 << 16) as f32) < self.mix.bulk_share * (1 << 16) as f32
+        {
+            priority = Priority::Bulk;
+            n = *weighted(&mut rng, &self.mix.bulk_sizes);
+        }
         let xs: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
         let ys: Vec<f32> = (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
         let translate = |rng: &mut Rng| Transform::Translate {
@@ -85,7 +98,7 @@ impl RequestFactory {
                 vec![rotate(&mut rng), scale(&mut rng), translate(&mut rng)]
             }
         };
-        GeneratedRequest { xs, ys, transforms }
+        GeneratedRequest { xs, ys, transforms, priority }
     }
 }
 
@@ -132,6 +145,47 @@ mod tests {
             assert!(r.xs.iter().chain(r.ys.iter()).all(|v| v.abs() <= 100.0));
             assert!(!r.transforms.is_empty() && r.transforms.len() <= 3);
         }
+    }
+
+    #[test]
+    fn single_lane_mixes_stay_interactive_and_burn_no_extra_draws() {
+        // bulk_share == 0.0 must not consume RNG state: a mix with lanes
+        // configured but share 0 generates the exact same coordinates as
+        // the plain mix, and everything stays on the interactive lane.
+        let plain = factory(19);
+        let mut laned_mix = WorkloadMix::mixed();
+        laned_mix.bulk_sizes = vec![(1, 4096)];
+        let laned = RequestFactory::new(19, laned_mix);
+        for i in 0..100u64 {
+            let (a, b) = (plain.request(0, i), laned.request(0, i));
+            assert_eq!(a.priority, Priority::Interactive);
+            assert_eq!(a.xs, b.xs);
+            assert_eq!(a.ys, b.ys);
+        }
+    }
+
+    #[test]
+    fn two_lane_mix_draws_both_lanes_with_bulk_sizes() {
+        let f = RequestFactory::new(23, WorkloadMix::two_lane());
+        let bulk_sizes: Vec<usize> =
+            WorkloadMix::two_lane().bulk_sizes.iter().map(|&(_, n)| n).collect();
+        let small_sizes: Vec<usize> =
+            WorkloadMix::two_lane().sizes.iter().map(|&(_, n)| n).collect();
+        let (mut bulk, mut interactive) = (0u32, 0u32);
+        for i in 0..200u64 {
+            let r = f.request(0, i);
+            match r.priority {
+                Priority::Bulk => {
+                    bulk += 1;
+                    assert!(bulk_sizes.contains(&r.xs.len()), "bulk size {}", r.xs.len());
+                }
+                Priority::Interactive => {
+                    interactive += 1;
+                    assert!(small_sizes.contains(&r.xs.len()));
+                }
+            }
+        }
+        assert!(bulk >= 40 && interactive >= 40, "lanes unbalanced: {bulk}/{interactive}");
     }
 
     #[test]

@@ -51,12 +51,19 @@ verbs:
                             breaker, mid-run failover with exactly-once
                             replies, immediate Unavailable when every
                             backend is dead; stdin-EOF/Ctrl-C drains
-  loadtest <scenario|list> [--transport tcp|in-process] [shards] [seconds]
+  loadtest [scenario|list] [--transport tcp|in-process] [shards] [seconds]
                             run a named load-generation scenario against
                             the coordinator (M1Sim backend) and write
-                            BENCH_coordinator.json; `list` names them;
+                            BENCH_coordinator.json; `list` (or no
+                            argument) names them on stdout, exit 0;
                             `--transport tcp` drives it over a loopback
                             wire-protocol listener instead of in-process
+  sweep [--cell-seconds n] [--workers a,b] [--shards a,b]
+        [--windows-us a,b] [--seed n]
+                            measure the saturation surface: the ramp
+                            scenario across the workers x shards x
+                            batch-window grid (default 2x2x2, 2s cells),
+                            written to BENCH_saturation.json
   replay <file.m1ra>        re-execute a failure-repro artifact (dumped on
                             shard crashes when MORPHO_REPRO_DIR is set)
                             step by step and report the exact first
@@ -70,8 +77,10 @@ fn usage() -> ! {
 
 fn loadtest(name: &str, transport: Option<TransportKind>, shards: Option<usize>, seconds: Option<u64>) {
     if name == "list" {
+        // The listing is data, not diagnostics: stdout, exit 0 — unlike
+        // unknown scenarios/verbs, which go to stderr with exit 2.
         for sc in loadgen::scenario::all() {
-            println!("{:<8} {}", sc.name, sc.summary);
+            println!("{:<16} {}", sc.name, sc.summary);
         }
         return;
     }
@@ -100,6 +109,75 @@ fn loadtest(name: &str, transport: Option<TransportKind>, shards: Option<usize>,
     let path = loadgen::report::default_path();
     match loadgen::report::write_reports(&[report], &path) {
         Ok(()) => println!("\nwrote {path}"),
+        Err(e) => {
+            eprintln!("\nfailed to write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Parse a comma-separated numeric list, e.g. `--workers 1,2,4`.
+fn parse_list(flag: &str, value: &str) -> Vec<u64> {
+    let parsed: Option<Vec<u64>> = value.split(',').map(|s| s.trim().parse().ok()).collect();
+    match parsed {
+        Some(v) if !v.is_empty() => v,
+        _ => {
+            eprintln!("{flag}: expected a comma-separated number list, got `{value}`");
+            std::process::exit(2)
+        }
+    }
+}
+
+fn sweep(args: &[&str]) {
+    let mut config = loadgen::SweepConfig::default();
+    let mut it = args.iter();
+    while let Some(&flag) = it.next() {
+        let value = *it.next().unwrap_or_else(|| usage());
+        match flag {
+            "--cell-seconds" => {
+                let secs: f64 = value.parse().unwrap_or_else(|_| usage());
+                if !(secs > 0.0 && secs.is_finite()) {
+                    usage();
+                }
+                config.cell_duration = std::time::Duration::from_secs_f64(secs);
+            }
+            "--workers" => {
+                config.workers = parse_list(flag, value).into_iter().map(|v| v as usize).collect();
+            }
+            "--shards" => {
+                config.shards =
+                    parse_list(flag, value).into_iter().map(|v| (v as usize).max(2)).collect();
+            }
+            "--windows-us" => {
+                config.windows = parse_list(flag, value)
+                    .into_iter()
+                    .map(|v| std::time::Duration::from_micros(v.max(1)))
+                    .collect();
+            }
+            "--seed" => config.seed = value.parse().unwrap_or_else(|_| usage()),
+            _ => usage(),
+        }
+    }
+    let cells = config.workers.len() * config.shards.len() * config.windows.len();
+    println!(
+        "saturation sweep: {} cells ({} workers x {} shards x {} windows), {:.1}s each, seed {}",
+        cells,
+        config.workers.len(),
+        config.shards.len(),
+        config.windows.len(),
+        config.cell_duration.as_secs_f64(),
+        config.seed,
+    );
+    let cells = match loadgen::run_sweep(&config, |line| println!("{line}")) {
+        Ok(cells) => cells,
+        Err(e) => {
+            eprintln!("sweep failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let path = loadgen::saturation::default_path();
+    match loadgen::saturation::write_cells(&config, &cells, &path) {
+        Ok(()) => println!("\nwrote {path} ({} cells)", cells.len()),
         Err(e) => {
             eprintln!("\nfailed to write {path}: {e}");
             std::process::exit(1);
@@ -449,7 +527,9 @@ fn main() {
             route(listen, &backends);
         }
         Some("loadtest") => {
-            let name = it.next().unwrap_or_else(|| usage());
+            // Bare `repro loadtest` means `list`: a discovery query, not
+            // a malformed invocation.
+            let name = it.next().unwrap_or("list");
             let mut rest: Vec<&str> = it.collect();
             let transport = if rest.first() == Some(&"--transport") {
                 rest.remove(0);
@@ -466,6 +546,10 @@ fn main() {
             let shards = rest.first().map(|s| s.parse().unwrap_or_else(|_| usage()));
             let seconds = rest.get(1).map(|s| s.parse().unwrap_or_else(|_| usage()));
             loadtest(name, transport, shards, seconds);
+        }
+        Some("sweep") => {
+            let rest: Vec<&str> = it.collect();
+            sweep(&rest);
         }
         Some("replay") => {
             let path = it.next().unwrap_or_else(|| usage());

@@ -12,7 +12,8 @@ use morpho::coordinator::{
 };
 use morpho::graphics::Transform;
 use morpho::loadgen::{
-    self, ArrivalProfile, RequestFactory, Scenario, TransportKind, WireClient, WorkloadMix,
+    self, ArrivalProfile, BatchWindow, RequestFactory, Scenario, TransportKind, WireClient,
+    WorkloadMix,
 };
 
 /// The CI smoke scenario, shortened: must complete real requests on the
@@ -74,6 +75,7 @@ fn burst_profile_with_fast_reject_accounts_for_every_request() {
         ttl: Some(Duration::from_millis(200)),
         fast_reject: true,
         fault_seed: None,
+        batch_window: BatchWindow::Default,
         transport: TransportKind::InProcess,
         router: None,
     };
@@ -82,6 +84,46 @@ fn burst_profile_with_fast_reject_accounts_for_every_request() {
     assert!(r.submitted >= 24, "at least the first burst is offered");
     assert!(r.completed + r.shed + r.rejected <= r.submitted);
     assert!(r.completed > 0);
+}
+
+/// The two-lane scenario end to end, shortened: bulk bursts ride the
+/// standard lane while interactive requests keep completing with zero
+/// client-observed deadline rejections — the lane-isolation invariant
+/// the CI lanes gate reads off the full-length run.
+#[test]
+fn lanes_scenario_serves_interactive_while_bulk_bears_the_pressure() {
+    let mut sc = loadgen::scenario::by_name("lanes").expect("lanes scenario exists");
+    sc.duration = Duration::from_millis(800);
+    assert!(sc.mix.bulk_share > 0.0, "lanes must blend bulk traffic");
+    assert!(sc.ttl.is_some(), "lanes runs under TTL pressure");
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert_eq!(r.failed, 0, "no reply channel may die: {}", r.render());
+    assert!(r.interactive_completed > 0, "interactive lane must be served: {}", r.render());
+    assert!(r.bulk_completed + r.bulk_shed > 0, "bulk lane must see traffic: {}", r.render());
+    assert_eq!(
+        r.interactive_deadline_missed, 0,
+        "interactive must never be shed while bulk absorbs the pressure: {}",
+        r.render()
+    );
+    // Lane tallies are a client-side view of the same run the aggregate
+    // columns describe — they can never exceed the aggregates.
+    assert!(r.interactive_completed + r.bulk_completed == r.completed);
+    assert!(r.bulk_shed <= r.shed);
+}
+
+/// The adaptive batch window serves the mixed workload end to end: same
+/// request streams as the static A/B rows, a live controller instead of
+/// a pinned window, clean accounting either way.
+#[test]
+fn adaptive_window_scenario_completes_cleanly() {
+    let mut sc = loadgen::scenario::by_name("mixed-adaptive").expect("adaptive A/B row exists");
+    assert_eq!(sc.batch_window, BatchWindow::Adaptive);
+    sc.duration = Duration::from_millis(400);
+    let r = loadgen::run_scenario(&sc).unwrap();
+    assert_eq!(r.failed, 0, "no reply channel may die: {}", r.render());
+    assert!(r.completed > 0, "adaptive batching must serve requests: {}", r.render());
+    assert_eq!(r.batch_window, "adaptive");
+    assert!(r.to_json().contains("\"batch_window\": \"adaptive\""));
 }
 
 /// The transport differential (ROADMAP §Scale): the same seeded request

@@ -15,8 +15,8 @@ use morpho::coordinator::request::RequestTiming;
 use morpho::coordinator::wire::{self, ERR_MALFORMED, ERR_UNEXPECTED_KIND};
 use morpho::coordinator::{
     BackendChoice, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, Frame, HealthStats,
-    RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse, WireError,
-    WireServer, MAX_FRAME, WIRE_VERSION,
+    Priority, RejectReason, Rejection, ServeResult, TransformRequest, TransformResponse,
+    WireError, WireServer, MAX_FRAME, WIRE_VERSION,
 };
 use morpho::graphics::Transform;
 use morpho::loadgen::WireClient;
@@ -48,6 +48,7 @@ fn random_request(rng: &mut Rng) -> TransformRequest {
         ys: (0..n).map(|_| rng.f32_range(-1e4, 1e4)).collect(),
         transforms: (0..rng.below(5)).map(|_| random_transform(rng)).collect(),
         ttl: if rng.bool() { Some(Duration::from_nanos(rng.next_u64())) } else { None },
+        priority: if rng.bool() { Priority::Bulk } else { Priority::Interactive },
     }
 }
 
@@ -122,6 +123,7 @@ fn seeded_random_frames_roundtrip_bit_identically() {
                 assert_eq!(fast_reject, fast);
                 assert_eq!(back.id, req.id);
                 assert_eq!(back.ttl, req.ttl);
+                assert_eq!(back.priority, req.priority);
                 assert_eq!(back.transforms, req.transforms);
                 assert_eq!(bits(&back.xs), bits(&req.xs));
                 assert_eq!(bits(&back.ys), bits(&req.ys));
