@@ -11,8 +11,9 @@ use morpho::baselines::Cpu;
 use morpho::benchkit::{bench, section, Measurement};
 use morpho::coordinator::backend::{Backend, M1SimBackend};
 use morpho::mapping::{
+    megakernel_for, run_plan,
     runner::{run_routine3_with, run_routine_on},
-    PointTransformMapping, StreamedTiledMapping, VecVecMapping,
+    MegaSpec, PointTransformMapping, StreamedTiledMapping, VecVecMapping,
 };
 use morpho::morphosys::rc_array::{BroadcastMode, ContextWord, MuxASel, RcArray};
 use morpho::morphosys::{AluOp, BroadcastSchedule, M1System};
@@ -34,6 +35,28 @@ fn row(m: &Measurement, unit: &'static str, throughput: f64) -> JsonRow {
         unit,
         throughput,
     }
+}
+
+/// Record a points/s measurement: print the human-readable line (with an
+/// optional speed-up ratio against a reference measurement) and push the
+/// machine-readable row. Every simulated-points bench goes through here so
+/// the stdout format and the JSON row stay in lock-step.
+fn record_points(
+    rows: &mut Vec<JsonRow>,
+    m: &Measurement,
+    points: f64,
+    baseline: Option<(&Measurement, &str)>,
+) {
+    match baseline {
+        Some((b, label)) => println!(
+            "  → {:.2} M simulated-points/s ({:.2}× vs {})",
+            m.throughput(points) / 1e6,
+            b.mean.as_secs_f64() / m.mean.as_secs_f64(),
+            label,
+        ),
+        None => println!("  → {:.2} M simulated-points/s", m.throughput(points) / 1e6),
+    }
+    rows.push(row(m, "points_per_s", m.throughput(points)));
 }
 
 fn write_json(rows: &[JsonRow]) {
@@ -108,8 +131,7 @@ fn main() {
         sys2.reset_chip();
         std::hint::black_box(run_routine_on(&mut sys2, &pt, &u, Some(&v)));
     });
-    println!("  → {:.1} M simulated-points/s", m.throughput(64.0) / 1e6);
-    rows.push(row(&m, "points_per_s", m.throughput(64.0)));
+    record_points(&mut rows, &m, 64.0, None);
 
     section("sharded tile pool (translation, 2117-point jobs)");
     // The §Perf doc's motivating job size: 2 117 points = 34 M1 tiles.
@@ -126,20 +148,14 @@ fn main() {
         ys.copy_from_slice(&base_ys);
         std::hint::black_box(serial.apply(&params, &mut xs, &mut ys).unwrap());
     });
-    println!("  → {:.2} M simulated-points/s", m_serial.throughput(2117.0) / 1e6);
-    rows.push(row(&m_serial, "points_per_s", m_serial.throughput(2117.0)));
+    record_points(&mut rows, &m_serial, 2117.0, None);
     let mut pooled = M1SimBackend::with_shards(4);
     let m_pooled = bench("pooled translation-2117 (shards=4)", || {
         xs.copy_from_slice(&base_xs);
         ys.copy_from_slice(&base_ys);
         std::hint::black_box(pooled.apply(&params, &mut xs, &mut ys).unwrap());
     });
-    println!(
-        "  → {:.2} M simulated-points/s ({:.2}× vs serial)",
-        m_pooled.throughput(2117.0) / 1e6,
-        m_serial.mean.as_secs_f64() / m_pooled.mean.as_secs_f64()
-    );
-    rows.push(row(&m_pooled, "points_per_s", m_pooled.throughput(2117.0)));
+    record_points(&mut rows, &m_pooled, 2117.0, Some((&m_serial, "serial")));
 
     section("fused tile-kernel tier (vecvec translation, 2117-point tile plan)");
     // 2 117 elements decompose into 33 full 64-point vector-vector tiles
@@ -164,7 +180,7 @@ fn main() {
     tail_u[..5].copy_from_slice(&tu[2112..]);
     tail_v[..5].copy_from_slice(&tv[2112..]);
     let mut sys3 = M1System::new();
-    let run_plan = |sys: &mut M1System, full_s: &BroadcastSchedule, tail_s: &BroadcastSchedule| {
+    let run_tile_plan = |sys: &mut M1System, full_s: &BroadcastSchedule, tail_s: &BroadcastSchedule| {
         for t in 0..33 {
             sys.reset_chip();
             std::hint::black_box(run_routine3_with(
@@ -187,19 +203,13 @@ fn main() {
         ));
     };
     let m_sched = bench("scheduled translation-2117 (shards=1)", || {
-        run_plan(&mut sys3, &full_sched, &tail_sched)
+        run_tile_plan(&mut sys3, &full_sched, &tail_sched)
     });
-    println!("  → {:.2} M simulated-points/s", m_sched.throughput(2117.0) / 1e6);
-    rows.push(row(&m_sched, "points_per_s", m_sched.throughput(2117.0)));
+    record_points(&mut rows, &m_sched, 2117.0, None);
     let m_fused = bench("fused translation-2117 (shards=1)", || {
-        run_plan(&mut sys3, &full_fused, &tail_fused)
+        run_tile_plan(&mut sys3, &full_fused, &tail_fused)
     });
-    println!(
-        "  → {:.2} M simulated-points/s ({:.2}× vs scheduled)",
-        m_fused.throughput(2117.0) / 1e6,
-        m_sched.mean.as_secs_f64() / m_fused.mean.as_secs_f64()
-    );
-    rows.push(row(&m_fused, "points_per_s", m_fused.throughput(2117.0)));
+    record_points(&mut rows, &m_fused, 2117.0, Some((&m_sched, "scheduled")));
 
     section("async-DMA streamed tier (set ping-pong, 2117-point covering plan)");
     // The paper's headline large-n scenario: a 2 117-point translation
@@ -225,8 +235,9 @@ fn main() {
     sys4.reset_chip();
     let ri = run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, None).report;
     sys4.reset_chip();
-    let rs = run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, Some(&streamed_sched))
-        .report;
+    let rs_out =
+        run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, Some(&streamed_sched));
+    let rs = &rs_out.report;
     assert_eq!(
         (ri.cycles, ri.slots, ri.executed, ri.broadcasts),
         (rs.cycles, rs.slots, rs.executed, rs.broadcasts),
@@ -236,8 +247,7 @@ fn main() {
         sys4.reset_chip();
         std::hint::black_box(run_routine3_with(&mut sys4, &streamed, &su, Some(&sv), None, None));
     });
-    println!("  → {:.2} M simulated-points/s", m_sa_interp.throughput(2117.0) / 1e6);
-    rows.push(row(&m_sa_interp, "points_per_s", m_sa_interp.throughput(2117.0)));
+    record_points(&mut rows, &m_sa_interp, 2117.0, None);
     let m_sa_sched = bench("streamed-async translation-2117 (scheduled)", || {
         sys4.reset_chip();
         std::hint::black_box(run_routine3_with(
@@ -249,12 +259,42 @@ fn main() {
             Some(&streamed_sched),
         ));
     });
-    println!(
-        "  → {:.2} M simulated-points/s ({:.2}× vs interpreter)",
-        m_sa_sched.throughput(2117.0) / 1e6,
-        m_sa_interp.mean.as_secs_f64() / m_sa_sched.mean.as_secs_f64()
+    record_points(&mut rows, &m_sa_sched, 2117.0, Some((&m_sa_interp, "interpreter")));
+
+    section("megakernel tier (plan-level compile, 2117-point covering plan)");
+    // The same 2 176-element async-DMA covering plan as the streamed rows
+    // above, but lowered by the request-level megakernel compiler: context
+    // words are loaded once for the whole request, the DMA streams are
+    // batched across tile boundaries under the set ping-pong, and every
+    // tile's broadcast + write-back runs as one fused kernel. The compiled
+    // plan comes out of the process-wide cache keyed by (transform shape,
+    // n) — the batched row below reuses the same compilation, which is
+    // exactly what the coordinator's Batcher does for a window of
+    // same-shape requests.
+    let mega = megakernel_for(&MegaSpec::VecVec { n: 2176, op: AluOp::Add })
+        .expect("2176-element vecvec plan must be megakernel-compilable");
+    // The megakernel must agree bit-for-bit with the scheduled tier on the
+    // result vector before we time it.
+    sys4.reset_chip();
+    let rm = run_plan(&mut sys4, &mega, &su, Some(&sv));
+    assert_eq!(
+        rm.result, rs_out.result,
+        "megakernel result must match the scheduled tier"
     );
-    rows.push(row(&m_sa_sched, "points_per_s", m_sa_sched.throughput(2117.0)));
+    let m_mega = bench("megakernel translation-2117", || {
+        sys4.reset_chip();
+        std::hint::black_box(run_plan(&mut sys4, &mega, &su, Some(&sv)));
+    });
+    record_points(&mut rows, &m_mega, 2117.0, Some((&m_sa_sched, "scheduled")));
+    // A Batcher-shaped burst: eight same-shape requests dispatched through
+    // the one cached plan, the per-request compile cost fully amortized.
+    let m_mega8 = bench("megakernel translation-2117 (batched x8)", || {
+        for _ in 0..8 {
+            sys4.reset_chip();
+            std::hint::black_box(run_plan(&mut sys4, &mega, &su, Some(&sv)));
+        }
+    });
+    record_points(&mut rows, &m_mega8, 8.0 * 2117.0, None);
 
     section("x86 baseline interpreter");
     let ub: Vec<i16> = (0..64).collect();

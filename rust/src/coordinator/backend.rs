@@ -7,6 +7,8 @@ use anyhow::Result;
 use crate::graphics::{FixedPointParams, Mat3};
 use crate::runtime::Executor;
 
+use crate::mapping::{megakernel_for, MegaSpec};
+
 use super::faults::FaultPlan;
 use super::pool::{PoolHealth, RoutineSpec, TilePool, TileRequest};
 
@@ -167,9 +169,13 @@ impl Backend for XlaBackend {
 /// [`M1SimBackend::with_shards`] the independent 64-point tiles fan out
 /// across pool shards, each owning its own simulator while sharing one
 /// pool-wide compiled-routine cache and the process-wide schedule cache
-/// (one compile per distinct program, not per shard — §Perf). Outputs
-/// and aggregate cycle counts are identical across shard counts (see the
-/// pool's determinism contract; pinned by `tests/conformance.rs`).
+/// (one compile per distinct program, not per shard — §Perf). Runs of
+/// full tiles dispatch as plan-level **megakernel** chunks (fixed
+/// `MEGA_TILES`-tile granularity, compiled once per transform shape in
+/// the process-wide megakernel cache); only single full tiles and the
+/// ragged tail take the per-tile path. Outputs and aggregate cycle
+/// counts are identical across shard counts (see the pool's determinism
+/// contract; pinned by `tests/conformance.rs`).
 pub struct M1SimBackend {
     pool: TilePool,
     /// Fixed-point shift for the 2×2 matrix (Q6 default).
@@ -261,10 +267,53 @@ impl Backend for M1SimBackend {
             return Ok(None);
         }
 
-        // Build the tile plan: 64-point tiles, the last one padded to a
-        // whole column broadcast (multiple of 8).
-        let mut tiles = Vec::with_capacity(n.div_ceil(64));
+        // Build the tile plan. Runs of full 64-point tiles group into
+        // plan-level megakernel requests of up to MEGA_TILES tiles each
+        // (§Perf, megakernel tier): one compiled schedule per chunk
+        // shape, context loaded once, DMA streams batched across tile
+        // boundaries. The chunk size is a constant so the decomposition
+        // — and therefore the aggregate cycle count — is independent of
+        // shard count. A single full tile gains nothing from a plan, and
+        // the ragged tail needs per-tile padding, so both keep the
+        // per-tile path; shapes with no plan-level program (out-of-range
+        // translations) degrade to all-per-tile.
+        const MEGA_TILES: usize = 16;
+        // Per-request splice info: (live points, x/y split offset) —
+        // plan results are [all x'][all y'], per-tile results are
+        // [x'; padded][y'; padded].
+        let mut tiles = Vec::with_capacity(n.div_ceil(64 * MEGA_TILES) + 2);
+        let mut pieces: Vec<(usize, usize)> = Vec::with_capacity(tiles.capacity());
         let mut done = 0usize;
+        let mut remaining_full = n / 64;
+        while remaining_full >= 2 {
+            let take = remaining_full.min(MEGA_TILES);
+            let len = take * 64;
+            let mega = MegaSpec::PointTransform { n: len, m: fp.m, t: fp.t, shift: fp.shift };
+            if megakernel_for(&mega).is_none() {
+                break; // no plan-level program for this shape: per-tile below
+            }
+            let mut ix = vec![0i16; len];
+            let mut iy = vec![0i16; len];
+            for i in 0..len {
+                ix[i] = xs[done + i].round() as i16;
+                iy[i] = ys[done + i].round() as i16;
+            }
+            tiles.push(TileRequest {
+                spec: RoutineSpec::PointTransformPlan {
+                    n: len,
+                    m: fp.m,
+                    t: fp.t,
+                    shift: fp.shift,
+                },
+                u: ix,
+                v: Some(iy),
+            });
+            pieces.push((len, len));
+            done += len;
+            remaining_full -= take;
+        }
+        // Leftover full tiles and the ragged tail: 64-point tiles, the
+        // last one padded to a whole column broadcast (multiple of 8).
         while done < n {
             let len = (n - done).min(64);
             let tile = len.div_ceil(8) * 8;
@@ -279,6 +328,7 @@ impl Backend for M1SimBackend {
                 u: ix,
                 v: Some(iy),
             });
+            pieces.push((len, tile));
             done += len;
         }
 
@@ -287,11 +337,9 @@ impl Backend for M1SimBackend {
         let outcomes = self.pool.run(tiles);
         let mut cycles = 0u64;
         done = 0;
-        for outcome in &outcomes {
-            let len = (n - done).min(64);
-            let tile = len.div_ceil(8) * 8;
+        for (outcome, &(len, half)) in outcomes.iter().zip(&pieces) {
             cycles += outcome.report.cycles;
-            let (ox, oy) = outcome.result.split_at(tile);
+            let (ox, oy) = outcome.result.split_at(half);
             for i in 0..len {
                 xs[done + i] = ox[i] as f32;
                 ys[done + i] = oy[i] as f32;
@@ -434,6 +482,27 @@ mod tests {
         assert_eq!(sx, px);
         assert_eq!(sy, py);
         assert_eq!(sc.unwrap().to_bits(), pc.unwrap().to_bits(), "aggregate cycles differ");
+    }
+
+    #[test]
+    fn megakernel_chunked_jobs_match_native_and_amortize_cycles() {
+        // 2 117 points carry 33 full tiles: two 16-tile megakernel chunks
+        // plus a leftover full tile and a padded ragged tail. Outputs
+        // must equal the native transform exactly for an integer
+        // translation, and the plan chunks amortize the per-tile
+        // context/DMA preamble, so cycles/point beat a one-tile job.
+        let params = [1.0, 0.0, 0.0, 1.0, 7.0, -3.0];
+        let mut m1 = M1SimBackend::new();
+        let mut xs: Vec<f32> = (0..2117).map(|i| ((i % 167) as f32) - 80.0).collect();
+        let mut ys: Vec<f32> = (0..2117).map(|i| ((i % 59) as f32) - 30.0).collect();
+        let (mut nx, mut ny) = (xs.clone(), ys.clone());
+        let cpp_big = m1.apply(&params, &mut xs, &mut ys).unwrap().unwrap();
+        apply_native(&params, &mut nx, &mut ny);
+        assert_eq!(xs, nx);
+        assert_eq!(ys, ny);
+        let mut small = (vec![1.0f32; 64], vec![2.0f32; 64]);
+        let cpp_small = m1.apply(&params, &mut small.0, &mut small.1).unwrap().unwrap();
+        assert!(cpp_big < cpp_small, "megakernel {cpp_big} !< per-tile {cpp_small}");
     }
 
     #[test]

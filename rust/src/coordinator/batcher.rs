@@ -3,6 +3,12 @@
 //! back — the serving technique that lets many small transform requests
 //! share one artifact execution, exactly as the M1 amortized one context
 //! word over many data broadcasts.
+//!
+//! Batching composes with the megakernel tier (§Perf): an M1-backed job
+//! cut here executes its runs of full 64-point tiles as one plan-level
+//! megakernel keyed on `(transform shape, points)` — so same-shape jobs,
+//! within a window and across windows, share a single compiled schedule
+//! from the process-wide megakernel cache.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -750,6 +756,36 @@ mod tests {
             w.observe(0);
         }
         assert_eq!(w.current(), cfg.min_wait);
+    }
+
+    #[test]
+    fn batched_same_shape_jobs_share_one_compiled_megakernel() {
+        // Two batch windows of same-transform sibling requests cut
+        // identical 128-point jobs, so the M1 backend derives the same
+        // megakernel spec from each — and the megakernel cache hands back
+        // literally the same compiled plan (thread-local tier: pointer
+        // equality is stable even if the global FIFO churns underneath).
+        use crate::mapping::{megakernel_for, MegaSpec};
+        let b = Batcher::new(BatcherConfig { max_tile: 128, ..Default::default() });
+        let t = vec![Transform::Translate { tx: 3.0, ty: -1.0 }];
+        let mut windows = Vec::new();
+        for _ in 0..2 {
+            let (p1, r1) = pending(1, 64, t.clone());
+            let (p2, r2) = pending(2, 64, t.clone());
+            windows.push((vec![p1, p2], (r1, r2)));
+        }
+        let jobs: Vec<Vec<TileJob>> = windows
+            .iter_mut()
+            .map(|(w, _)| b.plan(std::mem::take(w), Instant::now(), &metrics()))
+            .collect();
+        assert_eq!(jobs[0].len(), 1, "siblings share one job");
+        assert_eq!(jobs[0][0].points(), 128);
+        assert_eq!(jobs[1][0].points(), 128);
+        assert_eq!(jobs[0][0].params, jobs[1][0].params, "same shape across windows");
+        let spec = MegaSpec::PointTransform { n: 128, m: [64, 0, 0, 64], t: [3, -1], shift: 6 };
+        let first = megakernel_for(&spec).expect("plan shape compiles");
+        let second = megakernel_for(&spec).expect("cached");
+        assert!(Arc::ptr_eq(&first, &second), "one compile per shape across windows");
     }
 
     #[test]

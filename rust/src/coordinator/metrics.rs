@@ -122,6 +122,14 @@ pub struct MetricsSnapshot {
     pub shard_restarts: u64,
     pub tiles_redispatched: u64,
     pub recovery_max_us: u64,
+    /// Process-wide megakernel-cache evictions (§Perf, megakernel tier),
+    /// sampled from [`crate::mapping::megakernel_cache_evictions`] at
+    /// snapshot time — a gauge, not a per-coordinator counter, so an
+    /// unbounded-churn workload (every request a new transform shape)
+    /// is visible instead of silently recompiling. Like `shed_bulk`,
+    /// kept out of the wire health frame (its 11-field stats block is
+    /// pinned); capacity reports read it straight from the snapshot.
+    pub megakernel_evictions: u64,
     pub queue_wait_mean_us: f64,
     pub queue_wait_p99_us: u64,
     pub execute_mean_us: f64,
@@ -185,6 +193,7 @@ impl Metrics {
             shard_restarts: self.shard_restarts.load(Ordering::Relaxed),
             tiles_redispatched: self.tiles_redispatched.load(Ordering::Relaxed),
             recovery_max_us: self.recovery_max_us.load(Ordering::Relaxed),
+            megakernel_evictions: crate::mapping::megakernel_cache_evictions(),
             queue_wait_mean_us: self.queue_wait.mean_us(),
             queue_wait_p99_us: self.queue_wait.quantile_us(0.99),
             execute_mean_us: self.execute.mean_us(),
@@ -208,7 +217,8 @@ impl MetricsSnapshot {
         format!(
             "requests={} responses={} points={} jobs={} mean_batch={:.1}pts errors={}\n\
              admission:  shed={} (bulk={}) rejected={} deadline_missed={} closed={}\n\
-             supervision: crashes={} restarts={} redispatched={} recovery_max={}us\n\
+             supervision: crashes={} restarts={} redispatched={} recovery_max={}us \
+             megakernel_evictions={}\n\
              queue_wait: mean={:.1}us p99<={}us\n\
              execute:    mean={:.1}us p50<={}us p99<={}us\n\
              simulated M1 cycles={}",
@@ -227,6 +237,7 @@ impl MetricsSnapshot {
             self.shard_restarts,
             self.tiles_redispatched,
             self.recovery_max_us,
+            self.megakernel_evictions,
             self.queue_wait_mean_us,
             self.queue_wait_p99_us,
             self.execute_mean_us,
@@ -437,6 +448,17 @@ mod tests {
         assert_eq!(s.recovery_max_us, 450);
         assert!(s.render().contains("crashes=3 restarts=3 redispatched=7 recovery_max=450us"));
         assert!(s.render().contains("closed=2"));
+    }
+
+    #[test]
+    fn megakernel_eviction_gauge_is_sampled_into_snapshots() {
+        // The gauge mirrors a process-wide counter (other tests may bump
+        // it concurrently), so pin the render wiring and monotonicity
+        // rather than an absolute value.
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert!(s.render().contains("megakernel_evictions="));
+        assert!(m.snapshot().megakernel_evictions >= s.megakernel_evictions);
     }
 
     #[test]

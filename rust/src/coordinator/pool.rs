@@ -93,7 +93,8 @@ use std::time::Instant;
 
 use super::faults::{FaultAction, FaultPlan};
 use crate::mapping::{
-    runner::run_routine_on, runner::stage_routine3_on, MappedRoutine, PointTransformMapping,
+    megakernel_for, run_plan, runner::run_routine_on, runner::stage_routine3_on, MappedRoutine,
+    MegaSpec, PointTransformMapping, StreamedPointTransformMapping, StreamedTiledMapping,
     VecVecMapping, RESULT_ADDR,
 };
 use crate::morphosys::{AluOp, ExecutionReport, M1System};
@@ -109,6 +110,15 @@ pub enum RoutineSpec {
     PointTransform { n: usize, m: [i16; 4], t: [i16; 2], shift: u8 },
     /// §5.1 element-wise vector-vector op on one tile.
     VecVec { n: usize, op: AluOp },
+    /// Plan-level point transform (§Perf, megakernel tier): `n` a
+    /// multiple of 64, the whole multi-tile plan compiled into one
+    /// megakernel — context loaded once, DMA streams batched across tile
+    /// boundaries. Result layout is `[all x'][all y']` (2·`n` elements),
+    /// unlike the per-tile spec's per-tile interleaving.
+    PointTransformPlan { n: usize, m: [i16; 4], t: [i16; 2], shift: u8 },
+    /// Plan-level element-wise vector-vector op over `n` (multiple of
+    /// 64) elements, megakernel tier.
+    VecVecPlan { n: usize, op: AluOp },
 }
 
 impl RoutineSpec {
@@ -118,6 +128,23 @@ impl RoutineSpec {
                 PointTransformMapping { n, m, t, shift }.compile()
             }
             RoutineSpec::VecVec { n, op } => VecVecMapping { n, op }.compile(),
+            RoutineSpec::PointTransformPlan { n, m, t, shift } => {
+                StreamedPointTransformMapping { n, m, t, shift }.compile()
+            }
+            RoutineSpec::VecVecPlan { n, op } => StreamedTiledMapping { n, op }.compile(),
+        }
+    }
+
+    /// The megakernel cache key for plan-level specs. `None` for the
+    /// per-tile specs, which stay on the scheduled/fused tier (their
+    /// per-tile cycle accounting is part of the determinism contract).
+    fn mega_spec(&self) -> Option<MegaSpec> {
+        match *self {
+            RoutineSpec::PointTransformPlan { n, m, t, shift } => {
+                Some(MegaSpec::PointTransform { n, m, t, shift })
+            }
+            RoutineSpec::VecVecPlan { n, op } => Some(MegaSpec::VecVec { n, op }),
+            RoutineSpec::PointTransform { .. } | RoutineSpec::VecVec { .. } => None,
         }
     }
 }
@@ -227,6 +254,18 @@ impl Shard {
     }
 
     fn run_tile(&mut self, tile: &TileRequest) -> TileOutcome {
+        // Plan-level specs take the megakernel tier when the shape has a
+        // plan-level program (compiled once process-wide, shared across
+        // shards); otherwise they fall back to the scheduled tier over
+        // the same streamed routine — bit-identical results either way,
+        // pinned by the conformance suite.
+        if let Some(mega) = tile.spec.mega_spec() {
+            if let Some(plan) = megakernel_for(&mega) {
+                self.sys.reset_chip();
+                let out = run_plan(&mut self.sys, &plan, &tile.u, tile.v.as_deref());
+                return TileOutcome { result: out.result, report: out.report };
+            }
+        }
         let routine = self.routine_for(tile.spec);
         self.sys.reset_chip();
         let out = run_routine_on(&mut self.sys, &routine, &tile.u, tile.v.as_deref());
@@ -812,6 +851,59 @@ mod tests {
             assert_eq!(xp[i], xs[i] + 5);
             assert_eq!(yp[i], ys[i] - 3);
             assert_eq!(out[1].result[i], xs[i] - ys[i]);
+        }
+    }
+
+    #[test]
+    fn plan_level_specs_run_on_the_megakernel_tier() {
+        // One VecVecPlan request covers what four per-tile requests
+        // would, and a PointTransformPlan returns the plan layout
+        // ([all x'][all y']) with the same transformed values.
+        let n = 256;
+        let u: Vec<i16> = (0..n as i16).collect();
+        let v: Vec<i16> = (0..n as i16).map(|i| 2 * i - 100).collect();
+        let mut pool = TilePool::new(1);
+        let sum = pool.run(vec![TileRequest {
+            spec: RoutineSpec::VecVecPlan { n, op: AluOp::Add },
+            u: u.clone(),
+            v: Some(v.clone()),
+        }]);
+        let expected: Vec<i16> = u.iter().zip(&v).map(|(a, b)| a.wrapping_add(*b)).collect();
+        assert_eq!(sum[0].result, expected);
+
+        let xf = pool.run(vec![TileRequest {
+            spec: RoutineSpec::PointTransformPlan { n, m: [1, 0, 0, 1], t: [5, -3], shift: 0 },
+            u: u.clone(),
+            v: Some(v.clone()),
+        }]);
+        let (xp, yp) = xf[0].result.split_at(n);
+        for i in 0..n {
+            assert_eq!(xp[i], u[i] + 5, "x'[{i}]");
+            assert_eq!(yp[i], v[i] - 3, "y'[{i}]");
+        }
+    }
+
+    #[test]
+    fn plan_level_specs_are_bit_identical_across_shard_counts() {
+        let mk = |k: usize| {
+            let u: Vec<i16> = (0..128).map(|i| (i + 64 * k) as i16).collect();
+            let v: Vec<i16> = (0..128).map(|i| (i as i16) - 7 * k as i16).collect();
+            TileRequest {
+                spec: RoutineSpec::PointTransformPlan {
+                    n: 128,
+                    m: [2, -1, 1, 2],
+                    t: [9, -4],
+                    shift: 0,
+                },
+                u,
+                v: Some(v),
+            }
+        };
+        let tiles: Vec<TileRequest> = (0..6).map(mk).collect();
+        let baseline = TilePool::with_mode(1, true).run(tiles.clone());
+        for shards in [2usize, 4] {
+            let out = TilePool::with_mode(shards, true).run(tiles.clone());
+            assert_identical(&out, &baseline, "plan specs");
         }
     }
 

@@ -33,5 +33,8 @@ pub use routines::{
     MappedRoutine, MatMulMapping, Point3TransformMapping, PointTransformMapping,
     VecScalarMapping, VecVecMapping,
 };
-pub use runner::{run_routine, RoutineOutput};
-pub use streamed::{StreamedTiledMapping, TiledVecVecMapping};
+pub use runner::{
+    megakernel_cache_evictions, megakernel_for, run_plan, run_routine, CompiledMegakernel,
+    MegaSpec, RoutineOutput,
+};
+pub use streamed::{StreamedPointTransformMapping, StreamedTiledMapping, TiledVecVecMapping};

@@ -305,7 +305,10 @@ pub struct PointTransformMapping {
 
 impl PointTransformMapping {
     /// Context-word schedule for one output coordinate `r` (0 = x', 1 = y').
-    fn coord_words(&self, r: usize) -> Vec<u32> {
+    /// Crate-visible so the plan-level streamed mapping
+    /// ([`super::streamed::StreamedPointTransformMapping`]) shares the
+    /// exact word encodings — one source of truth for the transform math.
+    pub(crate) fn coord_words(&self, r: usize) -> Vec<u32> {
         let mut words = Vec::new();
         // acc = m[r][0]·x  (+ m[r][1]·y), final step latches to r0.
         let w0 = ContextWord::cmula(self.m[2 * r], true);

@@ -3,13 +3,15 @@
 //! result.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::morphosys::{BroadcastSchedule, ExecutionReport, M1System, Program};
+use crate::morphosys::{AluOp, BroadcastSchedule, ExecutionReport, M1System, Megakernel, Program};
 
 use super::layout::{RESULT_ADDR, U_ADDR, V_ADDR, W_ADDR};
 use super::routines::MappedRoutine;
+use super::streamed::{StreamedPointTransformMapping, StreamedTiledMapping, TILE};
 
 /// Result of running a mapped routine.
 #[derive(Debug, Clone)]
@@ -94,6 +96,155 @@ fn shared_schedule_for(program: &Program) -> (Arc<Program>, Option<Arc<Broadcast
     let compiled = BroadcastSchedule::compile(program).map(Arc::new);
     map.insert(key.clone(), compiled.clone());
     (key, compiled)
+}
+
+/// Transform shape of a whole-request tile plan — the megakernel cache
+/// key (§Perf, megakernel tier). Two requests with the same spec differ
+/// only in data and share one compiled megakernel; `n` is part of the
+/// shape because the emitted program unrolls over the tile count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MegaSpec {
+    /// Element-wise vector-vector plan (`StreamedTiledMapping`).
+    VecVec { n: usize, op: AluOp },
+    /// 2-D point-transform plan (`StreamedPointTransformMapping`).
+    PointTransform { n: usize, m: [i16; 4], t: [i16; 2], shift: u8 },
+}
+
+impl MegaSpec {
+    /// Can this shape compile to a plan-level program at all? (Multiples
+    /// of one full tile only; immediate-class vecvec ops and out-of-range
+    /// translations would fail the mapping's own asserts.)
+    fn compilable(&self) -> bool {
+        match *self {
+            MegaSpec::VecVec { n, op } => n >= TILE && n % TILE == 0 && !op.uses_immediate(),
+            MegaSpec::PointTransform { n, t, .. } => {
+                n >= TILE
+                    && n % TILE == 0
+                    && (-128..=127).contains(&t[0])
+                    && (-128..=127).contains(&t[1])
+            }
+        }
+    }
+
+    /// Compile the plan-level routine for this shape.
+    fn compile_routine(&self) -> MappedRoutine {
+        match *self {
+            MegaSpec::VecVec { n, op } => StreamedTiledMapping { n, op }.compile(),
+            MegaSpec::PointTransform { n, m, t, shift } => {
+                StreamedPointTransformMapping { n, m, t, shift }.compile()
+            }
+        }
+    }
+}
+
+/// A whole request compiled once: the plan-level routine (program +
+/// staging spec) and its lowered [`Megakernel`].
+#[derive(Debug)]
+pub struct CompiledMegakernel {
+    pub routine: MappedRoutine,
+    pub kernel: Megakernel,
+}
+
+std::thread_local! {
+    // Per-thread fast path over [`GLOBAL_MEGAKERNELS`], mirroring
+    // [`SCHEDULES`]: a hit costs one probe and no locking. Holding the
+    // Arc keeps a shard's hot shapes alive even if the global FIFO
+    // evicts them under churn.
+    static MEGAKERNELS: RefCell<HashMap<MegaSpec, Arc<CompiledMegakernel>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Bound on distinct cached megakernel shapes. Deliberately tighter than
+/// [`SCHEDULE_CACHE_MAX`]: each entry owns a whole unrolled plan (program
+/// + schedule + megakernel steps scale with `n / 64`), and any real
+/// workload cycles through a handful of `(transform-shape, n)` pairs.
+const MEGAKERNEL_CACHE_MAX: usize = 64;
+
+/// Evictions from the global megakernel cache since process start —
+/// surfaced as a coordinator metrics gauge so an unbounded-churn workload
+/// (every request a new shape) is visible instead of silent.
+static MEGA_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// FIFO-bounded cross-shard megakernel cache: compile each shape once
+/// process-wide, evict the oldest shape (with a counted eviction) when
+/// the bound is hit — unlike the schedule caches' clear-on-overflow,
+/// steady-state working sets survive a one-off burst of odd shapes.
+struct MegaCache {
+    map: HashMap<MegaSpec, Arc<CompiledMegakernel>>,
+    order: VecDeque<MegaSpec>,
+}
+
+static GLOBAL_MEGAKERNELS: OnceLock<Mutex<MegaCache>> = OnceLock::new();
+
+/// Total megakernel-cache evictions so far (the `Metrics` gauge source).
+pub fn megakernel_cache_evictions() -> u64 {
+    MEGA_EVICTIONS.load(Ordering::Relaxed)
+}
+
+/// Look up (or compile and cache) the megakernel for a whole-request tile
+/// plan: thread-local probe first, then the cross-shard FIFO cache.
+/// Returns `None` for shapes that have no plan-level program (ragged
+/// sizes, immediate-class vecvec ops) — callers fall back to the
+/// per-tile path.
+pub fn megakernel_for(spec: &MegaSpec) -> Option<Arc<CompiledMegakernel>> {
+    if !spec.compilable() {
+        return None;
+    }
+    MEGAKERNELS.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        if let Some(hit) = cache.get(spec) {
+            return Some(hit.clone());
+        }
+        if cache.len() > MEGAKERNEL_CACHE_MAX {
+            cache.clear(); // thread-local tier: crude bound, like SCHEDULES
+        }
+        let compiled = shared_megakernel_for(spec)?;
+        cache.insert(*spec, compiled.clone());
+        Some(compiled)
+    })
+}
+
+/// Consult (or fill) the cross-shard megakernel cache. Compilation
+/// happens under the lock, so each shape compiles exactly once per
+/// process no matter how many shards race for it.
+fn shared_megakernel_for(spec: &MegaSpec) -> Option<Arc<CompiledMegakernel>> {
+    let global = GLOBAL_MEGAKERNELS
+        .get_or_init(|| Mutex::new(MegaCache { map: HashMap::new(), order: VecDeque::new() }));
+    let mut cache = global.lock().unwrap();
+    if let Some(hit) = cache.map.get(spec) {
+        return Some(hit.clone());
+    }
+    let routine = spec.compile_routine();
+    // Plan-level programs are straight-line by construction, so this
+    // only fails if the emitter ever grew control flow — in which case
+    // the caller's per-tile fallback keeps everything correct.
+    let kernel = Megakernel::compile(&routine.program)?;
+    while cache.map.len() >= MEGAKERNEL_CACHE_MAX {
+        let oldest = cache.order.pop_front().expect("cache order tracks the map");
+        cache.map.remove(&oldest);
+        MEGA_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+    }
+    let compiled = Arc::new(CompiledMegakernel { routine, kernel });
+    cache.map.insert(*spec, compiled.clone());
+    cache.order.push_back(*spec);
+    Some(compiled)
+}
+
+/// Run a whole request through its compiled megakernel (§Perf,
+/// megakernel tier): stage inputs once, execute the single plan-level
+/// program, read the whole result back. Bit-identical to running the
+/// same plan through the interpreter or the scheduled/fused tiers —
+/// pinned by the conformance suite in both DMA modes.
+pub fn run_plan(
+    sys: &mut M1System,
+    plan: &CompiledMegakernel,
+    u: &[i16],
+    v: Option<&[i16]>,
+) -> RoutineOutput {
+    stage_routine3_on(sys, &plan.routine, u, v, None);
+    let report = sys.run_megakernel(&plan.routine.program, &plan.kernel);
+    let result = sys.mem.load_elements(RESULT_ADDR, plan.routine.result_elems);
+    RoutineOutput { result, report }
 }
 
 /// Stage `u` (and optionally `v`) per the routine's input spec, stage the
@@ -489,6 +640,68 @@ mod tests {
                 "threads must share the single cross-shard compile"
             );
         }
+    }
+
+    #[test]
+    fn run_plan_matches_the_scheduled_tier_bit_for_bit() {
+        // The megakernel entry point vs the cached scheduled/fused path,
+        // on the same plan-level routine: identical results and identical
+        // precomputed reports, in both DMA modes, for both plan shapes.
+        let n = 256;
+        let u: Vec<i16> = (0..n as i16).map(|i| 7 * i - 300).collect();
+        let v: Vec<i16> = (0..n as i16).map(|i| 11 - 3 * i).collect();
+        for spec in [
+            MegaSpec::VecVec { n, op: AluOp::Add },
+            MegaSpec::PointTransform { n, m: [3, -2, 1, 4], t: [17, -9], shift: 2 },
+        ] {
+            let plan = megakernel_for(&spec).expect("plan shapes compile");
+            for async_dma in [false, true] {
+                let mut mega_sys = M1System::with_dma_mode(async_dma);
+                let mega = run_plan(&mut mega_sys, &plan, &u, Some(&v));
+                let mut sched_sys = M1System::with_dma_mode(async_dma);
+                let sched = run_routine_on(&mut sched_sys, &plan.routine, &u, Some(&v));
+                assert_eq!(mega.result, sched.result, "{spec:?} async={async_dma}");
+                assert_eq!(mega.report.cycles, sched.report.cycles, "{spec:?}");
+                assert_eq!(mega.report.slots, sched.report.slots, "{spec:?}");
+                assert_eq!(mega.report.executed, sched.report.executed, "{spec:?}");
+                assert_eq!(mega.report.broadcasts, sched.report.broadcasts, "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn megakernel_cache_shares_one_compile_per_shape() {
+        // Batched sibling requests of one shape dispatch through one
+        // compiled plan (Arc-shared), and uncompilable shapes answer None.
+        let spec = MegaSpec::VecVec { n: 832, op: AluOp::Xor };
+        let first = megakernel_for(&spec).expect("compilable shape");
+        let again = megakernel_for(&spec).expect("compilable shape");
+        assert!(Arc::ptr_eq(&first, &again), "same-shape requests must share the compile");
+        assert_eq!(first.kernel.fused_tiles(), 832 / 64);
+        assert!(megakernel_for(&MegaSpec::VecVec { n: 100, op: AluOp::Add }).is_none());
+        assert!(megakernel_for(&MegaSpec::VecVec { n: 64, op: AluOp::Cmul }).is_none());
+        assert!(megakernel_for(&MegaSpec::PointTransform {
+            n: 64,
+            m: [1, 0, 0, 1],
+            t: [1000, 0],
+            shift: 0
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn megakernel_cache_is_bounded_and_counts_evictions() {
+        // Flood the cache with more distinct shapes than the bound: the
+        // global FIFO must evict (counted) instead of growing without
+        // bound. Shapes here are unique to this test (op Sub over odd
+        // multiples) so parallel tests only ever add to the counter.
+        let before = megakernel_cache_evictions();
+        for k in 1..=70usize {
+            let spec = MegaSpec::VecVec { n: 64 * k, op: AluOp::Sub };
+            assert!(megakernel_for(&spec).is_some(), "n={}", 64 * k);
+        }
+        let evicted = megakernel_cache_evictions() - before;
+        assert!(evicted >= 6, "70 shapes through a 64-entry cache evicted only {evicted}");
     }
 
     #[test]

@@ -43,7 +43,7 @@ use crate::morphosys::rc_array::{AluOp, ContextWord, ARRAY_DIM};
 use crate::morphosys::tinyrisc::{Instruction, Program, Reg};
 
 use super::layout::{CTX_ADDR, RESULT_ADDR, U_ADDR, V_ADDR};
-use super::routines::MappedRoutine;
+use super::routines::{MappedRoutine, PointTransformMapping};
 
 /// Elements per array tile (the full 8×8 RC array).
 pub const TILE: usize = 64;
@@ -158,6 +158,112 @@ impl StreamedTiledMapping {
             v_elems: Some(self.n),
             w_elems: None,
             result_elems: self.n,
+            predicted_cycles,
+        }
+    }
+}
+
+/// The streamed multi-tile 2-D point transformation (n a multiple of 64):
+/// `q = ((M · p) >> shift) + t` over the whole request as **one** program,
+/// under the same set ping-pong as [`StreamedTiledMapping`] — the
+/// plan-level emit path the megakernel tier compiles (§Perf, megakernel
+/// tier). The per-coordinate context-word schedules are exactly
+/// [`PointTransformMapping::coord_words`] (one source of truth for the
+/// transform math), loaded **once** for the whole plan; every tile then
+/// pays only its DMA fills, 2·`per` broadcasts per column, and two result
+/// drains — no per-tile routine dispatch, context staging, or program
+/// setup.
+///
+/// Result layout: all `n` x' coordinates at [`RESULT_ADDR`], then all `n`
+/// y' — the whole-request analogue of the per-tile mapping's
+/// `[x'][y']` halves.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamedPointTransformMapping {
+    /// Number of points; a multiple of 64.
+    pub n: usize,
+    /// Row-major 2×2 matrix, fixed-point `Q(shift)`, i8 range.
+    pub m: [i16; 4],
+    /// Translation, applied after the shift (plain integer).
+    pub t: [i16; 2],
+    /// Fixed-point shift for the matrix product.
+    pub shift: u8,
+}
+
+impl StreamedPointTransformMapping {
+    pub fn compile(&self) -> MappedRoutine {
+        assert!(self.n >= TILE && self.n % TILE == 0, "n must be a multiple of {TILE}");
+        assert!(
+            (-128..=127).contains(&self.t[0]) && (-128..=127).contains(&self.t[1]),
+            "translation components must fit the 8-bit context immediate"
+        );
+        let tiles = self.n / TILE;
+        let per_tile = PointTransformMapping {
+            n: TILE,
+            m: self.m,
+            t: self.t,
+            shift: self.shift,
+        };
+        let x_sched = per_tile.coord_words(0);
+        let y_sched = per_tile.coord_words(1);
+        let per = x_sched.len(); // steps per coordinate (3 or 4)
+        let mut ctx_words = Vec::new();
+        for (w, raw) in x_sched.iter().chain(y_sched.iter()).enumerate() {
+            ctx_words.push((CTX_ADDR + w, *raw));
+        }
+
+        let mut prog = Vec::new();
+        // The whole plan's context words in one transfer, once.
+        emit_addr(&mut prog, Reg(3), CTX_ADDR);
+        prog.push(Instruction::Ldctxt {
+            rs: Reg(3),
+            block: Block::Column,
+            plane: 0,
+            word: 0,
+            count: 2 * per,
+        });
+
+        // Same software pipeline as the streamed vecvec plan: tile t
+        // computes from set t mod 2 while tile t+1's fills stream into
+        // the other set. X coords ride bank A, Y coords bank B; x'/y'
+        // results land in the same set's banks A/B at OUT_FB and drain
+        // into the [all x'][all y'] halves of the result region.
+        emit_tile_load(&mut prog, StreamedTiledMapping::tile_set(0), 0);
+        let n_words = self.n / 2;
+        for t in 0..tiles {
+            let set = StreamedTiledMapping::tile_set(t);
+            if t + 1 < tiles {
+                emit_tile_load(&mut prog, StreamedTiledMapping::tile_set(t + 1), t + 1);
+            }
+            for c in 0..ARRAY_DIM {
+                let chunk = c * ARRAY_DIM;
+                for (base, out_bank) in [(0, Bank::A), (per, Bank::B)] {
+                    // CMUL·x from bank A, CMUL·y from bank B, then
+                    // shift/add (operand bus unused by the
+                    // register-sourced steps).
+                    prog.push(Instruction::Sbcb { plane: 0, cw: base, col: c, set, bank: Bank::A, addr: chunk });
+                    prog.push(Instruction::Sbcb { plane: 0, cw: base + 1, col: c, set, bank: Bank::B, addr: chunk });
+                    for s in 2..per {
+                        prog.push(Instruction::Sbcb { plane: 0, cw: base + s, col: c, set, bank: Bank::A, addr: chunk });
+                    }
+                    prog.push(Instruction::Wfbi { col: c, set, bank: out_bank, addr: OUT_FB + chunk });
+                }
+            }
+            emit_addr(&mut prog, Reg(5), RESULT_ADDR + t * TILE_WORDS);
+            prog.push(Instruction::Stfb { rs: Reg(5), set, bank: Bank::A, words: TILE_WORDS, fb_addr: OUT_FB });
+            emit_addr(&mut prog, Reg(6), RESULT_ADDR + n_words + t * TILE_WORDS);
+            prog.push(Instruction::Stfb { rs: Reg(6), set, bank: Bank::B, words: TILE_WORDS, fb_addr: OUT_FB });
+        }
+
+        let program = Program::new(prog);
+        let predicted_cycles = program.paper_cycles();
+        MappedRoutine {
+            name: format!("streamed-pointxf-{}", self.n),
+            program,
+            ctx_words,
+            u_elems: self.n,
+            v_elems: Some(self.n),
+            w_elems: None,
+            result_elems: 2 * self.n,
             predicted_cycles,
         }
     }
@@ -368,6 +474,68 @@ mod tests {
         let streamed = StreamedTiledMapping { n: 192, op: AluOp::Add }.compile();
         assert_eq!(tiled.program, streamed.program);
         assert_eq!(tiled.ctx_words, streamed.ctx_words);
+    }
+
+    #[test]
+    fn streamed_point_transform_matches_per_tile_mapping_in_both_dma_modes() {
+        // The plan-level program must agree with the per-64-point
+        // PointTransformMapping on every tile: same transform words, same
+        // math — only the dispatch granularity differs. Result layout is
+        // [all x'][all y'] vs per-tile [x'][y'] halves.
+        use crate::mapping::PointTransformMapping;
+        let n = 192;
+        let (m, t, shift) = ([3i16, -2, 1, 4], [17i16, -9], 2u8);
+        let xs: Vec<i16> = (0..n as i16).map(|i| 5 * i - 400).collect();
+        let ys: Vec<i16> = (0..n as i16).map(|i| 300 - 3 * i).collect();
+        let plan = StreamedPointTransformMapping { n, m, t, shift }.compile();
+        let tile_routine = PointTransformMapping { n: TILE, m, t, shift }.compile();
+        for async_dma in [false, true] {
+            let got = run_routine_on(
+                &mut M1System::with_dma_mode(async_dma),
+                &plan,
+                &xs,
+                Some(&ys),
+            );
+            assert_eq!(got.result.len(), 2 * n);
+            for tile in 0..n / TILE {
+                let span = tile * TILE..(tile + 1) * TILE;
+                let per = run_routine_on(
+                    &mut M1System::with_dma_mode(async_dma),
+                    &tile_routine,
+                    &xs[span.clone()],
+                    Some(&ys[span.clone()]),
+                );
+                assert_eq!(
+                    &got.result[span.clone()],
+                    &per.result[..TILE],
+                    "x' tile {tile} async={async_dma}"
+                );
+                assert_eq!(
+                    &got.result[n + tile * TILE..n + (tile + 1) * TILE],
+                    &per.result[TILE..],
+                    "y' tile {tile} async={async_dma}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_point_transform_shares_the_per_tile_context_words() {
+        // One source of truth: the plan's context-word schedule is exactly
+        // the per-tile mapping's.
+        use crate::mapping::PointTransformMapping;
+        let (m, t) = ([1i16, 0, 0, 1], [3i16, 4]);
+        for shift in [0u8, 6] {
+            let plan = StreamedPointTransformMapping { n: 128, m, t, shift }.compile();
+            let tile = PointTransformMapping { n: TILE, m, t, shift }.compile();
+            assert_eq!(plan.ctx_words, tile.ctx_words, "shift={shift}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 64")]
+    fn streamed_point_transform_ragged_sizes_rejected() {
+        StreamedPointTransformMapping { n: 100, m: [1, 0, 0, 1], t: [0, 0], shift: 0 }.compile();
     }
 
     #[test]

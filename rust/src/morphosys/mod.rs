@@ -30,14 +30,17 @@
 //! | **interpreter** ([`M1System::run`]) | reference executor + slot accounting | reference executor + [`timing`]'s `AsyncDma` issue model |
 //! | **scheduled** ([`M1System::run_program`] with a [`BroadcastSchedule`]) | pre-decoded steps, accounting precomputed at compile time | same steps; async issue/readiness accounting **also precomputed** (§Perf PR 5) |
 //! | **fused** (`Step::FusedRun` inside a schedule) | broadcast/write-back runs as 8-wide SIMD lane kernels | identical — fusion is DMA-mode-independent |
+//! | **megakernel** ([`M1System::run_megakernel`] with a [`Megakernel`]) | whole tile plan as one lowered stream: register-free DMA loads, one 64-lane kernel call per tile (AVX2 under `avx2-kernels`) | identical steps; the wrapped schedule's precomputed async accounting |
 //!
 //! Dispatch: `run_program` takes the scheduled/fused tier whenever a
-//! schedule is supplied and the system is not tracing; the DMA mode only
-//! selects which precomputed report is returned. Programs with branches
-//! never compile to schedules; tracing systems always interpret. The
-//! async accounting is compile-time computable because every latency
-//! input of the issue model is a static instruction field — the only
-//! dynamic hazard in the ISA is control flow.
+//! schedule is supplied and the system is not tracing;
+//! `run_megakernel` takes the megakernel tier under the same tracing
+//! rule. The DMA mode only selects which precomputed report is
+//! returned. Programs with branches never compile to schedules (or
+//! megakernels); tracing systems always interpret. The async
+//! accounting is compile-time computable because every latency input
+//! of the issue model is a static instruction field — the only dynamic
+//! hazard in the ISA is control flow.
 
 pub mod context_memory;
 pub mod dma;
@@ -52,7 +55,7 @@ pub mod tinyrisc;
 
 pub use frame_buffer::{Bank, FrameBuffer, Set};
 pub use rc_array::{AluOp, ContextWord, RcArray};
-pub use schedule::BroadcastSchedule;
+pub use schedule::{BroadcastSchedule, Megakernel};
 pub use snapshot::{fnv1a64, SnapshotError};
 pub use system::{ExecutionReport, M1System};
 pub use tinyrisc::{Instruction, Program, Reg};

@@ -215,6 +215,104 @@ fn mul8(a: &[i16; LANES], b: &[i16; LANES]) -> [i16; LANES] {
     }
 }
 
+/// Whole-tile form of [`eval8`]: evaluate one accumulator-free ALU
+/// operation across all 64 lanes of an 8×8 tile at once (§Perf,
+/// megakernel tier). `a`/`b` hold the tile's two operand-bus spans in
+/// frame-buffer order (column-major: lane `c·8 + l` is column `c`,
+/// row `l`).
+///
+/// Only accumulator-free ops are eligible (the megakernel executor's
+/// tile fast path excludes `Mula` and `Nop` before calling here), so no
+/// accumulator state flows in or out. With the `avx2-kernels` feature
+/// the dominant `Add`/`Sub`/`Mul`/`Cmul` ops take a runtime-detected
+/// 16-lane AVX2 path committing two 8-lane rows per step; every other
+/// op — and every non-AVX2 host — goes through eight [`eval8`] row
+/// calls. Bit-for-bit identical to 64 scalar [`eval`] calls on every
+/// path, pinned by `eval_tile_matches_eval8_rows` below and the
+/// megakernel conformance sweep.
+pub fn eval_tile(
+    op: AluOp,
+    a: &[i16; LANES * LANES],
+    b: &[i16; LANES * LANES],
+    imm: i16,
+) -> [i16; LANES * LANES] {
+    debug_assert!(
+        !matches!(op, AluOp::Mula | AluOp::Nop),
+        "eval_tile requires an accumulator-free, output-writing op"
+    );
+    #[cfg(all(target_arch = "x86_64", feature = "avx2-kernels"))]
+    {
+        if matches!(op, AluOp::Add | AluOp::Sub | AluOp::Mul | AluOp::Cmul)
+            && std::is_x86_feature_detected!("avx2")
+        {
+            // SAFETY: AVX2 support was just verified at run time.
+            return unsafe { avx2::eval_tile(op, a, b, imm) };
+        }
+    }
+    eval_tile_rows(op, a, b, imm)
+}
+
+/// Portable reference tile kernel: eight [`eval8`] row evaluations with a
+/// zero accumulator (sound for every accumulator-free op — the
+/// accumulator never feeds their outputs and passes through unchanged).
+fn eval_tile_rows(
+    op: AluOp,
+    a: &[i16; LANES * LANES],
+    b: &[i16; LANES * LANES],
+    imm: i16,
+) -> [i16; LANES * LANES] {
+    let zero_acc = [0i32; LANES];
+    let mut out = [0i16; LANES * LANES];
+    for r in 0..LANES {
+        let span = r * LANES..(r + 1) * LANES;
+        let ra: &[i16; LANES] = a[span.clone()].try_into().unwrap();
+        let rb: &[i16; LANES] = b[span.clone()].try_into().unwrap();
+        let (row, _) = eval8(op, ra, rb, imm, &zero_acc);
+        out[span].copy_from_slice(&row);
+    }
+    out
+}
+
+/// Runtime-detected AVX2 tile kernels (§Perf, megakernel tier): four
+/// 256-bit vector operations cover the whole 64-lane tile, two 8-lane
+/// rows per step. The wrapping 16-bit semantics of `vpaddw`/`vpsubw`/
+/// `vpmullw` match the scalar [`eval`] reference exactly.
+#[cfg(all(target_arch = "x86_64", feature = "avx2-kernels"))]
+mod avx2 {
+    use super::{AluOp, LANES};
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Callers must verify AVX2 availability first
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn eval_tile(
+        op: AluOp,
+        a: &[i16; LANES * LANES],
+        b: &[i16; LANES * LANES],
+        imm: i16,
+    ) -> [i16; LANES * LANES] {
+        let mut out = [0i16; LANES * LANES];
+        let splat = _mm256_set1_epi16(imm);
+        for step in 0..4 {
+            // Two 8-lane rows per 256-bit vector; the unaligned
+            // load/store intrinsics accept any address.
+            let va = _mm256_loadu_si256(a.as_ptr().add(16 * step).cast());
+            let vb = _mm256_loadu_si256(b.as_ptr().add(16 * step).cast());
+            let v = match op {
+                AluOp::Add => _mm256_add_epi16(va, vb),
+                AluOp::Sub => _mm256_sub_epi16(va, vb),
+                AluOp::Mul => _mm256_mullo_epi16(va, vb),
+                // Cmul keeps the low 16 bits of imm × A, same as Mul
+                // against a splatted immediate.
+                _ => _mm256_mullo_epi16(va, splat),
+            };
+            _mm256_storeu_si256(out.as_mut_ptr().add(16 * step).cast(), v);
+        }
+        out
+    }
+}
+
 /// Explicit SSE2 kernels for the dominant fused ops. SSE2 is part of the
 /// x86_64 baseline, so no runtime feature detection is needed; the
 /// intrinsics' wrapping 16-bit semantics (`paddw`, `pmullw`) match the
@@ -379,6 +477,45 @@ mod tests {
                 let r = eval(op, a[l], b[l], imm, acc[l]);
                 assert_eq!(out[l], r.out, "{op:?} out lane {l}");
                 assert_eq!(acc_out[l], r.acc, "{op:?} acc lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_tile_matches_eval8_rows() {
+        // The 64-lane tile kernel (including the runtime-detected AVX2
+        // path when built with `avx2-kernels`) must be bit-identical to
+        // eight 8-lane rows — and therefore to 64 scalar evals — for
+        // every accumulator-free op across wraparound-heavy operands.
+        use crate::testkit::Rng;
+        let mut rng = Rng::new(0x71E5);
+        for case in 0..200 {
+            let op = AluOp::from_bits(rng.below(16) as u8);
+            if matches!(op, AluOp::Mula | AluOp::Nop) {
+                continue;
+            }
+            let mut a = [0i16; LANES * LANES];
+            let mut b = [0i16; LANES * LANES];
+            for l in 0..LANES * LANES {
+                a[l] = rng.i16();
+                b[l] = rng.i16();
+            }
+            // Seed the wraparound edges into the first row.
+            a[..8].copy_from_slice(&[i16::MAX, i16::MIN, -1, 0, 1, 300, -300, 0x7F00]);
+            b[..8].copy_from_slice(&[1, -1, i16::MIN, i16::MAX, 300, 300, 300, 0x100]);
+            let imm = rng.range_i64(-128, 127) as i16;
+            let tile = eval_tile(op, &a, &b, imm);
+            let zero_acc = [0i32; LANES];
+            for r in 0..LANES {
+                let ra: &[i16; LANES] = a[r * LANES..(r + 1) * LANES].try_into().unwrap();
+                let rb: &[i16; LANES] = b[r * LANES..(r + 1) * LANES].try_into().unwrap();
+                let (row, _) = eval8(op, ra, rb, imm, &zero_acc);
+                for l in 0..LANES {
+                    let i = r * LANES + l;
+                    assert_eq!(tile[i], row[l], "case {case}: {op:?} lane {i}");
+                    let scalar = eval(op, a[i], b[i], imm, 0);
+                    assert_eq!(tile[i], scalar.out, "case {case}: {op:?} scalar lane {i}");
+                }
             }
         }
     }

@@ -285,6 +285,31 @@ impl RcArray {
         }
     }
 
+    /// Commit a whole tile's ALU results column-by-column (§Perf,
+    /// megakernel tier): lane `l` of column `c` latches `res[c·8 + l]`,
+    /// the express latch releases, and the accumulator resets or is left
+    /// alone. Bit-for-bit what eight [`RcArray::broadcast_lanes`] column
+    /// calls commit for a context word on the megakernel's fast-tile
+    /// shape — bus/bus operands, `reg_write == 0`, no `express_write`, no
+    /// `acc_accumulate`, an op that is neither `Nop` nor `Mula` (such ops
+    /// overwrite the outputs and pass the accumulator through `eval8`
+    /// unchanged) — pinned by `commit_tile_columns_matches_lane_broadcasts`.
+    pub(crate) fn commit_tile_columns(
+        &mut self,
+        res: &[i16; ARRAY_DIM * ARRAY_DIM],
+        acc_reset: bool,
+    ) {
+        for l in 0..ARRAY_DIM {
+            for c in 0..ARRAY_DIM {
+                self.out[l][c] = res[c * ARRAY_DIM + l];
+                self.express[l][c] = None;
+            }
+        }
+        if acc_reset {
+            self.acc = [[0; ARRAY_DIM]; ARRAY_DIM];
+        }
+    }
+
     /// Read the eight output registers of a column (what `wfbi` writes
     /// back to the frame buffer).
     pub fn column_outputs(&self, col: usize) -> [i16; ARRAY_DIM] {
@@ -466,6 +491,66 @@ mod tests {
                         reference.cell(r, c),
                         fused.cell(r, c),
                         "case {case}: {op:?} {mode:?} line {index}, cell ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn commit_tile_columns_matches_lane_broadcasts() {
+        // The megakernel's whole-tile commit vs eight reference
+        // `broadcast_lanes` column calls, for guard-shape context words
+        // (bus/bus, no reg writes / express / accumulate, op ≠ Nop/Mula),
+        // across random live pre-state and both acc_reset polarities.
+        use crate::morphosys::rc_array::alu;
+        use crate::testkit::Rng;
+        let mut rng = Rng::new(0x7173);
+        for case in 0..200 {
+            let op = AluOp::from_bits(rng.below(16) as u8);
+            if matches!(op, AluOp::Mula | AluOp::Nop) {
+                continue;
+            }
+            let mut cw = if op.uses_immediate() {
+                ContextWord::immediate(op, rng.range_i64(-128, 127) as i16)
+            } else {
+                ContextWord::two_port(op)
+            };
+            cw.acc_reset = rng.below(2) == 0;
+            let mut a = [0i16; ARRAY_DIM * ARRAY_DIM];
+            let mut b = [0i16; ARRAY_DIM * ARRAY_DIM];
+            for l in 0..ARRAY_DIM * ARRAY_DIM {
+                a[l] = rng.i16();
+                b[l] = rng.i16();
+            }
+            let mut reference = RcArray::new();
+            for r in 0..ARRAY_DIM {
+                for c in 0..ARRAY_DIM {
+                    reference.set_out(r, c, rng.i16());
+                    reference.acc[r][c] = rng.i16() as i32 * 23;
+                    reference.set_reg(r, c, (r + c) & 3, rng.i16());
+                    if rng.below(3) == 0 {
+                        reference.express[r][c] = Some(rng.i16());
+                    }
+                }
+            }
+            let mut tile = reference.clone();
+            for c in 0..ARRAY_DIM {
+                let ba: [i16; ARRAY_DIM] =
+                    a[c * ARRAY_DIM..(c + 1) * ARRAY_DIM].try_into().unwrap();
+                let bb: [i16; ARRAY_DIM] =
+                    b[c * ARRAY_DIM..(c + 1) * ARRAY_DIM].try_into().unwrap();
+                reference.broadcast_lanes(BroadcastMode::Column, c, &cw, &ba, &bb);
+            }
+            let res = alu::eval_tile(cw.op, &a, &b, cw.imm);
+            tile.commit_tile_columns(&res, cw.acc_reset);
+            for r in 0..ARRAY_DIM {
+                for c in 0..ARRAY_DIM {
+                    assert_eq!(
+                        reference.cell(r, c),
+                        tile.cell(r, c),
+                        "case {case}: {op:?} acc_reset={} cell ({r},{c})",
+                        cw.acc_reset
                     );
                 }
             }

@@ -501,6 +501,231 @@ fn fuse_steps(steps: Vec<Step>) -> Vec<Step> {
     out
 }
 
+/// One step of a [`Megakernel`] — a further-lowered [`Step`] stream for
+/// whole-plan programs (§Perf, megakernel tier).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum MegaStep {
+    /// An ordinary pre-decoded step, executed exactly as the scheduled
+    /// tier would (register ops stay in the stream so the TinyRISC
+    /// register file ends bit-identical to every other tier).
+    Step(Step),
+    /// An `ldfb` whose source address was proven constant at compile
+    /// time: the main-memory→frame-buffer transfer runs without reading
+    /// the register file or allocating an element buffer. Word reads and
+    /// the frame-buffer commit happen in the interpreter's order.
+    Load { mem_addr: usize, set: Set, bank: Bank, fb_addr: usize, words: usize },
+    /// One whole 64-point tile: a full-array column broadcast run plus
+    /// its write-back run, committed as a single frame-buffer
+    /// read → 64-lane ALU evaluation → single slice write. All windows
+    /// were proven in range by the fusion pass, so the executor's
+    /// whole-tile fast path can never panic mid-tile.
+    Tile {
+        plane: usize,
+        cw: usize,
+        set: Set,
+        bus_a: (Bank, usize),
+        bus_b: (Bank, usize),
+        wb_set: Set,
+        wb_bank: Bank,
+        wb_addr: usize,
+    },
+}
+
+/// A whole tile plan compiled to one megakernel (§Perf, megakernel
+/// tier): the program's [`BroadcastSchedule`] lowered one level further
+/// by constant-propagating the TinyRISC register file over the
+/// straight-line step stream, so that
+///
+/// * every `ldfb` with a statically-known source address becomes a
+///   [`MegaStep::Load`] (no register read, no per-transfer element
+///   buffer), and
+/// * every full-array fused broadcast run followed immediately by its
+///   full-array fused write-back run — the shape every vecvec /
+///   point-transform tile emits — becomes one [`MegaStep::Tile`],
+///   executed as a single 64-lane kernel call per context word.
+///
+/// The cycle accounting is the wrapped schedule's, untouched: lowering
+/// is a pure step-stream rewrite, so the megakernel reports exactly what
+/// the interpreter, scheduled and fused tiers report, in both DMA modes.
+/// Register-writing steps are kept in the stream (only their *reads* are
+/// folded away), so the architectural register file, frame buffer,
+/// context memory, RC-array planes and main memory all end bit-identical
+/// to the other tiers — pinned by the conformance suite.
+#[derive(Debug, Clone)]
+pub struct Megakernel {
+    schedule: BroadcastSchedule,
+    steps: Vec<MegaStep>,
+    tiles: usize,
+    loads: usize,
+}
+
+impl Megakernel {
+    /// Compile a program all the way to a megakernel. Returns `None`
+    /// exactly when [`BroadcastSchedule::compile`] does (branchy
+    /// programs); a program with no liftable loads or tiles still
+    /// compiles — its megakernel just degenerates to the fused schedule.
+    pub fn compile(program: &Program) -> Option<Megakernel> {
+        let schedule = BroadcastSchedule::compile(program)?;
+        // Constant propagation over the TinyRISC register file. `None`
+        // means "not statically known"; r0 is architecturally zero. The
+        // stream is straight-line (branches refused above), so a single
+        // forward pass is exact.
+        let mut regs: [Option<u32>; 16] = [None; 16];
+        regs[0] = Some(0);
+        let set_reg = |regs: &mut [Option<u32>; 16], rd: usize, v: Option<u32>| {
+            if rd != 0 {
+                regs[rd] = v;
+            }
+        };
+        let sched_steps = schedule.steps();
+        let mut steps = Vec::with_capacity(sched_steps.len());
+        let mut tiles = 0usize;
+        let mut loads = 0usize;
+        let mut i = 0;
+        while i < sched_steps.len() {
+            // A full-array column broadcast run immediately followed by a
+            // full-array column write-back run is one tile. The fusion
+            // pass already proved every window in range (bus and
+            // write-back spans walk `base + i·ARRAY_DIM`), so with
+            // count == ARRAY_DIM the whole 64-element windows are valid.
+            if i + 1 < sched_steps.len() {
+                if let (
+                    Step::FusedRun(FusedRun::Broadcasts {
+                        mode,
+                        plane,
+                        cw,
+                        line0,
+                        set,
+                        bus_a: Some(bus_a),
+                        bus_b: Some(bus_b),
+                        count,
+                    }),
+                    Step::FusedRun(FusedRun::WriteBacks {
+                        mode: wb_mode,
+                        line0: wb_line0,
+                        set: wb_set,
+                        bank: wb_bank,
+                        addr0: wb_addr,
+                        count: wb_count,
+                    }),
+                ) = (sched_steps[i], sched_steps[i + 1])
+                {
+                    if mode == BroadcastMode::Column
+                        && wb_mode == BroadcastMode::Column
+                        && line0 == 0
+                        && wb_line0 == 0
+                        && count == ARRAY_DIM
+                        && wb_count == ARRAY_DIM
+                    {
+                        steps.push(MegaStep::Tile {
+                            plane,
+                            cw,
+                            set,
+                            bus_a,
+                            bus_b,
+                            wb_set,
+                            wb_bank,
+                            wb_addr,
+                        });
+                        tiles += 1;
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            let step = sched_steps[i];
+            i += 1;
+            if let Step::Plain(instr) = step {
+                match instr {
+                    Instruction::Ldui { rd, imm } => {
+                        set_reg(&mut regs, rd.index(), Some((imm as u32) << 16));
+                    }
+                    Instruction::Ldli { rd, imm } => {
+                        let v = regs[rd.index()].map(|v| (v & 0xFFFF_0000) | imm as u32);
+                        set_reg(&mut regs, rd.index(), v);
+                    }
+                    Instruction::Add { rd, rs, rt } => {
+                        let v = match (regs[rs.index()], regs[rt.index()]) {
+                            (Some(a), Some(b)) => Some(a.wrapping_add(b)),
+                            _ => None,
+                        };
+                        set_reg(&mut regs, rd.index(), v);
+                    }
+                    Instruction::Sub { rd, rs, rt } => {
+                        let v = match (regs[rs.index()], regs[rt.index()]) {
+                            (Some(a), Some(b)) => Some(a.wrapping_sub(b)),
+                            _ => None,
+                        };
+                        set_reg(&mut regs, rd.index(), v);
+                    }
+                    Instruction::Addi { rd, rs, imm } => {
+                        let v = regs[rs.index()].map(|v| v.wrapping_add(imm as i32 as u32));
+                        set_reg(&mut regs, rd.index(), v);
+                    }
+                    Instruction::Ldfb { rs, set, bank, words, fb_addr } => {
+                        // Lift only when the executor's stack staging
+                        // buffer covers the transfer (every mapping tile
+                        // load is ≤ 32 words); larger or unknown-address
+                        // transfers keep the ordinary path.
+                        if let Some(v) = regs[rs.index()] {
+                            if words <= 32 {
+                                steps.push(MegaStep::Load {
+                                    mem_addr: v as usize,
+                                    set,
+                                    bank,
+                                    fb_addr,
+                                    words,
+                                });
+                                loads += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            steps.push(MegaStep::Step(step));
+        }
+        Some(Megakernel { schedule, steps, tiles, loads })
+    }
+
+    /// The lowered step stream (the megakernel executor's iteration path).
+    pub(crate) fn steps(&self) -> &[MegaStep] {
+        &self.steps
+    }
+
+    /// The wrapped schedule — the lowering's accounting and validation
+    /// source of truth.
+    pub(crate) fn schedule(&self) -> &BroadcastSchedule {
+        &self.schedule
+    }
+
+    /// Number of whole-tile steps the lowering produced.
+    pub fn fused_tiles(&self) -> usize {
+        self.tiles
+    }
+
+    /// Number of `ldfb` transfers lifted to register-free [`MegaStep::Load`]s.
+    pub fn lowered_loads(&self) -> usize {
+        self.loads
+    }
+
+    /// See [`BroadcastSchedule::is_validated`].
+    pub fn is_validated(&self) -> bool {
+        self.schedule.is_validated()
+    }
+
+    /// The precomputed blocking-DMA execution report (the schedule's).
+    pub fn report(&self) -> ExecutionReport {
+        self.schedule.report()
+    }
+
+    /// The precomputed async-DMA execution report (the schedule's).
+    pub fn async_report(&self) -> ExecutionReport {
+        self.schedule.async_report()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -707,6 +932,81 @@ mod tests {
         assert_eq!((r.cycles, r.slots, r.executed, r.broadcasts), (0, 0, 0, 0));
         let ra = s.async_report();
         assert_eq!((ra.cycles, ra.slots, ra.executed, ra.broadcasts), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn megakernel_lowers_streamed_plans_to_tiles_and_loads() {
+        use crate::mapping::StreamedTiledMapping;
+        use crate::morphosys::AluOp;
+        let m = StreamedTiledMapping { n: 256, op: AluOp::Add }.compile();
+        let k = Megakernel::compile(&m.program).unwrap();
+        // One whole-tile step per 64-point tile; two lifted DMA loads
+        // (U and V) per tile — every address is formed by ldui/ldli, so
+        // constant propagation resolves all of them.
+        assert_eq!(k.fused_tiles(), 4);
+        assert_eq!(k.lowered_loads(), 8);
+        assert!(k.is_validated());
+        // Lowering is a pure step rewrite: the accounting is the wrapped
+        // schedule's, bit-identical in both DMA modes.
+        let s = BroadcastSchedule::compile(&m.program).unwrap();
+        let (rk, rs) = (k.report(), s.report());
+        assert_eq!(
+            (rk.cycles, rk.slots, rk.executed, rk.broadcasts),
+            (rs.cycles, rs.slots, rs.executed, rs.broadcasts)
+        );
+        let (ak, asch) = (k.async_report(), s.async_report());
+        assert_eq!((ak.cycles, ak.slots), (asch.cycles, asch.slots));
+    }
+
+    #[test]
+    fn megakernel_refuses_branches_and_keeps_unknown_loads_plain() {
+        // Branchy programs refuse to compile, same as the schedule tier.
+        let p = Program::new(vec![Instruction::Jmp { target: 0 }]);
+        assert!(Megakernel::compile(&p).is_none());
+        // An ldfb whose address register was never statically formed
+        // stays a plain step (executed through the register file).
+        let p = Program::new(vec![Instruction::Ldfb {
+            rs: Reg(1),
+            set: Set::Zero,
+            bank: Bank::A,
+            words: 4,
+            fb_addr: 0,
+        }]);
+        let k = Megakernel::compile(&p).unwrap();
+        assert_eq!(k.lowered_loads(), 0);
+        assert!(matches!(k.steps(), [MegaStep::Step(Step::Plain(_))]));
+        // r0 is statically zero, so an r0-addressed load lifts.
+        let p = Program::new(vec![Instruction::Ldfb {
+            rs: Reg(0),
+            set: Set::Zero,
+            bank: Bank::A,
+            words: 4,
+            fb_addr: 0,
+        }]);
+        assert_eq!(Megakernel::compile(&p).unwrap().lowered_loads(), 1);
+    }
+
+    #[test]
+    fn megakernel_lowers_point_transform_plans() {
+        use crate::mapping::StreamedPointTransformMapping;
+        for shift in [0u8, 2] {
+            let m = StreamedPointTransformMapping {
+                n: 128,
+                m: [3, -1, 2, 4],
+                t: [7, -9],
+                shift,
+            }
+            .compile();
+            let k = Megakernel::compile(&m.program).unwrap();
+            // Two output banks per tile, each its own broadcast+write-back
+            // pair — but only runs whose context word drives the full
+            // bus/bus fast shape lower to tiles; at minimum the loads (U
+            // and V per tile) always lift.
+            assert_eq!(k.lowered_loads(), 4);
+            assert!(k.is_validated(), "shift={shift}");
+            let s = BroadcastSchedule::compile(&m.program).unwrap();
+            assert_eq!(k.report().cycles, s.report().cycles);
+        }
     }
 
     #[test]

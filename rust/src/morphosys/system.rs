@@ -11,8 +11,8 @@ use super::context_memory::{Block, ContextMemory};
 use super::dma::{self, MainMemory};
 use super::frame_buffer::{Bank, FrameBuffer, Set};
 use super::mulate::{Trace, TraceEvent};
-use super::rc_array::{BroadcastMode, ContextWord, RcArray, ARRAY_DIM};
-use super::schedule::{BroadcastSchedule, FusedRun, Step};
+use super::rc_array::{alu, AluOp, BroadcastMode, ContextWord, RcArray, ARRAY_DIM};
+use super::schedule::{BroadcastSchedule, FusedRun, MegaStep, Megakernel, Step};
 use super::timing::AsyncDma;
 use super::tinyrisc::{Instruction, Program, RegFile};
 
@@ -460,22 +460,7 @@ impl M1System {
         // schedules keep the interpreter's checked reads (and panics).
         let validated = schedule.is_validated();
         for step in schedule.steps() {
-            match *step {
-                Step::Plain(instr) => self.exec_plain(&instr),
-                Step::Broadcast { mode, plane, cw, line, set, bus_a, bus_b } => {
-                    // Same effect path as the interpreter's broadcast
-                    // instructions — one implementation, two dispatchers.
-                    self.broadcast_impl(mode, plane, cw, line, set, bus_a, bus_b, validated);
-                }
-                Step::WriteBack { mode, line, set, bank, addr } => {
-                    let outs = match mode {
-                        BroadcastMode::Column => self.array.column_outputs(line),
-                        BroadcastMode::Row => self.array.row_outputs(line),
-                    };
-                    self.fb.write_slice(set, bank, addr, &outs);
-                }
-                Step::FusedRun(run) => self.exec_fused(&run, validated),
-            }
+            self.exec_step(step, validated);
         }
         // Same deposit as the interpreter: the schedule's compile-time
         // replay of the issue model ends in exactly the state the
@@ -483,6 +468,150 @@ impl M1System {
         // mode never touches the model.
         self.dma = if self.async_dma { schedule.final_async() } else { AsyncDma::default() };
         schedule.report_for(self.async_dma)
+    }
+
+    /// Architectural effect of one pre-decoded step — the shared dispatch
+    /// body of the scheduled tier and the megakernel tier's pass-through
+    /// steps (one implementation, two executors).
+    fn exec_step(&mut self, step: &Step, validated: bool) {
+        match *step {
+            Step::Plain(instr) => self.exec_plain(&instr),
+            Step::Broadcast { mode, plane, cw, line, set, bus_a, bus_b } => {
+                // Same effect path as the interpreter's broadcast
+                // instructions — one implementation, two dispatchers.
+                self.broadcast_impl(mode, plane, cw, line, set, bus_a, bus_b, validated);
+            }
+            Step::WriteBack { mode, line, set, bank, addr } => {
+                let outs = match mode {
+                    BroadcastMode::Column => self.array.column_outputs(line),
+                    BroadcastMode::Row => self.array.row_outputs(line),
+                };
+                self.fb.write_slice(set, bank, addr, &outs);
+            }
+            Step::FusedRun(run) => self.exec_fused(&run, validated),
+        }
+    }
+
+    /// Execute a compiled [`Megakernel`] (§Perf, megakernel tier): the
+    /// whole plan's step stream with register-free DMA loads and
+    /// single-call 64-lane tile kernels where the lowering proved them
+    /// exact, and the scheduled tier's step dispatch everywhere else.
+    /// Tracing systems fall back to the interpreter, exactly as
+    /// [`M1System::run_program`] does; the report and the deposited
+    /// async-DMA state come precomputed from the wrapped schedule, in this
+    /// system's DMA mode.
+    pub fn run_megakernel(&mut self, program: &Program, kernel: &Megakernel) -> ExecutionReport {
+        if self.trace.is_some() {
+            return self.run(program);
+        }
+        let validated = kernel.schedule().is_validated();
+        for step in kernel.steps() {
+            match *step {
+                MegaStep::Step(ref s) => self.exec_step(s, validated),
+                MegaStep::Load { mem_addr, set, bank, fb_addr, words } => {
+                    self.exec_mega_load(mem_addr, set, bank, fb_addr, words);
+                }
+                MegaStep::Tile { plane, cw, set, bus_a, bus_b, wb_set, wb_bank, wb_addr } => {
+                    self.exec_tile(plane, cw, set, bus_a, bus_b, wb_set, wb_bank, wb_addr, validated);
+                }
+            }
+        }
+        self.dma = if self.async_dma {
+            kernel.schedule().final_async()
+        } else {
+            AsyncDma::default()
+        };
+        kernel.schedule().report_for(self.async_dma)
+    }
+
+    /// A lifted `ldfb`: main memory → frame buffer with the source address
+    /// resolved at compile time. Splits each 32-bit word into its two
+    /// little-endian `i16` elements on the stack and commits one slice —
+    /// element-for-element (and panic-for-panic: memory reads first, then
+    /// the frame-buffer write) what [`dma::mem_to_fb`] does, minus the
+    /// register read and the per-transfer heap buffer.
+    fn exec_mega_load(&mut self, mem_addr: usize, set: Set, bank: Bank, fb_addr: usize, words: usize) {
+        debug_assert!(words <= 32, "mega load exceeds the staging buffer");
+        let mut buf = [0i16; 2 * 32];
+        for w in 0..words {
+            let word = self.mem.read_word(mem_addr + w);
+            buf[2 * w] = (word & 0xFFFF) as u16 as i16;
+            buf[2 * w + 1] = (word >> 16) as u16 as i16;
+        }
+        self.fb.write_slice(set, bank, fb_addr, &buf[..2 * words]);
+    }
+
+    /// One whole 64-point tile (§Perf, megakernel tier). When the context
+    /// word drives the dominant shape — both operands off the buses, no
+    /// register-file writes, no express drive, no accumulation, an op that
+    /// actually overwrites the outputs — the tile commits as: two
+    /// contiguous frame-buffer reads, one 64-lane ALU evaluation
+    /// ([`alu::eval_tile`], AVX2 under the `avx2-kernels` feature), one
+    /// slice write-back, one array commit. That is bit-for-bit the fused
+    /// pair's effect: per column `c`, `broadcast_lanes` computes
+    /// `out[l][c] = res[c·8+l]` (op ≠ `Nop`), leaves the register files
+    /// alone (`reg_write == 0`), releases the express lane (no
+    /// `express_write`), and resets or preserves the accumulator
+    /// (non-`Mula` ops pass it through `eval8` unchanged); the write-back
+    /// run then gathers exactly `res` back out of the columns. Words
+    /// outside the shape take the fused pair verbatim.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_tile(
+        &mut self,
+        plane: usize,
+        cw: usize,
+        set: Set,
+        bus_a: (Bank, usize),
+        bus_b: (Bank, usize),
+        wb_set: Set,
+        wb_bank: Bank,
+        wb_addr: usize,
+        validated: bool,
+    ) {
+        let word = self.ctx.read_decoded(Block::Column, plane, cw);
+        let fast = word.operand_plan().is_bus_bus()
+            && word.reg_write == 0
+            && !word.express_write
+            && !word.acc_accumulate
+            && word.op != AluOp::Nop
+            && word.op != AluOp::Mula;
+        if fast {
+            // Copy the operand spans out before evaluating: the write-back
+            // may alias the sources, and the fused pair's ordering (all
+            // reads, then the write) must be preserved exactly.
+            let mut a = [0i16; ARRAY_DIM * ARRAY_DIM];
+            let mut b = [0i16; ARRAY_DIM * ARRAY_DIM];
+            a.copy_from_slice(self.fb.read_slice(set, bus_a.0, bus_a.1, ARRAY_DIM * ARRAY_DIM));
+            b.copy_from_slice(self.fb.read_slice(set, bus_b.0, bus_b.1, ARRAY_DIM * ARRAY_DIM));
+            let res = alu::eval_tile(word.op, &a, &b, word.imm);
+            self.fb.write_slice(wb_set, wb_bank, wb_addr, &res);
+            self.array.commit_tile_columns(&res, word.acc_reset);
+        } else {
+            self.exec_fused(
+                &FusedRun::Broadcasts {
+                    mode: BroadcastMode::Column,
+                    plane,
+                    cw,
+                    line0: 0,
+                    set,
+                    bus_a: Some(bus_a),
+                    bus_b: Some(bus_b),
+                    count: ARRAY_DIM,
+                },
+                validated,
+            );
+            self.exec_fused(
+                &FusedRun::WriteBacks {
+                    mode: BroadcastMode::Column,
+                    line0: 0,
+                    set: wb_set,
+                    bank: wb_bank,
+                    addr0: wb_addr,
+                    count: ARRAY_DIM,
+                },
+                validated,
+            );
+        }
     }
 
     /// Execute one compile-time-fused run (§Perf, fused tile-kernel

@@ -7,7 +7,10 @@
 //! 2. the pre-decoded **scheduled path** (`run_program` with a compiled
 //!    `BroadcastSchedule`), including its unchecked validated plane reads;
 //! 3. **pooled** execution (`M1SimBackend::with_shards`) against the
-//!    serial backend, across shard counts.
+//!    serial backend, across shard counts;
+//! 4. the **megakernel** tier (`M1System::run_megakernel` with a
+//!    plan-level `Megakernel`) against the interpreter, the
+//!    scheduled/fused tier, and the per-tile pool decomposition.
 //!
 //! Agreement is checked on cell planes (all 64 cells' registers, output,
 //! accumulator and express latch), the full frame buffer, context memory,
@@ -800,6 +803,158 @@ fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
     for (i, (x, y)) in a.iter().zip(b).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
     }
+}
+
+#[test]
+fn megakernel_tier_is_bit_identical_across_dma_modes_and_sizes() {
+    // The megakernel conformance axis (§Perf, megakernel tier): for each
+    // plan size covering the acceptance grid padded to whole tiles
+    // (64, 512, 2176, 4096 — the pooled backend grids below cover the
+    // ragged originals 500/2117 end to end), a random plan-level spec
+    // runs on the interpreter, the scheduled/fused tier, and the
+    // megakernel tier. All three must agree bit-for-bit on cycle reports,
+    // the result window, and full architectural state, in both DMA
+    // modes; divergences dump `.m1ra` artifacts like every other axis.
+    use morpho::mapping::runner::stage_routine3_on;
+    use morpho::mapping::{megakernel_for, MegaSpec, RESULT_ADDR};
+    for &n in &[64usize, 512, 2176, 4096] {
+        let cases = if n >= 2176 { 2 } else { 6 };
+        for_each_case(&format!("megakernel n={n}"), cases, |rng, seed| {
+            let spec = if rng.bool() {
+                let ops = [AluOp::Add, AluOp::Sub, AluOp::Mul, AluOp::And, AluOp::Or, AluOp::Xor];
+                MegaSpec::VecVec { n, op: ops[rng.below(ops.len() as u64) as usize] }
+            } else {
+                let e = |rng: &mut Rng| rng.range_i64(-128, 127) as i16;
+                MegaSpec::PointTransform {
+                    n,
+                    m: [e(rng), e(rng), e(rng), e(rng)],
+                    t: [e(rng), e(rng)],
+                    shift: rng.below(7) as u8,
+                }
+            };
+            let plan = megakernel_for(&spec).expect("whole-tile plan shapes compile");
+            let program = &plan.routine.program;
+            let u: Vec<i16> = (0..n).map(|_| rng.i16()).collect();
+            let v: Vec<i16> = (0..n).map(|_| rng.i16()).collect();
+            let stage = |sys: &mut M1System| {
+                stage_routine3_on(sys, &plan.routine, &u, Some(v.as_slice()), None);
+            };
+            for async_dma in [false, true] {
+                let mut interp = M1System::with_dma_mode(async_dma);
+                stage(&mut interp);
+                let ri = interp.run(program);
+
+                let schedule =
+                    BroadcastSchedule::compile(program).expect("plans are straight-line");
+                let mut sched = M1System::with_dma_mode(async_dma);
+                stage(&mut sched);
+                let rs = sched.run_program(program, Some(&schedule));
+
+                let mut mega = M1System::with_dma_mode(async_dma);
+                stage(&mut mega);
+                let rm = mega.run_megakernel(program, &plan.kernel);
+
+                guard_differential(
+                    seed,
+                    &format!("megakernel vs interpreter (n={n}, async={async_dma})"),
+                    || {
+                        let mut fresh = M1System::with_dma_mode(async_dma);
+                        stage(&mut fresh);
+                        fresh.snapshot()
+                    },
+                    program,
+                    || mega.mem.load_elements(0, 2 * MEM_WINDOW),
+                    || {
+                        for (tier, r) in [("scheduled", &rs), ("megakernel", &rm)] {
+                            let ctx = format!("n={n} async={async_dma} {tier}");
+                            assert_eq!(ri.cycles, r.cycles, "{ctx}: cycles");
+                            assert_eq!(ri.slots, r.slots, "{ctx}: slots");
+                            assert_eq!(ri.executed, r.executed, "{ctx}: executed");
+                            assert_eq!(ri.broadcasts, r.broadcasts, "{ctx}: broadcasts");
+                        }
+                        // The result window lives outside MEM_WINDOW, so
+                        // compare it explicitly on top of the full
+                        // architectural-state sweep.
+                        let want = interp.mem.load_elements(RESULT_ADDR, plan.routine.result_elems);
+                        assert_eq!(
+                            want,
+                            sched.mem.load_elements(RESULT_ADDR, plan.routine.result_elems),
+                            "scheduled result window"
+                        );
+                        assert_eq!(
+                            want,
+                            mega.mem.load_elements(RESULT_ADDR, plan.routine.result_elems),
+                            "megakernel result window"
+                        );
+                        assert_systems_identical(&interp, &sched, "scheduled state");
+                        assert_systems_identical(&interp, &mega, "megakernel state");
+                    },
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn megakernel_plan_requests_match_the_per_tile_decomposition() {
+    // megakernel ≡ per-tile fused at the pool level: one plan-level
+    // request over k tiles must transform its data exactly as k per-tile
+    // requests through the scheduled/fused tier, for both spec families,
+    // under a randomly chosen DMA mode (results are mode-independent).
+    use morpho::coordinator::{RoutineSpec, TilePool, TileRequest};
+    for_each_case("plan request == per-tile decomposition", 30, |rng, _seed| {
+        let tiles = rng.range_i64(2, 9) as usize;
+        let n = tiles * 64;
+        let mut pool = TilePool::with_mode(1, rng.bool());
+        let u: Vec<i16> = (0..n).map(|_| rng.range_i64(-2000, 2000) as i16).collect();
+        let v: Vec<i16> = (0..n).map(|_| rng.range_i64(-2000, 2000) as i16).collect();
+
+        let op = [AluOp::Add, AluOp::Sub, AluOp::Xor][rng.below(3) as usize];
+        let plan = pool.run(vec![TileRequest {
+            spec: RoutineSpec::VecVecPlan { n, op },
+            u: u.clone(),
+            v: Some(v.clone()),
+        }]);
+        let per = pool.run(
+            u.chunks(64)
+                .zip(v.chunks(64))
+                .map(|(uc, vc)| TileRequest {
+                    spec: RoutineSpec::VecVec { n: 64, op },
+                    u: uc.to_vec(),
+                    v: Some(vc.to_vec()),
+                })
+                .collect(),
+        );
+        let spliced: Vec<i16> = per.iter().flat_map(|o| o.result.iter().copied()).collect();
+        assert_eq!(plan[0].result, spliced, "vecvec {op:?} n={n}");
+
+        let e = |rng: &mut Rng| rng.range_i64(-128, 127) as i16;
+        let (m, t) = ([e(rng), e(rng), e(rng), e(rng)], [e(rng), e(rng)]);
+        let shift = rng.below(7) as u8;
+        let plan = pool.run(vec![TileRequest {
+            spec: RoutineSpec::PointTransformPlan { n, m, t, shift },
+            u: u.clone(),
+            v: Some(v.clone()),
+        }]);
+        let per = pool.run(
+            u.chunks(64)
+                .zip(v.chunks(64))
+                .map(|(uc, vc)| TileRequest {
+                    spec: RoutineSpec::PointTransform { n: 64, m, t, shift },
+                    u: uc.to_vec(),
+                    v: Some(vc.to_vec()),
+                })
+                .collect(),
+        );
+        // Plan layout is [all x'][all y']; per-tile layout interleaves
+        // [x'; 64][y'; 64] per tile.
+        let (xp, yp) = plan[0].result.split_at(n);
+        for (k, o) in per.iter().enumerate() {
+            let (ox, oy) = o.result.split_at(64);
+            assert_eq!(&xp[k * 64..(k + 1) * 64], ox, "x' tile {k} (shift={shift})");
+            assert_eq!(&yp[k * 64..(k + 1) * 64], oy, "y' tile {k} (shift={shift})");
+        }
+    });
 }
 
 #[test]
